@@ -1,0 +1,61 @@
+//! The paper's §4.4 precision schedule: 25% mixed -> 50% AMP -> 25% full,
+//! hot-swapping PJRT executables while the fp32 master weights carry over.
+//! Compares final error against constant-precision training.
+//!
+//! Run: `cargo run --release --example precision_schedule`
+
+use mpno::coordinator::{train_grid, PrecisionSchedule, TrainConfig};
+use mpno::data::{load_or_generate, DatasetKind, GenSpec};
+use mpno::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut engine = Engine::new(&root.join("artifacts"))?;
+    let spec = GenSpec {
+        kind: DatasetKind::NavierStokes,
+        n_samples: 36,
+        resolution: 32,
+        seed: 7,
+    };
+    println!("generating/loading Navier-Stokes dataset (pseudo-spectral solver)...");
+    let data = load_or_generate(&spec, &root.join("datasets"))?;
+    let (train, test) = data.split(12);
+
+    let schedules = [
+        ("constant full", PrecisionSchedule::constant("fno_ns_r32_full_none_grads")),
+        ("constant mixed", PrecisionSchedule::constant("fno_ns_r32_mixed_tanh_grads")),
+        (
+            "paper schedule (25% mixed / 50% amp / 25% full)",
+            PrecisionSchedule::paper_default(
+                "fno_ns_r32_mixed_tanh_grads",
+                "fno_ns_r32_amp_none_grads",
+                "fno_ns_r32_full_none_grads",
+            ),
+        ),
+    ];
+
+    for (label, schedule) in schedules {
+        let mut cfg = TrainConfig::new("fno_ns_r32_full_none_grads");
+        cfg.schedule = schedule;
+        cfg.epochs = 8;
+        cfg.lr = 2e-3;
+        cfg.loss_scaling = true;
+        let report = train_grid(&mut engine, &train, &test, &cfg)?;
+        println!("\n=== {label} ===");
+        for e in &report.epochs {
+            println!(
+                "epoch {} [{}]: train {:.4} test H1 {:.4}",
+                e.epoch,
+                e.artifact.split("_grads").next().unwrap(),
+                e.train_loss,
+                e.test_h1
+            );
+        }
+        println!(
+            "final: L2 {:.4} H1 {:.4}",
+            report.final_test_l2(),
+            report.final_test_h1()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: load an AOT artifact, run one forward pass, train a tiny
+//! FNO on generated Darcy data — the 60-second tour of the public API.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first.)
+
+use mpno::coordinator::{train_grid, TrainConfig};
+use mpno::data::{load_or_generate, DatasetKind, GenSpec};
+use mpno::runtime::Engine;
+use mpno::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut engine = Engine::new(&root.join("artifacts"))?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // 1. One forward pass through the full-precision FNO.
+    let exe = engine.load("fno_darcy_r32_full_none_fwd")?;
+    let params = engine.init_params(&exe.entry, 42);
+    let x = Tensor::from_fn(&[4, 1, 32, 32], |i| {
+        ((i[2] as f32 / 8.0).sin() + (i[3] as f32 / 8.0).cos()) * 0.5
+    });
+    let mut inputs: Vec<&Tensor> = params.iter().collect();
+    inputs.push(&x);
+    let out = exe.run(&inputs)?;
+    println!(
+        "forward OK: output {:?}, |out|max = {:.4}",
+        out[0].shape(),
+        out[0].abs_max()
+    );
+
+    // 2. Generate a small Darcy dataset with the built-in FD solver.
+    let spec = GenSpec {
+        kind: DatasetKind::DarcyFlow,
+        n_samples: 24,
+        resolution: 32,
+        seed: 7,
+    };
+    let data = load_or_generate(&spec, &root.join("datasets"))?;
+    let (train, test) = data.split(8);
+    println!("dataset: {} train / {} test samples", train.len(), test.len());
+
+    // 3. Train the paper's mixed-precision FNO for a few epochs.
+    let mut cfg = TrainConfig::new("fno_darcy_r32_mixed_tanh_grads");
+    cfg.epochs = 4;
+    cfg.lr = 2e-3;
+    cfg.loss_scaling = true; // AMP GradScaler
+    let report = train_grid(&mut engine, &train, &test, &cfg)?;
+    for e in &report.epochs {
+        println!(
+            "epoch {}: train {:.4}  test L2 {:.4}  H1 {:.4}  ({:.1} samples/s)",
+            e.epoch, e.train_loss, e.test_l2, e.test_h1, e.samples_per_sec
+        );
+    }
+    assert!(!report.diverged, "tanh-stabilized mixed precision must be stable");
+    println!("quickstart done.");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Zero-shot super-resolution (Table 1 / discretization convergence):
+//! train an FNO at 32², then evaluate the *same weights* at 64² and 128²
+//! by loading the finer-grid fwd artifacts — no retraining, exploiting the
+//! resolution invariance of the spectral parameterization. High-resolution
+//! ground truth comes from spectrally downsampling a 128² NS dataset.
+//!
+//! Run: `cargo run --release --example super_resolution`
+
+use mpno::coordinator::{evaluate_super_resolution, train_grid, TrainConfig};
+use mpno::data::{load_or_generate, DatasetKind, GenSpec, GridDataset};
+use mpno::runtime::Engine;
+use mpno::tensor::{resample::resample_batch, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut engine = Engine::new(&root.join("artifacts"))?;
+
+    let n = 24;
+    println!("generating 128x128 Navier-Stokes ground truth (this is the slow bit)...");
+    let spec = GenSpec {
+        kind: DatasetKind::NavierStokes,
+        n_samples: n,
+        resolution: 128,
+        seed: 21,
+    };
+    let hires = load_or_generate(&spec, &root.join("datasets"))?;
+
+    let down = |t: &Tensor, r: usize| -> Tensor {
+        let b = t.shape()[0];
+        let flat = t.reshape(&[b, t.shape()[2], t.shape()[3]]);
+        resample_batch(&flat, r, r).reshape(&[b, 1, r, r])
+    };
+    let make = |r: usize| GridDataset {
+        kind: DatasetKind::NavierStokes,
+        inputs: down(&hires.inputs, r),
+        targets: down(&hires.targets, r),
+    };
+
+    // Train at 32².
+    let (train, test32) = make(32).split(n / 3);
+    let mut cfg = TrainConfig::new("fno_ns_r32_mixed_tanh_grads");
+    cfg.epochs = 8;
+    cfg.lr = 2e-3;
+    cfg.loss_scaling = true;
+    println!("training mixed-precision FNO at 32x32...");
+    let report = train_grid(&mut engine, &train, &test32, &cfg)?;
+    println!(
+        "trained: test L2 {:.4} at 32x32 (diverged: {})",
+        report.final_test_l2(),
+        report.diverged
+    );
+
+    // Evaluate the SAME parameters at finer resolutions.
+    for r in [32usize, 64, 128] {
+        let (_, test_r) = make(r).split(n / 3);
+        let artifact = format!("fno_ns_r{r}_full_none_fwd");
+        let (l2, h1) =
+            evaluate_super_resolution(&mut engine, &report.params, &artifact, &test_r)?;
+        println!("zero-shot at {r:>3}x{r:<3}: L2 {l2:.4}  H1 {h1:.4}");
+    }
+    println!("(discretization convergence: error stays flat under mesh refinement)");
+    Ok(())
+}

@@ -1,0 +1,4 @@
+"""Build-time compile path: JAX/Pallas models AOT-lowered to HLO text.
+
+Never imported at runtime — the Rust binary consumes artifacts/ only.
+"""

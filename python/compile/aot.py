@@ -1,0 +1,365 @@
+"""AOT artifact builder: lowers every (model x dataset x precision x
+stabilizer x graph) the experiments need to HLO **text** + a manifest.
+
+HLO text, not serialized protos: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version the `xla`
+crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Incremental: a content hash over python/compile is stored in
+artifacts/.inputs_hash — `make artifacts` is a no-op when nothing changed.
+
+Run from python/:  python -m compile.aot [--out-dir ../artifacts] [--only NAME_SUBSTR]
+"""
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import quantize as q
+from compile import train_graph
+from compile.models import fno, gino, sfno, unet
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass
+class Artifact:
+    name: str
+    model: str
+    dataset: str
+    graph: str  # fwd | grads
+    precision: str
+    stabilizer: str
+    loss: str
+    batch: int
+    cfg: object
+
+
+# ---------------------------------------------------------------------------
+# The artifact matrix (see DESIGN.md per-experiment index).
+# ---------------------------------------------------------------------------
+
+NS = dict(res=32, batch=4, cin=1, cout=1, loss="h1")
+DARCY = dict(res=32, batch=4, cin=1, cout=1, loss="h1")
+SWE = dict(nlat=16, nlon=32, batch=2, cin=3, cout=3, loss="l2")
+GEOM = dict(points=256, grid=8, batch=1, loss="l2")
+
+FNO_WIDTH = 32
+FNO_MODES = 8
+FNO_LAYERS = 4
+
+
+def fno_cfg(ds, res, prec, stab, cp_rank=0, modes=FNO_MODES, sites=None):
+    base = NS if ds == "ns" else DARCY
+    return fno.FnoConfig(
+        in_channels=base["cin"],
+        out_channels=base["cout"],
+        width=FNO_WIDTH,
+        modes=modes,
+        layers=FNO_LAYERS,
+        height=res,
+        width_grid=res,
+        mode=prec,
+        stabilizer=stab,
+        cp_rank=cp_rank,
+        site_precisions=sites,
+    )
+
+
+def build_matrix():
+    arts = []
+
+    def add(name, model, dataset, graph, prec, stab, loss, batch, cfg):
+        arts.append(Artifact(name, model, dataset, graph, prec, stab, loss, batch, cfg))
+
+    # --- FNO / Navier-Stokes: the main accuracy + stability matrix ------
+    for prec, stab in [
+        (q.FULL, "none"),
+        (q.AMP, "none"),
+        (q.MIXED, "tanh"),
+        (q.BF16, "tanh"),
+        (q.FP8, "tanh"),
+        (q.TF32, "none"),
+        (q.MIXED, "none"),      # the naive-mixed failure mode (Fig. 10)
+        (q.MIXED, "hardclip"),  # Table 3
+        (q.MIXED, "sigclip"),   # Table 3
+        (q.MIXED, "div"),       # App. B.6
+        (q.FULL, "tanh"),       # Table 5: tanh at full precision
+    ]:
+        add(
+            f"fno_ns_r32_{prec}_{stab}_grads",
+            "fno", "ns", "grads", prec, stab, NS["loss"], NS["batch"],
+            fno_cfg("ns", 32, prec, stab),
+        )
+    for prec in [q.FULL, q.MIXED]:
+        stab = "tanh" if prec == q.MIXED else "none"
+        add(
+            f"fno_ns_r32_{prec}_{stab}_fwd",
+            "fno", "ns", "fwd", prec, stab, NS["loss"], NS["batch"],
+            fno_cfg("ns", 32, prec, stab),
+        )
+    # Zero-shot super-resolution forwards (Table 1): same weights, finer grid.
+    for res in [64, 128, 256]:
+        for prec in [q.FULL, q.MIXED]:
+            stab = "tanh" if prec == q.MIXED else "none"
+            add(
+                f"fno_ns_r{res}_{prec}_{stab}_fwd",
+                "fno", "ns", "fwd", prec, stab, NS["loss"], NS["batch"],
+                fno_cfg("ns", res, prec, stab),
+            )
+
+    # --- FNO / Darcy ------------------------------------------------------
+    for prec, stab in [(q.FULL, "none"), (q.AMP, "none"), (q.MIXED, "tanh")]:
+        add(
+            f"fno_darcy_r32_{prec}_{stab}_grads",
+            "fno", "darcy", "grads", prec, stab, DARCY["loss"], DARCY["batch"],
+            fno_cfg("darcy", 32, prec, stab),
+        )
+    for prec in [q.FULL, q.MIXED]:
+        stab = "tanh" if prec == q.MIXED else "none"
+        add(
+            f"fno_darcy_r32_{prec}_{stab}_fwd",
+            "fno", "darcy", "fwd", prec, stab, DARCY["loss"], DARCY["batch"],
+            fno_cfg("darcy", 32, prec, stab),
+        )
+    # Table 4: per-site (fft, contract, ifft) in {full, mixed}^3.
+    for bits in range(8):
+        f = q.MIXED if bits & 4 else q.FULL
+        c = q.MIXED if bits & 2 else q.FULL
+        i = q.MIXED if bits & 1 else q.FULL
+        tag = "".join("h" if p == q.MIXED else "f" for p in (f, c, i))
+        stab = "tanh" if f == q.MIXED else "none"
+        add(
+            f"fno_darcy_r32_site{tag}_grads",
+            "fno", "darcy", "grads", q.MIXED, stab, DARCY["loss"], DARCY["batch"],
+            fno_cfg("darcy", 32, q.MIXED, stab, sites=(f, c, i)),
+        )
+    # Fig. 6 / Fig. 13: CP factorization vs dense.
+    for ds in ["ns", "darcy"]:
+        for prec in [q.FULL, q.MIXED]:
+            stab = "tanh" if prec == q.MIXED else "none"
+            add(
+                f"fno_{ds}_r32_cp16_{prec}_{stab}_grads",
+                "fno", ds, "grads", prec, stab, "h1", 4,
+                fno_cfg(ds, 32, prec, stab, cp_rank=16),
+            )
+    # Fig. 12/14: frequency-mode ablation.
+    for modes in [4, 16]:
+        for prec in [q.FULL, q.MIXED]:
+            stab = "tanh" if prec == q.MIXED else "none"
+            add(
+                f"fno_darcy_r32_m{modes}_{prec}_{stab}_grads",
+                "fno", "darcy", "grads", prec, stab, "h1", 4,
+                fno_cfg("darcy", 32, prec, stab, modes=modes),
+            )
+
+    # --- U-Net baseline (Table 2) ------------------------------------------
+    for ds in ["ns", "darcy"]:
+        for prec in [q.FULL, q.AMP]:
+            ucfg = unet.UnetConfig(in_channels=1, out_channels=1, width=16,
+                                   height=32, width_grid=32, mode=prec)
+            add(
+                f"unet_{ds}_r32_{prec}_none_grads",
+                "unet", ds, "grads", prec, "none", "l2", 4, ucfg,
+            )
+        ucfg = unet.UnetConfig(in_channels=1, out_channels=1, width=16,
+                               height=32, width_grid=32, mode=q.FULL)
+        add(f"unet_{ds}_r32_full_none_fwd", "unet", ds, "fwd", q.FULL, "none",
+            "l2", 4, ucfg)
+
+    # --- SFNO / spherical SWE ----------------------------------------------
+    for prec, stab in [(q.FULL, "none"), (q.AMP, "none"), (q.MIXED, "tanh")]:
+        scfg = sfno.SfnoConfig(nlat=SWE["nlat"], nlon=SWE["nlon"], lmax=7,
+                               width=24, layers=4, mode=prec, stabilizer=stab)
+        add(
+            f"sfno_swe_r16_{prec}_{stab}_grads",
+            "sfno", "swe", "grads", prec, stab, SWE["loss"], SWE["batch"], scfg,
+        )
+    for prec in [q.FULL, q.MIXED]:
+        stab = "tanh" if prec == q.MIXED else "none"
+        scfg = sfno.SfnoConfig(nlat=SWE["nlat"], nlon=SWE["nlon"], lmax=7,
+                               width=24, layers=4, mode=prec, stabilizer=stab)
+        add(f"sfno_swe_r16_{prec}_{stab}_fwd", "sfno", "swe", "fwd", prec,
+            stab, SWE["loss"], SWE["batch"], scfg)
+
+    # --- GINO / Shape-Net Car + Ahmed-body ----------------------------------
+    for ds in ["car", "ahmed"]:
+        for prec in [q.FULL, q.MIXED]:
+            stab = "tanh" if prec == q.MIXED else "none"
+            gcfg = gino.GinoConfig(n_points=GEOM["points"], grid=GEOM["grid"],
+                                   mode=prec, stabilizer=stab)
+            add(
+                f"gino_{ds}_p256_{prec}_{stab}_grads",
+                "gino", ds, "grads", prec, stab, "l2", 1, gcfg,
+            )
+        gcfg = gino.GinoConfig(n_points=GEOM["points"], grid=GEOM["grid"],
+                               mode=q.FULL, stabilizer="none")
+        add(f"gino_{ds}_p256_full_none_fwd", "gino", ds, "fwd", q.FULL,
+            "none", "l2", 1, gcfg)
+
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def grid_input_specs(art: Artifact):
+    cfg = art.cfg
+    if art.model in ("fno", "unet"):
+        h, w = cfg.height, cfg.width_grid
+        cin, cout = cfg.in_channels, cfg.out_channels
+    else:  # sfno
+        h, w = cfg.nlat, cfg.nlon
+        cin, cout = cfg.in_channels, cfg.out_channels
+    x = jax.ShapeDtypeStruct((art.batch, cin, h, w), F32)
+    y = jax.ShapeDtypeStruct((art.batch, cout, h, w), F32)
+    return x, y
+
+
+def lower_artifact(art: Artifact):
+    """Returns (hlo_text, manifest_entry)."""
+    if art.model == "gino":
+        names, fwd, grads = train_graph.make_gino_graphs(art.cfg)
+        cfg = art.cfg
+        g3 = cfg.grid**3
+        feats = jax.ShapeDtypeStruct((art.batch, cfg.n_points, cfg.in_features), F32)
+        to_g = jax.ShapeDtypeStruct((art.batch, g3, cfg.n_points), F32)
+        from_g = jax.ShapeDtypeStruct((art.batch, cfg.n_points, g3), F32)
+        y = jax.ShapeDtypeStruct((art.batch, cfg.n_points), F32)
+        extra_fwd = [("feats", feats), ("to_grid", to_g), ("from_grid", from_g)]
+        extra_grads = extra_fwd + [("target", y), ("loss_scale", jax.ShapeDtypeStruct((), F32))]
+        specs = [(n, tuple(s), std) for n, s, std in gino.param_specs(art.cfg)]
+    else:
+        names, fwd, grads = train_graph.make_grid_graphs(art.model, art.cfg, art.loss)
+        x, y = grid_input_specs(art)
+        extra_fwd = [("x", x)]
+        extra_grads = [("x", x), ("target", y), ("loss_scale", jax.ShapeDtypeStruct((), F32))]
+        mod = {"fno": fno, "sfno": sfno, "unet": unet}[art.model]
+        specs = [(n, tuple(s), std) for n, s, std in mod.param_specs(art.cfg)]
+
+    pspecs = train_graph.example_param_arrays(art.model, art.cfg)
+    if art.graph == "fwd":
+        fn, extra = fwd, extra_fwd
+    else:
+        fn, extra = grads, extra_grads
+    args = pspecs + [s for _, s in extra]
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+
+    entry = {
+        "name": art.name,
+        "file": art.name + ".hlo.txt",
+        "model": art.model,
+        "dataset": art.dataset,
+        "graph": art.graph,
+        "precision": art.precision,
+        "stabilizer": art.stabilizer,
+        "loss": art.loss,
+        "batch": art.batch,
+        "params": [
+            {"name": n, "shape": list(s), "std": float(std)} for n, s, std in specs
+        ],
+        "extra_inputs": [
+            {"name": n, "shape": list(s.shape)} for n, s in extra
+        ],
+        "config": _cfg_summary(art),
+    }
+    return text, entry
+
+
+def _cfg_summary(art: Artifact):
+    c = art.cfg
+    out = {}
+    for field in (
+        "width", "modes", "layers", "height", "width_grid", "cp_rank",
+        "nlat", "nlon", "lmax", "n_points", "grid", "in_channels",
+        "out_channels",
+    ):
+        if hasattr(c, field):
+            out[field] = getattr(c, field)
+    if getattr(c, "site_precisions", None):
+        out["site_precisions"] = list(c.site_precisions)
+    return out
+
+
+def inputs_hash():
+    h = hashlib.sha256()
+    root = os.path.dirname(os.path.abspath(__file__))
+    for dirpath, _, files in sorted(os.walk(root)):
+        if "__pycache__" in dirpath:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                h.update(open(os.path.join(dirpath, f), "rb").read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    digest = inputs_hash()
+    hash_file = os.path.join(args.out_dir, ".inputs_hash")
+    manifest_file = os.path.join(args.out_dir, "manifest.json")
+    if (
+        not args.force
+        and not args.only
+        and os.path.exists(hash_file)
+        and os.path.exists(manifest_file)
+        and open(hash_file).read().strip() == digest
+    ):
+        print("artifacts up to date (hash match); skipping")
+        return
+
+    arts = build_matrix()
+    if args.only:
+        arts = [a for a in arts if args.only in a.name]
+    manifest = {"version": 1, "artifacts": []}
+    t_start = time.time()
+    for i, art in enumerate(arts):
+        t0 = time.time()
+        text, entry = lower_artifact(art)
+        path = os.path.join(args.out_dir, entry["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(entry)
+        print(
+            f"[{i + 1}/{len(arts)}] {art.name}: {len(text) / 1e6:.2f} MB "
+            f"({time.time() - t0:.1f}s)",
+            flush=True,
+        )
+    if not args.only:
+        with open(manifest_file, "w") as f:
+            json.dump(manifest, f, indent=1)
+        with open(hash_file, "w") as f:
+            f.write(digest)
+    else:
+        print("(--only: manifest/hash not updated)")
+    print(f"done: {len(arts)} artifacts in {time.time() - t_start:.0f}s")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

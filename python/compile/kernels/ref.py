@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package must match its oracle to float tolerance
+under pytest (python/tests/test_kernel.py) — this is the L1 correctness
+contract of the three-layer architecture.
+"""
+
+import jax.numpy as jnp
+
+
+def spectral_contract_ref(xr, xi, wr, wi):
+    """Complex spectral contraction, viewed as real pairs.
+
+    out[b,o,kx,ky] = sum_i x[b,i,kx,ky] * w[i,o,kx,ky]  (complex)
+
+    Args are the real/imag planes; returns (out_re, out_im).
+    """
+    orr = jnp.einsum("bixy,ioxy->boxy", xr, wr) - jnp.einsum(
+        "bixy,ioxy->boxy", xi, wi
+    )
+    oi = jnp.einsum("bixy,ioxy->boxy", xr, wi) + jnp.einsum(
+        "bixy,ioxy->boxy", xi, wr
+    )
+    return orr, oi
+
+
+def spectral_contract_3d_ref(xr, xi, wr, wi):
+    """3-D variant: out[b,o,kx,ky,kz] = sum_i x * w (complex)."""
+    orr = jnp.einsum("bixyz,ioxyz->boxyz", xr, wr) - jnp.einsum(
+        "bixyz,ioxyz->boxyz", xi, wi
+    )
+    oi = jnp.einsum("bixyz,ioxyz->boxyz", xr, wi) + jnp.einsum(
+        "bixyz,ioxyz->boxyz", xi, wr
+    )
+    return orr, oi
+
+
+def cp_contract_ref(xr, xi, lam, fir, fii, for_, foi, fxr, fxi, fyr, fyi):
+    """CP-factorized contraction (TFNO):
+
+    out[b,o,x,y] = sum_{i,r} x[b,i,x,y] lam[r] fi[i,r] fo[o,r] fx[x,r] fy[y,r]
+
+    with x and all factors complex (given as re/im planes; lam real).
+    Reference implementation reconstructs the dense weight first.
+    """
+    fi = fir + 1j * fii
+    fo = for_ + 1j * foi
+    fx = fxr + 1j * fxi
+    fy = fyr + 1j * fyi
+    w = jnp.einsum("r,ir,or,xr,yr->ioxy", lam.astype(fi.dtype), fi, fo, fx, fy)
+    x = xr + 1j * xi
+    out = jnp.einsum("bixy,ioxy->boxy", x, w)
+    return jnp.real(out), jnp.imag(out)
+
+
+def tanh_stabilize_ref(v):
+    """The paper's §4.3 pre-activation stabilizer."""
+    return jnp.tanh(v)

@@ -1,0 +1,245 @@
+"""L1 — Pallas kernels for the FNO spectral-weight tensor contraction.
+
+This is the paper's compute hot-spot: profiling (App. B.4, Fig. 9) shows
+the complex tensor contraction inside the FNO block accounts for 4 of the
+5 most expensive GPU kernels. Here it is implemented as a Pallas kernel in
+the *view-as-real Option C* form of App. B.12.1: the complex multiply is
+decomposed into real multiply-adds on the re/im planes, with low-dimension
+bookkeeping kept in complex form at L2.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+view targets tensor-core GEMMs over (b·modes, i)x(i, o) tiles; on TPU the
+same insight maps to MXU-shaped dots per mode-tile with the HBM->VMEM
+schedule expressed via BlockSpec:
+
+* the grid iterates over the truncated kx modes — each program instance
+  holds one (b, i, KY) activation tile and one (i, o, KY) weight tile in
+  VMEM and issues 4 real dot_generals (the view-as-real complex product);
+* VMEM footprint per instance (f32): (b*i + i*o + 2*b*o) * KY * 4 bytes *
+  2 planes — e.g. b=8, i=o=32, KY=17: ~0.6 MiB, well under the ~16 MiB
+  VMEM budget, leaving room for double buffering of the next kx tile;
+* in half precision the same tiles halve, which is exactly the memory
+  saving the paper measures (and what lets batch size double).
+
+Kernels must be lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+
+Autodiff: ``pallas_call`` is not auto-differentiable, so the public entry
+points carry a ``custom_vjp`` whose backward pass is the transposed pair
+contraction (itself expressed with einsum at L2 — the backward matmuls
+fuse fine under XLA), with cotangents rounded per the precision mode so
+the backward pass is emulated at the same precision as a true half-
+precision training run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import quantize as q
+
+
+def _rounder(mode):
+    return q._SPECTRAL_ROUNDERS[mode]
+
+
+def _contract_kernel_2d(xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref, *, mode):
+    """One kx-tile: (b,i,1,ky) x (i,o,1,ky) -> (b,o,1,ky) complex."""
+    rnd = _rounder(mode)
+    xr = rnd(xr_ref[...])
+    xi = rnd(xi_ref[...])
+    wr = rnd(wr_ref[...])
+    wi = rnd(wi_ref[...])
+    # 4 real contractions (view-as-real complex product). dot over i.
+    rr = jnp.einsum("bixy,ioxy->boxy", xr, wr)
+    ii = jnp.einsum("bixy,ioxy->boxy", xi, wi)
+    ri = jnp.einsum("bixy,ioxy->boxy", xr, wi)
+    ir = jnp.einsum("bixy,ioxy->boxy", xi, wr)
+    or_ref[...] = rnd(rr - ii)
+    oi_ref[...] = rnd(ri + ir)
+
+
+# VMEM budget (elements) under which the whole contraction fits one kernel
+# instance: (b*i + i*o + 2*b*o) * KX * KY * 2 planes * 4B must stay under
+# ~16 MiB. Perf note (EXPERIMENTS.md §Perf L1/L2): the single-instance form
+# avoids interpret-mode's per-grid-step loop — 5.3x faster at FNO shapes on
+# the CPU backend — while the kx-tiled form below remains the TPU-shaped
+# HBM->VMEM schedule for larger-than-VMEM problems.
+_VMEM_ELEM_BUDGET = 2 * 1024 * 1024
+
+
+def _pallas_contract_2d(xr, xi, wr, wi, mode):
+    b, ci, kx, ky = xr.shape
+    _, co, _, _ = wr.shape
+    out_shape = [
+        jax.ShapeDtypeStruct((b, co, kx, ky), xr.dtype),
+        jax.ShapeDtypeStruct((b, co, kx, ky), xr.dtype),
+    ]
+    kern = functools.partial(_contract_kernel_2d, mode=mode)
+    vmem_elems = 2 * (b * ci + ci * co + 2 * b * co) * kx * ky
+    if vmem_elems <= _VMEM_ELEM_BUDGET:
+        return pl.pallas_call(kern, out_shape=out_shape, interpret=True)(
+            xr, xi, wr, wi
+        )
+    return pl.pallas_call(
+        kern,
+        grid=(kx,),
+        in_specs=[
+            pl.BlockSpec((b, ci, 1, ky), lambda gx: (0, 0, gx, 0)),
+            pl.BlockSpec((b, ci, 1, ky), lambda gx: (0, 0, gx, 0)),
+            pl.BlockSpec((ci, co, 1, ky), lambda gx: (0, 0, gx, 0)),
+            pl.BlockSpec((ci, co, 1, ky), lambda gx: (0, 0, gx, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, co, 1, ky), lambda gx: (0, 0, gx, 0)),
+            pl.BlockSpec((b, co, 1, ky), lambda gx: (0, 0, gx, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=True,
+    )(xr, xi, wr, wi)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def spectral_contract(xr, xi, wr, wi, mode=q.FULL):
+    """Complex 2-D spectral contraction out = x . w over the channel dim.
+
+    Shapes: x (b,i,kx,ky) pairs, w (i,o,kx,ky) pairs -> (b,o,kx,ky) pairs.
+    """
+    return _pallas_contract_2d(xr, xi, wr, wi, mode)
+
+
+def _sc_fwd(xr, xi, wr, wi, mode):
+    out = _pallas_contract_2d(xr, xi, wr, wi, mode)
+    return out, (xr, xi, wr, wi)
+
+
+def _sc_bwd(mode, res, g):
+    xr, xi, wr, wi = res
+    gor, goi = g
+    rnd = _rounder(mode)
+    gor = rnd(gor)
+    goi = rnd(goi)
+    # Transposed pair contractions (derived in the module docstring).
+    gxr = jnp.einsum("boxy,ioxy->bixy", gor, wr) + jnp.einsum(
+        "boxy,ioxy->bixy", goi, wi
+    )
+    gxi = -jnp.einsum("boxy,ioxy->bixy", gor, wi) + jnp.einsum(
+        "boxy,ioxy->bixy", goi, wr
+    )
+    gwr = jnp.einsum("bixy,boxy->ioxy", xr, gor) + jnp.einsum(
+        "bixy,boxy->ioxy", xi, goi
+    )
+    gwi = -jnp.einsum("bixy,boxy->ioxy", xi, gor) + jnp.einsum(
+        "bixy,boxy->ioxy", xr, goi
+    )
+    return rnd(gxr), rnd(gxi), rnd(gwr), rnd(gwi)
+
+
+spectral_contract.defvjp(_sc_fwd, _sc_bwd)
+
+
+def _contract_kernel_3d(xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref, *, mode):
+    rnd = _rounder(mode)
+    xr = rnd(xr_ref[...])
+    xi = rnd(xi_ref[...])
+    wr = rnd(wr_ref[...])
+    wi = rnd(wi_ref[...])
+    rr = jnp.einsum("bixyz,ioxyz->boxyz", xr, wr)
+    ii = jnp.einsum("bixyz,ioxyz->boxyz", xi, wi)
+    ri = jnp.einsum("bixyz,ioxyz->boxyz", xr, wi)
+    ir = jnp.einsum("bixyz,ioxyz->boxyz", xi, wr)
+    or_ref[...] = rnd(rr - ii)
+    oi_ref[...] = rnd(ri + ir)
+
+
+def _pallas_contract_3d(xr, xi, wr, wi, mode):
+    b, ci, kx, ky, kz = xr.shape
+    _, co, _, _, _ = wr.shape
+    out_shape = [
+        jax.ShapeDtypeStruct((b, co, kx, ky, kz), xr.dtype),
+        jax.ShapeDtypeStruct((b, co, kx, ky, kz), xr.dtype),
+    ]
+    kern = functools.partial(_contract_kernel_3d, mode=mode)
+    vmem_elems = 2 * (b * ci + ci * co + 2 * b * co) * kx * ky * kz
+    if vmem_elems <= _VMEM_ELEM_BUDGET:
+        return pl.pallas_call(kern, out_shape=out_shape, interpret=True)(
+            xr, xi, wr, wi
+        )
+    return pl.pallas_call(
+        kern,
+        grid=(kx,),
+        in_specs=[
+            pl.BlockSpec((b, ci, 1, ky, kz), lambda gx: (0, 0, gx, 0, 0)),
+            pl.BlockSpec((b, ci, 1, ky, kz), lambda gx: (0, 0, gx, 0, 0)),
+            pl.BlockSpec((ci, co, 1, ky, kz), lambda gx: (0, 0, gx, 0, 0)),
+            pl.BlockSpec((ci, co, 1, ky, kz), lambda gx: (0, 0, gx, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, co, 1, ky, kz), lambda gx: (0, 0, gx, 0, 0)),
+            pl.BlockSpec((b, co, 1, ky, kz), lambda gx: (0, 0, gx, 0, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=True,
+    )(xr, xi, wr, wi)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def spectral_contract_3d(xr, xi, wr, wi, mode=q.FULL):
+    """Complex 3-D spectral contraction (GINO's latent FNO)."""
+    return _pallas_contract_3d(xr, xi, wr, wi, mode)
+
+
+def _sc3_fwd(xr, xi, wr, wi, mode):
+    return _pallas_contract_3d(xr, xi, wr, wi, mode), (xr, xi, wr, wi)
+
+
+def _sc3_bwd(mode, res, g):
+    xr, xi, wr, wi = res
+    gor, goi = g
+    rnd = _rounder(mode)
+    gor = rnd(gor)
+    goi = rnd(goi)
+    gxr = jnp.einsum("boxyz,ioxyz->bixyz", gor, wr) + jnp.einsum(
+        "boxyz,ioxyz->bixyz", goi, wi
+    )
+    gxi = -jnp.einsum("boxyz,ioxyz->bixyz", gor, wi) + jnp.einsum(
+        "boxyz,ioxyz->bixyz", goi, wr
+    )
+    gwr = jnp.einsum("bixyz,boxyz->ioxyz", xr, gor) + jnp.einsum(
+        "bixyz,boxyz->ioxyz", xi, goi
+    )
+    gwi = -jnp.einsum("bixyz,boxyz->ioxyz", xi, gor) + jnp.einsum(
+        "bixyz,boxyz->ioxyz", xr, goi
+    )
+    return rnd(gxr), rnd(gxi), rnd(gwr), rnd(gwi)
+
+
+spectral_contract_3d.defvjp(_sc3_fwd, _sc3_bwd)
+
+
+def cp_contract(xr, xi, lam, fir, fii, for_, foi, fxr, fxi, fyr, fyi, mode=q.FULL):
+    """CP-factorized (TFNO) contraction with the paper's memory-greedy
+    sub-expression order: merge the rank-indexed factor matrices first
+    (tiny intermediates), reconstruct the dense spectral weight last, and
+    run the final high-dimensional contraction in the Pallas kernel.
+
+    Each intermediate is rounded per `mode`, matching the "each einsum step
+    in half precision" design of §4.2.
+    """
+    rnd = q._SPECTRAL_CASTS[mode]  # custom-vjp cast: rounds fwd and bwd
+
+    def c(z):
+        return rnd(jnp.real(z)) + 1j * rnd(jnp.imag(z))
+
+    fi = fir + 1j * fii
+    fo = for_ + 1j * foi
+    fx = fxr + 1j * fxi
+    fy = fyr + 1j * fyi
+    # Greedy order (smallest intermediates first): lam*fi -> io -> ioy -> ioxy.
+    t = c(jnp.einsum("r,ir->ir", lam.astype(fi.dtype), fi))
+    t = c(jnp.einsum("ir,or->ior", t, fo))
+    t = c(jnp.einsum("ior,yr->ioyr", t, fy))
+    w = c(jnp.einsum("ioyr,xr->ioxy", t, fx))
+    return spectral_contract(xr, xi, jnp.real(w), jnp.imag(w), mode)

@@ -1,0 +1,1 @@
+"""L2 model definitions (FNO/TFNO, SFNO-lite, GINO-lite, U-Net)."""

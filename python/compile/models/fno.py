@@ -1,0 +1,200 @@
+"""L2 — FNO / TFNO model definition (the paper's main architecture).
+
+Pure-functional JAX: ``init_params`` returns an ordered dict of real f32
+arrays (complex spectral weights are stored as trailing-dim re/im pairs so
+the HLO interface stays all-real — see DESIGN.md), ``forward`` maps
+(params, x) -> y and is what gets AOT-lowered.
+
+Precision modes (python/compile/quantize.py) reproduce the paper's
+configurations:
+
+* ``full``  — everything f32 (baseline),
+* ``amp``   — real-valued convs/MLPs rounded to f16, FNO block f32
+              (what stock torch AMP does to FNO),
+* ``mixed`` — AMP **plus** the FNO block in f16: the input of the forward
+              FFT, the Pallas tensor contraction and the inverse FFT are
+              all computed under f16 rounding (the paper's method),
+* ``bf16`` / ``fp8`` / ``tf32`` — the App. B.11 alternatives.
+
+Stabilizers (§4.3 / App. B.6) are pre-activations applied before each
+forward FFT: ``none``, ``tanh`` (the paper's choice), ``hardclip``,
+``sigclip`` (2sigma-clip), ``div`` (fixed division).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from compile import quantize as q
+from compile.kernels import spectral_conv as sc
+
+
+@dataclasses.dataclass(frozen=True)
+class FnoConfig:
+    in_channels: int = 1
+    out_channels: int = 1
+    width: int = 32
+    modes: int = 8          # modes kept per spectral axis side
+    layers: int = 4
+    height: int = 32
+    width_grid: int = 32    # spatial W
+    mode: str = q.FULL      # precision mode
+    stabilizer: str = "none"
+    cp_rank: int = 0        # 0 = dense weights, >0 = CP factorization
+    input_scale: float = 1.0  # stability experiments un-normalize inputs
+    # Table 4 per-site overrides: precision tokens for (forward FFT,
+    # contraction, inverse FFT). None -> follow `mode` everywhere.
+    site_precisions: tuple = None
+
+
+def param_specs(cfg: FnoConfig):
+    """Ordered (name, shape, init_std) — shared with the Rust manifest."""
+    w = cfg.width
+    m2 = 2 * cfg.modes
+    specs = []
+    # Lifting (1x1 conv over channels + 2 coordinate channels).
+    cin = cfg.in_channels + 2
+    specs.append(("lift_w", (cin, w), (1.0 / cin) ** 0.5))
+    specs.append(("lift_b", (w,), 0.0))
+    for l in range(cfg.layers):
+        if cfg.cp_rank > 0:
+            r = cfg.cp_rank
+            scale = (1.0 / (w * w)) ** 0.5
+            specs.append((f"blk{l}_lam", (r,), scale))
+            for nm, dim in (("fi", w), ("fo", w), ("fx", m2), ("fy", m2)):
+                specs.append((f"blk{l}_{nm}", (dim, r, 2), (1.0 / dim) ** 0.5))
+        else:
+            specs.append(
+                (f"blk{l}_wspec", (w, w, m2, m2, 2), (1.0 / (w * w)) ** 0.5)
+            )
+        specs.append((f"blk{l}_skip_w", (w, w), (1.0 / w) ** 0.5))
+        specs.append((f"blk{l}_skip_b", (w,), 0.0))
+    specs.append(("proj1_w", (w, 2 * w), (1.0 / w) ** 0.5))
+    specs.append(("proj1_b", (2 * w,), 0.0))
+    specs.append(("proj2_w", (2 * w, cfg.out_channels), (1.0 / (2 * w)) ** 0.5))
+    specs.append(("proj2_b", (cfg.out_channels,), 0.0))
+    return specs
+
+
+def init_params(rng, cfg: FnoConfig):
+    params = {}
+    for name, shape, std in param_specs(cfg):
+        rng, sub = jax.random.split(rng)
+        if std == 0.0:
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def _stabilize(v, kind):
+    if kind == "none":
+        return v
+    if kind == "tanh":
+        return jnp.tanh(v)
+    if kind == "hardclip":
+        return jnp.clip(v, -1.0, 1.0)
+    if kind == "sigclip":
+        mu = jnp.mean(v, axis=(-2, -1), keepdims=True)
+        sd = jnp.std(v, axis=(-2, -1), keepdims=True)
+        return jnp.clip(v, mu - 2.0 * sd, mu + 2.0 * sd)
+    if kind == "div":
+        return v / 100.0
+    raise ValueError(f"unknown stabilizer {kind!r}")
+
+
+def _truncate_modes(vh, m):
+    """Gather the four low-frequency corners into a (.., 2m, 2m) block."""
+    tl = vh[:, :, :m, :m]
+    tr = vh[:, :, :m, -m:]
+    bl = vh[:, :, -m:, :m]
+    br = vh[:, :, -m:, -m:]
+    top = jnp.concatenate([tl, tr], axis=-1)
+    bot = jnp.concatenate([bl, br], axis=-1)
+    return jnp.concatenate([top, bot], axis=-2)
+
+
+def _scatter_modes(block, h, w):
+    """Inverse of _truncate_modes: place corners into an (h, w) spectrum."""
+    b, c, m2, _ = block.shape
+    m = m2 // 2
+    out = jnp.zeros((b, c, h, w), block.dtype)
+    out = out.at[:, :, :m, :m].set(block[:, :, :m, :m])
+    out = out.at[:, :, :m, -m:].set(block[:, :, :m, m:])
+    out = out.at[:, :, -m:, :m].set(block[:, :, m:, :m])
+    out = out.at[:, :, -m:, -m:].set(block[:, :, m:, m:])
+    return out
+
+
+def spectral_block(params, prefix, v, cfg: FnoConfig):
+    """One Fourier layer: stabilize -> FFT -> truncate -> contract (Pallas)
+    -> scatter -> iFFT, all under the precision mode's rounding."""
+    mode = cfg.mode
+    # Per-site precisions (Table 4 ablation); default: mode everywhere.
+    fft_p, con_p, ifft_p = cfg.site_precisions or (mode, mode, mode)
+    h, w = v.shape[-2], v.shape[-1]
+    v = _stabilize(v, cfg.stabilizer)
+    # Forward FFT in reduced precision: round the input, transform, round
+    # the spectrum (per-op rounding model of a half FFT).
+    v = q.spectral_cast(v, fft_p)
+    vh = jnp.fft.fft2(v.astype(jnp.complex64))
+    vh = q.spectral_cast(vh, fft_p)
+    blk = _truncate_modes(vh, cfg.modes)
+    xr, xi = jnp.real(blk), jnp.imag(blk)
+    if cfg.cp_rank > 0:
+        out_r, out_i = sc.cp_contract(
+            xr,
+            xi,
+            params[f"{prefix}_lam"],
+            params[f"{prefix}_fi"][..., 0],
+            params[f"{prefix}_fi"][..., 1],
+            params[f"{prefix}_fo"][..., 0],
+            params[f"{prefix}_fo"][..., 1],
+            params[f"{prefix}_fx"][..., 0],
+            params[f"{prefix}_fx"][..., 1],
+            params[f"{prefix}_fy"][..., 0],
+            params[f"{prefix}_fy"][..., 1],
+            mode=con_p,
+        )
+    else:
+        wspec = params[f"{prefix}_wspec"]
+        out_r, out_i = sc.spectral_contract(
+            xr, xi, wspec[..., 0], wspec[..., 1], con_p
+        )
+    full = _scatter_modes(out_r + 1j * out_i, h, w)
+    # Inverse FFT in reduced precision.
+    full = q.spectral_cast(full, ifft_p)
+    out = jnp.real(jnp.fft.ifft2(full))
+    return q.spectral_cast(out, ifft_p)
+
+
+def _conv1x1(v, wmat, b, mode):
+    v = q.dense_cast(v, mode)
+    wmat = q.dense_cast(wmat, mode)
+    out = jnp.einsum("bchw,cd->bdhw", v, wmat) + b[None, :, None, None]
+    return q.dense_cast(out, mode)
+
+
+def _coord_grid(b, h, w):
+    ys = jnp.linspace(0.0, 1.0, h)
+    xs = jnp.linspace(0.0, 1.0, w)
+    gy, gx = jnp.meshgrid(ys, xs, indexing="ij")
+    g = jnp.stack([gy, gx])[None]  # (1, 2, h, w)
+    return jnp.broadcast_to(g, (b, 2, h, w))
+
+
+def forward(params, x, cfg: FnoConfig):
+    """FNO forward: x (b, c_in, h, w) -> (b, c_out, h, w)."""
+    b, _, h, w = x.shape
+    x = x * cfg.input_scale
+    v = jnp.concatenate([x, _coord_grid(b, h, w)], axis=1)
+    v = _conv1x1(v, params["lift_w"], params["lift_b"], cfg.mode)
+    for l in range(cfg.layers):
+        spec = spectral_block(params, f"blk{l}", v, cfg)
+        skip = _conv1x1(v, params[f"blk{l}_skip_w"], params[f"blk{l}_skip_b"], cfg.mode)
+        v = jax.nn.gelu(spec + skip)
+    v = _conv1x1(v, params["proj1_w"], params["proj1_b"], cfg.mode)
+    v = jax.nn.gelu(v)
+    v = _conv1x1(v, params["proj2_w"], params["proj2_b"], cfg.mode)
+    return v

@@ -1,0 +1,160 @@
+"""L2 — GINO-lite: Geometry-Informed Neural Operator (Li et al. 2023) for
+the Shape-Net Car / Ahmed-body point-cloud datasets.
+
+Architecture (faithful to the paper's shape, CPU-scaled):
+
+  point features --MLP--> latent --(fixed kernel to_grid matmul)--> grid
+  --> 3-D FNO (Pallas contraction, mixed-precision hot path) -->
+  --(from_grid matmul)--> points --concat skip--MLP--> pressure
+
+The graph-neural-operator kernel integrals are the precomputed Gaussian
+interpolation matrices produced by ``rust/src/pde/geometry.rs`` and fed as
+*inputs* (they depend on each sample's point cloud; batch size is 1 for
+geometry datasets, exactly as in the paper — App. B.3).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from compile import quantize as q
+from compile.kernels import spectral_conv as sc
+
+
+@dataclasses.dataclass(frozen=True)
+class GinoConfig:
+    n_points: int = 256
+    grid: int = 8            # latent grid g (g^3 nodes)
+    in_features: int = 7     # xyz + normals + inlet
+    width: int = 24
+    modes: int = 2           # per-axis spectral modes in the latent FNO
+    layers: int = 2
+    mode: str = q.FULL
+    stabilizer: str = "none"
+
+
+def param_specs(cfg: GinoConfig):
+    w = cfg.width
+    m2 = 2 * cfg.modes
+    specs = [
+        ("enc1_w", (cfg.in_features, w), (1.0 / cfg.in_features) ** 0.5),
+        ("enc1_b", (w,), 0.0),
+        ("enc2_w", (w, w), (1.0 / w) ** 0.5),
+        ("enc2_b", (w,), 0.0),
+    ]
+    for l in range(cfg.layers):
+        specs.append((f"blk{l}_wspec", (w, w, m2, m2, m2, 2), (1.0 / (w * w)) ** 0.5))
+        specs.append((f"blk{l}_skip_w", (w, w), (1.0 / w) ** 0.5))
+        specs.append((f"blk{l}_skip_b", (w,), 0.0))
+    specs += [
+        ("dec1_w", (2 * w, w), (1.0 / (2 * w)) ** 0.5),
+        ("dec1_b", (w,), 0.0),
+        ("dec2_w", (w, 1), (1.0 / w) ** 0.5),
+        ("dec2_b", (1,), 0.0),
+    ]
+    return specs
+
+
+def init_params(rng, cfg: GinoConfig):
+    params = {}
+    for name, shape, std in param_specs(cfg):
+        rng, sub = jax.random.split(rng)
+        params[name] = (
+            jnp.zeros(shape, jnp.float32)
+            if std == 0.0
+            else std * jax.random.normal(sub, shape, jnp.float32)
+        )
+    return params
+
+
+def _truncate_modes_3d(vh, m):
+    """Gather the 8 low-frequency corners into (.., 2m, 2m, 2m)."""
+    parts_z = []
+    for zsl in (slice(0, m), slice(-m, None)):
+        parts_y = []
+        for ysl in (slice(0, m), slice(-m, None)):
+            lo = vh[:, :, :m, ysl, zsl]
+            hi = vh[:, :, -m:, ysl, zsl]
+            parts_y.append(jnp.concatenate([lo, hi], axis=2))
+        parts_z.append(jnp.concatenate(parts_y, axis=3))
+    return jnp.concatenate(parts_z, axis=4)
+
+
+def _scatter_modes_3d(block, g):
+    b, c, m2, _, _ = block.shape
+    m = m2 // 2
+    out = jnp.zeros((b, c, g, g, g), block.dtype)
+    for xi, xsl in ((0, slice(0, m)), (1, slice(-m, None))):
+        for yi, ysl in ((0, slice(0, m)), (1, slice(-m, None))):
+            for zi, zsl in ((0, slice(0, m)), (1, slice(-m, None))):
+                src = block[
+                    :,
+                    :,
+                    xi * m : xi * m + m,
+                    yi * m : yi * m + m,
+                    zi * m : zi * m + m,
+                ]
+                out = out.at[:, :, xsl, ysl, zsl].set(src)
+    return out
+
+
+def _stabilize(v, kind):
+    if kind == "tanh":
+        return jnp.tanh(v)
+    if kind == "none":
+        return v
+    raise ValueError(kind)
+
+
+def fno3d_block(params, prefix, v, cfg: GinoConfig):
+    """v: (b, c, g, g, g)."""
+    mode = cfg.mode
+    g = v.shape[-1]
+    v = _stabilize(v, cfg.stabilizer)
+    v = q.spectral_cast(v, mode)
+    vh = jnp.fft.fftn(v.astype(jnp.complex64), axes=(-3, -2, -1))
+    vh = q.spectral_cast(vh, mode)
+    blk = _truncate_modes_3d(vh, cfg.modes)
+    wspec = params[f"{prefix}_wspec"]
+    out_r, out_i = sc.spectral_contract_3d(
+        jnp.real(blk), jnp.imag(blk), wspec[..., 0], wspec[..., 1], mode
+    )
+    full = _scatter_modes_3d(out_r + 1j * out_i, g)
+    full = q.spectral_cast(full, mode)
+    out = jnp.real(jnp.fft.ifftn(full, axes=(-3, -2, -1)))
+    return q.spectral_cast(out, mode)
+
+
+def _mlp(v, wname, params, mode):
+    v = q.dense_cast(v, mode)
+    w = q.dense_cast(params[wname + "_w"], mode)
+    return q.dense_cast(v @ w + params[wname + "_b"], mode)
+
+
+def forward(params, feats, to_grid, from_grid, cfg: GinoConfig):
+    """feats (b, p, 7), to_grid (b, g^3, p), from_grid (b, p, g^3)
+    -> pressure (b, p)."""
+    b, p, _ = feats.shape
+    g = cfg.grid
+    m = cfg.mode
+    # Encoder MLP per point.
+    h = jax.nn.gelu(_mlp(feats, "enc1", params, m))
+    h = jax.nn.gelu(_mlp(h, "enc2", params, m))
+    # Kernel integral onto the latent grid (fixed weights, learned values).
+    vg = q.dense_cast(jnp.einsum("bgp,bpc->bgc", q.dense_cast(to_grid, m), h), m)
+    v = jnp.transpose(vg, (0, 2, 1)).reshape(b, cfg.width, g, g, g)
+    for l in range(cfg.layers):
+        spec = fno3d_block(params, f"blk{l}", v, cfg)
+        vflat = v.reshape(b, cfg.width, -1)
+        skip = jnp.einsum(
+            "bcg,cd->bdg", vflat, q.dense_cast(params[f"blk{l}_skip_w"], m)
+        ) + params[f"blk{l}_skip_b"][None, :, None]
+        v = jax.nn.gelu(spec + skip.reshape(v.shape))
+    # Back to the points.
+    vflat = v.reshape(b, cfg.width, -1)
+    vp = jnp.einsum("bpg,bcg->bpc", q.dense_cast(from_grid, m), vflat)
+    z = jnp.concatenate([vp, h], axis=-1)
+    z = jax.nn.gelu(_mlp(z, "dec1", params, m))
+    out = _mlp(z, "dec2", params, m)
+    return out[..., 0]

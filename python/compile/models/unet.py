@@ -1,0 +1,96 @@
+"""L2 — U-Net baseline (paper §4.5, Table 2).
+
+A compact 2-level U-Net (conv3x3 + GELU, stride-2 down, nearest-neighbour
+up, skip concatenation). Under ``amp`` every conv runs with f16 rounding —
+the "U-Net + AMP" row of Table 2. There is no spectral domain, which is
+exactly why AMP alone already captures most of its savings (24.9-20.9%
+paper) while FNO needs the paper's method for its complex-valued block.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from compile import quantize as q
+
+
+@dataclasses.dataclass(frozen=True)
+class UnetConfig:
+    in_channels: int = 1
+    out_channels: int = 1
+    width: int = 16
+    height: int = 32
+    width_grid: int = 32
+    mode: str = q.FULL
+
+
+def param_specs(cfg: UnetConfig):
+    w = cfg.width
+    c = cfg.in_channels
+    specs = []
+
+    def conv(name, cin, cout):
+        specs.append((name + "_w", (3, 3, cin, cout), (2.0 / (9 * cin)) ** 0.5))
+        specs.append((name + "_b", (cout,), 0.0))
+
+    conv("enc1a", c, w)
+    conv("enc1b", w, w)
+    conv("enc2a", w, 2 * w)
+    conv("enc2b", 2 * w, 2 * w)
+    conv("mid", 2 * w, 2 * w)
+    conv("dec2a", 4 * w, 2 * w)  # after skip concat
+    conv("dec2b", 2 * w, w)
+    conv("dec1a", 2 * w, w)
+    conv("dec1b", w, w)
+    specs.append(("out_w", (1, 1, w, cfg.out_channels), (1.0 / w) ** 0.5))
+    specs.append(("out_b", (cfg.out_channels,), 0.0))
+    return specs
+
+
+def init_params(rng, cfg: UnetConfig):
+    params = {}
+    for name, shape, std in param_specs(cfg):
+        rng, sub = jax.random.split(rng)
+        params[name] = (
+            jnp.zeros(shape, jnp.float32)
+            if std == 0.0
+            else std * jax.random.normal(sub, shape, jnp.float32)
+        )
+    return params
+
+
+def _conv(v, wname, params, mode, stride=1):
+    w = q.dense_cast(params[wname + "_w"], mode)
+    v = q.dense_cast(v, mode)
+    out = jax.lax.conv_general_dilated(
+        v,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "HWIO", "NCHW"),
+    )
+    out = out + params[wname + "_b"][None, :, None, None]
+    return q.dense_cast(out, mode)
+
+
+def _up2(v):
+    b, c, h, w = v.shape
+    v = jnp.repeat(v, 2, axis=2)
+    return jnp.repeat(v, 2, axis=3)
+
+
+def forward(params, x, cfg: UnetConfig):
+    m = cfg.mode
+    e1 = jax.nn.gelu(_conv(x, "enc1a", params, m))
+    e1 = jax.nn.gelu(_conv(e1, "enc1b", params, m))
+    e2 = jax.nn.gelu(_conv(e1, "enc2a", params, m, stride=2))
+    e2 = jax.nn.gelu(_conv(e2, "enc2b", params, m))
+    mid = jax.nn.gelu(_conv(e2, "mid", params, m))
+    d2 = jnp.concatenate([mid, e2], axis=1)
+    d2 = jax.nn.gelu(_conv(d2, "dec2a", params, m))
+    d2 = jax.nn.gelu(_conv(d2, "dec2b", params, m))
+    d1 = jnp.concatenate([_up2(d2), e1], axis=1)
+    d1 = jax.nn.gelu(_conv(d1, "dec1a", params, m))
+    d1 = jax.nn.gelu(_conv(d1, "dec1b", params, m))
+    return _conv(d1, "out", params, m)

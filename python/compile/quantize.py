@@ -1,0 +1,135 @@
+"""Emulated low-precision casts usable inside jitted/AOT-lowered graphs.
+
+The paper's method runs the FNO block in half precision on CUDA; our PJRT
+target is CPU, so each reduced-precision format is emulated by a
+round-trip cast that reproduces the format's *rounding and range* exactly
+(bit-checked against the Rust softfloat in ``rust/src/fp`` — see
+python/tests/test_quantize.py which loads vectors dumped by
+``mpno dump-fp-vectors``).
+
+Backward rounding: JAX's grad of ``convert_element_type`` is another
+convert (i.e. the cotangent is NOT rounded). We wrap every cast in a
+``custom_vjp`` that also rounds the cotangent, modelling a backward pass
+executed in the same precision — this is what makes the Fig. 10 loss-scale
+collapse and Fig. 16 FP8 divergence reproducible.
+"""
+
+import jax
+import jax.numpy as jnp
+
+FULL = "full"
+AMP = "amp"
+MIXED = "mixed"
+BF16 = "bf16"
+FP8 = "fp8"
+TF32 = "tf32"
+
+ALL_MODES = (FULL, AMP, MIXED, BF16, FP8, TF32)
+
+# Max finite magnitudes.
+F16_MAX = 65504.0
+E5M2_MAX = 57344.0
+
+
+def _round_f16(x):
+    return x.astype(jnp.float16).astype(jnp.float32)
+
+
+def _round_bf16(x):
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _round_tf32(x):
+    """Truncate the f32 mantissa to 10 bits with round-to-nearest-even.
+
+    Implemented with integer bit twiddling (bitcast -> add rounding bias ->
+    mask), identical to ``rust/src/fp/tf32.rs``.
+    """
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    # RNE: add 0xFFF + lsb-of-kept, then clear the 13 dropped bits.
+    lsb = (bits >> jnp.uint32(13)) & jnp.uint32(1)
+    bias = jnp.uint32(0xFFF) + lsb
+    rounded = (bits + bias) & jnp.uint32(0xFFFFE000)
+    out = jax.lax.bitcast_convert_type(rounded, jnp.float32)
+    # Preserve NaN/Inf unchanged.
+    return jnp.where(jnp.isfinite(x), out, x)
+
+
+def _round_fp8(x):
+    """E5M2 emulation: round to fp16 first, then RNE-truncate the mantissa
+    to 2 bits by integer bit-twiddling on the f16 encoding, then clip to the
+    E5M2 range. (The paper's own simulation only range-clips; we keep the
+    mantissa truncation too so FP8's missing precision bits — the mechanism
+    Theorem 3.2 blames for its divergence — are actually modelled. Twin
+    implementation: rust/src/fp/mod.rs::round_trip.)"""
+    h = x.astype(jnp.float16)
+    bits = jax.lax.bitcast_convert_type(h, jnp.uint16)
+    lsb = (bits >> jnp.uint16(8)) & jnp.uint16(1)
+    rounded = (bits + jnp.uint16(0x7F) + lsb) & jnp.uint16(0xFF00)
+    h2 = jax.lax.bitcast_convert_type(rounded, jnp.float16).astype(jnp.float32)
+    out = jnp.clip(h2, -E5M2_MAX, E5M2_MAX)
+    return jnp.where(jnp.isfinite(x), out, x)
+
+
+_SPECTRAL_ROUNDERS = {
+    FULL: lambda x: x,
+    AMP: lambda x: x,  # stock AMP leaves complex/spectral ops in f32
+    MIXED: _round_f16,
+    BF16: _round_bf16,
+    FP8: _round_fp8,
+    TF32: _round_tf32,
+}
+
+_DENSE_ROUNDERS = {
+    FULL: lambda x: x,
+    AMP: _round_f16,  # AMP autocasts real matmul-like ops
+    MIXED: _round_f16,
+    BF16: _round_bf16,
+    FP8: _round_f16,  # paper simulates FP8 only in the FNO block
+    TF32: _round_tf32,
+}
+
+
+def _make_cast(rounder):
+    @jax.custom_vjp
+    def cast(x):
+        return rounder(x)
+
+    def fwd(x):
+        return rounder(x), None
+
+    def bwd(_, g):
+        return (rounder(g),)
+
+    cast.defvjp(fwd, bwd)
+    return cast
+
+
+_SPECTRAL_CASTS = {m: _make_cast(r) for m, r in _SPECTRAL_ROUNDERS.items()}
+_DENSE_CASTS = {m: _make_cast(r) for m, r in _DENSE_ROUNDERS.items()}
+
+
+def spectral_cast(x, mode):
+    """Rounding applied to FNO-block (spectral-domain) values under `mode`.
+
+    Complex inputs are rounded per component (torch.chalf semantics).
+    """
+    cast = _SPECTRAL_CASTS[mode]
+    if jnp.iscomplexobj(x):
+        return cast(jnp.real(x)) + 1j * cast(jnp.imag(x))
+    return cast(x)
+
+
+def dense_cast(x, mode):
+    """Rounding applied to real-valued (non-FNO-block) ops under `mode`."""
+    return _DENSE_CASTS[mode](x)
+
+
+def spectral_bytes(mode):
+    """Bytes per complex spectral activation element (memory model twin of
+    ``Precision::spectral_activation_bytes``)."""
+    return {FULL: 8, AMP: 8, TF32: 8, MIXED: 4, BF16: 4, FP8: 2}[mode]
+
+
+def dense_bytes(mode):
+    return {FULL: 4, TF32: 4, AMP: 2, MIXED: 2, BF16: 2, FP8: 1}[mode]

@@ -1,0 +1,102 @@
+"""Loss + gradient graphs for AOT export.
+
+Each model gets two exported graphs:
+
+* ``fwd``   — (params..., inputs...) -> (pred,)
+* ``grads`` — (params..., inputs..., target, loss_scale) ->
+              (loss, scaled_grads...)
+
+``loss_scale`` is a runtime scalar: the graph differentiates
+``loss * loss_scale`` so the Rust-side ``amp::GradScaler`` can implement
+dynamic loss scaling (App. B.5) without re-exporting; the unscaled loss is
+returned for logging. The optimizer (Adam with fp32 master weights) lives
+in Rust — gradients cross the PJRT boundary as plain f32 tensors.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile import losses
+from compile.models import fno, gino, sfno, unet
+
+
+def flatten_params(params, names):
+    return [params[n] for n in names]
+
+
+def unflatten_params(flat, names):
+    return dict(zip(names, flat))
+
+
+def make_grid_graphs(model, cfg, loss_name):
+    """Graphs for grid models (FNO / TFNO / SFNO / U-Net).
+
+    Returns (names, fwd_fn, grads_fn) where the fns take flat params.
+    """
+    if model == "fno":
+        mod = fno
+    elif model == "sfno":
+        mod = sfno
+    elif model == "unet":
+        mod = unet
+    else:
+        raise ValueError(model)
+    names = [n for n, _, _ in mod.param_specs(cfg)]
+    loss_fn = losses.relative_h1 if loss_name == "h1" else losses.relative_l2
+
+    def fwd(*args):
+        flat, x = list(args[:-1]), args[-1]
+        params = unflatten_params(flat, names)
+        return (mod.forward(params, x, cfg),)
+
+    def grads(*args):
+        flat = list(args[:-3])
+        x, y, loss_scale = args[-3], args[-2], args[-1]
+
+        def scalar_loss(flat_params):
+            params = unflatten_params(flat_params, names)
+            pred = mod.forward(params, x, cfg)
+            return loss_fn(pred, y)
+
+        loss, g = jax.value_and_grad(
+            lambda fp: scalar_loss(fp) * loss_scale
+        )(flat)
+        return (loss / loss_scale, *g)
+
+    return names, fwd, grads
+
+
+def make_gino_graphs(cfg):
+    """Graphs for GINO (extra inputs: interpolation matrices)."""
+    names = [n for n, _, _ in gino.param_specs(cfg)]
+
+    def fwd(*args):
+        flat = list(args[:-3])
+        feats, to_grid, from_grid = args[-3], args[-2], args[-1]
+        params = unflatten_params(flat, names)
+        return (gino.forward(params, feats, to_grid, from_grid, cfg),)
+
+    def grads(*args):
+        flat = list(args[:-5])
+        feats, to_grid, from_grid, y, loss_scale = args[-5:]
+
+        def scalar_loss(fp):
+            params = unflatten_params(fp, names)
+            pred = gino.forward(params, feats, to_grid, from_grid, cfg)
+            return losses.relative_l2(pred[:, None, :], y[:, None, :])
+
+        loss, g = jax.value_and_grad(
+            lambda fp: scalar_loss(fp) * loss_scale
+        )(flat)
+        return (loss / loss_scale, *g)
+
+    return names, fwd, grads
+
+
+def example_param_arrays(model, cfg):
+    """ShapeDtypeStructs for the flat parameter list."""
+    mod = {"fno": fno, "sfno": sfno, "unet": unet, "gino": gino}[model]
+    return [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for _, shape, _ in mod.param_specs(cfg)
+    ]

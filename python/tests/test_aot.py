@@ -1,0 +1,73 @@
+"""AOT path checks: the artifact matrix is well-formed and lowers to
+parseable HLO text with the manifest-declared interface."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+def test_matrix_names_unique_and_tokenized():
+    arts = aot.build_matrix()
+    names = [a.name for a in arts]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    for a in arts:
+        assert a.graph in ("fwd", "grads")
+        assert a.precision in ("full", "amp", "mixed", "bf16", "fp8", "tf32")
+        # The dense/geometry split covers all five paper datasets.
+    datasets = {a.dataset for a in arts}
+    assert datasets == {"ns", "darcy", "swe", "car", "ahmed"}
+
+
+def test_matrix_covers_experiment_needs():
+    arts = aot.build_matrix()
+    names = {a.name for a in arts}
+    # Stability study (Fig. 10 / Table 3).
+    for stab in ["none", "tanh", "hardclip", "sigclip", "div"]:
+        assert f"fno_ns_r32_mixed_{stab}_grads" in names
+    # Table 4's 8 per-site combos.
+    for bits in range(8):
+        tag = "".join(
+            "h" if bits & b else "f" for b in (4, 2, 1)
+        )
+        assert f"fno_darcy_r32_site{tag}_grads" in names
+    # Super-resolution forwards.
+    for res in [64, 128, 256]:
+        assert f"fno_ns_r{res}_full_none_fwd" in names
+        assert f"fno_ns_r{res}_mixed_tanh_fwd" in names
+
+
+def test_lower_one_artifact_produces_hlo_text():
+    arts = [a for a in aot.build_matrix() if a.name == "fno_darcy_r32_full_none_fwd"]
+    assert len(arts) == 1
+    text, entry = aot.lower_artifact(arts[0])
+    assert text.startswith("HloModule"), text[:80]
+    assert "fft" in text.lower()
+    assert entry["params"][0]["name"] == "lift_w"
+    # Interface arity: params + declared extra inputs.
+    n_inputs = len(entry["params"]) + len(entry["extra_inputs"])
+    assert f"parameter({n_inputs - 1})" in text
+
+
+def test_grads_artifact_has_loss_scale_input():
+    arts = [a for a in aot.build_matrix() if a.name == "fno_darcy_r32_full_none_grads"]
+    _text, entry = aot.lower_artifact(arts[0])
+    assert entry["extra_inputs"][-1]["name"] == "loss_scale"
+    assert entry["extra_inputs"][-1]["shape"] == []
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_manifest_consistent_with_files():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    manifest = json.load(open(os.path.join(root, "manifest.json")))
+    assert manifest["version"] == 1
+    for entry in manifest["artifacts"]:
+        path = os.path.join(root, entry["file"])
+        assert os.path.exists(path), entry["file"]
+        head = open(path).read(64)
+        assert head.startswith("HloModule")

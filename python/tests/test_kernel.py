@@ -1,0 +1,149 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the core correctness signal of the compile path — hypothesis
+sweeps shapes and precision modes and asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as q
+from compile.kernels import ref
+from compile.kernels import spectral_conv as sc
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def _planes(seed, b, ci, co, *spatial):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    xr = _rand(ks[0], (b, ci) + spatial)
+    xi = _rand(ks[1], (b, ci) + spatial)
+    wr = _rand(ks[2], (ci, co) + spatial)
+    wi = _rand(ks[3], (ci, co) + spatial)
+    return xr, xi, wr, wi
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    ci=st.integers(1, 6),
+    co=st.integers(1, 6),
+    kx=st.integers(1, 6),
+    ky=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_contract_2d_matches_ref(b, ci, co, kx, ky, seed):
+    xr, xi, wr, wi = _planes(seed, b, ci, co, kx, ky)
+    got_r, got_i = sc.spectral_contract(xr, xi, wr, wi, q.FULL)
+    want_r, want_i = ref.spectral_contract_ref(xr, xi, wr, wi)
+    np.testing.assert_allclose(got_r, want_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_i, want_i, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    ci=st.integers(1, 4),
+    co=st.integers(1, 4),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+)
+def test_contract_3d_matches_ref(b, ci, co, k, seed):
+    xr, xi, wr, wi = _planes(seed, b, ci, co, k, k, k)
+    got_r, got_i = sc.spectral_contract_3d(xr, xi, wr, wi, q.FULL)
+    want_r, want_i = ref.spectral_contract_3d_ref(xr, xi, wr, wi)
+    np.testing.assert_allclose(got_r, want_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_i, want_i, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", [q.MIXED, q.BF16, q.TF32])
+def test_reduced_precision_error_is_bounded(mode):
+    """Theorem 3.2 in kernel form: the half-precision contraction's
+    relative error stays at the format's epsilon scale."""
+    xr, xi, wr, wi = _planes(7, 2, 8, 8, 6, 6)
+    got_r, _ = sc.spectral_contract(xr, xi, wr, wi, mode)
+    want_r, _ = ref.spectral_contract_ref(xr, xi, wr, wi)
+    rel = float(jnp.linalg.norm(got_r - want_r) / jnp.linalg.norm(want_r))
+    eps = {q.MIXED: 1e-3, q.BF16: 8e-3, q.TF32: 1e-3}[mode]
+    assert 0 < rel < 30 * eps, f"{mode}: rel={rel}"
+
+
+def test_mixed_less_accurate_than_full_more_than_tf32_noise():
+    xr, xi, wr, wi = _planes(3, 2, 8, 8, 5, 5)
+    full_r, _ = sc.spectral_contract(xr, xi, wr, wi, q.FULL)
+    want_r, _ = ref.spectral_contract_ref(xr, xi, wr, wi)
+    assert float(jnp.abs(full_r - want_r).max()) < 1e-4
+
+
+def test_gradients_match_ref():
+    xr, xi, wr, wi = _planes(11, 2, 4, 5, 3, 3)
+
+    def loss_pallas(wr):
+        a, b = sc.spectral_contract(xr, xi, wr, wi, q.FULL)
+        return jnp.sum(a**2) + jnp.sum(jnp.abs(b))
+
+    def loss_ref(wr):
+        a, b = ref.spectral_contract_ref(xr, xi, wr, wi)
+        return jnp.sum(a**2) + jnp.sum(jnp.abs(b))
+
+    g1 = jax.grad(loss_pallas)(wr)
+    g2 = jax.grad(loss_ref)(wr)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-4)
+
+
+def test_gradient_rounding_in_mixed_mode():
+    """The custom-vjp backward must round cotangents: tiny gradient
+    components below f16 resolution vanish relative to full mode."""
+    xr, xi, wr, wi = _planes(13, 1, 2, 2, 2, 2)
+
+    def loss(mode):
+        def f(x):
+            a, _ = sc.spectral_contract(x, xi, wr, wi, mode)
+            return jnp.sum(a)
+
+        return jax.grad(f)(xr)
+
+    g_full = loss(q.FULL)
+    g_mixed = loss(q.MIXED)
+    # Mixed grads are f16-quantized values.
+    assert np.allclose(
+        np.asarray(g_mixed), np.asarray(g_mixed).astype(np.float16).astype(np.float32)
+    )
+    assert not np.allclose(np.asarray(g_full), np.asarray(g_mixed), atol=0)
+
+
+def test_cp_contract_matches_ref():
+    b, ci, co, kx, ky, r = 2, 3, 4, 4, 4, 3
+    ks = jax.random.split(jax.random.PRNGKey(5), 11)
+    xr, xi = _rand(ks[0], (b, ci, kx, ky)), _rand(ks[1], (b, ci, kx, ky))
+    lam = _rand(ks[2], (r,))
+    fir, fii = _rand(ks[3], (ci, r)), _rand(ks[4], (ci, r))
+    for_, foi = _rand(ks[5], (co, r)), _rand(ks[6], (co, r))
+    fxr, fxi = _rand(ks[7], (kx, r)), _rand(ks[8], (kx, r))
+    fyr, fyi = _rand(ks[9], (ky, r)), _rand(ks[10], (ky, r))
+    got_r, got_i = sc.cp_contract(
+        xr, xi, lam, fir, fii, for_, foi, fxr, fxi, fyr, fyi, q.FULL
+    )
+    want_r, want_i = ref.cp_contract_ref(
+        xr, xi, lam, fir, fii, for_, foi, fxr, fxi, fyr, fyi
+    )
+    np.testing.assert_allclose(got_r, want_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_i, want_i, rtol=1e-4, atol=1e-4)
+
+
+def test_f16_overflow_propagates_in_mixed():
+    """65504 is the cliff: values past it become inf in mixed mode (the
+    §4.3 failure naive mixed-precision hits) but stay finite in full."""
+    xr = jnp.full((1, 1, 1, 1), 7e4, jnp.float32)
+    xi = jnp.zeros_like(xr)
+    wr = jnp.ones((1, 1, 1, 1), jnp.float32)
+    wi = jnp.zeros_like(wr)
+    full_r, _ = sc.spectral_contract(xr, xi, wr, wi, q.FULL)
+    mixed_r, _ = sc.spectral_contract(xr, xi, wr, wi, q.MIXED)
+    assert np.isfinite(np.asarray(full_r)).all()
+    assert not np.isfinite(np.asarray(mixed_r)).all()

@@ -1,0 +1,191 @@
+"""L2 model checks: shapes, precision modes, resolution invariance,
+stabilizer behaviour, SHT correctness, losses."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import losses
+from compile import quantize as q
+from compile.models import fno, gino, sfno, unet
+
+
+def small_fno(mode=q.FULL, stab="none", cp_rank=0, res=16):
+    return fno.FnoConfig(
+        width=8, modes=4, layers=2, height=res, width_grid=res,
+        mode=mode, stabilizer=stab, cp_rank=cp_rank,
+    )
+
+
+def test_fno_shapes_all_modes():
+    for mode in q.ALL_MODES:
+        cfg = small_fno(mode=mode, stab="tanh" if mode != q.FULL else "none")
+        params = fno.init_params(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 1, 16, 16))
+        y = fno.forward(params, x, cfg)
+        assert y.shape == (2, 1, 16, 16)
+        assert np.isfinite(np.asarray(y)).all(), mode
+
+
+def test_fno_resolution_invariance():
+    """Discretization convergence: the same weights evaluate at any
+    resolution (the property zero-shot super-resolution relies on), and
+    on a band-limited input the outputs agree across resolutions."""
+    cfg16 = small_fno(res=16)
+    cfg32 = small_fno(res=32)
+    params = fno.init_params(jax.random.PRNGKey(0), cfg16)
+
+    def field(res):
+        ys = jnp.linspace(0, 1, res, endpoint=False)
+        xs = jnp.linspace(0, 1, res, endpoint=False)
+        gy, gx = jnp.meshgrid(ys, xs, indexing="ij")
+        f = jnp.sin(2 * jnp.pi * gx) + 0.5 * jnp.cos(2 * jnp.pi * gy)
+        return f[None, None]
+
+    y16 = fno.forward(params, field(16), cfg16)
+    y32 = fno.forward(params, field(32), cfg32)
+    # Compare on the common (coarse) grid.
+    y32_sub = y32[:, :, ::2, ::2]
+    rel = float(jnp.linalg.norm(y16 - y32_sub) / jnp.linalg.norm(y16))
+    assert rel < 0.15, f"resolution transfer rel err {rel}"
+
+
+def test_tanh_stabilizer_rescues_mixed_precision():
+    """The §4.3 story end-to-end: un-normalized inputs overflow the f16
+    FFT (DC bin accumulates the whole grid) and kill the naive mixed
+    model, while the tanh pre-activation keeps it finite."""
+    x = 500.0 * jax.random.normal(jax.random.PRNGKey(1), (1, 1, 16, 16))
+    outs = {}
+    for stab in ["none", "tanh"]:
+        cfg = small_fno(mode=q.MIXED, stab=stab)
+        params = fno.init_params(jax.random.PRNGKey(0), cfg)
+        outs[stab] = np.asarray(fno.forward(params, x, cfg))
+    assert not np.isfinite(outs["none"]).all(), "naive mixed should overflow"
+    assert np.isfinite(outs["tanh"]).all(), "tanh must stabilize"
+
+
+def test_cp_and_dense_agree_at_init_scale():
+    """CP with full rank reconstructs some dense weight; both paths must
+    at least produce finite, same-shaped outputs."""
+    cfg = small_fno(cp_rank=4)
+    params = fno.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 1, 16, 16))
+    y = fno.forward(params, x, cfg)
+    assert y.shape == (2, 1, 16, 16)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_unet_shapes():
+    cfg = unet.UnetConfig(width=8, height=16, width_grid=16)
+    params = unet.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 1, 16, 16))
+    y = unet.forward(params, x, cfg)
+    assert y.shape == (2, 1, 16, 16)
+
+
+def test_sht_roundtrip_band_limited():
+    """Analysis -> synthesis on the equiangular grid must reproduce a
+    band-limited field (quadrature is approximate; tolerance reflects it)."""
+    nlat, nlon, lmax = 16, 32, 7
+    theta = jnp.pi * (jnp.arange(nlat) + 0.5) / nlat
+    lam = 2 * jnp.pi * jnp.arange(nlon) / nlon
+    th, lm = jnp.meshgrid(theta, lam, indexing="ij")
+    # Y_2^1-flavoured smooth field.
+    f = jnp.sin(th) * jnp.cos(th) * jnp.cos(lm) + 0.3 * jnp.cos(th) ** 2
+    v = f[None, None]
+    a = sfno.sht(v, lmax)
+    back = sfno.isht(a, nlat, nlon)
+    rel = float(jnp.linalg.norm(back - v) / jnp.linalg.norm(v))
+    assert rel < 0.05, f"SHT roundtrip rel={rel}"
+
+
+def test_sht_parseval_scale():
+    nlat, nlon, lmax = 16, 32, 7
+    v = jax.random.normal(jax.random.PRNGKey(0), (1, 1, nlat, nlon))
+    a = sfno.sht(v, lmax)
+    assert a.shape == (1, 1, lmax + 1, lmax + 1)
+    # l < m entries must be exactly zero.
+    for m in range(lmax + 1):
+        for l in range(m):
+            assert abs(complex(a[0, 0, l, m])) == 0.0
+
+
+def test_sfno_forward_shapes():
+    cfg = sfno.SfnoConfig(width=8, lmax=5, layers=2, nlat=12, nlon=24)
+    params = sfno.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 12, 24))
+    y = sfno.forward(params, x, cfg)
+    assert y.shape == (2, 3, 12, 24)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_gino_forward_shapes():
+    cfg = gino.GinoConfig(n_points=32, grid=4, width=8, modes=1, layers=1)
+    params = gino.init_params(jax.random.PRNGKey(0), cfg)
+    feats = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 7))
+    to_g = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (1, 64, 32)))
+    to_g = to_g / jnp.sum(to_g, -1, keepdims=True)
+    from_g = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (1, 32, 64)))
+    from_g = from_g / jnp.sum(from_g, -1, keepdims=True)
+    y = gino.forward(params, feats, to_g, from_g, cfg)
+    assert y.shape == (1, 32)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_relative_l2_properties():
+    y = jax.random.normal(jax.random.PRNGKey(0), (3, 1, 8, 8))
+    assert float(losses.relative_l2(y, y)) < 1e-5
+    assert abs(float(losses.relative_l2(1.1 * y, y)) - 0.1) < 1e-3
+    assert abs(float(losses.relative_l2(jnp.zeros_like(y), y)) - 1.0) < 1e-3
+
+
+def test_relative_h1_penalizes_high_frequencies_more():
+    res = 32
+    ys = jnp.linspace(0, 1, res, endpoint=False)
+    gy, gx = jnp.meshgrid(ys, ys, indexing="ij")
+    base = jnp.sin(2 * jnp.pi * gx)[None, None]
+    lo_err = base + 0.1 * jnp.sin(2 * jnp.pi * gx)[None, None]
+    hi_err = base + 0.1 * jnp.sin(2 * jnp.pi * 8 * gx)[None, None]
+    l2_lo = float(losses.relative_l2(lo_err, base))
+    l2_hi = float(losses.relative_l2(hi_err, base))
+    h1_lo = float(losses.relative_h1(lo_err, base))
+    h1_hi = float(losses.relative_h1(hi_err, base))
+    assert abs(l2_lo - l2_hi) < 0.02  # same L2 perturbation size
+    assert h1_hi > 2.0 * h1_lo  # H1 punishes the high-frequency error
+
+
+def test_grads_flow_through_all_modes():
+    from compile import train_graph
+
+    for mode in [q.FULL, q.MIXED]:
+        cfg = small_fno(mode=mode, stab="tanh" if mode == q.MIXED else "none")
+        names, _fwd, grads = train_graph.make_grid_graphs("fno", cfg, "h1")
+        params = fno.init_params(jax.random.PRNGKey(0), cfg)
+        flat = [params[n] for n in names]
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 1, 16, 16))
+        y = jax.random.normal(jax.random.PRNGKey(2), (2, 1, 16, 16))
+        out = grads(*flat, x, y, jnp.float32(1.0))
+        loss, gs = out[0], out[1:]
+        assert np.isfinite(float(loss))
+        assert len(gs) == len(flat)
+        total = sum(float(jnp.abs(g).sum()) for g in gs)
+        assert total > 0, f"zero grads in mode {mode}"
+
+
+def test_loss_scale_divides_out():
+    from compile import train_graph
+
+    cfg = small_fno()
+    names, _fwd, grads = train_graph.make_grid_graphs("fno", cfg, "l2")
+    params = fno.init_params(jax.random.PRNGKey(0), cfg)
+    flat = [params[n] for n in names]
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 1, 16, 16))
+    y = jax.random.normal(jax.random.PRNGKey(2), (2, 1, 16, 16))
+    o1 = grads(*flat, x, y, jnp.float32(1.0))
+    o1k = grads(*flat, x, y, jnp.float32(1024.0))
+    # Reported loss is unscaled...
+    assert abs(float(o1[0]) - float(o1k[0])) < 1e-5
+    # ...while gradients are scaled by 1024.
+    r = float(jnp.abs(o1k[1]).max() / jnp.abs(o1[1]).max())
+    assert abs(r - 1024.0) / 1024.0 < 1e-3

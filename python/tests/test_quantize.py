@@ -1,0 +1,100 @@
+"""Emulated-cast correctness, cross-checked against the Rust softfloat.
+
+If `artifacts/fp_vectors.json` exists (dumped by `mpno dump-fp-vectors`),
+every (input, mode) pair is checked bit-for-bit against the Rust
+implementation — the two emulations must agree exactly for the memory
+model and the theory experiments to be consistent across layers.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as q
+
+
+def test_f16_rounding_constants():
+    xs = jnp.array([0.0, 1.0, 65504.0, 65520.0, 2049.0, 1e-8])
+    out = np.asarray(q.spectral_cast(xs, q.MIXED))
+    assert out[0] == 0.0
+    assert out[1] == 1.0
+    assert out[2] == 65504.0
+    assert np.isinf(out[3])  # past the cliff
+    assert out[4] == 2048.0  # RNE
+    assert out[5] == np.float32(np.float16(1e-8))
+
+
+def test_bf16_coarser_than_f16_in_range():
+    xs = jnp.linspace(0.5, 2.0, 101)
+    e16 = np.abs(np.asarray(q.spectral_cast(xs, q.MIXED)) - np.asarray(xs)).max()
+    ebf = np.abs(np.asarray(q.spectral_cast(xs, q.BF16)) - np.asarray(xs)).max()
+    assert ebf > e16
+
+
+def test_tf32_matches_reference_bit_pattern():
+    xs = np.array([1.0 + 2**-12, 1.0 + 3 * 2**-11, 3.14159265, -2.71828], np.float32)
+    got = np.asarray(q.spectral_cast(jnp.asarray(xs), q.TF32))
+    # Reference: round mantissa to 10 bits (RNE) via float64 arithmetic.
+    def tf32_ref(x):
+        if x == 0 or not np.isfinite(x):
+            return x
+        bits = np.float32(x).view(np.uint32)
+        lsb = (bits >> np.uint32(13)) & np.uint32(1)
+        r = (bits + np.uint32(0xFFF) + lsb) & np.uint32(0xFFFFE000)
+        return r.view(np.float32)
+
+    want = np.array([tf32_ref(x) for x in xs])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fp8_clips_at_e5m2_range():
+    xs = jnp.array([1.0, 60000.0, 70000.0, -70000.0])
+    out = np.asarray(q.spectral_cast(xs, q.FP8))
+    assert out[0] == 1.0
+    assert out[1] <= q.E5M2_MAX
+    assert out[2] == q.E5M2_MAX
+    assert out[3] == -q.E5M2_MAX
+
+
+def test_amp_leaves_spectral_untouched():
+    xs = jnp.array([1.0 + 2.0**-20])
+    assert float(q.spectral_cast(xs, q.AMP)[0]) == float(xs[0])
+    # ...but rounds dense values.
+    assert float(q.dense_cast(xs, q.AMP)[0]) == 1.0
+
+
+def test_complex_cast_per_component():
+    z = jnp.array([1.0 + 2.0**-20 + 1j * (2.0 + 2.0**-18)], jnp.complex64)
+    out = q.spectral_cast(z, q.MIXED)
+    assert float(jnp.real(out)[0]) == 1.0
+    assert float(jnp.imag(out)[0]) == 2.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-6e4, 6e4, allow_nan=False))
+def test_f16_idempotent(x):
+    a = q.spectral_cast(jnp.float32(x), q.MIXED)
+    b = q.spectral_cast(a, q.MIXED)
+    assert float(a) == float(b)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/fp_vectors.json")),
+    reason="run `mpno dump-fp-vectors` first for the cross-layer bit check",
+)
+def test_bit_exact_vs_rust_softfloat():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/fp_vectors.json")
+    vectors = json.load(open(path))
+    mode_map = {"mixed": q.MIXED, "bf16": q.BF16, "fp8": q.FP8, "tf32": q.TF32}
+    for rec in vectors:
+        mode = mode_map[rec["mode"]]
+        x = jnp.asarray(np.array(rec["input"], np.float32))
+        got = np.asarray(q.spectral_cast(x, mode))
+        want = np.array(rec["output"], np.float32)
+        np.testing.assert_array_equal(
+            got, want, err_msg=f"mode={rec['mode']} diverges from Rust softfloat"
+        )

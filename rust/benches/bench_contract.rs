@@ -1,0 +1,81 @@
+//! Contraction-engine micro-benchmarks (Tables 8/9/10 machinery):
+//! planner strategies, path caching, view-as-real execution options.
+//! Run: `cargo bench --bench bench_contract`
+
+use mpno::bench::{bench_auto, Table};
+use mpno::contract::{
+    contract_complex, plan, EinsumExpr, PathCache, PathStrategy, ViewAsReal,
+};
+use mpno::fp::Cplx;
+use mpno::rng::Rng;
+use mpno::tensor::CTensor;
+
+fn rand_ct(shape: &[usize], seed: u64) -> CTensor {
+    let mut rng = Rng::new(seed);
+    CTensor::from_fn(shape, |_| {
+        let (r, i) = rng.cnormal();
+        Cplx::from_f64(r, i)
+    })
+}
+
+fn main() {
+    let mut t = Table::new("bench_contract", &["case", "mean", "p95"]);
+
+    // FNO dense contraction at three scales.
+    for (b, c, m) in [(2usize, 8usize, 8usize), (4, 16, 8), (4, 32, 12)] {
+        let expr = EinsumExpr::parse("bixy,ioxy->boxy").unwrap();
+        let x = rand_ct(&[b, c, m, m], 1);
+        let w = rand_ct(&[c, c, m, m], 2);
+        let shapes: Vec<&[usize]> = vec![x.shape(), w.shape()];
+        let path = plan(&expr, &shapes, PathStrategy::MemoryGreedy).unwrap();
+        let (e2, x2, w2, p2) = (expr.clone(), x.clone(), w.clone(), path.clone());
+        let s = bench_auto(
+            &format!("dense contract b{b} c{c} m{m} (OptionC)"),
+            0.5,
+            move || {
+                let out =
+                    contract_complex(&e2, &[x2.clone(), w2.clone()], &p2, ViewAsReal::OptionC)
+                        .unwrap();
+                std::hint::black_box(out.len());
+            },
+        );
+        println!("{s}");
+        t.row(&[s.name.clone(), mpno::bench::fmt_secs(s.mean_s), mpno::bench::fmt_secs(s.p95_s)]);
+    }
+
+    // Planner costs: greedy vs exhaustive FLOP-optimal on the CP einsum.
+    let expr = EinsumExpr::parse("bixy,r,ir,or,xr,yr->boxy").unwrap();
+    let shapes: Vec<Vec<usize>> = vec![
+        vec![4, 16, 8, 8],
+        vec![8],
+        vec![16, 8],
+        vec![16, 8],
+        vec![8, 8],
+        vec![8, 8],
+    ];
+    let refs: Vec<&[usize]> = shapes.iter().map(|s| s.as_slice()).collect();
+    for strat in [PathStrategy::MemoryGreedy, PathStrategy::FlopOptimal] {
+        let (e2, r2) = (expr.clone(), refs.clone());
+        let s = bench_auto(&format!("plan 6-operand CP ({strat:?})"), 0.3, move || {
+            let p = plan(&e2, &r2, strat).unwrap();
+            std::hint::black_box(p.steps.len());
+        });
+        println!("{s}");
+        t.row(&[s.name.clone(), mpno::bench::fmt_secs(s.mean_s), mpno::bench::fmt_secs(s.p95_s)]);
+    }
+
+    // Cache hit path (Table 9's fix).
+    let mut cache = PathCache::new();
+    cache
+        .get_or_plan(&expr, &refs, PathStrategy::MemoryGreedy)
+        .unwrap();
+    let s = bench_auto("plan via warm PathCache", 0.2, move || {
+        let p = cache
+            .get_or_plan(&expr, &refs, PathStrategy::MemoryGreedy)
+            .unwrap();
+        std::hint::black_box(p.steps.len());
+    });
+    println!("{s}");
+    t.row(&[s.name.clone(), mpno::bench::fmt_secs(s.mean_s), mpno::bench::fmt_secs(s.p95_s)]);
+    t.print();
+}

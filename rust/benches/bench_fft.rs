@@ -1,0 +1,79 @@
+//! FFT substrate benchmarks across precisions — quantifies the cost of
+//! the per-butterfly rounding emulation and the radix-2 vs Bluestein gap.
+//! Run: `cargo bench --bench bench_fft`
+
+use mpno::bench::bench_auto;
+use mpno::fft::{fft, fft2};
+use mpno::fp::{Cplx, F16};
+use mpno::rng::Rng;
+
+fn signal<S: mpno::fp::Scalar>(n: usize, seed: u64) -> Vec<Cplx<S>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let (r, i) = rng.cnormal();
+            Cplx::from_f64(r, i)
+        })
+        .collect()
+}
+
+fn main() {
+    for n in [256usize, 1024, 4096] {
+        let base: Vec<Cplx<f64>> = signal(n, 1);
+        let s = bench_auto(&format!("fft f64 n={n}"), 0.4, {
+            let base = base.clone();
+            move || {
+                let mut x = base.clone();
+                fft(&mut x);
+                std::hint::black_box(x[0].re);
+            }
+        });
+        println!("{s}");
+
+        let base32: Vec<Cplx<f32>> = signal(n, 1);
+        let s = bench_auto(&format!("fft f32 n={n}"), 0.4, {
+            let base32 = base32.clone();
+            move || {
+                let mut x = base32.clone();
+                fft(&mut x);
+                std::hint::black_box(x[0].re);
+            }
+        });
+        println!("{s}");
+
+        let base16: Vec<Cplx<F16>> = signal(n, 1);
+        let s = bench_auto(&format!("fft emulated-f16 n={n}"), 0.4, {
+            let base16 = base16.clone();
+            move || {
+                let mut x = base16.clone();
+                fft(&mut x);
+                std::hint::black_box(x[0].to_f64().0);
+            }
+        });
+        println!("{s}");
+    }
+
+    // Non-power-of-two (Bluestein) vs power-of-two.
+    for n in [243usize, 256, 500, 512] {
+        let base: Vec<Cplx<f64>> = signal(n, 2);
+        let s = bench_auto(&format!("fft f64 n={n} (pow2={})", n.is_power_of_two()), 0.3, {
+            move || {
+                let mut x = base.clone();
+                fft(&mut x);
+                std::hint::black_box(x[0].re);
+            }
+        });
+        println!("{s}");
+    }
+
+    // 2-D transforms at dataset shapes.
+    for hw in [32usize, 64, 128] {
+        let base: Vec<Cplx<f64>> = signal(hw * hw, 3);
+        let s = bench_auto(&format!("fft2 f64 {hw}x{hw}"), 0.4, move || {
+            let mut x = base.clone();
+            fft2(&mut x, hw, hw);
+            std::hint::black_box(x[0].re);
+        });
+        println!("{s}");
+    }
+}

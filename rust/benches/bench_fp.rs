@@ -1,0 +1,87 @@
+//! Softfloat emulation benchmarks: cost per rounding conversion, the
+//! abstract (a0, eps, T) quantizer, and the theory quadratures that
+//! dominate `mpno exp fig7`.
+//! Run: `cargo bench --bench bench_fp`
+
+use mpno::bench::bench_auto;
+use mpno::fp::{Bf16, F16, Fp8E5M2, PrecisionSystem, Tf32};
+use mpno::rng::Rng;
+use mpno::theory::{prec_error, HypercubeGrid, LatticeFn};
+
+struct Sine;
+impl LatticeFn for Sine {
+    fn eval(&self, x: &[f64]) -> f64 {
+        (std::f64::consts::TAU * x.iter().sum::<f64>()).sin()
+    }
+    fn lipschitz(&self) -> f64 {
+        std::f64::consts::TAU
+    }
+    fn sup(&self) -> f64 {
+        1.0
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let xs: Vec<f32> = (0..65536).map(|_| (rng.normal() * 100.0) as f32).collect();
+
+    let x1 = xs.clone();
+    let s = bench_auto("f32 -> f16 -> f32 x 64k", 0.4, move || {
+        let mut acc = 0.0f32;
+        for &x in &x1 {
+            acc += F16::from_f32(x).to_f32();
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{s}");
+
+    let x2 = xs.clone();
+    let s = bench_auto("f32 -> bf16 -> f32 x 64k", 0.4, move || {
+        let mut acc = 0.0f32;
+        for &x in &x2 {
+            acc += Bf16::from_f32(x).to_f32();
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{s}");
+
+    let x3 = xs.clone();
+    let s = bench_auto("f32 -> fp8(E5M2) -> f32 x 64k", 0.4, move || {
+        let mut acc = 0.0f32;
+        for &x in &x3 {
+            acc += Fp8E5M2::from_f32(x).to_f32();
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{s}");
+
+    let x4 = xs.clone();
+    let s = bench_auto("f32 -> tf32 -> f32 x 64k", 0.4, move || {
+        let mut acc = 0.0f32;
+        for &x in &x4 {
+            acc += Tf32::from_f32(x).0;
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{s}");
+
+    // Abstract quantizer q(x) (Theorem 3.2's object).
+    let q = PrecisionSystem::like_f16();
+    let x5: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+    let s = bench_auto("(a0,eps,T)-system q(x) x 64k", 0.4, move || {
+        let mut acc = 0.0f64;
+        for &x in &x5 {
+            acc += q.q(x);
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{s}");
+
+    // Theory quadrature (fig7 hot path).
+    let grid = HypercubeGrid::new(2, 16);
+    let s = bench_auto("prec_error 2-D m=16", 0.4, move || {
+        let e = prec_error(&Sine, &grid, &PrecisionSystem::like_f16(), 1.0);
+        std::hint::black_box(e);
+    });
+    println!("{s}");
+}

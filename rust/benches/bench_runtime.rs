@@ -1,0 +1,77 @@
+//! End-to-end PJRT hot-path benchmarks: fwd and grads executions per
+//! precision mode, literal marshalling overhead, and the Adam update —
+//! the data behind EXPERIMENTS.md §Perf (L3).
+//! Run: `cargo bench --bench bench_runtime` (needs `make artifacts`)
+
+use mpno::bench::bench_auto;
+use mpno::optim::Adam;
+use mpno::runtime::{tensor_to_literal, Engine};
+use mpno::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let dir = root.join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        return Ok(());
+    }
+    let mut engine = Engine::new(&dir)?;
+
+    // Marshalling: host tensor -> literal.
+    let big = Tensor::from_fn(&[4, 32, 32, 32], |i| (i[1] + i[2]) as f32 * 0.01);
+    let b2 = big.clone();
+    let s = bench_auto("tensor_to_literal 4x32x32x32 (512 KiB)", 0.3, move || {
+        let lit = tensor_to_literal(&b2);
+        std::hint::black_box(lit.size_bytes());
+    });
+    println!("{s}");
+
+    // Forward + grads executions per precision.
+    for art in [
+        "fno_darcy_r32_full_none_fwd",
+        "fno_darcy_r32_mixed_tanh_fwd",
+        "fno_darcy_r32_full_none_grads",
+        "fno_darcy_r32_mixed_tanh_grads",
+        "fno_ns_r128_full_none_fwd",
+    ] {
+        let exe = engine.load(art)?;
+        let params = engine.init_params(&exe.entry, 0);
+        let extra: Vec<Tensor> = exe
+            .entry
+            .extra_inputs
+            .iter()
+            .map(|(_, shape)| {
+                if shape.is_empty() {
+                    Tensor::from_vec(vec![], vec![1.0f32])
+                } else {
+                    Tensor::from_fn(shape, |i| {
+                        ((i.iter().sum::<usize>() % 17) as f32 - 8.0) * 0.05
+                    })
+                }
+            })
+            .collect();
+        let exe2 = exe.clone();
+        let s = bench_auto(art, 1.0, move || {
+            let mut inputs: Vec<&Tensor> = params.iter().collect();
+            for e in &extra {
+                inputs.push(e);
+            }
+            let out = exe2.run(&inputs).unwrap();
+            std::hint::black_box(out.len());
+        });
+        println!("{s}");
+    }
+
+    // Adam update at FNO parameter scale.
+    let exe = engine.load("fno_darcy_r32_full_none_grads")?;
+    let mut params = engine.init_params(&exe.entry, 0);
+    let grads: Vec<Tensor> = params.iter().map(|p| p.map(|x| x * 0.01)).collect();
+    let mut adam = Adam::new(1e-3, &params);
+    let n_elems: usize = params.iter().map(|p| p.len()).sum();
+    let s = bench_auto(&format!("adam step ({n_elems} params)"), 0.5, move || {
+        adam.step(&mut params, &grads, 1.0);
+        std::hint::black_box(adam.steps_taken());
+    });
+    println!("{s}");
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! One-shot regeneration of the fast paper tables (the bench-style subset
+//! of the experiment battery): Tables 8/9/10/11, Figs. 3/4/7/15 and the
+//! Table 7 roofline — everything that runs in seconds without training.
+//! The training-driven tables (1-6, Figs. 1/5/6/8-14/16) are regenerated
+//! by `mpno exp <id>` (see DESIGN.md per-experiment index).
+//! Run: `cargo bench --bench bench_tables`
+
+use mpno::experiments::{run, Ctx};
+
+fn main() {
+    let ctx = Ctx::new(true);
+    for id in ["fig3", "fig4", "tab7", "tab8", "tab9", "tab10", "tab11", "fig7", "fig15"] {
+        println!("\n########## {id} ##########");
+        if let Err(e) = run(id, &ctx) {
+            eprintln!("{id} failed: {e:#}");
+        }
+    }
+}

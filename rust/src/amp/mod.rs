@@ -1,0 +1,180 @@
+//! AMP semantics at L3: the dynamic gradient scaler (torch.cuda.amp
+//! GradScaler twin) whose collapsing-scale failure on naive mixed FNO is
+//! Fig. 10's subject, plus the autocast policy table the memory model and
+//! DESIGN.md document.
+
+/// Dynamic loss scaler: multiply the loss by `scale` before backward;
+/// on non-finite gradients skip the step and halve the scale; after
+/// `growth_interval` consecutive good steps, double it.
+#[derive(Debug, Clone)]
+pub struct GradScaler {
+    pub scale: f64,
+    pub growth_factor: f64,
+    pub backoff_factor: f64,
+    pub growth_interval: u64,
+    good_steps: u64,
+    /// Telemetry for the Fig. 10 plot: (step, scale) after each update.
+    pub history: Vec<(u64, f64)>,
+    step: u64,
+    pub enabled: bool,
+}
+
+impl Default for GradScaler {
+    fn default() -> Self {
+        GradScaler::new(65536.0)
+    }
+}
+
+impl GradScaler {
+    pub fn new(init_scale: f64) -> GradScaler {
+        GradScaler {
+            scale: init_scale,
+            growth_factor: 2.0,
+            backoff_factor: 0.5,
+            growth_interval: 200,
+            good_steps: 0,
+            history: vec![],
+            step: 0,
+            enabled: true,
+        }
+    }
+
+    pub fn disabled() -> GradScaler {
+        let mut s = GradScaler::new(1.0);
+        s.enabled = false;
+        s
+    }
+
+    /// Scale to feed the grads graph this step.
+    pub fn loss_scale(&self) -> f32 {
+        if self.enabled {
+            self.scale as f32
+        } else {
+            1.0
+        }
+    }
+
+    /// 1/scale for unscaling gradients.
+    pub fn inv_scale(&self) -> f32 {
+        1.0 / self.loss_scale()
+    }
+
+    /// Report whether the step was applied (grads finite). Updates scale.
+    pub fn update(&mut self, step_ok: bool) {
+        self.step += 1;
+        if !self.enabled {
+            return;
+        }
+        if step_ok {
+            self.good_steps += 1;
+            if self.good_steps >= self.growth_interval {
+                self.scale *= self.growth_factor;
+                self.good_steps = 0;
+            }
+        } else {
+            self.scale = (self.scale * self.backoff_factor).max(1e-10);
+            self.good_steps = 0;
+        }
+        self.history.push((self.step, self.scale));
+    }
+
+    /// Fig. 10's diagnostic: the scale has collapsed to uselessness
+    /// ("its scale decreases drastically with each update and becomes
+    /// infinitesimal").
+    pub fn collapsed(&self) -> bool {
+        self.scale < 1e-6
+    }
+}
+
+/// Which op class autocasts under AMP — documentation-grade policy table
+/// used by the memory model (mirrors torch.amp's published lists and the
+/// paper's observation that complex/spectral ops are NOT autocast).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    /// matmul / conv / einsum on reals -> f16 under AMP.
+    DenseMatmul,
+    /// Reductions, norms, softmax -> f32 always.
+    Reduction,
+    /// FFT / complex ops -> unsupported by AMP (stays f32) — the gap the
+    /// paper's method fills.
+    Spectral,
+    /// Pointwise -> follows input dtype.
+    Pointwise,
+}
+
+impl OpClass {
+    /// Bytes/elem this op's output occupies under AMP vs the paper's mixed
+    /// mode (the policy difference behind Fig. 3's bars).
+    pub fn amp_bytes(self) -> usize {
+        match self {
+            OpClass::DenseMatmul => 2,
+            OpClass::Reduction => 4,
+            OpClass::Spectral => 8,  // complex64: AMP leaves it alone
+            OpClass::Pointwise => 2,
+        }
+    }
+
+    pub fn mixed_fno_bytes(self) -> usize {
+        match self {
+            OpClass::DenseMatmul => 2,
+            OpClass::Reduction => 4,
+            OpClass::Spectral => 4, // chalf: the paper's half-precision block
+            OpClass::Pointwise => 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_after_interval() {
+        let mut s = GradScaler::new(1024.0);
+        s.growth_interval = 10;
+        for _ in 0..10 {
+            s.update(true);
+        }
+        assert_eq!(s.scale, 2048.0);
+    }
+
+    #[test]
+    fn backs_off_on_overflow() {
+        let mut s = GradScaler::new(1024.0);
+        s.update(false);
+        assert_eq!(s.scale, 512.0);
+        s.update(false);
+        assert_eq!(s.scale, 256.0);
+    }
+
+    #[test]
+    fn collapse_under_persistent_overflow() {
+        // Fig. 10: when every step overflows (naive mixed FNO), the scale
+        // decays geometrically to nothing.
+        let mut s = GradScaler::new(65536.0);
+        for _ in 0..60 {
+            s.update(false);
+        }
+        assert!(s.collapsed(), "scale={}", s.scale);
+        // History recorded for plotting.
+        assert_eq!(s.history.len(), 60);
+        assert!(s.history.windows(2).all(|w| w[1].1 <= w[0].1));
+    }
+
+    #[test]
+    fn disabled_scaler_is_identity() {
+        let mut s = GradScaler::disabled();
+        assert_eq!(s.loss_scale(), 1.0);
+        s.update(false);
+        assert_eq!(s.loss_scale(), 1.0);
+    }
+
+    #[test]
+    fn policy_table_matches_paper_story() {
+        // AMP leaves spectral ops at full (complex64) width; the paper's
+        // mixed mode halves them — that is the whole memory argument.
+        assert_eq!(OpClass::Spectral.amp_bytes(), 8);
+        assert_eq!(OpClass::Spectral.mixed_fno_bytes(), 4);
+        assert_eq!(OpClass::DenseMatmul.amp_bytes(), OpClass::DenseMatmul.mixed_fno_bytes());
+    }
+}

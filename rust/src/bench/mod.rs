@@ -1,0 +1,187 @@
+//! Hand-rolled benchmark harness (criterion is not resolvable offline):
+//! warmup + timed iterations with mean/p50/p95 statistics, and a tiny
+//! table printer shared by the experiment drivers so every regenerated
+//! paper table prints in a uniform format.
+
+use std::time::Instant;
+
+/// Result statistics for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured ones.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        p50_s: times[times.len() / 2],
+        p95_s: times[(times.len() * 95 / 100).min(times.len() - 1)],
+        min_s: times[0],
+    }
+}
+
+/// Auto-calibrated variant: choose iteration count to hit ~`budget_s`.
+pub fn bench_auto(name: &str, budget_s: f64, mut f: impl FnMut()) -> BenchStats {
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / once) as usize).clamp(3, 10_000);
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+/// Format seconds human-readably.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} mean {:>10}  p50 {:>10}  p95 {:>10}  ({} iters)",
+            self.name,
+            fmt_secs(self.mean_s),
+            fmt_secs(self.p50_s),
+            fmt_secs(self.p95_s),
+            self.iters
+        )
+    }
+}
+
+/// Uniform table printer for regenerated paper tables.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rows_str(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let parts: Vec<String> = cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            println!("| {} |", parts.join(" | "));
+        };
+        line(&self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        println!("{}", "-".repeat(total));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Render to a string (for EXPERIMENTS.md capture).
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("### {}\n\n", self.title);
+        out += &format!("| {} |\n", self.headers.join(" | "));
+        out += &format!("|{}|\n", self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for row in &self.rows {
+            out += &format!("| {} |\n", row.join(" | "));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench("spin", 1, 10, || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(s.mean_s > 0.0);
+        assert!(s.min_s <= s.p50_s && s.p50_s <= s.p95_s);
+    }
+
+    #[test]
+    fn auto_calibration_bounds_iters() {
+        let s = bench_auto("fast", 0.01, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.iters <= 10_000);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("Table X", &["a", "bee"]);
+        t.rows_str(&["1", "2"]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | bee |"));
+        assert!(md.contains("| 1 | 2 |"));
+        t.print();
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+        assert!(fmt_secs(2e-5).ends_with("µs"));
+        assert!(fmt_secs(2e-2).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with(" s"));
+    }
+}

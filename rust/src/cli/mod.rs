@@ -1,0 +1,343 @@
+//! Command-line interface (hand-rolled; clap is not resolvable offline).
+//!
+//! ```text
+//! mpno info                          list artifacts + platform
+//! mpno gen-data --dataset darcy --res 32 --n 48 [--seed S]
+//! mpno train --artifact NAME [--epochs N] [--lr X] [--schedule paper]
+//! mpno exp <id|all> [--quick]       regenerate a paper table/figure
+//! mpno dump-fp-vectors              fp-emulation vectors for pytest
+//! ```
+
+use crate::coordinator::{train_grid, PrecisionSchedule, TrainConfig};
+use crate::data::{DatasetKind, GenSpec};
+use crate::experiments::{self, Ctx};
+use crate::fp;
+use crate::runtime::Engine;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+/// Minimal flag parser: positional args + `--key value` + `--flag`.
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut positional = vec![];
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+pub fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    run_argv(&argv)
+}
+
+pub fn run_argv(argv: &[String]) -> Result<()> {
+    if argv.is_empty() {
+        print_help();
+        return Ok(());
+    }
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..]);
+    match cmd {
+        "info" => cmd_info(),
+        "gen-data" => cmd_gen_data(&args),
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "exp" => cmd_exp(&args),
+        "dump-fp-vectors" => cmd_dump_fp_vectors(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `mpno help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "mpno — Mixed-Precision Neural Operators (ICLR 2024 reproduction)
+
+USAGE:
+  mpno info
+  mpno gen-data --dataset <ns|darcy|swe> --res N --n N [--seed S]
+  mpno train --artifact NAME [--epochs N] [--lr X] [--seed S]
+             [--schedule paper] [--loss-scaling] [--log PATH]
+             [--checkpoint PATH]     (resumes if the file exists)
+  mpno eval --checkpoint PATH [--artifact FWD_NAME]
+             evaluate a saved model, incl. zero-shot at other resolutions
+  mpno exp <id|all> [--quick]     ids: {}
+  mpno dump-fp-vectors",
+        experiments::ALL_EXPERIMENTS.join(", ")
+    );
+}
+
+fn cmd_info() -> Result<()> {
+    let mut engine = Engine::new(&repo_root().join("artifacts"))?;
+    println!("platform: {}", engine.platform());
+    println!("artifacts: {}", engine.manifest.artifacts.len());
+    for a in &engine.manifest.artifacts {
+        println!(
+            "  {:<44} {:>5} params={} {}",
+            a.name,
+            a.graph,
+            a.params.len(),
+            a.precision
+        );
+    }
+    // Prove one compiles.
+    let first = engine.manifest.artifacts[0].name.clone();
+    engine.load(&first)?;
+    println!("compiled {first} OK ({:.2}s)", engine.compile_seconds);
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let ds = args.flag("dataset").context("--dataset required")?;
+    let kind = DatasetKind::from_token(ds).with_context(|| format!("unknown dataset {ds}"))?;
+    let spec = GenSpec {
+        kind,
+        n_samples: args.get_usize("n", 48),
+        resolution: args.get_usize("res", 32),
+        seed: args.get_u64("seed", 7),
+    };
+    let dir = repo_root().join("datasets");
+    let t0 = std::time::Instant::now();
+    let data = crate::data::load_or_generate(&spec, &dir)?;
+    println!(
+        "dataset {} ready: {} samples, inputs {:?}, targets {:?} ({:.1}s) -> {}",
+        ds,
+        data.len(),
+        data.inputs.shape(),
+        data.targets.shape(),
+        t0.elapsed().as_secs_f64(),
+        crate::data::cache_path(&spec, &dir).display(),
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let artifact = args.flag("artifact").context("--artifact required")?.to_string();
+    let mut engine = Engine::new(&repo_root().join("artifacts"))?;
+    let entry = engine
+        .manifest
+        .find(&artifact)
+        .with_context(|| format!("artifact {artifact} not found (see `mpno info`)"))?
+        .clone();
+    let kind = DatasetKind::from_token(&entry.dataset).context("dataset token")?;
+    let (h, _w) = entry.resolution().context("artifact lacks resolution")?;
+    let n = args.get_usize("n", 48);
+    let spec = GenSpec { kind, n_samples: n, resolution: h, seed: 7 };
+    let data = crate::data::load_or_generate(&spec, &repo_root().join("datasets"))?;
+    let (train, test) = data.split(n / 3);
+
+    let mut cfg = TrainConfig::new(&artifact);
+    cfg.epochs = args.get_usize("epochs", 10);
+    cfg.lr = args.get_f64("lr", 2e-3);
+    cfg.seed = args.get_u64("seed", 0);
+    cfg.loss_scaling = args.has("loss-scaling") || entry.precision != fp::Precision::Full;
+    if args.flag("schedule") == Some("paper") {
+        let mixed = artifact.clone();
+        let amp = artifact.replace("mixed_tanh", "amp_none");
+        let full = artifact.replace("mixed_tanh", "full_none");
+        cfg.schedule = PrecisionSchedule::paper_default(&mixed, &amp, &full);
+    }
+    if let Some(p) = args.flag("log") {
+        cfg.log_path = Some(PathBuf::from(p));
+    }
+    if let Some(p) = args.flag("checkpoint") {
+        cfg.checkpoint_path = Some(PathBuf::from(p));
+    }
+    println!("training {artifact}: {} epochs, lr {}", cfg.epochs, cfg.lr);
+    let report = train_grid(&mut engine, &train, &test, &cfg)?;
+    for e in &report.epochs {
+        println!(
+            "epoch {:>3} [{}] train {:.5}  test L2 {:.5}  H1 {:.5}  {:.2}s ({:.1} samp/s)",
+            e.epoch, e.artifact, e.train_loss, e.test_l2, e.test_h1, e.seconds, e.samples_per_sec
+        );
+    }
+    if report.diverged {
+        println!("!! diverged at step {:?}", report.diverged_at_step);
+    }
+    println!(
+        "done in {:.1}s; final test L2 {:.5}, H1 {:.5}",
+        report.total_seconds,
+        report.final_test_l2(),
+        report.final_test_h1()
+    );
+    Ok(())
+}
+
+/// Evaluate a checkpoint with a fwd artifact (defaults to the checkpoint's
+/// own model/dataset full-precision fwd), including zero-shot
+/// super-resolution when the requested artifact has a finer grid.
+fn cmd_eval(args: &Args) -> Result<()> {
+    use crate::coordinator::Checkpoint;
+    let ck_path = args.flag("checkpoint").context("--checkpoint required")?;
+    let ck = Checkpoint::load(&PathBuf::from(ck_path))?;
+    let mut engine = Engine::new(&repo_root().join("artifacts"))?;
+    let train_entry = engine
+        .manifest
+        .find(&ck.artifact)
+        .with_context(|| format!("checkpoint artifact {} unknown", ck.artifact))?
+        .clone();
+    let eval_name = match args.flag("artifact") {
+        Some(n) => n.to_string(),
+        None => {
+            let sel = engine
+                .manifest
+                .select(&train_entry.model, &train_entry.dataset, "fwd");
+            sel.iter()
+                .find(|a| a.precision == fp::Precision::Full)
+                .or(sel.first())
+                .map(|a| a.name.clone())
+                .context("no fwd artifact for this model/dataset")?
+        }
+    };
+    let exe = engine.load(&eval_name)?;
+    let params = ck.params_for(&exe.entry)?;
+    let (h, _w) = exe.entry.resolution().context("fwd artifact lacks resolution")?;
+    let kind = DatasetKind::from_token(&exe.entry.dataset).context("dataset")?;
+    let n = args.get_usize("n", 16);
+    let spec = GenSpec { kind, n_samples: n, resolution: h, seed: 99 };
+    let data = crate::data::load_or_generate(&spec, &repo_root().join("datasets"))?;
+    let (_, test) = data.split(n / 2);
+    let (l2, h1) = crate::coordinator::evaluate_super_resolution(
+        &mut engine,
+        &params,
+        &eval_name,
+        &test,
+    )?;
+    println!(
+        "checkpoint {} (epoch {}) via {eval_name}: test L2 {:.5}  H1 {:.5}",
+        ck.artifact, ck.epoch, l2, h1
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .context("usage: mpno exp <id|all> [--quick]")?
+        .clone();
+    let mut ctx = Ctx::new(args.has("quick"));
+    ctx.seed = args.get_u64("seed", 0);
+    experiments::run(&id, &ctx)
+}
+
+/// Dump (input, output) vectors of every Rust softfloat rounder so pytest
+/// can verify the JAX emulation is bit-identical (test_quantize.py).
+fn cmd_dump_fp_vectors() -> Result<()> {
+    use crate::fp::{round_trip, Precision};
+    let mut rng = crate::rng::Rng::new(123);
+    let mut inputs: Vec<f32> = vec![
+        0.0, -0.0, 1.0, -1.0, 0.5, 2049.0, 65504.0, 65519.0, 65520.0, 1e-8,
+        3.14159265, -2.71828, 1e4, -1e4, 57344.0, 60000.0, 2.2, 1.0 + 2f32.powi(-12),
+    ];
+    for _ in 0..200 {
+        inputs.push((rng.normal() * 100.0) as f32);
+        inputs.push(rng.uniform_in(-7e4, 7e4) as f32);
+        inputs.push((rng.normal() * 1e-4) as f32);
+    }
+    let mut out = String::from("[\n");
+    let modes = [
+        ("mixed", Precision::Mixed),
+        ("bf16", Precision::Bf16),
+        ("fp8", Precision::Fp8),
+        ("tf32", Precision::Tf32),
+    ];
+    for (i, (name, p)) in modes.iter().enumerate() {
+        let ins: Vec<String> = inputs.iter().map(|x| format!("{x:e}")).collect();
+        let outs: Vec<String> = inputs
+            .iter()
+            .map(|&x| {
+                let y = round_trip(x, *p);
+                if y.is_infinite() {
+                    format!("{}", if y > 0.0 { "1e999" } else { "-1e999" })
+                } else {
+                    format!("{y:e}")
+                }
+            })
+            .collect();
+        out += &format!(
+            " {{\"mode\": \"{name}\", \"input\": [{}], \"output\": [{}]}}{}\n",
+            ins.join(", "),
+            outs.join(", "),
+            if i + 1 < modes.len() { "," } else { "" }
+        );
+    }
+    out += "]\n";
+    let path = repo_root().join("artifacts/fp_vectors.json");
+    std::fs::create_dir_all(path.parent().unwrap()).ok();
+    std::fs::write(&path, out)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parser() {
+        let argv: Vec<String> = ["exp", "fig7", "--quick", "--seed", "3"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv[1..]);
+        assert_eq!(a.positional, vec!["fig7"]);
+        assert!(a.has("quick"));
+        assert_eq!(a.get_u64("seed", 0), 3);
+        assert_eq!(a.get_usize("missing", 9), 9);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        let argv = vec!["frobnicate".to_string()];
+        assert!(run_argv(&argv).is_err());
+    }
+}

@@ -1,0 +1,406 @@
+//! Einsum execution: pairwise contraction over planned paths, plus the
+//! deliberately-naive all-at-once contraction used as the Option A baseline
+//! of Table 8.
+//!
+//! The three view-as-real strategies of App. B.12.1:
+//! * **Option A** — view *all* tensors as real and compute a single einsum:
+//!   materializes the fully-broadcast product (we execute it as the genuine
+//!   nested loop so its cost is honestly terrible);
+//! * **Option B** — view two tensors at a time, pairwise sub-equations:
+//!   each complex multiply becomes 4 real multiplies on viewed tensors;
+//! * **Option C (ours)** — view-as-real only for high-dimensional pairs,
+//!   contract low-dimensional sub-equations in complex form directly.
+
+use super::expr::EinsumExpr;
+use super::path::{PlannedPath, PathStrategy};
+use crate::fp::Cplx;
+use crate::tensor::{for_each_index, CTensor, NdArray, Tensor};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// View-as-real strategy (Table 8 options).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ViewAsReal {
+    OptionA,
+    OptionB,
+    OptionC,
+}
+
+/// Contract real f32 operands along `path`.
+pub fn contract(expr: &EinsumExpr, operands: &[Tensor], path: &PlannedPath) -> Result<Tensor> {
+    let c: Vec<CTensor> = operands.iter().map(CTensor::from_re).collect();
+    let out = contract_complex(expr, &c, path, ViewAsReal::OptionC)?;
+    Ok(out.re())
+}
+
+/// Contract complex operands along `path` with the given view-as-real
+/// strategy.
+pub fn contract_complex(
+    expr: &EinsumExpr,
+    operands: &[CTensor],
+    path: &PlannedPath,
+    var: ViewAsReal,
+) -> Result<CTensor> {
+    if operands.len() != expr.inputs.len() {
+        bail!("expected {} operands, got {}", expr.inputs.len(), operands.len());
+    }
+    let shapes: Vec<&[usize]> = operands.iter().map(|t| t.shape()).collect();
+    let dims = expr.dim_sizes(&shapes)?;
+
+    if var == ViewAsReal::OptionA || path.strategy == PathStrategy::Naive {
+        return naive_full(expr, operands, &dims);
+    }
+
+    let mut ops: Vec<(Vec<char>, CTensor)> = expr
+        .inputs
+        .iter()
+        .cloned()
+        .zip(operands.iter().cloned())
+        .collect();
+    for &(i, j) in &path.steps {
+        let (i, j) = if i < j { (i, j) } else { (j, i) };
+        let keep = surviving_labels(&ops, i, j, &expr.output);
+        let (la, ta) = ops[i].clone();
+        let (lb, tb) = ops[j].clone();
+        let (lr, tr) = contract_pair(&la, &ta, &lb, &tb, &keep, &dims, var)?;
+        ops.remove(j);
+        ops.remove(i);
+        ops.push((lr, tr));
+    }
+    if ops.len() != 1 {
+        bail!("path did not reduce to a single operand ({} left)", ops.len());
+    }
+    let (labels, t) = ops.pop().unwrap();
+    // Permute to the requested output order.
+    if labels == expr.output {
+        Ok(t)
+    } else {
+        let perm: Vec<usize> = expr
+            .output
+            .iter()
+            .map(|c| labels.iter().position(|l| l == c).expect("label lost"))
+            .collect();
+        Ok(t.permute(&perm))
+    }
+}
+
+fn surviving_labels(ops: &[(Vec<char>, CTensor)], i: usize, j: usize, output: &[char]) -> Vec<char> {
+    let mut keep: Vec<char> = output.to_vec();
+    for (k, (labels, _)) in ops.iter().enumerate() {
+        if k != i && k != j {
+            for &c in labels {
+                if !keep.contains(&c) {
+                    keep.push(c);
+                }
+            }
+        }
+    }
+    keep
+}
+
+/// Sum a tensor over the axes whose labels are in `drop`.
+fn sum_out(labels: &[char], t: &CTensor, drop: &[char]) -> (Vec<char>, CTensor) {
+    if drop.is_empty() {
+        return (labels.to_vec(), t.clone());
+    }
+    let kept: Vec<char> = labels.iter().copied().filter(|c| !drop.contains(c)).collect();
+    let kept_axes: Vec<usize> =
+        labels.iter().enumerate().filter(|(_, c)| !drop.contains(c)).map(|(i, _)| i).collect();
+    let out_shape: Vec<usize> = kept_axes.iter().map(|&a| t.shape()[a]).collect();
+    let mut out = CTensor::czeros(&out_shape);
+    let mut oidx = vec![0usize; out_shape.len()];
+    for_each_index(t.shape(), |idx| {
+        for (d, &a) in kept_axes.iter().enumerate() {
+            oidx[d] = idx[a];
+        }
+        let cur = out.at(&oidx);
+        out.set(&oidx, cur.add(t.at(idx)));
+    });
+    (kept, out)
+}
+
+/// Contract one pair via permute → batched matmul → reshape.
+fn contract_pair(
+    la: &[char],
+    ta: &CTensor,
+    lb: &[char],
+    tb: &CTensor,
+    keep: &[char],
+    dims: &BTreeMap<char, usize>,
+    var: ViewAsReal,
+) -> Result<(Vec<char>, CTensor)> {
+    // Sum out labels unique to one operand and not kept.
+    let drop_a: Vec<char> =
+        la.iter().copied().filter(|c| !keep.contains(c) && !lb.contains(c)).collect();
+    let drop_b: Vec<char> =
+        lb.iter().copied().filter(|c| !keep.contains(c) && !la.contains(c)).collect();
+    let (la, ta) = sum_out(la, ta, &drop_a);
+    let (lb, tb) = sum_out(lb, tb, &drop_b);
+
+    let batch: Vec<char> =
+        la.iter().copied().filter(|c| lb.contains(c) && keep.contains(c)).collect();
+    let contracted: Vec<char> =
+        la.iter().copied().filter(|c| lb.contains(c) && !keep.contains(c)).collect();
+    let left: Vec<char> = la.iter().copied().filter(|c| !lb.contains(c)).collect();
+    let right: Vec<char> = lb.iter().copied().filter(|c| !la.contains(c)).collect();
+
+    let perm_a: Vec<usize> = batch
+        .iter()
+        .chain(left.iter())
+        .chain(contracted.iter())
+        .map(|c| la.iter().position(|l| l == c).unwrap())
+        .collect();
+    let perm_b: Vec<usize> = batch
+        .iter()
+        .chain(contracted.iter())
+        .chain(right.iter())
+        .map(|c| lb.iter().position(|l| l == c).unwrap())
+        .collect();
+    let pa = ta.permute(&perm_a);
+    let pb = tb.permute(&perm_b);
+
+    let nb: usize = batch.iter().map(|c| dims[c]).product();
+    let nl: usize = left.iter().map(|c| dims[c]).product();
+    let nc: usize = contracted.iter().map(|c| dims[c]).product();
+    let nr: usize = right.iter().map(|c| dims[c]).product();
+
+    let a = pa.data();
+    let b = pb.data();
+    let mut out = vec![Cplx::<f64>::zero(); nb * nl * nr];
+    match var {
+        ViewAsReal::OptionB => {
+            // 4 real matmuls on viewed-real buffers (materialized planes).
+            let ar: Vec<f64> = a.iter().map(|z| z.re).collect();
+            let ai: Vec<f64> = a.iter().map(|z| z.im).collect();
+            let br: Vec<f64> = b.iter().map(|z| z.re).collect();
+            let bi: Vec<f64> = b.iter().map(|z| z.im).collect();
+            let mm = |x: &[f64], y: &[f64], out: &mut [f64], sign: f64| {
+                for ib in 0..nb {
+                    let xo = ib * nl * nc;
+                    let yo = ib * nc * nr;
+                    let oo = ib * nl * nr;
+                    for il in 0..nl {
+                        for ic in 0..nc {
+                            let xv = x[xo + il * nc + ic];
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let yrow = &y[yo + ic * nr..yo + (ic + 1) * nr];
+                            let orow = &mut out[oo + il * nr..oo + (il + 1) * nr];
+                            for (o, &yv) in orow.iter_mut().zip(yrow) {
+                                *o += sign * xv * yv;
+                            }
+                        }
+                    }
+                }
+            };
+            let mut ore = vec![0.0f64; nb * nl * nr];
+            let mut oim = vec![0.0f64; nb * nl * nr];
+            mm(&ar, &br, &mut ore, 1.0);
+            mm(&ai, &bi, &mut ore, -1.0);
+            mm(&ar, &bi, &mut oim, 1.0);
+            mm(&ai, &br, &mut oim, 1.0);
+            for (o, (&r, &i)) in out.iter_mut().zip(ore.iter().zip(&oim)) {
+                *o = Cplx::from_f64(r, i);
+            }
+        }
+        _ => {
+            // Option C / default: direct complex accumulation, no plane
+            // materialization.
+            for ib in 0..nb {
+                let ao = ib * nl * nc;
+                let bo = ib * nc * nr;
+                let oo = ib * nl * nr;
+                for il in 0..nl {
+                    for ic in 0..nc {
+                        let av = a[ao + il * nc + ic];
+                        let brow = &b[bo + ic * nr..bo + (ic + 1) * nr];
+                        let orow = &mut out[oo + il * nr..oo + (il + 1) * nr];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o = o.add(av.mul(bv));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let mut rlabels: Vec<char> = batch.clone();
+    rlabels.extend(&left);
+    rlabels.extend(&right);
+    let rshape: Vec<usize> = rlabels.iter().map(|c| dims[c]).collect();
+    Ok((rlabels, NdArray::from_vec(rshape, out)))
+}
+
+/// Option A: one giant nested loop over the full broadcast index space.
+fn naive_full(
+    expr: &EinsumExpr,
+    operands: &[CTensor],
+    dims: &BTreeMap<char, usize>,
+) -> Result<CTensor> {
+    let mut all_labels: Vec<char> = vec![];
+    for inp in &expr.inputs {
+        for &c in inp {
+            if !all_labels.contains(&c) {
+                all_labels.push(c);
+            }
+        }
+    }
+    let full_shape: Vec<usize> = all_labels.iter().map(|c| dims[c]).collect();
+    let out_shape: Vec<usize> = expr.output.iter().map(|c| dims[c]).collect();
+    let mut out = CTensor::czeros(&out_shape);
+    let out_pos: Vec<usize> = expr
+        .output
+        .iter()
+        .map(|c| all_labels.iter().position(|l| l == c).unwrap())
+        .collect();
+    let in_pos: Vec<Vec<usize>> = expr
+        .inputs
+        .iter()
+        .map(|labels| {
+            labels.iter().map(|c| all_labels.iter().position(|l| l == c).unwrap()).collect()
+        })
+        .collect();
+    let mut oidx = vec![0usize; out_shape.len()];
+    let mut iidx: Vec<Vec<usize>> = expr.inputs.iter().map(|l| vec![0usize; l.len()]).collect();
+    for_each_index(&full_shape, |idx| {
+        let mut prod = Cplx::<f64>::one();
+        for (k, op) in operands.iter().enumerate() {
+            for (d, &p) in in_pos[k].iter().enumerate() {
+                iidx[k][d] = idx[p];
+            }
+            prod = prod.mul(op.at(&iidx[k]));
+        }
+        for (d, &p) in out_pos.iter().enumerate() {
+            oidx[d] = idx[p];
+        }
+        let cur = out.at(&oidx);
+        out.set(&oidx, cur.add(prod));
+    });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::contract::path::{plan, PathStrategy};
+    use crate::rng::Rng;
+
+    fn rand_ct(shape: &[usize], seed: u64) -> CTensor {
+        let mut rng = Rng::new(seed);
+        CTensor::from_fn(shape, |_| {
+            let (r, i) = rng.cnormal();
+            Cplx::from_f64(r, i)
+        })
+    }
+
+    fn run(
+        expr_s: &str,
+        operands: &[CTensor],
+        strat: PathStrategy,
+        var: ViewAsReal,
+    ) -> CTensor {
+        let expr = EinsumExpr::parse(expr_s).unwrap();
+        let shapes: Vec<&[usize]> = operands.iter().map(|t| t.shape()).collect();
+        let path = plan(&expr, &shapes, strat).unwrap();
+        contract_complex(&expr, operands, &path, var).unwrap()
+    }
+
+    #[test]
+    fn matmul_matches_tensor_matmul() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::from_fn(&[3, 4], |_| rng.normal() as f32);
+        let b = Tensor::from_fn(&[4, 5], |_| rng.normal() as f32);
+        let expr = EinsumExpr::parse("ik,kj->ij").unwrap();
+        let path = plan(&expr, &[a.shape(), b.shape()], PathStrategy::MemoryGreedy).unwrap();
+        let got = contract(&expr, &[a.clone(), b.clone()], &path).unwrap();
+        let want = a.matmul(&b);
+        assert!(got.rel_l2(&want) < 1e-6);
+    }
+
+    #[test]
+    fn fno_contraction_all_strategies_agree() {
+        let x = rand_ct(&[2, 3, 4, 4], 10);
+        let w = rand_ct(&[3, 5, 4, 4], 11);
+        let base = run("bixy,ioxy->boxy", &[x.clone(), w.clone()], PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
+        assert_eq!(base.shape(), &[2, 5, 4, 4]);
+        for (strat, var) in [
+            (PathStrategy::FlopOptimal, ViewAsReal::OptionC),
+            (PathStrategy::MemoryGreedy, ViewAsReal::OptionB),
+            (PathStrategy::Naive, ViewAsReal::OptionA),
+        ] {
+            let other = run("bixy,ioxy->boxy", &[x.clone(), w.clone()], strat, var);
+            assert!(base.rel_fro(&other) < 1e-12, "{strat:?}/{var:?}");
+        }
+    }
+
+    #[test]
+    fn cp_factorized_contraction_matches_reconstructed_dense() {
+        // bixy,r,ir,or,xr,yr->boxy == reconstruct dense w then contract.
+        let (b, ci, co, kx, ky, r) = (2usize, 3usize, 4usize, 3usize, 3usize, 2usize);
+        let x = rand_ct(&[b, ci, kx, ky], 20);
+        let lam = rand_ct(&[r], 21);
+        let fi = rand_ct(&[ci, r], 22);
+        let fo = rand_ct(&[co, r], 23);
+        let fx = rand_ct(&[kx, r], 24);
+        let fy = rand_ct(&[ky, r], 25);
+        let ops = vec![x.clone(), lam.clone(), fi.clone(), fo.clone(), fx.clone(), fy.clone()];
+        let got = run("bixy,r,ir,or,xr,yr->boxy", &ops, PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
+
+        // Reconstruct dense weight: w[i,o,x,y] = sum_r lam[r] fi[i,r] fo[o,r] fx[x,r] fy[y,r].
+        let w = CTensor::from_fn(&[ci, co, kx, ky], |id| {
+            let mut acc = Cplx::<f64>::zero();
+            for rr in 0..r {
+                let t = lam
+                    .at(&[rr])
+                    .mul(fi.at(&[id[0], rr]))
+                    .mul(fo.at(&[id[1], rr]))
+                    .mul(fx.at(&[id[2], rr]))
+                    .mul(fy.at(&[id[3], rr]));
+                acc = acc.add(t);
+            }
+            acc
+        });
+        let want = run("bixy,ioxy->boxy", &[x, w], PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
+        assert!(got.rel_fro(&want) < 1e-10, "err={}", got.rel_fro(&want));
+    }
+
+    #[test]
+    fn sum_out_unused_labels() {
+        // "ab,cb->c" must sum over a.
+        let a = rand_ct(&[3, 4], 30);
+        let b = rand_ct(&[5, 4], 31);
+        let got = run("ab,cb->c", &[a.clone(), b.clone()], PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
+        let want = CTensor::from_fn(&[5], |i| {
+            let mut acc = Cplx::<f64>::zero();
+            for ia in 0..3 {
+                for ib in 0..4 {
+                    acc = acc.add(a.at(&[ia, ib]).mul(b.at(&[i[0], ib])));
+                }
+            }
+            acc
+        });
+        assert!(got.rel_fro(&want) < 1e-12);
+    }
+
+    #[test]
+    fn three_operand_chain() {
+        let a = rand_ct(&[2, 3], 40);
+        let b = rand_ct(&[3, 4], 41);
+        let c = rand_ct(&[4, 5], 42);
+        let abc = run("ij,jk,kl->il", &[a.clone(), b.clone(), c.clone()], PathStrategy::FlopOptimal, ViewAsReal::OptionC);
+        let ab = run("ij,jk->ik", &[a, b], PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
+        let want = run("ik,kl->il", &[ab, c], PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
+        assert!(abc.rel_fro(&want) < 1e-12);
+    }
+
+    #[test]
+    fn output_permutation_respected() {
+        let a = rand_ct(&[2, 3], 50);
+        let b = rand_ct(&[3, 4], 51);
+        let ij = run("ij,jk->ik", &[a.clone(), b.clone()], PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
+        let ji = run("ij,jk->ki", &[a, b], PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
+        assert_eq!(ji.shape(), &[4, 2]);
+        assert!(ji.permute(&[1, 0]).rel_fro(&ij) < 1e-12);
+    }
+}

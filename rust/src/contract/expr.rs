@@ -1,0 +1,163 @@
+//! Einsum expression parsing and index bookkeeping.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed einsum expression like `"bixy,ioxy->boxy"`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EinsumExpr {
+    /// Index labels per input operand.
+    pub inputs: Vec<Vec<char>>,
+    /// Output index labels.
+    pub output: Vec<char>,
+}
+
+impl EinsumExpr {
+    /// Parse `"ab,bc->ac"`. Implicit (no `->`) output follows the numpy
+    /// rule: indices appearing exactly once, sorted.
+    pub fn parse(s: &str) -> Result<EinsumExpr> {
+        let s: String = s.chars().filter(|c| !c.is_whitespace()).collect();
+        let (lhs, rhs) = match s.split_once("->") {
+            Some((l, r)) => (l, Some(r)),
+            None => (s.as_str(), None),
+        };
+        let inputs: Vec<Vec<char>> = lhs.split(',').map(|t| t.chars().collect()).collect();
+        if inputs.is_empty() || inputs.iter().any(|i| i.is_empty()) {
+            bail!("empty operand in einsum expression {s:?}");
+        }
+        for inp in &inputs {
+            for &c in inp {
+                if !c.is_ascii_alphabetic() {
+                    bail!("bad index label {c:?} in {s:?}");
+                }
+            }
+            let mut seen = std::collections::HashSet::new();
+            for &c in inp {
+                if !seen.insert(c) {
+                    bail!("repeated label {c:?} within one operand (diagonals unsupported)");
+                }
+            }
+        }
+        let output: Vec<char> = match rhs {
+            Some(r) => r.chars().collect(),
+            None => {
+                let mut counts = BTreeMap::new();
+                for inp in &inputs {
+                    for &c in inp {
+                        *counts.entry(c).or_insert(0usize) += 1;
+                    }
+                }
+                counts.into_iter().filter(|&(_, n)| n == 1).map(|(c, _)| c).collect()
+            }
+        };
+        for &c in &output {
+            if !inputs.iter().any(|i| i.contains(&c)) {
+                bail!("output label {c:?} not present in any input");
+            }
+        }
+        Ok(EinsumExpr { inputs, output })
+    }
+
+    /// Resolve index-label -> dimension size from operand shapes.
+    pub fn dim_sizes(&self, shapes: &[&[usize]]) -> Result<BTreeMap<char, usize>> {
+        if shapes.len() != self.inputs.len() {
+            bail!("expected {} operands, got {}", self.inputs.len(), shapes.len());
+        }
+        let mut dims = BTreeMap::new();
+        for (labels, &shape) in self.inputs.iter().zip(shapes) {
+            if labels.len() != shape.len() {
+                bail!("operand rank {} != label count {}", shape.len(), labels.len());
+            }
+            for (&c, &n) in labels.iter().zip(shape) {
+                if let Some(&prev) = dims.get(&c) {
+                    if prev != n {
+                        bail!("size mismatch for index {c:?}: {prev} vs {n}");
+                    }
+                } else {
+                    dims.insert(c, n);
+                }
+            }
+        }
+        Ok(dims)
+    }
+
+    /// Output shape under the given operand shapes.
+    pub fn output_shape(&self, shapes: &[&[usize]]) -> Result<Vec<usize>> {
+        let dims = self.dim_sizes(shapes)?;
+        self.output
+            .iter()
+            .map(|c| dims.get(c).copied().context("missing output dim"))
+            .collect()
+    }
+
+    /// The sub-expression contracting operands `i` and `j` given which
+    /// labels must survive (appear in the final output or in any other
+    /// remaining operand).
+    pub fn pair_expr(a: &[char], b: &[char], keep: &[char]) -> (Vec<char>, Vec<char>, Vec<char>) {
+        let result: Vec<char> = {
+            let mut r = vec![];
+            for &c in a.iter().chain(b.iter()) {
+                if keep.contains(&c) && !r.contains(&c) {
+                    r.push(c);
+                }
+            }
+            r
+        };
+        (a.to_vec(), b.to_vec(), result)
+    }
+}
+
+impl std::fmt::Display for EinsumExpr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let ins: Vec<String> = self.inputs.iter().map(|i| i.iter().collect()).collect();
+        let out: String = self.output.iter().collect();
+        write!(f, "{}->{}", ins.join(","), out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_explicit() {
+        let e = EinsumExpr::parse("bixy,ioxy->boxy").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.output, vec!['b', 'o', 'x', 'y']);
+        assert_eq!(e.to_string(), "bixy,ioxy->boxy");
+    }
+
+    #[test]
+    fn parse_implicit_sums_repeated() {
+        let e = EinsumExpr::parse("ab,bc").unwrap();
+        assert_eq!(e.output, vec!['a', 'c']);
+        let f = EinsumExpr::parse("ii").err();
+        assert!(f.is_some(), "diagonals rejected");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(EinsumExpr::parse("a1,b->ab").is_err());
+        assert!(EinsumExpr::parse("ab,->b").is_err());
+        assert!(EinsumExpr::parse("ab,bc->ad").is_err()); // d unknown
+    }
+
+    #[test]
+    fn dim_inference() {
+        let e = EinsumExpr::parse("ab,bc->ac").unwrap();
+        let dims = e.dim_sizes(&[&[2, 3], &[3, 4]]).unwrap();
+        assert_eq!(dims[&'a'], 2);
+        assert_eq!(dims[&'b'], 3);
+        assert_eq!(dims[&'c'], 4);
+        assert_eq!(e.output_shape(&[&[2, 3], &[3, 4]]).unwrap(), vec![2, 4]);
+        assert!(e.dim_sizes(&[&[2, 3], &[5, 4]]).is_err());
+        assert!(e.dim_sizes(&[&[2, 3, 1], &[3, 4]]).is_err());
+    }
+
+    #[test]
+    fn tfno_expression_parses() {
+        // The CP-factorized TFNO contraction from the paper's codebase.
+        let e = EinsumExpr::parse("bixy,r,ir,or,xr,yr->boxy").unwrap();
+        assert_eq!(e.inputs.len(), 6);
+    }
+}

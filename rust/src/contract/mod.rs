@@ -1,0 +1,24 @@
+//! Einsum engine with contraction-order planning — the paper's §4.2
+//! systems contribution, reimplemented standalone so the ablations of
+//! Appendix B.12 (Tables 8–11) can be regenerated:
+//!
+//! * an einsum **expression parser** ([`expr::EinsumExpr`]);
+//! * a pairwise **executor** over real and complex tensors ([`exec`]),
+//!   including the three view-as-real strategies (Option A/B/C of
+//!   Table 8);
+//! * **path planners** ([`path`]): the paper's *memory-greedy* order, the
+//!   opt-einsum-style *FLOP-optimal* order (exhaustive for ≤ 5 operands),
+//!   and the naive single-shot contraction;
+//! * a **path cache** ([`path::PathCache`]) keyed by (expression, shapes)
+//!   — Table 9 shows path computation costs up to 76% of the contraction
+//!   when recomputed per call;
+//! * an analytic **cost model** (FLOPs + peak intermediate bytes) shared
+//!   with [`crate::memmodel`].
+
+pub mod exec;
+pub mod expr;
+pub mod path;
+
+pub use exec::{contract, contract_complex, ViewAsReal};
+pub use expr::EinsumExpr;
+pub use path::{plan, CostModel, PathCache, PathStrategy, PlannedPath};

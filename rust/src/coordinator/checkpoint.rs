@@ -1,0 +1,172 @@
+//! Checkpointing: persist/restore training state (fp32 master weights +
+//! metadata) with the [`crate::ser`] format, so long runs — and the
+//! precision schedule's phase swaps — survive process restarts, and
+//! trained models can be served/evaluated later (`mpno eval`).
+
+use crate::runtime::ArtifactEntry;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A saved training state.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Artifact the params belong to (layout contract).
+    pub artifact: String,
+    pub epoch: usize,
+    pub params: Vec<(String, Tensor)>,
+}
+
+impl Checkpoint {
+    pub fn from_params(entry: &ArtifactEntry, epoch: usize, params: &[Tensor]) -> Checkpoint {
+        assert_eq!(entry.params.len(), params.len());
+        Checkpoint {
+            artifact: entry.name.clone(),
+            epoch,
+            params: entry
+                .params
+                .iter()
+                .zip(params)
+                .map(|(spec, t)| (spec.name.clone(), t.clone()))
+                .collect(),
+        }
+    }
+
+    /// Save to disk. Metadata rides along as tiny tensors so the format
+    /// stays a plain named-tensor file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let meta = Tensor::from_vec(vec![1], vec![self.epoch as f32]);
+        let name_bytes: Vec<f32> = self.artifact.bytes().map(|b| b as f32).collect();
+        let name_t = Tensor::from_vec(vec![name_bytes.len()], name_bytes);
+        let mut recs: Vec<(&str, &Tensor)> =
+            vec![("__epoch", &meta), ("__artifact", &name_t)];
+        for (n, t) in &self.params {
+            recs.push((n.as_str(), t));
+        }
+        crate::ser::save_tensors(path, &recs)
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let recs = crate::ser::load_tensors(path)?;
+        let mut epoch = None;
+        let mut artifact = None;
+        let mut params = vec![];
+        for (name, t) in recs {
+            match name.as_str() {
+                "__epoch" => epoch = Some(t.data()[0] as usize),
+                "__artifact" => {
+                    let bytes: Vec<u8> = t.data().iter().map(|&f| f as u8).collect();
+                    artifact = Some(String::from_utf8(bytes).context("artifact name")?);
+                }
+                _ => params.push((name, t)),
+            }
+        }
+        Ok(Checkpoint {
+            artifact: artifact.context("missing __artifact record")?,
+            epoch: epoch.context("missing __epoch record")?,
+            params,
+        })
+    }
+
+    /// Extract params in the order an artifact expects, validating both
+    /// names and shapes (precision variants of a model share layouts, so a
+    /// checkpoint trained mixed restores into the full-precision artifact —
+    /// that is how the schedule hands off and how `mpno eval` serves).
+    pub fn params_for(&self, entry: &ArtifactEntry) -> Result<Vec<Tensor>> {
+        if entry.params.len() != self.params.len() {
+            bail!(
+                "checkpoint has {} tensors, artifact {} expects {}",
+                self.params.len(),
+                entry.name,
+                entry.params.len()
+            );
+        }
+        entry
+            .params
+            .iter()
+            .map(|spec| {
+                let (_, t) = self
+                    .params
+                    .iter()
+                    .find(|(n, _)| n == &spec.name)
+                    .with_context(|| format!("checkpoint missing tensor {:?}", spec.name))?;
+                if t.shape() != spec.shape.as_slice() {
+                    bail!(
+                        "shape mismatch for {:?}: checkpoint {:?} vs artifact {:?}",
+                        spec.name,
+                        t.shape(),
+                        spec.shape
+                    );
+                }
+                Ok(t.clone())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ParamSpec;
+
+    fn fake_entry(names: &[(&str, Vec<usize>)]) -> ArtifactEntry {
+        ArtifactEntry {
+            name: "fake_mixed_grads".into(),
+            file: "x".into(),
+            model: "fno".into(),
+            dataset: "darcy".into(),
+            graph: "grads".into(),
+            precision: crate::fp::Precision::Mixed,
+            stabilizer: "tanh".into(),
+            loss: "h1".into(),
+            batch: 4,
+            params: names
+                .iter()
+                .map(|(n, s)| ParamSpec { name: n.to_string(), shape: s.clone(), std: 0.1 })
+                .collect(),
+            extra_inputs: vec![],
+            config: Default::default(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let entry = fake_entry(&[("w", vec![2, 3]), ("b", vec![3])]);
+        let params = vec![
+            Tensor::from_fn(&[2, 3], |i| (i[0] * 3 + i[1]) as f32),
+            Tensor::from_fn(&[3], |i| -(i[0] as f32)),
+        ];
+        let ck = Checkpoint::from_params(&entry, 7, &params);
+        let dir = std::env::temp_dir().join("mpno_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.mpno");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.epoch, 7);
+        assert_eq!(back.artifact, "fake_mixed_grads");
+        let restored = back.params_for(&entry).unwrap();
+        assert_eq!(restored, params);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cross_artifact_restore_by_name() {
+        // Params restore into another artifact as long as names+shapes
+        // line up, even if the listed order differs.
+        let e1 = fake_entry(&[("w", vec![2]), ("b", vec![3])]);
+        let e2 = fake_entry(&[("b", vec![3]), ("w", vec![2])]);
+        let params = vec![Tensor::full(&[2], 1.0), Tensor::full(&[3], 2.0)];
+        let ck = Checkpoint::from_params(&e1, 0, &params);
+        let restored = ck.params_for(&e2).unwrap();
+        assert_eq!(restored[0], params[1]); // "b" first in e2
+        assert_eq!(restored[1], params[0]);
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let e1 = fake_entry(&[("w", vec![2])]);
+        let e2 = fake_entry(&[("w", vec![4])]);
+        let ck = Checkpoint::from_params(&e1, 0, &[Tensor::full(&[2], 1.0)]);
+        assert!(ck.params_for(&e2).is_err());
+    }
+}

@@ -1,0 +1,498 @@
+//! The training coordinator — L3's event loop.
+//!
+//! Owns: epoch/step iteration, batch assembly, the PJRT grads call, the
+//! dynamic loss scaler, Adam with fp32 master weights, the NaN watchdog,
+//! metric logging, and the paper's **precision schedule** (§4.4): train
+//! the first 25% of epochs on the mixed artifact, the middle 50% on the
+//! AMP artifact and the final 25% on the full-precision artifact, carrying
+//! the fp32 master weights across the executable swaps — possible because
+//! every precision variant of a model shares the same parameter list.
+
+mod checkpoint;
+
+pub use checkpoint::Checkpoint;
+
+use crate::amp::GradScaler;
+use crate::data::{BatchIter, GridDataset};
+use crate::metrics;
+use crate::optim::{Adam, GradAccumulator};
+use crate::rng::Rng;
+use crate::runtime::Engine;
+use crate::stability::DivergenceDetector;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+/// Precision schedule: ordered (start_fraction, artifact name).
+#[derive(Debug, Clone)]
+pub struct PrecisionSchedule {
+    pub phases: Vec<(f64, String)>,
+}
+
+impl PrecisionSchedule {
+    /// The paper's 25/50/25 schedule.
+    pub fn paper_default(mixed: &str, amp: &str, full: &str) -> Self {
+        PrecisionSchedule {
+            phases: vec![
+                (0.0, mixed.to_string()),
+                (0.25, amp.to_string()),
+                (0.75, full.to_string()),
+            ],
+        }
+    }
+
+    pub fn constant(artifact: &str) -> Self {
+        PrecisionSchedule { phases: vec![(0.0, artifact.to_string())] }
+    }
+
+    pub fn active(&self, progress: f64) -> &str {
+        let mut current = &self.phases[0].1;
+        for (frac, name) in &self.phases {
+            if progress >= *frac {
+                current = name;
+            }
+        }
+        current
+    }
+}
+
+/// Training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub schedule: PrecisionSchedule,
+    /// fwd artifact used for evaluation (usually the full-precision one).
+    pub eval_artifact: Option<String>,
+    pub epochs: usize,
+    pub lr: f64,
+    pub seed: u64,
+    pub loss_scaling: bool,
+    pub init_loss_scale: f64,
+    pub grad_clip: f64,
+    pub accumulate: usize,
+    pub log_path: Option<std::path::PathBuf>,
+    /// Save a checkpoint here after every epoch (and restore from it at
+    /// startup if present and layout-compatible).
+    pub checkpoint_path: Option<std::path::PathBuf>,
+    /// Stop early once the watchdog declares divergence.
+    pub stop_on_divergence: bool,
+}
+
+impl TrainConfig {
+    pub fn new(artifact: &str) -> TrainConfig {
+        TrainConfig {
+            schedule: PrecisionSchedule::constant(artifact),
+            eval_artifact: None,
+            epochs: 5,
+            lr: 1e-3,
+            seed: 0,
+            loss_scaling: false,
+            init_loss_scale: 65536.0,
+            grad_clip: 0.0,
+            accumulate: 1,
+            log_path: None,
+            checkpoint_path: None,
+            stop_on_divergence: true,
+        }
+    }
+}
+
+/// Per-epoch record.
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub artifact: String,
+    pub train_loss: f64,
+    pub test_l2: f64,
+    pub test_h1: f64,
+    pub seconds: f64,
+    pub samples_per_sec: f64,
+    pub skipped_steps: usize,
+}
+
+/// Full training report.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub epochs: Vec<EpochStats>,
+    pub params: Vec<Tensor>,
+    pub diverged: bool,
+    pub diverged_at_step: Option<usize>,
+    pub scaler_history: Vec<(u64, f64)>,
+    pub total_seconds: f64,
+}
+
+impl TrainReport {
+    pub fn final_test_l2(&self) -> f64 {
+        self.epochs.last().map(|e| e.test_l2).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_test_h1(&self) -> f64 {
+        self.epochs.last().map(|e| e.test_h1).unwrap_or(f64::NAN)
+    }
+
+    pub fn mean_throughput(&self) -> f64 {
+        if self.epochs.is_empty() {
+            return 0.0;
+        }
+        self.epochs.iter().map(|e| e.samples_per_sec).sum::<f64>() / self.epochs.len() as f64
+    }
+}
+
+/// Train a grid model (FNO/TFNO/SFNO/U-Net) per the config.
+pub fn train_grid(
+    engine: &mut Engine,
+    train: &GridDataset,
+    test: &GridDataset,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    let first = cfg.schedule.phases[0].1.clone();
+    let first_exe = engine.load(&first)?;
+    let entry = first_exe.entry.clone();
+    if entry.graph != "grads" {
+        bail!("{first}: schedule must reference grads artifacts");
+    }
+    let batch = entry.batch;
+    let mut params = engine.init_params(&entry, cfg.seed);
+    let mut start_epoch = 0usize;
+    if let Some(ck_path) = &cfg.checkpoint_path {
+        if ck_path.exists() {
+            if let Ok(ck) = Checkpoint::load(ck_path) {
+                if let Ok(restored) = ck.params_for(&entry) {
+                    params = restored;
+                    start_epoch = ck.epoch + 1;
+                }
+            }
+        }
+    }
+    let mut adam = Adam::new(cfg.lr, &params).with_clip(cfg.grad_clip);
+    let mut scaler = if cfg.loss_scaling {
+        GradScaler::new(cfg.init_loss_scale)
+    } else {
+        GradScaler::disabled()
+    };
+    let mut accum = GradAccumulator::new(cfg.accumulate);
+    let mut watchdog = DivergenceDetector::new(8);
+    let mut rng = Rng::new(cfg.seed ^ 0xBA7C4);
+    let mut logger = match &cfg.log_path {
+        Some(p) => Some(metrics::CsvLogger::create(
+            p,
+            "epoch,train_loss,test_l2,test_h1,seconds,samples_per_sec",
+        )?),
+        None => None,
+    };
+
+    let mut epochs = vec![];
+    let t_total = Instant::now();
+    'training: for epoch in start_epoch..cfg.epochs {
+        let progress = epoch as f64 / cfg.epochs.max(1) as f64;
+        let art_name = cfg.schedule.active(progress).to_string();
+        let exe = engine.load(&art_name)?;
+        let t0 = Instant::now();
+        let mut loss_sum = 0.0;
+        let mut steps = 0usize;
+        let mut skipped = 0usize;
+        let mut samples = 0usize;
+        for idx in BatchIter::new(train.len(), batch, &mut rng) {
+            let (x, y) = train.gather(&idx);
+            let scale_t = Tensor::from_vec(vec![], vec![scaler.loss_scale()]);
+            let mut inputs: Vec<&Tensor> = params.iter().collect();
+            inputs.push(&x);
+            inputs.push(&y);
+            inputs.push(&scale_t);
+            let out = exe.run(&inputs).with_context(|| format!("step in {art_name}"))?;
+            let loss = out[0].data()[0] as f64;
+            loss_sum += if loss.is_finite() { loss } else { 0.0 };
+            steps += 1;
+            samples += idx.len();
+            let grads = &out[1..];
+            let step_ok = if let Some(acc) = accum.push(grads) {
+                adam.step(&mut params, &acc, scaler.inv_scale())
+            } else {
+                true // mid-accumulation: nothing to apply yet
+            };
+            if !step_ok {
+                skipped += 1;
+            }
+            scaler.update(step_ok && loss.is_finite());
+            if watchdog.observe(loss) && cfg.stop_on_divergence {
+                epochs.push(EpochStats {
+                    epoch,
+                    artifact: art_name.clone(),
+                    train_loss: f64::NAN,
+                    test_l2: f64::NAN,
+                    test_h1: f64::NAN,
+                    seconds: t0.elapsed().as_secs_f64(),
+                    samples_per_sec: 0.0,
+                    skipped_steps: skipped,
+                });
+                break 'training;
+            }
+        }
+        let seconds = t0.elapsed().as_secs_f64();
+        let (test_l2, test_h1) = evaluate(engine, &params, test, cfg, &entry)?;
+        let stats = EpochStats {
+            epoch,
+            artifact: art_name,
+            train_loss: loss_sum / steps.max(1) as f64,
+            test_l2,
+            test_h1,
+            seconds,
+            samples_per_sec: samples as f64 / seconds,
+            skipped_steps: skipped,
+        };
+        if let Some(log) = logger.as_mut() {
+            log.row(&[
+                epoch as f64,
+                stats.train_loss,
+                stats.test_l2,
+                stats.test_h1,
+                stats.seconds,
+                stats.samples_per_sec,
+            ])?;
+        }
+        epochs.push(stats);
+        if let Some(ck_path) = &cfg.checkpoint_path {
+            Checkpoint::from_params(&entry, epoch, &params).save(ck_path)?;
+        }
+    }
+    Ok(TrainReport {
+        diverged: watchdog.diverged(),
+        diverged_at_step: watchdog.diverged_at,
+        scaler_history: scaler.history.clone(),
+        total_seconds: t_total.elapsed().as_secs_f64(),
+        epochs,
+        params,
+    })
+}
+
+/// Evaluate params on a test set with the fwd artifact; returns (L2, H1).
+pub fn evaluate(
+    engine: &mut Engine,
+    params: &[Tensor],
+    test: &GridDataset,
+    cfg: &TrainConfig,
+    train_entry: &crate::runtime::ArtifactEntry,
+) -> Result<(f64, f64)> {
+    let eval_name = match &cfg.eval_artifact {
+        Some(n) => n.clone(),
+        None => {
+            // Convention: <model>_<dataset>_..._fwd full-precision twin.
+            let mut n = train_entry.name.clone();
+            n = n.replace("_grads", "_fwd");
+            if engine.manifest.find(&n).is_none() {
+                // Fall back to the full-precision fwd for this model/dataset.
+                let sel = engine.manifest.select(&train_entry.model, &train_entry.dataset, "fwd");
+                let fallback = sel
+                    .iter()
+                    .find(|a| a.precision == crate::fp::Precision::Full)
+                    .or(sel.first())
+                    .map(|a| a.name.clone());
+                n = fallback.ok_or_else(|| anyhow::anyhow!("no fwd artifact for eval"))?;
+            }
+            n
+        }
+    };
+    let exe = engine.load(&eval_name)?;
+    // Parameter layouts must match the training artifact (CP-factorized or
+    // non-default-mode variants have no fwd twin); otherwise fall back to
+    // computing the test *loss* through the training grads graph.
+    let compatible = exe.entry.params.len() == train_entry.params.len()
+        && exe
+            .entry
+            .params
+            .iter()
+            .zip(&train_entry.params)
+            .all(|(a, b)| a.shape == b.shape);
+    if !compatible {
+        return evaluate_via_grads(engine, params, test, train_entry);
+    }
+    let batch = exe.entry.batch;
+    let mut l2 = 0.0;
+    let mut h1 = 0.0;
+    let mut batches = 0usize;
+    let n_eval = test.len().min(4 * batch); // cap eval cost on CPU
+    let mut i = 0;
+    while i + batch <= n_eval {
+        let idx: Vec<usize> = (i..i + batch).collect();
+        let (x, y) = test.gather(&idx);
+        let mut inputs: Vec<&Tensor> = params.iter().collect();
+        inputs.push(&x);
+        let out = exe.run(&inputs)?;
+        l2 += metrics::relative_l2(&out[0], &y);
+        h1 += metrics::relative_h1(&out[0], &y);
+        batches += 1;
+        i += batch;
+    }
+    if batches == 0 {
+        bail!("test set smaller than one batch");
+    }
+    Ok((l2 / batches as f64, h1 / batches as f64))
+}
+
+/// Fallback test evaluation through the grads artifact's loss output
+/// (used when no shape-compatible fwd artifact exists, e.g. CP weights).
+/// Returns the test loss in both slots (it is the artifact's configured
+/// loss — H1 for NS/Darcy, L2 elsewhere).
+fn evaluate_via_grads(
+    engine: &mut Engine,
+    params: &[Tensor],
+    test: &GridDataset,
+    train_entry: &crate::runtime::ArtifactEntry,
+) -> Result<(f64, f64)> {
+    let exe = engine.load(&train_entry.name)?;
+    let batch = exe.entry.batch;
+    let scale = Tensor::from_vec(vec![], vec![1.0f32]);
+    let mut loss = 0.0;
+    let mut batches = 0usize;
+    let mut i = 0;
+    while i + batch <= test.len().min(4 * batch) {
+        let idx: Vec<usize> = (i..i + batch).collect();
+        let (x, y) = test.gather(&idx);
+        let mut inputs: Vec<&Tensor> = params.iter().collect();
+        inputs.push(&x);
+        inputs.push(&y);
+        inputs.push(&scale);
+        let out = exe.run(&inputs)?;
+        loss += out[0].data()[0] as f64;
+        batches += 1;
+        i += batch;
+    }
+    if batches == 0 {
+        bail!("test set smaller than one batch");
+    }
+    let l = loss / batches as f64;
+    Ok((l, l))
+}
+
+/// Zero-shot super-resolution eval (Table 1): run trained params through a
+/// fwd artifact at a finer resolution against a high-res dataset.
+pub fn evaluate_super_resolution(
+    engine: &mut Engine,
+    params: &[Tensor],
+    fwd_artifact: &str,
+    hires: &GridDataset,
+) -> Result<(f64, f64)> {
+    let exe = engine.load(fwd_artifact)?;
+    let batch = exe.entry.batch;
+    let (h, w) = exe.entry.resolution().context("artifact has no resolution")?;
+    let (dh, dw) = hires.resolution();
+    if (h, w) != (dh, dw) {
+        bail!("artifact is {h}x{w} but dataset is {dh}x{dw}");
+    }
+    let mut l2 = 0.0;
+    let mut h1 = 0.0;
+    let mut batches = 0;
+    let mut i = 0;
+    while i + batch <= hires.len().min(4 * batch) {
+        let idx: Vec<usize> = (i..i + batch).collect();
+        let (x, y) = hires.gather(&idx);
+        let mut inputs: Vec<&Tensor> = params.iter().collect();
+        inputs.push(&x);
+        let out = exe.run(&inputs)?;
+        l2 += metrics::relative_l2(&out[0], &y);
+        h1 += metrics::relative_h1(&out[0], &y);
+        batches += 1;
+        i += batch;
+    }
+    Ok((l2 / batches as f64, h1 / batches as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DatasetKind, GenSpec};
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    fn darcy_sets() -> (GridDataset, GridDataset) {
+        let spec = GenSpec {
+            kind: DatasetKind::DarcyFlow,
+            n_samples: 24,
+            resolution: 32,
+            seed: 7,
+        };
+        let cache = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("datasets");
+        let ds = crate::data::load_or_generate(&spec, &cache).unwrap();
+        ds.split(8)
+    }
+
+    #[test]
+    fn schedule_selects_phases() {
+        let s = PrecisionSchedule::paper_default("mixed", "amp", "full");
+        assert_eq!(s.active(0.0), "mixed");
+        assert_eq!(s.active(0.2), "mixed");
+        assert_eq!(s.active(0.25), "amp");
+        assert_eq!(s.active(0.5), "amp");
+        assert_eq!(s.active(0.75), "full");
+        assert_eq!(s.active(0.99), "full");
+    }
+
+    #[test]
+    fn training_reduces_loss_full_precision() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let (train, test) = darcy_sets();
+        let mut engine = Engine::new(&artifacts_dir()).unwrap();
+        let mut cfg = TrainConfig::new("fno_darcy_r32_full_none_grads");
+        cfg.epochs = 6;
+        cfg.lr = 2e-3;
+        let report = train_grid(&mut engine, &train, &test, &cfg).unwrap();
+        assert!(!report.diverged);
+        let first = report.epochs.first().unwrap().train_loss;
+        let last = report.epochs.last().unwrap().train_loss;
+        assert!(
+            last < first * 0.9,
+            "loss should drop: {first} -> {last}"
+        );
+        assert!(report.final_test_l2().is_finite());
+    }
+
+    #[test]
+    fn mixed_training_works_with_tanh() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let (train, test) = darcy_sets();
+        let mut engine = Engine::new(&artifacts_dir()).unwrap();
+        let mut cfg = TrainConfig::new("fno_darcy_r32_mixed_tanh_grads");
+        cfg.epochs = 4;
+        cfg.lr = 2e-3;
+        cfg.loss_scaling = true;
+        let report = train_grid(&mut engine, &train, &test, &cfg).unwrap();
+        assert!(!report.diverged, "tanh-stabilized mixed must not diverge");
+        let first = report.epochs.first().unwrap().train_loss;
+        let last = report.epochs.last().unwrap().train_loss;
+        assert!(last < first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn precision_schedule_swaps_artifacts() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let (train, test) = darcy_sets();
+        let mut engine = Engine::new(&artifacts_dir()).unwrap();
+        let mut cfg = TrainConfig::new("fno_darcy_r32_mixed_tanh_grads");
+        cfg.schedule = PrecisionSchedule::paper_default(
+            "fno_darcy_r32_mixed_tanh_grads",
+            "fno_darcy_r32_amp_none_grads",
+            "fno_darcy_r32_full_none_grads",
+        );
+        cfg.epochs = 4;
+        let report = train_grid(&mut engine, &train, &test, &cfg).unwrap();
+        let used: Vec<&str> = report.epochs.iter().map(|e| e.artifact.as_str()).collect();
+        assert!(used[0].contains("mixed"));
+        assert!(used[1].contains("amp"));
+        assert!(used[3].contains("full"));
+        assert!(!report.diverged);
+    }
+}

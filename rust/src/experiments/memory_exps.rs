@@ -1,0 +1,142 @@
+//! Analytic-memory-model experiments: Fig. 3 (memory bars), Fig. 4
+//! (throughput on three GPUs), Table 7 (TF32 on A100), Table 11
+//! (weights-only-half vs both-half).
+
+use super::Ctx;
+use crate::bench::Table;
+use crate::memmodel::{
+    fno_memory, throughput, ContractImpl, DeviceProfile, FnoArch, MemOptions,
+    Method, A100, A6000, RTX_3090TI, V100,
+};
+use anyhow::Result;
+
+/// Paper-scale architectures per dataset (the shapes behind Figs. 1/3/4).
+pub fn paper_arch(dataset: &str) -> FnoArch {
+    match dataset {
+        "ns" => FnoArch {
+            batch: 8, width: 64, modes: 16, layers: 4,
+            spatial: [128, 128, 1], in_channels: 1, out_channels: 1, cp_rank: 16,
+        },
+        "darcy" => FnoArch {
+            batch: 8, width: 64, modes: 16, layers: 4,
+            spatial: [128, 128, 1], in_channels: 1, out_channels: 1, cp_rank: 0,
+        },
+        "swe" => FnoArch {
+            batch: 4, width: 48, modes: 24, layers: 4,
+            spatial: [256, 512, 1], in_channels: 3, out_channels: 3, cp_rank: 0,
+        },
+        "car" | "ahmed" => FnoArch {
+            batch: 1, width: 48, modes: 8, layers: 4,
+            spatial: [64, 64, 64], in_channels: 7, out_channels: 1, cp_rank: 0,
+        },
+        other => panic!("unknown dataset {other}"),
+    }
+}
+
+/// Fig. 3: memory per method per dataset (paper: up to 50% reduction,
+/// AMP+Half beating the sum of its parts).
+pub fn fig3(ctx: &Ctx) -> Result<()> {
+    let mut t = Table::new(
+        "Fig. 3 — GPU memory by method (analytic model, paper-scale shapes)",
+        &["dataset", "Full (MB)", "AMP (MB)", "Half-FNO (MB)", "AMP+Half (MB)", "reduction"],
+    );
+    for ds in ["ns", "darcy", "swe", "car", "ahmed"] {
+        let arch = paper_arch(ds);
+        let mb: Vec<f64> = Method::ALL
+            .iter()
+            .map(|&m| fno_memory(&arch, m, &MemOptions::default()).mb())
+            .collect();
+        let red = 100.0 * (1.0 - mb[3] / mb[0]);
+        t.row(&[
+            ds.to_string(),
+            format!("{:.0}", mb[0]),
+            format!("{:.0}", mb[1]),
+            format!("{:.0}", mb[2]),
+            format!("{:.0}", mb[3]),
+            format!("{red:.1}%"),
+        ]);
+    }
+    t.rows_str(&[
+        "paper", "-", "-", "-", "-",
+        "NS 50.4%, Darcy 25.8%, up to 50% overall",
+    ]);
+    ctx.emit("fig3", &t)
+}
+
+/// Fig. 4: roofline throughput on the paper's three GPUs.
+pub fn fig4(ctx: &Ctx) -> Result<()> {
+    let devices: [&DeviceProfile; 3] = [&RTX_3090TI, &V100, &A6000];
+    let mut tables = vec![];
+    for ds in ["ns", "swe"] {
+        let arch = paper_arch(ds);
+        let mut t = Table::new(
+            &format!("Fig. 4 — training throughput, {ds} (samples/s, roofline model)"),
+            &["device", "Full", "AMP", "Mixed FNO + AMP (ours)", "speedup"],
+        );
+        for dev in devices {
+            let full = throughput(&arch, Method::Full, dev);
+            let amp = throughput(&arch, Method::AmpOnly, dev);
+            let ours = throughput(&arch, Method::AmpHalf, dev);
+            t.row(&[
+                dev.name.to_string(),
+                format!("{full:.1}"),
+                format!("{amp:.1}"),
+                format!("{ours:.1}"),
+                format!("{:.2}x", ours / full),
+            ]);
+        }
+        t.rows_str(&["paper", "-", "-", "-", "1.23x - 1.58x (NS), up to 1.33x (SWE)"]);
+        tables.push(t);
+    }
+    ctx.emit_many("fig4", &tables)
+}
+
+/// Table 7: ours vs TF32 on an A100 (time per epoch ratio).
+pub fn tab7(ctx: &Ctx) -> Result<()> {
+    let mut t = Table::new(
+        "Table 7 — time per epoch on A100: TF32 vs Mixed FNO (roofline model)",
+        &["dataset", "FNO + TF32 (rel.)", "Mixed FNO ours (rel.)", "ours faster by"],
+    );
+    for ds in ["ns", "darcy"] {
+        let arch = paper_arch(ds);
+        // TF32 runs matmuls at tf32 rate, memory traffic at f32 widths.
+        let flops = crate::memmodel::fno_step_flops(&arch);
+        let bytes_full = crate::memmodel::fno_step_bytes(&arch, Method::Full);
+        let bytes_ours = crate::memmodel::fno_step_bytes(&arch, Method::AmpHalf);
+        let t_tf32 = (flops / (A100.tf32_tflops * 1e12)).max(bytes_full / (A100.bandwidth_gbs * 1e9));
+        let t_ours = (flops / (A100.f16_tflops * 1e12)).max(bytes_ours / (A100.bandwidth_gbs * 1e9));
+        t.row(&[
+            ds.to_string(),
+            format!("{:.3}", t_tf32 / t_tf32),
+            format!("{:.3}", t_ours / t_tf32),
+            format!("{:.1}%", 100.0 * (1.0 - t_ours / t_tf32)),
+        ]);
+    }
+    t.rows_str(&["paper", "1.0 (57.4s / 14.1s)", "0.935 / 0.957 (53.7s / 13.5s)", "4-7%"]);
+    ctx.emit("tab7", &t)
+}
+
+/// Table 11: approximate only weights in half vs inputs+weights both half.
+pub fn tab11(ctx: &Ctx) -> Result<()> {
+    let mut t = Table::new(
+        "Table 11 — einsum inputs precision (analytic memory, paper shapes)",
+        &["dataset", "both half (MB)", "inputs full (MB)", "reduction"],
+    );
+    for ds in ["darcy", "ns"] {
+        let arch = paper_arch(ds);
+        let both = fno_memory(&arch, Method::AmpHalf, &MemOptions::default());
+        let ifull = fno_memory(
+            &arch,
+            Method::AmpHalf,
+            &MemOptions { contract_impl: ContractImpl::OptionC, inputs_full: true },
+        );
+        t.row(&[
+            ds.to_string(),
+            format!("{:.0}", both.mb()),
+            format!("{:.0}", ifull.mb()),
+            format!("{:.1}%", 100.0 * (1.0 - both.total() as f64 / ifull.total() as f64)),
+        ]);
+    }
+    t.rows_str(&["paper", "7550 / 4832", "8166 / 9380", "7.5% / 48.5%"]);
+    ctx.emit("tab11", &t)
+}

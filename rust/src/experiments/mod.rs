@@ -1,0 +1,111 @@
+//! Experiment harness: one driver per paper table/figure (see the
+//! per-experiment index in DESIGN.md). Every driver prints its rows with
+//! [`crate::bench::Table`] and appends a markdown copy under
+//! `results/<id>.md` so EXPERIMENTS.md can cite frozen outputs.
+//!
+//! `mpno exp <id> [--quick]` runs one; `mpno exp all --quick` sweeps the
+//! whole battery at CPU-scaled sizes.
+
+mod contract_exps;
+mod memory_exps;
+mod theory_exps;
+mod training_exps;
+
+use crate::bench::Table;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// Shared experiment context.
+pub struct Ctx {
+    pub artifacts_dir: PathBuf,
+    pub datasets_dir: PathBuf,
+    pub results_dir: PathBuf,
+    /// Smaller datasets / fewer epochs for CI-speed runs.
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl Ctx {
+    pub fn new(quick: bool) -> Ctx {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        Ctx {
+            artifacts_dir: root.join("artifacts"),
+            datasets_dir: root.join("datasets"),
+            results_dir: root.join("results"),
+            quick,
+            seed: 0,
+        }
+    }
+
+    /// Print + persist a finished table.
+    pub fn emit(&self, id: &str, table: &Table) -> Result<()> {
+        table.print();
+        std::fs::create_dir_all(&self.results_dir)?;
+        let path = self.results_dir.join(format!("{id}.md"));
+        std::fs::write(&path, table.to_markdown())?;
+        println!("[saved {}]", path.display());
+        Ok(())
+    }
+
+    pub fn emit_many(&self, id: &str, tables: &[Table]) -> Result<()> {
+        let mut md = String::new();
+        for t in tables {
+            t.print();
+            md += &t.to_markdown();
+            md += "\n";
+        }
+        std::fs::create_dir_all(&self.results_dir)?;
+        let path = self.results_dir.join(format!("{id}.md"));
+        std::fs::write(&path, md)?;
+        println!("[saved {}]", path.display());
+        Ok(())
+    }
+}
+
+/// All experiment ids, in DESIGN.md order.
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "fig1", "fig3", "fig4", "fig5", "tab1", "tab2", "fig6", "fig7", "fig8",
+    "fig9", "fig10", "fig11", "tab3", "tab4", "tab5", "tab6", "tab7",
+    "fig14", "fig13", "fig15", "fig16", "tab8", "tab9", "tab10", "tab11",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
+    match id {
+        "fig1" => training_exps::fig1(ctx),
+        "fig3" => memory_exps::fig3(ctx),
+        "fig4" => memory_exps::fig4(ctx),
+        "fig5" => training_exps::fig5(ctx),
+        "tab1" => training_exps::tab1(ctx),
+        "tab2" => training_exps::tab2(ctx),
+        "fig6" => training_exps::fig6(ctx),
+        "fig7" => theory_exps::fig7(ctx),
+        "fig8" => training_exps::fig8(ctx),
+        "fig9" => training_exps::fig9(ctx),
+        "fig10" => training_exps::fig10(ctx),
+        "fig11" => training_exps::fig11(ctx),
+        "tab3" => training_exps::tab3(ctx),
+        "tab4" => training_exps::tab4(ctx),
+        "tab5" => training_exps::tab5(ctx),
+        "tab6" => training_exps::tab6(ctx),
+        "tab7" => memory_exps::tab7(ctx),
+        "fig12" | "fig14" => training_exps::fig14(ctx),
+        "fig13" => training_exps::fig13(ctx),
+        "fig15" => theory_exps::fig15(ctx),
+        "fig16" => training_exps::fig16(ctx),
+        "tab8" => contract_exps::tab8(ctx),
+        "tab9" => contract_exps::tab9(ctx),
+        "tab10" => contract_exps::tab10(ctx),
+        "tab11" => memory_exps::tab11(ctx),
+        "all" => {
+            for e in ALL_EXPERIMENTS {
+                println!("\n########## {e} ##########");
+                if let Err(err) = run(e, ctx) {
+                    eprintln!("!! {e} failed: {err:#}");
+                }
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}; known: {ALL_EXPERIMENTS:?}"),
+    }
+}

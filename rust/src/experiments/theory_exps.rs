@@ -1,0 +1,189 @@
+//! Theory experiments: Fig. 7 / App. A.3 (bounds vs measured errors) and
+//! Fig. 15 (synthetic-spectrum half-precision error vs frequency).
+
+use super::Ctx;
+use crate::bench::Table;
+use crate::fft;
+use crate::fp::{Cplx, F16, PrecisionSystem};
+use crate::pde::grf::{sample_grf, GrfConfig};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::theory::{
+    disc_error, disc_upper_bound, general_disc_error, general_disc_upper_bound,
+    general_prec_bounds, general_prec_error, prec_error, prec_upper_bound,
+    HypercubeGrid, LatticeFn,
+};
+use anyhow::Result;
+
+/// A Darcy-flow-like 1-D slice / 3-D field wrapped as a LatticeFn by
+/// trilinear interpolation of a GRF sample (the "true Darcy flow" error
+/// source of Fig. 7, measured at the entrance of the FNO block).
+struct GrfField {
+    grid: Tensor, // 2-D sample; higher-d evaluated by folding coordinates
+    d: usize,
+}
+
+impl GrfField {
+    fn new(d: usize, seed: u64) -> GrfField {
+        let mut rng = Rng::new(seed);
+        let grid = sample_grf(&GrfConfig::darcy_coefficient(), 64, &mut rng);
+        GrfField { grid, d }
+    }
+}
+
+impl LatticeFn for GrfField {
+    fn eval(&self, x: &[f64]) -> f64 {
+        // Fold d coordinates onto the 2-D sample (smooth periodic lift).
+        let s = self.grid.shape()[0];
+        let (mut u, mut v) = (0.0, 0.0);
+        for (k, &xi) in x.iter().enumerate() {
+            if k % 2 == 0 {
+                u += xi;
+            } else {
+                v += xi;
+            }
+        }
+        let fi = (u.fract() * s as f64).min(s as f64 - 1.0);
+        let fj = (v.fract() * s as f64).min(s as f64 - 1.0);
+        let (i0, j0) = (fi as usize, fj as usize);
+        let (i1, j1) = ((i0 + 1) % s, (j0 + 1) % s);
+        let (du, dv) = (fi - i0 as f64, fj - j0 as f64);
+        let g = |i: usize, j: usize| self.grid.at(&[i, j]) as f64;
+        g(i0, j0) * (1.0 - du) * (1.0 - dv)
+            + g(i1, j0) * du * (1.0 - dv)
+            + g(i0, j1) * (1.0 - du) * dv
+            + g(i1, j1) * du * dv
+    }
+
+    fn lipschitz(&self) -> f64 {
+        // Grid Lipschitz bound: max abs difference of neighbours x s.
+        let s = self.grid.shape()[0];
+        let mut l: f64 = 0.0;
+        for i in 0..s {
+            for j in 0..s {
+                let a = self.grid.at(&[i, j]);
+                let b = self.grid.at(&[(i + 1) % s, j]);
+                let c = self.grid.at(&[i, (j + 1) % s]);
+                l = l.max(((a - b).abs().max((a - c).abs()) * s as f32) as f64);
+            }
+        }
+        l * self.d as f64
+    }
+
+    fn sup(&self) -> f64 {
+        self.grid.abs_max() as f64
+    }
+}
+
+/// Fig. 7: measured discretization + precision error of Darcy-like fields
+/// vs the four theorem bounds, in 1-D and 3-D, across lattice sizes.
+pub fn fig7(ctx: &Ctx) -> Result<()> {
+    let q16 = PrecisionSystem::like_f16();
+    let mut tables = vec![];
+    for &d in &[1usize, 3] {
+        let mut t = Table::new(
+            &format!("Fig. 7 — Darcy errors vs bounds (d = {d}, fp16 eps = 2^-10)"),
+            &[
+                "n (cells)", "Disc measured", "Disc upper (Thm 3.1)",
+                "Disc upper (Thm A.1)", "Prec measured", "Prec upper (Thm 3.2)",
+                "Prec band (Thm A.2)",
+            ],
+        );
+        let ms: &[usize] = if d == 1 {
+            if ctx.quick { &[8, 32, 128] } else { &[8, 16, 32, 64, 128, 256] }
+        } else if ctx.quick {
+            &[2, 4]
+        } else {
+            &[2, 4, 6, 8]
+        };
+        let field = GrfField::new(d, 42);
+        for &m in ms {
+            let grid = HypercubeGrid::new(d, m);
+            let n = grid.n();
+            let refine = if d == 1 { 16 } else { 4 };
+            let de = disc_error(&field, &grid, 1.0, refine);
+            let pe = prec_error(&field, &grid, &q16, 1.0);
+            let gd = general_disc_error(&field, &grid, refine);
+            let gp = general_prec_error(&field, &grid, &q16);
+            let du = disc_upper_bound(d, n, 1.0, field.lipschitz(), field.sup());
+            let gu = general_disc_upper_bound(d, n, field.lipschitz());
+            let pu = prec_upper_bound(q16.epsilon, field.sup());
+            let (plo, phi) = general_prec_bounds(q16.epsilon, field.sup());
+            // Machine-checkable theorem content:
+            assert!(de <= du, "Thm 3.1 upper violated: {de} > {du}");
+            assert!(pe <= pu, "Thm 3.2 upper violated: {pe} > {pu}");
+            assert!(gd <= gu, "Thm A.1 upper violated: {gd} > {gu}");
+            assert!(gp <= phi, "Thm A.2 upper violated: {gp} > {phi}");
+            t.row(&[
+                format!("{n}"),
+                format!("{de:.3e}"),
+                format!("{du:.3e}"),
+                format!("{gu:.3e}"),
+                format!("{pe:.3e}"),
+                format!("{pu:.3e}"),
+                format!("[{plo:.1e}, {phi:.1e}]"),
+            ]);
+        }
+        tables.push(t);
+    }
+    ctx.emit_many("fig7", &tables)
+}
+
+/// Fig. 15: synthetic decaying-spectrum signal, fp16 DFT error as a
+/// percentage of each mode's true amplitude — "the percentage error
+/// exponentially increases" with frequency.
+pub fn fig15(ctx: &Ctx) -> Result<()> {
+    let n = 256usize;
+    let mut rng = Rng::new(9);
+    // Sine/cosine mixture, frequencies 1..10, exponentially decaying amps.
+    let mut amps = vec![0.0f64; 11];
+    let signal: Vec<f64> = (0..n)
+        .map(|j| {
+            let x = j as f64 / n as f64;
+            let mut v = 0.0;
+            for k in 1..=10 {
+                if amps[k] == 0.0 {
+                    amps[k] = (0.5 + 0.5 * rng.uniform()) * (-(k as f64) * 0.5).exp();
+                }
+                v += amps[k] * (std::f64::consts::TAU * k as f64 * x).sin()
+                    + 0.3 * amps[k] * (std::f64::consts::TAU * k as f64 * x).cos();
+            }
+            v
+        })
+        .collect();
+
+    // Reference spectrum in f64, quantized spectrum computed wholly in f16.
+    let spec64 = fft::rfft::<f64>(&signal);
+    let spec16 = fft::rfft::<F16>(&signal);
+    let mut t = Table::new(
+        "Fig. 15 — half-precision DFT error vs frequency (synthetic signal)",
+        &["freq", "amplitude", "abs error (fp16)", "error % of amplitude"],
+    );
+    let mut last_pct = 0.0;
+    let mut pcts = vec![];
+    for k in 1..=10usize {
+        let a64 = spec64[k].abs();
+        let a16: Cplx<f64> = spec16[k].cast();
+        let err = a16.sub(spec64[k]).abs();
+        let pct = 100.0 * err / a64.max(1e-30);
+        pcts.push(pct);
+        last_pct = pct;
+        t.row(&[
+            format!("{k}"),
+            format!("{:.4e}", a64 / n as f64),
+            format!("{:.4e}", err / n as f64),
+            format!("{pct:.3}%"),
+        ]);
+    }
+    // The paper's claim: relative error grows toward high frequencies.
+    let low_avg = pcts[..3].iter().sum::<f64>() / 3.0;
+    let high_avg = pcts[7..].iter().sum::<f64>() / 3.0;
+    t.rows_str(&[
+        "trend",
+        "",
+        "",
+        &format!("low-f avg {low_avg:.3}% -> high-f avg {high_avg:.3}% (x{:.1})", high_avg / low_avg.max(1e-12)),
+    ]);
+    let _ = last_pct;
+    ctx.emit("fig15", &t)
+}

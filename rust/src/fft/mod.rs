@@ -1,0 +1,360 @@
+//! FFTs generic over precision.
+//!
+//! The discrete Fourier transform is the paper's central object: FNO
+//! replaces the continuous Fourier transform with an FFT over the training
+//! grid (incurring the *discretization error* of Thm 3.1), and the paper's
+//! method additionally evaluates that FFT in half precision (incurring the
+//! *precision error* of Thm 3.2). To measure both, the same FFT code here
+//! runs at any [`Scalar`] precision: `fft::<f64>` is the reference,
+//! `fft::<F16>` rounds after every butterfly — the "compute in f32, store
+//! in half" model of CUDA half arithmetic.
+//!
+//! Algorithms: iterative radix-2 Cooley–Tukey for power-of-two sizes,
+//! Bluestein's chirp-z for everything else, separable row/column passes for
+//! 2-D/3-D. A naive O(n²) DFT is kept as the test oracle.
+
+use crate::fp::{Cplx, Scalar};
+
+/// Forward DFT convention: X[k] = Σ_j x[j]·e^{−2πi jk/n} (unnormalized,
+/// matching `jnp.fft.fft` / `torch.fft.fft`).
+pub fn fft<S: Scalar>(x: &mut [Cplx<S>]) {
+    let n = x.len();
+    if n <= 1 {
+        return;
+    }
+    if n.is_power_of_two() {
+        radix2(x, false);
+    } else {
+        bluestein(x, false);
+    }
+}
+
+/// Inverse DFT with 1/n normalization.
+pub fn ifft<S: Scalar>(x: &mut [Cplx<S>]) {
+    let n = x.len();
+    if n <= 1 {
+        return;
+    }
+    if n.is_power_of_two() {
+        radix2(x, true);
+    } else {
+        bluestein(x, true);
+    }
+    let inv = S::from_f64(1.0 / n as f64);
+    for z in x.iter_mut() {
+        *z = z.scale(inv);
+    }
+}
+
+/// Naive O(n²) DFT — oracle for tests and for the theory module's
+/// per-frequency error measurements (it evaluates a single ω cheaply).
+pub fn dft_naive<S: Scalar>(x: &[Cplx<S>]) -> Vec<Cplx<S>> {
+    let n = x.len();
+    let mut out = Vec::with_capacity(n);
+    for k in 0..n {
+        let mut acc = Cplx::<S>::zero();
+        for (j, &v) in x.iter().enumerate() {
+            let theta = -2.0 * std::f64::consts::PI * (j as f64) * (k as f64) / n as f64;
+            acc = acc.add(v.mul(Cplx::cis(theta)));
+        }
+        out.push(acc);
+    }
+    out
+}
+
+/// Single DFT coefficient at integer frequency `k` (used by theory module).
+pub fn dft_coeff<S: Scalar>(x: &[Cplx<S>], k: i64) -> Cplx<S> {
+    let n = x.len();
+    let mut acc = Cplx::<S>::zero();
+    for (j, &v) in x.iter().enumerate() {
+        let theta = -2.0 * std::f64::consts::PI * (j as f64) * (k as f64) / n as f64;
+        acc = acc.add(v.mul(Cplx::cis(theta)));
+    }
+    acc
+}
+
+fn radix2<S: Scalar>(x: &mut [Cplx<S>], inverse: bool) {
+    let n = x.len();
+    debug_assert!(n.is_power_of_two());
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            x.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2usize;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let half = len / 2;
+        for start in (0..n).step_by(len) {
+            for k in 0..half {
+                // Twiddles from f64 (precomputed-table model); butterfly
+                // arithmetic rounds in S.
+                let w = Cplx::<S>::cis(ang * k as f64);
+                let u = x[start + k];
+                let v = x[start + k + half].mul(w);
+                x[start + k] = u.add(v);
+                x[start + k + half] = u.sub(v);
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// Bluestein chirp-z: DFT of arbitrary n via a cyclic convolution of size
+/// m = next_pow2(2n-1).
+fn bluestein<S: Scalar>(x: &mut [Cplx<S>], inverse: bool) {
+    let n = x.len();
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let m = (2 * n - 1).next_power_of_two();
+    // a[j] = x[j] * w^{j^2/2}, b[j] = w^{-j^2/2} (chirps).
+    let chirp = |j: usize| -> Cplx<S> {
+        // j^2 mod 2n to keep the angle small & exact.
+        let jj = ((j as u128 * j as u128) % (2 * n as u128)) as f64;
+        Cplx::cis(sign * std::f64::consts::PI * jj / n as f64)
+    };
+    let mut a = vec![Cplx::<S>::zero(); m];
+    let mut b = vec![Cplx::<S>::zero(); m];
+    for j in 0..n {
+        a[j] = x[j].mul(chirp(j));
+        let c = chirp(j).conj();
+        b[j] = c;
+        if j > 0 {
+            b[m - j] = c;
+        }
+    }
+    radix2(&mut a, false);
+    radix2(&mut b, false);
+    for (av, bv) in a.iter_mut().zip(&b) {
+        *av = av.mul(*bv);
+    }
+    radix2(&mut a, true);
+    let inv_m = S::from_f64(1.0 / m as f64);
+    for (k, out) in x.iter_mut().enumerate() {
+        *out = a[k].scale(inv_m).mul(chirp(k));
+    }
+}
+
+/// 2-D FFT over a row-major (h, w) buffer: rows then columns.
+pub fn fft2<S: Scalar>(data: &mut [Cplx<S>], h: usize, w: usize) {
+    assert_eq!(data.len(), h * w);
+    for r in 0..h {
+        fft(&mut data[r * w..(r + 1) * w]);
+    }
+    let mut col = vec![Cplx::<S>::zero(); h];
+    for c in 0..w {
+        for r in 0..h {
+            col[r] = data[r * w + c];
+        }
+        fft(&mut col);
+        for r in 0..h {
+            data[r * w + c] = col[r];
+        }
+    }
+}
+
+/// 2-D inverse FFT (normalized by 1/(h·w) via the 1-D ifft passes).
+pub fn ifft2<S: Scalar>(data: &mut [Cplx<S>], h: usize, w: usize) {
+    assert_eq!(data.len(), h * w);
+    for r in 0..h {
+        ifft(&mut data[r * w..(r + 1) * w]);
+    }
+    let mut col = vec![Cplx::<S>::zero(); h];
+    for c in 0..w {
+        for r in 0..h {
+            col[r] = data[r * w + c];
+        }
+        ifft(&mut col);
+        for r in 0..h {
+            data[r * w + c] = col[r];
+        }
+    }
+}
+
+/// Real forward FFT: returns the full complex spectrum of a real signal.
+pub fn rfft<S: Scalar>(x: &[f64]) -> Vec<Cplx<S>> {
+    let mut z: Vec<Cplx<S>> = x.iter().map(|&v| Cplx::from_f64(v, 0.0)).collect();
+    fft(&mut z);
+    z
+}
+
+/// Power spectrum |X[k]|².
+pub fn power_spectrum<S: Scalar>(x: &[Cplx<S>]) -> Vec<f64> {
+    x.iter().map(|z| z.norm_sqr()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::F16;
+    use crate::rng::Rng;
+
+    fn assert_close(a: &[Cplx<f64>], b: &[Cplx<f64>], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                x.sub(*y).abs() < tol,
+                "idx {i}: {:?} vs {:?}",
+                x.to_f64(),
+                y.to_f64()
+            );
+        }
+    }
+
+    fn random_signal(n: usize, seed: u64) -> Vec<Cplx<f64>> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| { let (r, i) = rng.cnormal(); Cplx::from_f64(r, i) }).collect()
+    }
+
+    #[test]
+    fn fft_matches_naive_pow2() {
+        for n in [2usize, 4, 8, 64, 256] {
+            let x = random_signal(n, n as u64);
+            let want = dft_naive(&x);
+            let mut got = x.clone();
+            fft(&mut got);
+            assert_close(&got, &want, 1e-9 * n as f64);
+        }
+    }
+
+    #[test]
+    fn fft_matches_naive_nonpow2() {
+        for n in [3usize, 5, 6, 7, 12, 100, 243] {
+            let x = random_signal(n, n as u64);
+            let want = dft_naive(&x);
+            let mut got = x.clone();
+            fft(&mut got);
+            assert_close(&got, &want, 1e-8 * n as f64);
+        }
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        for n in [8usize, 15, 128, 60] {
+            let x = random_signal(n, 1000 + n as u64);
+            let mut y = x.clone();
+            fft(&mut y);
+            ifft(&mut y);
+            assert_close(&y, &x, 1e-10 * n as f64);
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let n = 128;
+        let x = random_signal(n, 5);
+        let time_energy: f64 = x.iter().map(|z| z.norm_sqr()).sum();
+        let mut y = x.clone();
+        fft(&mut y);
+        let freq_energy: f64 = y.iter().map(|z| z.norm_sqr()).sum::<f64>() / n as f64;
+        assert!((time_energy - freq_energy).abs() / time_energy < 1e-12);
+    }
+
+    #[test]
+    fn pure_tone_lands_on_one_bin() {
+        let n = 64usize;
+        let k0 = 5;
+        let x: Vec<Cplx<f64>> = (0..n)
+            .map(|j| Cplx::cis(2.0 * std::f64::consts::PI * (k0 * j) as f64 / n as f64))
+            .collect();
+        let mut y = x.clone();
+        fft(&mut y);
+        for (k, z) in y.iter().enumerate() {
+            if k == k0 {
+                assert!((z.abs() - n as f64).abs() < 1e-9);
+            } else {
+                assert!(z.abs() < 1e-9, "leakage at bin {k}: {}", z.abs());
+            }
+        }
+    }
+
+    #[test]
+    fn fft2_separable_matches_double_naive() {
+        let (h, w) = (4usize, 8usize);
+        let x = random_signal(h * w, 77);
+        let mut got = x.clone();
+        fft2(&mut got, h, w);
+        // Naive 2-D: DFT rows then DFT cols.
+        let mut want = x.clone();
+        for r in 0..h {
+            let row = dft_naive(&want[r * w..(r + 1) * w]);
+            want[r * w..(r + 1) * w].copy_from_slice(&row);
+        }
+        for c in 0..w {
+            let col: Vec<_> = (0..h).map(|r| want[r * w + c]).collect();
+            let colf = dft_naive(&col);
+            for r in 0..h {
+                want[r * w + c] = colf[r];
+            }
+        }
+        assert_close(&got, &want, 1e-9 * (h * w) as f64);
+    }
+
+    #[test]
+    fn fft2_roundtrip() {
+        let (h, w) = (8usize, 8usize);
+        let x = random_signal(h * w, 9);
+        let mut y = x.clone();
+        fft2(&mut y, h, w);
+        ifft2(&mut y, h, w);
+        assert_close(&y, &x, 1e-10 * (h * w) as f64);
+    }
+
+    #[test]
+    fn half_precision_fft_error_is_epsilon_scale() {
+        // Theorem 3.2's message made concrete: a unit-scale signal's
+        // fp16 FFT deviates at the ~1e-3 relative level, not catastrophically.
+        let n = 256;
+        let xs = random_signal(n, 21);
+        let mut ref64 = xs.clone();
+        fft(&mut ref64);
+        let xh: Vec<Cplx<F16>> = xs.iter().map(|z| z.cast()).collect();
+        let mut got = xh.clone();
+        fft(&mut got);
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (g, r) in got.iter().zip(&ref64) {
+            let g64: Cplx<f64> = g.cast();
+            num += g64.sub(*r).norm_sqr();
+            den += r.norm_sqr();
+        }
+        let rel = (num / den).sqrt();
+        assert!(rel < 0.02, "rel={rel}");
+        assert!(rel > 1e-5, "half precision should be visibly lossy: rel={rel}");
+    }
+
+    #[test]
+    fn half_precision_fft_overflows_on_large_inputs() {
+        // The §4.3 failure mode: inputs ~3e4 overflow 65504 inside the
+        // butterflies -> non-finite outputs. tanh pre-activation fixes this
+        // by bounding |v| <= 1.
+        let n = 64;
+        let mut big: Vec<Cplx<F16>> =
+            (0..n).map(|_| Cplx::from_f64(30000.0, 0.0)).collect();
+        fft(&mut big);
+        assert!(big.iter().any(|z| !z.is_finite()));
+
+        let mut tanh_stab: Vec<Cplx<F16>> =
+            (0..n).map(|_| Cplx::from_f64(30000.0_f64.tanh(), 0.0)).collect();
+        fft(&mut tanh_stab);
+        assert!(tanh_stab.iter().all(|z| z.is_finite()));
+    }
+
+    #[test]
+    fn dft_coeff_matches_naive() {
+        let x = random_signal(17, 3);
+        let full = dft_naive(&x);
+        for k in 0..17 {
+            let c = dft_coeff(&x, k as i64);
+            assert!(c.sub(full[k]).abs() < 1e-10);
+        }
+    }
+}

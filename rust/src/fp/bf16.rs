@@ -1,0 +1,112 @@
+//! bfloat16: 1 sign, 8 exponent, 7 mantissa bits — the f32 dynamic range
+//! with far fewer precision bits. The paper (Fig. 16, App. B.11) finds bf16
+//! degrades FNO accuracy on Navier-Stokes "possibly due to having fewer
+//! precision bits than FP16"; this module lets us reproduce that with a
+//! bit-exact emulation.
+
+/// Bit-exact software bfloat16.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+    pub const ONE: Bf16 = Bf16(0x3F80);
+    pub const INFINITY: Bf16 = Bf16(0x7F80);
+    pub const NAN: Bf16 = Bf16(0x7FC0);
+    /// Machine epsilon: 2^-7.
+    pub const EPSILON: f32 = 0.0078125;
+
+    /// f32 -> bf16 with round-to-nearest-even (matches XLA / torch).
+    pub fn from_f32(x: f32) -> Bf16 {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // Quiet the NaN, keep the sign.
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        let round_bit = 0x0000_8000u32;
+        let lower = bits & 0xFFFF;
+        let mut upper = (bits >> 16) as u16;
+        if lower > round_bit || (lower == round_bit && (upper & 1) == 1) {
+            upper = upper.wrapping_add(1); // may carry into exponent: correct
+        }
+        Bf16(upper)
+    }
+
+    /// Exact widening to f32 (append 16 zero bits).
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7F80) == 0x7F80 && (self.0 & 0x7F) != 0
+    }
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7F80
+    }
+
+    pub fn add(self, rhs: Bf16) -> Bf16 {
+        Bf16::from_f32(self.to_f32() + rhs.to_f32())
+    }
+    pub fn mul(self, rhs: Bf16) -> Bf16 {
+        Bf16::from_f32(self.to_f32() * rhs.to_f32())
+    }
+}
+
+impl From<f32> for Bf16 {
+    fn from(x: f32) -> Self {
+        Bf16::from_f32(x)
+    }
+}
+impl From<Bf16> for f32 {
+    fn from(b: Bf16) -> f32 {
+        b.to_f32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants() {
+        assert_eq!(Bf16::from_f32(1.0).0, 0x3F80);
+        assert_eq!(Bf16::from_f32(-1.0).0, 0xBF80);
+        assert_eq!(Bf16::from_f32(0.0).0, 0x0000);
+    }
+
+    #[test]
+    fn huge_range_no_overflow_where_f16_dies() {
+        // bf16 keeps f32's exponent: 1e9 is finite (this is why bf16 does
+        // not need the tanh stabilizer — it trades mantissa for range).
+        assert!(!Bf16::from_f32(1e9).is_infinite());
+        assert!(Bf16::from_f32(f32::MAX).0 == 0x7F80 || Bf16::from_f32(f32::MAX).to_f32() >= 3.3e38);
+    }
+
+    #[test]
+    fn coarse_mantissa() {
+        // ulp(256) = 2 in bf16: 257 rounds to 256 (RNE, even mantissa).
+        assert_eq!(Bf16::from_f32(257.0).to_f32(), 256.0);
+        assert_eq!(Bf16::from_f32(259.0).to_f32(), 260.0);
+        // bf16 is strictly coarser than f16 inside f16's range.
+        assert!(Bf16::EPSILON > crate::fp::F16::EPSILON);
+    }
+
+    #[test]
+    fn roundtrip_all_finite() {
+        for bits in 0..=0xFFFFu16 {
+            let b = Bf16(bits);
+            if b.is_nan() {
+                assert!(Bf16::from_f32(b.to_f32()).is_nan());
+            } else {
+                assert_eq!(Bf16::from_f32(b.to_f32()).0, bits, "bits={bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn rne_carry_into_exponent() {
+        // Largest mantissa + round up must carry cleanly.
+        let x = f32::from_bits(0x3FFF_FFFF); // just below 2.0
+        assert_eq!(Bf16::from_f32(x).to_f32(), 2.0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Complex numbers generic over [`Scalar`] — the element type of the
+//! spectral domain. `Cplx<F16>` models PyTorch's `torch.chalf` (the paper's
+//! half-precision FNO block dtype): each component is stored in half and
+//! every arithmetic op rounds its components to half, which reproduces the
+//! overflow behaviour (|re|,|im| ≤ 65504) that motivates the tanh
+//! stabilizer.
+
+use crate::fp::Scalar;
+
+/// A complex number with both components in scalar type `S`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cplx<S: Scalar> {
+    pub re: S,
+    pub im: S,
+}
+
+impl<S: Scalar> Cplx<S> {
+    pub fn new(re: S, im: S) -> Self {
+        Cplx { re, im }
+    }
+
+    pub fn zero() -> Self {
+        Cplx { re: S::zero(), im: S::zero() }
+    }
+
+    pub fn one() -> Self {
+        Cplx { re: S::one(), im: S::zero() }
+    }
+
+    pub fn from_f64(re: f64, im: f64) -> Self {
+        Cplx { re: S::from_f64(re), im: S::from_f64(im) }
+    }
+
+    /// e^{iθ} evaluated in f64 then rounded into S (twiddle factors are
+    /// precomputed at high precision in real FFT libraries too).
+    pub fn cis(theta: f64) -> Self {
+        Cplx::from_f64(theta.cos(), theta.sin())
+    }
+
+    pub fn conj(self) -> Self {
+        Cplx { re: self.re, im: self.im.neg() }
+    }
+
+    pub fn add(self, rhs: Self) -> Self {
+        Cplx { re: self.re.add(rhs.re), im: self.im.add(rhs.im) }
+    }
+
+    pub fn sub(self, rhs: Self) -> Self {
+        Cplx { re: self.re.sub(rhs.re), im: self.im.sub(rhs.im) }
+    }
+
+    /// (a+bi)(c+di) = (ac−bd) + (ad+bc)i, each partial product and sum
+    /// rounded in S — four real mults + two adds, the same op count the
+    /// paper's view-as-real contraction performs.
+    pub fn mul(self, rhs: Self) -> Self {
+        let ac = self.re.mul(rhs.re);
+        let bd = self.im.mul(rhs.im);
+        let ad = self.re.mul(rhs.im);
+        let bc = self.im.mul(rhs.re);
+        Cplx { re: ac.sub(bd), im: ad.add(bc) }
+    }
+
+    pub fn scale(self, k: S) -> Self {
+        Cplx { re: self.re.mul(k), im: self.im.mul(k) }
+    }
+
+    pub fn norm_sqr(self) -> f64 {
+        let r = self.re.to_f64();
+        let i = self.im.to_f64();
+        r * r + i * i
+    }
+
+    pub fn abs(self) -> f64 {
+        self.norm_sqr().sqrt()
+    }
+
+    /// Phase in (-π, π].
+    pub fn arg(self) -> f64 {
+        self.im.to_f64().atan2(self.re.to_f64())
+    }
+
+    pub fn is_finite(self) -> bool {
+        self.re.is_finite() && self.im.is_finite()
+    }
+
+    pub fn to_f64(self) -> (f64, f64) {
+        (self.re.to_f64(), self.im.to_f64())
+    }
+
+    /// Cast between precisions (via f64, exact for widening).
+    pub fn cast<T: Scalar>(self) -> Cplx<T> {
+        Cplx { re: T::from_f64(self.re.to_f64()), im: T::from_f64(self.im.to_f64()) }
+    }
+}
+
+/// Convenience alias: f64 complex used as the reference precision.
+pub type C64 = Cplx<f64>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::F16;
+
+    #[test]
+    fn field_axioms_f64() {
+        let a = C64::from_f64(1.0, 2.0);
+        let b = C64::from_f64(-0.5, 0.25);
+        let ab = a.mul(b);
+        let ba = b.mul(a);
+        assert_eq!(ab, ba);
+        assert_eq!(a.add(b), b.add(a));
+        assert_eq!(a.mul(Cplx::one()), a);
+        assert_eq!(a.add(Cplx::zero()), a);
+    }
+
+    #[test]
+    fn mul_matches_hand_computation() {
+        let a = C64::from_f64(3.0, 4.0);
+        let b = C64::from_f64(1.0, -2.0);
+        // (3+4i)(1-2i) = 3 -6i +4i -8i^2 = 11 - 2i
+        assert_eq!(a.mul(b).to_f64(), (11.0, -2.0));
+    }
+
+    #[test]
+    fn cis_is_unit() {
+        for k in 0..16 {
+            let z = C64::cis(k as f64 * 0.41);
+            assert!((z.abs() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn half_complex_rounds_per_component() {
+        let a: Cplx<F16> = Cplx::from_f64(1.0, 2.0f64.powi(-12));
+        // imaginary underflows to subnormal fine, but adding to 1 loses it:
+        let b = a.add(Cplx::from_f64(0.0, 1.0));
+        assert_eq!(b.im.to_f64(), 1.0); // 1 + 2^-12 rounds to 1 in f16
+    }
+
+    #[test]
+    fn half_complex_overflows_like_torch_chalf() {
+        let a: Cplx<F16> = Cplx::from_f64(40000.0, 0.0);
+        let sq = a.mul(a);
+        assert!(!sq.is_finite(), "40000^2 must overflow f16 -> the NaN story");
+    }
+
+    #[test]
+    fn conj_and_arg() {
+        let z = C64::from_f64(1.0, 1.0);
+        assert!((z.arg() - std::f64::consts::FRAC_PI_4).abs() < 1e-12);
+        assert!((z.conj().arg() + std::f64::consts::FRAC_PI_4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cast_widening_exact() {
+        let h: Cplx<F16> = Cplx::from_f64(0.5, -0.25);
+        let w: C64 = h.cast();
+        assert_eq!(w.to_f64(), (0.5, -0.25));
+    }
+}

@@ -1,0 +1,236 @@
+//! FP8 formats (Micikevicius et al. 2022): E4M3 (1/4/3) and E5M2 (1/5/2).
+//!
+//! The paper (App. B.11) simulates FP8 training "via clipping out-of-range
+//! values to the maximum and minimum representable under the E5M2 format,
+//! which has a higher dynamic range than the E4M3 format" and observes
+//! divergence — predicted by Theorem 3.2 since ε(FP8) > 1e-2 is no longer
+//! below the discretization error. We implement both true rounding *and*
+//! the paper's clip-only simulation.
+
+/// E4M3: exponent bias 7, max finite 448, no infinities (S.1111.111 = NaN).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fp8E4M3(pub u8);
+
+/// E5M2: exponent bias 15, max finite 57344, has infinities (IEEE-like).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fp8E5M2(pub u8);
+
+/// Shared rounding core: round f32 to a float with `mant_bits` mantissa
+/// bits, exponent range [emin, emax] (unbiased, normals), saturating to
+/// `max_finite` when `saturate`, else producing infinity.
+fn round_small_float(
+    x: f32,
+    mant_bits: u32,
+    emin: i32,
+    emax: i32,
+    max_finite: f32,
+    saturate: bool,
+) -> (f32, bool) {
+    if x.is_nan() {
+        return (f32::NAN, false);
+    }
+    if x == 0.0 {
+        return (x, false); // keeps signed zero
+    }
+    let sign = if x.is_sign_negative() { -1.0 } else { 1.0 };
+    let a = x.abs();
+    // Decompose a = m * 2^e with m in [1, 2).
+    let e = a.log2().floor() as i32;
+    let e = e.clamp(emin - mant_bits as i32 - 1, emax + 1);
+    // Quantization step at this magnitude.
+    let eff_e = e.max(emin); // subnormal plateau below emin
+    let step = 2f32.powi(eff_e - mant_bits as i32);
+    let q = (a / step).round_ties_even() * step;
+    if q > max_finite {
+        if saturate {
+            (sign * max_finite, true)
+        } else {
+            (sign * f32::INFINITY, true)
+        }
+    } else {
+        (sign * q, false)
+    }
+}
+
+impl Fp8E4M3 {
+    pub const MAX_FINITE: f32 = 448.0;
+    /// Machine epsilon: 2^-3.
+    pub const EPSILON: f32 = 0.125;
+
+    pub fn from_f32(x: f32) -> Fp8E4M3 {
+        // Encode via value rounding then bit packing.
+        let (v, _) = round_small_float(x, 3, -6, 8, Self::MAX_FINITE, true);
+        Fp8E4M3::encode(v)
+    }
+
+    fn encode(v: f32) -> Fp8E4M3 {
+        if v.is_nan() {
+            return Fp8E4M3(0x7F);
+        }
+        let sign = if v.is_sign_negative() { 0x80u8 } else { 0 };
+        let a = v.abs();
+        if a == 0.0 {
+            return Fp8E4M3(sign);
+        }
+        let e = a.log2().floor() as i32;
+        if e >= -6 {
+            let m = (a / 2f32.powi(e) - 1.0) * 8.0;
+            let m = m.round() as u8 & 0x7;
+            let be = (e + 7) as u8;
+            Fp8E4M3(sign | (be << 3) | m)
+        } else {
+            // Subnormal: value = m/8 * 2^-6.
+            let m = (a / 2f32.powi(-6) * 8.0).round() as u8 & 0x7;
+            Fp8E4M3(sign | m)
+        }
+    }
+
+    pub fn to_f32(self) -> f32 {
+        let sign = if self.0 & 0x80 != 0 { -1.0 } else { 1.0 };
+        let e = ((self.0 >> 3) & 0xF) as i32;
+        let m = (self.0 & 0x7) as f32;
+        if e == 0xF && m == 7.0 {
+            return f32::NAN;
+        }
+        if e == 0 {
+            sign * (m / 8.0) * 2f32.powi(-6)
+        } else {
+            sign * (1.0 + m / 8.0) * 2f32.powi(e - 7)
+        }
+    }
+
+    pub fn round_value(x: f32) -> f32 {
+        Fp8E4M3::from_f32(x).to_f32()
+    }
+}
+
+impl Fp8E5M2 {
+    pub const MAX_FINITE: f32 = 57344.0;
+    /// Machine epsilon: 2^-2.
+    pub const EPSILON: f32 = 0.25;
+
+    pub fn from_f32(x: f32) -> Fp8E5M2 {
+        let (v, over) = round_small_float(x, 2, -14, 15, Self::MAX_FINITE, false);
+        if over {
+            return Fp8E5M2(if v < 0.0 { 0xFC } else { 0x7C });
+        }
+        Fp8E5M2::encode(v)
+    }
+
+    fn encode(v: f32) -> Fp8E5M2 {
+        if v.is_nan() {
+            return Fp8E5M2(0x7E);
+        }
+        let sign = if v.is_sign_negative() { 0x80u8 } else { 0 };
+        let a = v.abs();
+        if a == 0.0 {
+            return Fp8E5M2(sign);
+        }
+        if a.is_infinite() {
+            return Fp8E5M2(sign | 0x7C);
+        }
+        let e = a.log2().floor() as i32;
+        if e >= -14 {
+            let m = ((a / 2f32.powi(e) - 1.0) * 4.0).round() as u8 & 0x3;
+            let be = (e + 15) as u8;
+            Fp8E5M2(sign | (be << 2) | m)
+        } else {
+            let m = (a / 2f32.powi(-14) * 4.0).round() as u8 & 0x3;
+            Fp8E5M2(sign | m)
+        }
+    }
+
+    pub fn to_f32(self) -> f32 {
+        let sign = if self.0 & 0x80 != 0 { -1.0 } else { 1.0 };
+        let e = ((self.0 >> 2) & 0x1F) as i32;
+        let m = (self.0 & 0x3) as f32;
+        if e == 0x1F {
+            return if m == 0.0 { sign * f32::INFINITY } else { f32::NAN };
+        }
+        if e == 0 {
+            sign * (m / 4.0) * 2f32.powi(-14)
+        } else {
+            sign * (1.0 + m / 4.0) * 2f32.powi(e - 15)
+        }
+    }
+
+    pub fn round_value(x: f32) -> f32 {
+        Fp8E5M2::from_f32(x).to_f32()
+    }
+
+    /// The paper's App. B.11 *simulation*: clip to the E5M2 representable
+    /// range but keep fp16 mantissa resolution otherwise ("we simulate
+    /// 8-bit floating point training ... via clipping out-of-range values").
+    pub fn clip_simulate(x: f32) -> f32 {
+        x.clamp(-Self::MAX_FINITE, Self::MAX_FINITE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e4m3_constants() {
+        assert_eq!(Fp8E4M3::round_value(1.0), 1.0);
+        assert_eq!(Fp8E4M3::round_value(448.0), 448.0);
+        assert_eq!(Fp8E4M3::round_value(1e6), 448.0); // saturates, no inf
+        assert_eq!(Fp8E4M3::round_value(-1e6), -448.0);
+    }
+
+    #[test]
+    fn e5m2_constants() {
+        assert_eq!(Fp8E5M2::round_value(1.0), 1.0);
+        assert_eq!(Fp8E5M2::round_value(57344.0), 57344.0);
+        assert!(Fp8E5M2::round_value(1e6).is_infinite());
+        assert_eq!(Fp8E5M2::round_value(1.25), 1.25);
+    }
+
+    #[test]
+    fn e5m2_has_more_range_less_precision_than_e4m3() {
+        assert!(Fp8E5M2::MAX_FINITE > Fp8E4M3::MAX_FINITE);
+        assert!(Fp8E5M2::EPSILON > Fp8E4M3::EPSILON);
+    }
+
+    #[test]
+    fn roundtrip_all_e4m3() {
+        for bits in 0..=0xFFu8 {
+            let v = Fp8E4M3(bits);
+            let x = v.to_f32();
+            if x.is_nan() {
+                continue;
+            }
+            assert_eq!(Fp8E4M3::from_f32(x).to_f32(), x, "bits={bits:#04x}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_e5m2() {
+        for bits in 0..=0xFFu8 {
+            let v = Fp8E5M2(bits);
+            let x = v.to_f32();
+            if x.is_nan() {
+                continue;
+            }
+            let rt = Fp8E5M2::from_f32(x).to_f32();
+            if x.is_infinite() {
+                assert!(rt.is_infinite() && rt.signum() == x.signum());
+            } else {
+                assert_eq!(rt, x, "bits={bits:#04x}");
+            }
+        }
+    }
+
+    #[test]
+    fn rounding_is_coarse() {
+        // ulp(2) in E5M2 is 0.5: 2.2 rounds to 2.0.
+        assert_eq!(Fp8E5M2::round_value(2.2), 2.0);
+        assert_eq!(Fp8E5M2::round_value(2.3), 2.5);
+    }
+
+    #[test]
+    fn clip_simulation_preserves_in_range() {
+        assert_eq!(Fp8E5M2::clip_simulate(123.456), 123.456);
+        assert_eq!(Fp8E5M2::clip_simulate(1e9), Fp8E5M2::MAX_FINITE);
+    }
+}

@@ -1,0 +1,234 @@
+//! IEEE 754 binary16 ("half", torch `float16`): 1 sign, 5 exponent,
+//! 10 mantissa bits. Max finite value 65504 — the overflow that makes naive
+//! mixed-precision FNO produce NaNs (paper §4.3) is overflow past this.
+
+/// A bit-exact software IEEE binary16.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const ONE: F16 = F16(0x3C00);
+    pub const INFINITY: F16 = F16(0x7C00);
+    pub const NEG_INFINITY: F16 = F16(0xFC00);
+    pub const NAN: F16 = F16(0x7E00);
+    /// Largest finite value: 65504.
+    pub const MAX: F16 = F16(0x7BFF);
+    /// Smallest positive normal: 2^-14.
+    pub const MIN_POSITIVE: F16 = F16(0x0400);
+    /// Machine epsilon: 2^-10.
+    pub const EPSILON: f32 = 0.0009765625;
+
+    /// Convert from f32 with IEEE round-to-nearest-even (the rounding mode
+    /// of `torch.Tensor.half()` and XLA `convert(f16)`).
+    pub fn from_f32(x: f32) -> F16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let man = bits & 0x007F_FFFF;
+
+        if exp == 0xFF {
+            // Inf / NaN. Preserve a quiet NaN payload bit.
+            return if man == 0 {
+                F16(sign | 0x7C00)
+            } else {
+                F16(sign | 0x7E00)
+            };
+        }
+
+        // Unbiased exponent.
+        let e = exp - 127;
+        if e > 15 {
+            // Overflow to infinity (this is where FNO's un-stabilized FFT
+            // activations die).
+            return F16(sign | 0x7C00);
+        }
+        if e >= -14 {
+            // Normal range. 23-bit mantissa -> 10-bit with RNE.
+            let mut m = man >> 13;
+            let rem = man & 0x1FFF;
+            let halfway = 0x1000;
+            if rem > halfway || (rem == halfway && (m & 1) == 1) {
+                m += 1;
+            }
+            let mut he = (e + 15) as u16;
+            let mut hm = m as u16;
+            if hm == 0x400 {
+                // Mantissa rounding overflowed into the exponent.
+                hm = 0;
+                he += 1;
+                if he >= 31 {
+                    return F16(sign | 0x7C00);
+                }
+            }
+            return F16(sign | (he << 10) | hm);
+        }
+        if e >= -25 {
+            // Subnormal half. Add the implicit leading 1 then shift.
+            let full = man | 0x0080_0000;
+            let shift = (-14 - e + 13) as u32; // bits to drop
+            let m = full >> shift;
+            let rem = full & ((1u32 << shift) - 1);
+            let halfway = 1u32 << (shift - 1);
+            let mut hm = m as u16;
+            if rem > halfway || (rem == halfway && (hm & 1) == 1) {
+                hm += 1;
+            }
+            // hm may round up into the normal range (0x400) which is correct.
+            return F16(sign | hm);
+        }
+        // Underflow to signed zero.
+        F16(sign)
+    }
+
+    /// Exact widening conversion to f32.
+    pub fn to_f32(self) -> f32 {
+        let h = self.0 as u32;
+        let sign = (h & 0x8000) << 16;
+        let exp = (h >> 10) & 0x1F;
+        let man = h & 0x3FF;
+        let bits = if exp == 0 {
+            if man == 0 {
+                sign
+            } else {
+                // Subnormal: value = man * 2^-24 (exact in f32).
+                let v = man as f32 * 2f32.powi(-24);
+                sign | v.to_bits()
+            }
+        } else if exp == 31 {
+            sign | 0x7F80_0000 | (man << 13)
+        } else {
+            let exp32 = exp + (127 - 15);
+            sign | (exp32 << 23) | (man << 13)
+        };
+        f32::from_bits(bits)
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x3FF) != 0
+    }
+
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+
+    pub fn is_finite(self) -> bool {
+        (self.0 & 0x7C00) != 0x7C00
+    }
+
+    /// Fused "compute in f32, store in f16" — the arithmetic model of both
+    /// CUDA half (which accumulates in f32 in tensor cores) and our JAX
+    /// emulation: each op rounds its f32 result to half.
+    pub fn add(self, rhs: F16) -> F16 {
+        F16::from_f32(self.to_f32() + rhs.to_f32())
+    }
+    pub fn sub(self, rhs: F16) -> F16 {
+        F16::from_f32(self.to_f32() - rhs.to_f32())
+    }
+    pub fn mul(self, rhs: F16) -> F16 {
+        F16::from_f32(self.to_f32() * rhs.to_f32())
+    }
+    pub fn div(self, rhs: F16) -> F16 {
+        F16::from_f32(self.to_f32() / rhs.to_f32())
+    }
+}
+
+impl From<f32> for F16 {
+    fn from(x: f32) -> Self {
+        F16::from_f32(x)
+    }
+}
+impl From<F16> for f32 {
+    fn from(h: F16) -> f32 {
+        h.to_f32()
+    }
+}
+
+impl std::fmt::Display for F16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_f32())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_constants() {
+        assert_eq!(F16::from_f32(0.0).0, 0x0000);
+        assert_eq!(F16::from_f32(-0.0).0, 0x8000);
+        assert_eq!(F16::from_f32(1.0).0, 0x3C00);
+        assert_eq!(F16::from_f32(-2.0).0, 0xC000);
+        assert_eq!(F16::from_f32(65504.0).0, 0x7BFF);
+        assert_eq!(F16::from_f32(0.5).0, 0x3800);
+        assert_eq!(F16::from_f32(0.099976).0, 0x2E66); // ~0.1
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        // 65520 is the rounding boundary: everything >= 65520 -> inf.
+        assert!(F16::from_f32(65520.0).is_infinite());
+        assert!(F16::from_f32(1e9).is_infinite());
+        assert!(F16::from_f32(-1e9).is_infinite());
+        assert_eq!(F16::from_f32(65519.9).0, 0x7BFF);
+    }
+
+    #[test]
+    fn subnormals() {
+        // Smallest positive subnormal = 2^-24.
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(F16::from_f32(tiny).0, 0x0001);
+        assert_eq!(F16(0x0001).to_f32(), tiny);
+        // Below half the smallest subnormal rounds to zero.
+        assert_eq!(F16::from_f32(tiny / 4.0).0, 0x0000);
+        // Subnormal round-trips exactly.
+        for bits in [0x0001u16, 0x0003, 0x01FF, 0x03FF] {
+            let h = F16(bits);
+            assert_eq!(F16::from_f32(h.to_f32()).0, bits);
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 2048 + 1 = 2049 is exactly halfway between 2048 and 2050 in half
+        // (ulp = 2 at that scale); RNE picks the even mantissa (2048).
+        assert_eq!(F16::from_f32(2049.0).to_f32(), 2048.0);
+        assert_eq!(F16::from_f32(2051.0).to_f32(), 2052.0);
+    }
+
+    #[test]
+    fn roundtrip_all_finite_halves() {
+        // Every finite f16 must survive f16 -> f32 -> f16 exactly.
+        for bits in 0..=0xFFFFu16 {
+            let h = F16(bits);
+            if h.is_nan() {
+                assert!(F16::from_f32(h.to_f32()).is_nan());
+            } else {
+                assert_eq!(F16::from_f32(h.to_f32()).0, bits, "bits={bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_propagates() {
+        assert!(F16::from_f32(f32::NAN).is_nan());
+        assert!(F16::NAN.add(F16::ONE).is_nan());
+    }
+
+    #[test]
+    fn arithmetic_rounds() {
+        // 1 + 2^-11 rounds back to 1 in half precision (ulp(1) = 2^-10).
+        let one = F16::ONE;
+        let tiny = F16::from_f32(2.0f32.powi(-11) * 0.99);
+        assert_eq!(one.add(tiny), one);
+        // ... while in f32 it would not.
+        assert_ne!(1.0f32 + 2.0f32.powi(-11) * 0.99, 1.0f32);
+    }
+
+    #[test]
+    fn epsilon_is_ulp_of_one() {
+        let next = F16(F16::ONE.0 + 1).to_f32();
+        assert_eq!(next - 1.0, F16::EPSILON);
+    }
+}

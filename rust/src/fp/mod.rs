@@ -1,0 +1,238 @@
+//! Software numeric formats — the paper's object of study.
+//!
+//! The paper's claims are about *rounding behaviour* (overflow of fp16's
+//! dynamic range inside the FFT, the ε of the mantissa, FP8's missing
+//! precision bits), not about any particular silicon. This module provides
+//! bit-exact software implementations of every format the paper touches:
+//!
+//! * [`F16`] — IEEE 754 binary16 (torch `float16`), 1s/5e/10m.
+//! * [`Bf16`] — bfloat16, 1s/8e/7m (Fig. 16: degrades on Navier-Stokes).
+//! * [`Fp8E4M3`] / [`Fp8E5M2`] — FP8 formats of Micikevicius et al. 2022
+//!   (App. B.11: simulated FP8 training diverges).
+//! * [`Tf32`] — NVIDIA TensorFloat-32, f32 with mantissa truncated to 10
+//!   bits (Table 7).
+//! * [`PrecisionSystem`] — the paper §3 abstract `(a₀, ε, T)`-precision
+//!   system `q : ℝ → S`, used by [`crate::theory`] for Theorem 3.2 / A.2.
+//!
+//! All conversions from `f32` use round-to-nearest-even, matching IEEE and
+//! the behaviour of `torch.Tensor.half()` / XLA `convert`.
+
+mod bf16;
+mod complex;
+mod fp8;
+mod half;
+mod scalar;
+mod system;
+mod tf32;
+
+pub use bf16::Bf16;
+pub use complex::{Cplx, C64};
+pub use fp8::{Fp8E4M3, Fp8E5M2};
+pub use half::F16;
+pub use scalar::Scalar;
+pub use system::PrecisionSystem;
+pub use tf32::Tf32;
+
+/// A storage/compute precision mode, as exported in the AOT artifact matrix
+/// and consumed by the memory model and coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Everything float32 (the paper's "Full FNO" baseline).
+    Full,
+    /// PyTorch-AMP-like: real-valued matmul-ish ops in fp16, FNO block
+    /// (FFT + contraction) left in fp32 (what stock AMP does to FNO).
+    Amp,
+    /// The paper's method: AMP **plus** the FNO block (forward FFT, complex
+    /// tensor contraction, inverse FFT) in half precision.
+    Mixed,
+    /// bfloat16 everywhere AMP would use fp16 (Fig. 16 baseline).
+    Bf16,
+    /// Simulated FP8 (E5M2 clip) on the FNO block (App. B.11).
+    Fp8,
+    /// TensorFloat-32 matmuls (Table 7 baseline).
+    Tf32,
+}
+
+impl Precision {
+    /// All modes, in artifact-matrix order.
+    pub const ALL: [Precision; 6] = [
+        Precision::Full,
+        Precision::Amp,
+        Precision::Mixed,
+        Precision::Bf16,
+        Precision::Fp8,
+        Precision::Tf32,
+    ];
+
+    /// Artifact-name token (`full`, `amp`, `mixed`, ...).
+    pub fn token(self) -> &'static str {
+        match self {
+            Precision::Full => "full",
+            Precision::Amp => "amp",
+            Precision::Mixed => "mixed",
+            Precision::Bf16 => "bf16",
+            Precision::Fp8 => "fp8",
+            Precision::Tf32 => "tf32",
+        }
+    }
+
+    pub fn from_token(s: &str) -> Option<Self> {
+        Precision::ALL.iter().copied().find(|p| p.token() == s)
+    }
+
+    /// Bytes per element of the *FNO-block activation* dtype under this mode
+    /// (complex numbers count both components). Used by the memory model.
+    pub fn spectral_activation_bytes(self) -> usize {
+        match self {
+            Precision::Full | Precision::Amp | Precision::Tf32 => 8, // complex64
+            Precision::Mixed | Precision::Bf16 => 4,                 // complex-half
+            Precision::Fp8 => 2,                                     // complex-fp8
+        }
+    }
+
+    /// Bytes per element of real-valued activations outside the FNO block.
+    pub fn dense_activation_bytes(self) -> usize {
+        match self {
+            Precision::Full | Precision::Tf32 => 4,
+            Precision::Amp | Precision::Mixed | Precision::Bf16 => 2,
+            Precision::Fp8 => 1,
+        }
+    }
+
+    /// Machine epsilon of the format used in the spectral domain — the `ε`
+    /// that enters Theorem 3.2 (`Prec ≤ c·εM`). fp16 has 10 mantissa bits
+    /// (ε ≈ 9.8e-4 ulp, the paper quotes 1e-4 as the representative relative
+    /// step), bf16 7 bits, fp8-E5M2 2 bits.
+    pub fn epsilon(self) -> f64 {
+        match self {
+            Precision::Full | Precision::Amp => f32::EPSILON as f64,
+            Precision::Tf32 => 2.0_f64.powi(-10),
+            Precision::Mixed => 2.0_f64.powi(-10), // fp16 mantissa step
+            Precision::Bf16 => 2.0_f64.powi(-7),
+            Precision::Fp8 => 2.0_f64.powi(-2), // E5M2
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.token())
+    }
+}
+
+/// Element dtypes as they appear in HLO / the memory model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F64,
+    F32,
+    F16,
+    Bf16,
+    Fp8,
+    C128,
+    C64,
+    /// "complex32": two fp16s — what the paper's half-precision FNO block
+    /// stores (PyTorch `torch.chalf`).
+    C32,
+    I32,
+    U8,
+}
+
+impl DType {
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::F64 => 8,
+            DType::F32 => 4,
+            DType::F16 | DType::Bf16 => 2,
+            DType::Fp8 | DType::U8 => 1,
+            DType::C128 => 16,
+            DType::C64 => 8,
+            DType::C32 => 4,
+            DType::I32 => 4,
+        }
+    }
+
+    /// The dtype obtained by viewing this complex dtype as real pairs
+    /// (paper §4.2 "temporarily converting tensors to reals").
+    pub fn view_as_real(self) -> DType {
+        match self {
+            DType::C128 => DType::F64,
+            DType::C64 => DType::F32,
+            DType::C32 => DType::F16,
+            other => other,
+        }
+    }
+
+    pub fn is_complex(self) -> bool {
+        matches!(self, DType::C128 | DType::C64 | DType::C32)
+    }
+}
+
+/// Round a f32 through a given precision's storage format and back.
+/// This is the Rust twin of `python/compile/quantize.py` and is used to
+/// cross-check the JAX emulation bit-for-bit (pytest loads vectors dumped
+/// from here).
+pub fn round_trip(x: f32, p: Precision) -> f32 {
+    match p {
+        Precision::Full | Precision::Amp => x,
+        Precision::Mixed => F16::from_f32(x).to_f32(),
+        Precision::Bf16 => Bf16::from_f32(x).to_f32(),
+        // E5M2 emulation, matching quantize._round_fp8 bit-for-bit:
+        // f32 -> f16 (RNE), then RNE-truncate the f16 mantissa to 2 bits,
+        // then clip to the E5M2 range.
+        Precision::Fp8 => {
+            let h = F16::from_f32(x);
+            if h.is_nan() {
+                return f32::NAN;
+            }
+            let bits = h.0;
+            let lsb = (bits >> 8) & 1;
+            let rounded = bits.wrapping_add(0x7F + lsb) & 0xFF00;
+            let v = F16(rounded).to_f32();
+            if x.is_finite() {
+                Fp8E5M2::clip_simulate(v)
+            } else {
+                x
+            }
+        }
+        Precision::Tf32 => Tf32::from_f32(x).to_f32(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_tokens_roundtrip() {
+        for p in Precision::ALL {
+            assert_eq!(Precision::from_token(p.token()), Some(p));
+        }
+        assert_eq!(Precision::from_token("nope"), None);
+    }
+
+    #[test]
+    fn epsilon_ordering_matches_paper() {
+        // Paper App. B.11: ε(fp16) ≈ 1e-4 ≪ ε(fp8) > 1e-2; bf16 in between.
+        assert!(Precision::Mixed.epsilon() < Precision::Bf16.epsilon());
+        assert!(Precision::Bf16.epsilon() < Precision::Fp8.epsilon());
+        assert!(Precision::Mixed.epsilon() < 1.1e-3);
+        assert!(Precision::Fp8.epsilon() > 1e-2);
+    }
+
+    #[test]
+    fn bytes_model() {
+        assert_eq!(DType::C64.bytes(), 2 * DType::F32.bytes());
+        assert_eq!(DType::C32.bytes(), 2 * DType::F16.bytes());
+        assert_eq!(DType::C64.view_as_real(), DType::F32);
+        assert!(DType::C32.is_complex() && !DType::F16.is_complex());
+    }
+
+    #[test]
+    fn mixed_halves_spectral_bytes() {
+        // The headline memory claim depends on this 2x.
+        assert_eq!(
+            Precision::Full.spectral_activation_bytes(),
+            2 * Precision::Mixed.spectral_activation_bytes()
+        );
+    }
+}

@@ -1,0 +1,261 @@
+//! The [`Scalar`] trait: real arithmetic generic over precision.
+//!
+//! The FFT ([`crate::fft`]), the theory quadratures and the synthetic
+//! spectrum experiments all need to run the *same* algorithm at f64, f32
+//! and emulated-f16 resolution (Fig. 7, Fig. 15). A `Scalar` is a real
+//! number type with enough arithmetic to drive a Cooley–Tukey butterfly;
+//! the emulated types round after every operation, which is exactly the
+//! "compute in f32, store in half" model of CUDA half arithmetic.
+
+use crate::fp::{Bf16, F16, Fp8E5M2, Tf32};
+
+/// Real scalar arithmetic with per-operation rounding semantics.
+pub trait Scalar: Copy + Clone + PartialEq + std::fmt::Debug {
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn add(self, rhs: Self) -> Self;
+    fn sub(self, rhs: Self) -> Self;
+    fn mul(self, rhs: Self) -> Self;
+    fn div(self, rhs: Self) -> Self;
+    fn neg(self) -> Self;
+    fn zero() -> Self {
+        Self::from_f64(0.0)
+    }
+    fn one() -> Self {
+        Self::from_f64(1.0)
+    }
+    fn is_finite(self) -> bool {
+        self.to_f64().is_finite()
+    }
+    /// Machine epsilon of the format (relative step).
+    fn eps() -> f64;
+    /// Short name for reports ("f64", "f16", …).
+    fn name() -> &'static str;
+}
+
+impl Scalar for f64 {
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    fn to_f64(self) -> f64 {
+        self
+    }
+    fn add(self, rhs: Self) -> Self {
+        self + rhs
+    }
+    fn sub(self, rhs: Self) -> Self {
+        self - rhs
+    }
+    fn mul(self, rhs: Self) -> Self {
+        self * rhs
+    }
+    fn div(self, rhs: Self) -> Self {
+        self / rhs
+    }
+    fn neg(self) -> Self {
+        -self
+    }
+    fn eps() -> f64 {
+        f64::EPSILON
+    }
+    fn name() -> &'static str {
+        "f64"
+    }
+}
+
+impl Scalar for f32 {
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn add(self, rhs: Self) -> Self {
+        self + rhs
+    }
+    fn sub(self, rhs: Self) -> Self {
+        self - rhs
+    }
+    fn mul(self, rhs: Self) -> Self {
+        self * rhs
+    }
+    fn div(self, rhs: Self) -> Self {
+        self / rhs
+    }
+    fn neg(self) -> Self {
+        -self
+    }
+    fn eps() -> f64 {
+        f32::EPSILON as f64
+    }
+    fn name() -> &'static str {
+        "f32"
+    }
+}
+
+impl Scalar for F16 {
+    fn from_f64(x: f64) -> Self {
+        F16::from_f32(x as f32)
+    }
+    fn to_f64(self) -> f64 {
+        self.to_f32() as f64
+    }
+    fn add(self, rhs: Self) -> Self {
+        F16::add(self, rhs)
+    }
+    fn sub(self, rhs: Self) -> Self {
+        F16::sub(self, rhs)
+    }
+    fn mul(self, rhs: Self) -> Self {
+        F16::mul(self, rhs)
+    }
+    fn div(self, rhs: Self) -> Self {
+        F16::div(self, rhs)
+    }
+    fn neg(self) -> Self {
+        F16(self.0 ^ 0x8000)
+    }
+    fn is_finite(self) -> bool {
+        F16::is_finite(self)
+    }
+    fn eps() -> f64 {
+        F16::EPSILON as f64
+    }
+    fn name() -> &'static str {
+        "f16"
+    }
+}
+
+impl Scalar for Bf16 {
+    fn from_f64(x: f64) -> Self {
+        Bf16::from_f32(x as f32)
+    }
+    fn to_f64(self) -> f64 {
+        self.to_f32() as f64
+    }
+    fn add(self, rhs: Self) -> Self {
+        Bf16::from_f32(self.to_f32() + rhs.to_f32())
+    }
+    fn sub(self, rhs: Self) -> Self {
+        Bf16::from_f32(self.to_f32() - rhs.to_f32())
+    }
+    fn mul(self, rhs: Self) -> Self {
+        Bf16::from_f32(self.to_f32() * rhs.to_f32())
+    }
+    fn div(self, rhs: Self) -> Self {
+        Bf16::from_f32(self.to_f32() / rhs.to_f32())
+    }
+    fn neg(self) -> Self {
+        Bf16(self.0 ^ 0x8000)
+    }
+    fn eps() -> f64 {
+        Bf16::EPSILON as f64
+    }
+    fn name() -> &'static str {
+        "bf16"
+    }
+}
+
+impl Scalar for Tf32 {
+    fn from_f64(x: f64) -> Self {
+        Tf32::from_f32(x as f32)
+    }
+    fn to_f64(self) -> f64 {
+        self.0 as f64
+    }
+    fn add(self, rhs: Self) -> Self {
+        Tf32::from_f32(self.0 + rhs.0)
+    }
+    fn sub(self, rhs: Self) -> Self {
+        Tf32::from_f32(self.0 - rhs.0)
+    }
+    fn mul(self, rhs: Self) -> Self {
+        Tf32::from_f32(self.0 * rhs.0)
+    }
+    fn div(self, rhs: Self) -> Self {
+        Tf32::from_f32(self.0 / rhs.0)
+    }
+    fn neg(self) -> Self {
+        Tf32(-self.0)
+    }
+    fn eps() -> f64 {
+        Tf32::EPSILON as f64
+    }
+    fn name() -> &'static str {
+        "tf32"
+    }
+}
+
+impl Scalar for Fp8E5M2 {
+    fn from_f64(x: f64) -> Self {
+        Fp8E5M2::from_f32(x as f32)
+    }
+    fn to_f64(self) -> f64 {
+        self.to_f32() as f64
+    }
+    fn add(self, rhs: Self) -> Self {
+        Fp8E5M2::from_f32(self.to_f32() + rhs.to_f32())
+    }
+    fn sub(self, rhs: Self) -> Self {
+        Fp8E5M2::from_f32(self.to_f32() - rhs.to_f32())
+    }
+    fn mul(self, rhs: Self) -> Self {
+        Fp8E5M2::from_f32(self.to_f32() * rhs.to_f32())
+    }
+    fn div(self, rhs: Self) -> Self {
+        Fp8E5M2::from_f32(self.to_f32() / rhs.to_f32())
+    }
+    fn neg(self) -> Self {
+        Fp8E5M2(self.0 ^ 0x80)
+    }
+    fn eps() -> f64 {
+        Fp8E5M2::EPSILON as f64
+    }
+    fn name() -> &'static str {
+        "fp8e5m2"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kahan_free_sum<S: Scalar>(n: usize) -> f64 {
+        // Sum of 1/n, n times: exact answer 1.0. Error grows with eps.
+        let x = S::from_f64(1.0 / n as f64);
+        let mut acc = S::zero();
+        for _ in 0..n {
+            acc = acc.add(x);
+        }
+        (acc.to_f64() - 1.0).abs()
+    }
+
+    #[test]
+    fn accumulation_error_ranks_by_precision() {
+        let e64 = kahan_free_sum::<f64>(1000);
+        let e32 = kahan_free_sum::<f32>(1000);
+        let e16 = kahan_free_sum::<F16>(1000);
+        assert!(e64 <= e32 && e32 <= e16, "{e64} {e32} {e16}");
+        assert!(e16 > 1e-3, "f16 accumulation must show visible error");
+    }
+
+    #[test]
+    fn f16_overflow_is_visible_through_trait() {
+        let big = F16::from_f64(60000.0);
+        assert!(!big.add(big).is_finite());
+    }
+
+    #[test]
+    fn neg_is_sign_flip() {
+        assert_eq!(F16::from_f64(1.5).neg().to_f64(), -1.5);
+        assert_eq!(Bf16::from_f64(2.0).neg().to_f64(), -2.0);
+        assert_eq!(Fp8E5M2::from_f64(3.0).neg().to_f64(), -3.0);
+    }
+
+    #[test]
+    fn names_and_eps() {
+        assert_eq!(<f64 as Scalar>::name(), "f64");
+        assert!(F16::eps() > f32::eps());
+        assert!(Fp8E5M2::eps() > Bf16::eps());
+    }
+}

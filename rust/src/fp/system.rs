@@ -1,0 +1,159 @@
+//! The paper's §3 abstract `(a₀, ε, T)`-precision system.
+//!
+//! `q : ℝ → S` with `S = {0} ∪ {±a₀(1+ε)^i}_{i=0..T}`, `q(x) = argmin_{y∈S}
+//! |x − y|`. This is the idealized geometric-grid model of floating point
+//! used by Theorems 3.2 and A.2; we implement it exactly (log-domain
+//! nearest-neighbour, then checking both neighbours) so the theory module
+//! can compute `Prec(v, Q_d, q, ω)` with the *same* q the proofs assume.
+
+/// An `(a₀, ε, T)`-precision system.
+#[derive(Debug, Clone, Copy)]
+pub struct PrecisionSystem {
+    /// Smallest positive representable magnitude.
+    pub a0: f64,
+    /// Relative grid step (the ε of Theorem 3.2's bound `c·εM`).
+    pub epsilon: f64,
+    /// Number of geometric steps: largest magnitude is `a₀(1+ε)^T`.
+    pub t: u32,
+}
+
+impl PrecisionSystem {
+    pub fn new(a0: f64, epsilon: f64, t: u32) -> Self {
+        assert!(a0 > 0.0 && epsilon > 0.0 && t > 0);
+        PrecisionSystem { a0, epsilon, t }
+    }
+
+    /// A system mimicking IEEE fp16: a₀ = 2^-24 (smallest subnormal),
+    /// relative step ε = 2^-10, top ≈ 65504.
+    pub fn like_f16() -> Self {
+        let a0 = 2f64.powi(-24);
+        let epsilon = 2f64.powi(-10);
+        // Solve a0 (1+eps)^T = 65504.
+        let t = ((65504f64 / a0).ln() / (1.0 + epsilon).ln()).ceil() as u32;
+        PrecisionSystem::new(a0, epsilon, t)
+    }
+
+    /// A system mimicking IEEE fp32: a₀ = 2^-149, ε = 2^-23.
+    pub fn like_f32() -> Self {
+        let a0 = 2f64.powi(-149);
+        let epsilon = 2f64.powi(-23);
+        let t = ((3.4e38f64 / a0).ln() / (1.0 + epsilon).ln()).ceil() as u32;
+        PrecisionSystem::new(a0, epsilon, t)
+    }
+
+    /// A system mimicking FP8-E5M2: a₀ = 2^-16, ε = 2^-2.
+    pub fn like_fp8() -> Self {
+        let a0 = 2f64.powi(-16);
+        let epsilon = 2f64.powi(-2);
+        let t = ((57344f64 / a0).ln() / (1.0 + epsilon).ln()).ceil() as u32;
+        PrecisionSystem::new(a0, epsilon, t)
+    }
+
+    /// Largest representable magnitude `a₀(1+ε)^T`.
+    pub fn max_value(&self) -> f64 {
+        self.a0 * (1.0 + self.epsilon).powi(self.t as i32)
+    }
+
+    /// The grid point `a₀(1+ε)^i`.
+    pub fn grid(&self, i: u32) -> f64 {
+        self.a0 * (1.0 + self.epsilon).powi(i.min(self.t) as i32)
+    }
+
+    /// `q(x)`: nearest element of S (ties break toward smaller magnitude,
+    /// immaterial to the bounds).
+    pub fn q(&self, x: f64) -> f64 {
+        if x == 0.0 || x.is_nan() {
+            return 0.0;
+        }
+        let sign = x.signum();
+        let a = x.abs();
+        if a <= self.a0 {
+            // Nearest of {0, a0}.
+            return if a < self.a0 / 2.0 { 0.0 } else { sign * self.a0 };
+        }
+        let max = self.max_value();
+        if a >= max {
+            return sign * max;
+        }
+        // i* = round(log_{1+eps}(a / a0)), then compare both neighbours.
+        let fi = (a / self.a0).ln() / (1.0 + self.epsilon).ln();
+        let lo = fi.floor().max(0.0) as u32;
+        let hi = (lo + 1).min(self.t);
+        let glo = self.grid(lo);
+        let ghi = self.grid(hi);
+        let y = if (a - glo).abs() <= (ghi - a).abs() { glo } else { ghi };
+        sign * y
+    }
+
+    /// Worst-case relative quantization error on [a₀, max]: ε/2 up to
+    /// second-order terms — the constant behind Theorem 3.2.
+    pub fn relative_error_bound(&self) -> f64 {
+        self.epsilon / 2.0 * (1.0 + self.epsilon)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sys() -> PrecisionSystem {
+        PrecisionSystem::new(1e-4, 1e-3, 40_000)
+    }
+
+    #[test]
+    fn q_fixes_grid_points() {
+        let s = sys();
+        for i in [0u32, 1, 17, 100, 1000] {
+            let g = s.grid(i);
+            assert_eq!(s.q(g), g);
+            assert_eq!(s.q(-g), -g);
+        }
+        assert_eq!(s.q(0.0), 0.0);
+    }
+
+    #[test]
+    fn q_is_nearest() {
+        let s = sys();
+        // Between grid(i) and grid(i+1) the midpoint splits the choice.
+        let a = s.grid(10);
+        let b = s.grid(11);
+        let mid = (a + b) / 2.0;
+        assert_eq!(s.q(mid - 1e-12), a);
+        assert_eq!(s.q(mid + 1e-12), b);
+    }
+
+    #[test]
+    fn relative_error_within_bound() {
+        let s = sys();
+        let bound = s.relative_error_bound();
+        let mut x = s.a0 * 1.5;
+        while x < s.max_value() / 2.0 {
+            let rel = (s.q(x) - x).abs() / x;
+            assert!(rel <= bound * 1.0001, "x={x} rel={rel} bound={bound}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn saturates_at_extremes() {
+        let s = sys();
+        assert_eq!(s.q(1e300), s.max_value());
+        assert_eq!(s.q(-1e300), -s.max_value());
+        assert_eq!(s.q(s.a0 / 10.0), 0.0);
+    }
+
+    #[test]
+    fn f16_like_matches_softfloat_scale() {
+        use crate::fp::F16;
+        let s = PrecisionSystem::like_f16();
+        // The abstract system and the real f16 should agree on relative
+        // error magnitude for mid-range values.
+        for &x in &[0.1f64, 1.0, 3.7, 100.0, 1000.0] {
+            let abstract_err = (s.q(x) - x).abs() / x;
+            let real_err = ((F16::from_f32(x as f32).to_f32() as f64) - x).abs() / x;
+            assert!(abstract_err < 1e-3);
+            assert!(real_err < 1e-3);
+        }
+        assert!((s.max_value() - 65504.0).abs() / 65504.0 < 0.01);
+    }
+}

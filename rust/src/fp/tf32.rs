@@ -1,0 +1,85 @@
+//! TensorFloat-32: NVIDIA's Ampere matmul input format — f32 exponent
+//! (8 bits) with the mantissa truncated to 10 bits. Inputs to tensor-core
+//! matmuls are rounded to tf32; accumulation stays f32. Paper Table 7
+//! benchmarks against tf32 on an A100.
+
+/// Round a f32 to tf32 resolution (round-to-nearest-even on bit 13).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Tf32(pub f32);
+
+impl Tf32 {
+    /// Machine epsilon: 2^-10 (same mantissa width as fp16, full f32 range).
+    pub const EPSILON: f32 = 0.0009765625;
+
+    pub fn from_f32(x: f32) -> Tf32 {
+        if x.is_nan() || x.is_infinite() {
+            return Tf32(x);
+        }
+        let bits = x.to_bits();
+        // Keep 10 of 23 mantissa bits: round at bit 12 (value 1<<12), drop 13.
+        let drop = 13u32;
+        let rem = bits & ((1 << drop) - 1);
+        let halfway = 1u32 << (drop - 1);
+        let mut kept = bits >> drop;
+        if rem > halfway || (rem == halfway && (kept & 1) == 1) {
+            kept += 1; // carry may ripple into the exponent — still correct
+        }
+        Tf32(f32::from_bits(kept << drop))
+    }
+
+    pub fn to_f32(self) -> f32 {
+        self.0
+    }
+
+    pub fn round_value(x: f32) -> f32 {
+        Tf32::from_f32(x).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_range_drops_precision() {
+        // Full f32 range survives (tf32-representable large value)…
+        let big = 2f32.powi(100) * 1.5;
+        assert_eq!(Tf32::round_value(big), big);
+        assert!((Tf32::round_value(1e30) - 1e30).abs() / 1e30 < 1e-3);
+        // …but 1 + 2^-11 collapses to 1 (ulp(1) = 2^-10).
+        assert_eq!(Tf32::round_value(1.0 + 2f32.powi(-12)), 1.0);
+        assert_ne!(Tf32::round_value(1.0 + 2f32.powi(-9)), 1.0);
+    }
+
+    #[test]
+    fn same_epsilon_as_f16() {
+        assert_eq!(Tf32::EPSILON, crate::fp::F16::EPSILON);
+    }
+
+    #[test]
+    fn idempotent() {
+        for &x in &[0.1f32, 3.14159, -2.71828, 1e-20, 65504.0, 1e20] {
+            let once = Tf32::round_value(x);
+            assert_eq!(Tf32::round_value(once), once);
+        }
+    }
+
+    #[test]
+    fn special_values() {
+        assert!(Tf32::round_value(f32::NAN).is_nan());
+        assert!(Tf32::round_value(f32::INFINITY).is_infinite());
+        assert_eq!(Tf32::round_value(0.0), 0.0);
+        assert_eq!(Tf32::round_value(-0.0), 0.0);
+    }
+
+    #[test]
+    fn rne_at_boundary() {
+        // Construct a value exactly halfway between two tf32 grid points.
+        let base = 1.0f32;
+        let half_ulp = 2f32.powi(-11);
+        // 1 + 2^-11 is halfway between 1 and 1+2^-10; RNE keeps even (1.0).
+        assert_eq!(Tf32::round_value(base + half_ulp), 1.0);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9; even is 1+2^-9.
+        assert_eq!(Tf32::round_value(base + 3.0 * half_ulp), 1.0 + 2f32.powi(-9));
+    }
+}

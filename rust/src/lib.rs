@@ -1,0 +1,56 @@
+//! # MPNO — Mixed-Precision Neural Operators
+//!
+//! Rust/JAX/Pallas reproduction of *"Guaranteed Approximation Bounds for
+//! Mixed-Precision Neural Operators"* (ICLR 2024).
+//!
+//! The crate is organised in three tiers:
+//!
+//! 1. **Substrates** — everything the paper's system stands on, built from
+//!    scratch because only the `xla` crate is available offline:
+//!    software numeric formats ([`fp`]), dense tensors ([`tensor`]),
+//!    FFTs generic over precision ([`fft`]), PRNG ([`rng`]), an einsum
+//!    engine with contraction-order planning ([`contract`]), PDE solvers
+//!    for data generation ([`pde`]), linear algebra ([`linalg`]), a JSON
+//!    subset parser ([`jsonlite`]), binary serialization ([`ser`]), a
+//!    property-testing mini-framework ([`testing`]), a bench harness
+//!    ([`bench`]) and a thread-pool ([`exec`]).
+//! 2. **Core library** — the paper's contribution: approximation-bound
+//!    theory ([`theory`]), the PJRT runtime ([`runtime`]), optimizers with
+//!    fp32 master weights ([`optim`]), AMP semantics + dynamic loss scaling
+//!    ([`amp`]), numerical stabilizers ([`stability`]), the analytic GPU
+//!    memory model ([`memmodel`]), operator-learning metrics ([`metrics`]),
+//!    datasets ([`data`]) and the training coordinator with precision
+//!    scheduling ([`coordinator`]).
+//! 3. **Harness** — CLI ([`cli`]) and the per-paper-table/figure experiment
+//!    drivers ([`experiments`]).
+//!
+//! Python (JAX + Pallas) exists only on the compile path: `make artifacts`
+//! AOT-lowers every model/precision variant to HLO text which [`runtime`]
+//! loads via PJRT. Python never runs at training/serving time.
+
+pub mod amp;
+pub mod bench;
+pub mod cli;
+pub mod contract;
+pub mod coordinator;
+pub mod data;
+pub mod exec;
+pub mod experiments;
+pub mod fft;
+pub mod fp;
+pub mod jsonlite;
+pub mod linalg;
+pub mod memmodel;
+pub mod metrics;
+pub mod optim;
+pub mod pde;
+pub mod rng;
+pub mod runtime;
+pub mod ser;
+pub mod stability;
+pub mod tensor;
+pub mod testing;
+pub mod theory;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,211 @@
+//! Small linear-algebra substrate: matrix-free conjugate gradients (for the
+//! Darcy finite-difference solve), Gauss–Legendre quadrature and associated
+//! Legendre recurrences (for the spherical grid / SHT tables used by the
+//! SFNO-lite path).
+
+/// Matrix-free CG for SPD operators: solves A x = b where `apply`
+/// computes A·v. Returns (x, iterations, final residual norm).
+pub fn conjugate_gradient(
+    apply: impl Fn(&[f64], &mut [f64]),
+    b: &[f64],
+    tol: f64,
+    max_iter: usize,
+) -> (Vec<f64>, usize, f64) {
+    let n = b.len();
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut ap = vec![0.0; n];
+    let mut rs_old: f64 = r.iter().map(|v| v * v).sum();
+    let b_norm = rs_old.sqrt().max(1e-300);
+    if rs_old.sqrt() / b_norm <= tol {
+        return (x, 0, rs_old.sqrt());
+    }
+    for it in 0..max_iter {
+        apply(&p, &mut ap);
+        let p_ap: f64 = p.iter().zip(&ap).map(|(a, b)| a * b).sum();
+        if p_ap <= 0.0 {
+            // Not SPD / numerically degenerate: stop with best effort.
+            return (x, it, rs_old.sqrt());
+        }
+        let alpha = rs_old / p_ap;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rs_new: f64 = r.iter().map(|v| v * v).sum();
+        if rs_new.sqrt() / b_norm <= tol {
+            return (x, it + 1, rs_new.sqrt());
+        }
+        let beta = rs_new / rs_old;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs_old = rs_new;
+    }
+    (x, max_iter, rs_old.sqrt())
+}
+
+/// Gauss–Legendre nodes and weights on [-1, 1] by Newton iteration on
+/// Legendre polynomials (standard Golub–Welsch-free construction).
+pub fn gauss_legendre(n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(n >= 1);
+    let mut nodes = vec![0.0; n];
+    let mut weights = vec![0.0; n];
+    for i in 0..(n + 1) / 2 {
+        // Initial guess (Chebyshev-like).
+        let mut x = (std::f64::consts::PI * (i as f64 + 0.75) / (n as f64 + 0.5)).cos();
+        for _ in 0..100 {
+            let (p, dp) = legendre_p_and_dp(n, x);
+            let dx = -p / dp;
+            x += dx;
+            if dx.abs() < 1e-15 {
+                break;
+            }
+        }
+        let (_, dp) = legendre_p_and_dp(n, x);
+        let w = 2.0 / ((1.0 - x * x) * dp * dp);
+        nodes[i] = -x;
+        nodes[n - 1 - i] = x;
+        weights[i] = w;
+        weights[n - 1 - i] = w;
+    }
+    (nodes, weights)
+}
+
+/// Legendre P_n(x) and its derivative via the three-term recurrence.
+pub fn legendre_p_and_dp(n: usize, x: f64) -> (f64, f64) {
+    let mut p0 = 1.0;
+    let mut p1 = x;
+    if n == 0 {
+        return (1.0, 0.0);
+    }
+    for k in 2..=n {
+        let pk = ((2 * k - 1) as f64 * x * p1 - (k - 1) as f64 * p0) / k as f64;
+        p0 = p1;
+        p1 = pk;
+    }
+    let dp = n as f64 * (x * p1 - p0) / (x * x - 1.0);
+    (p1, dp)
+}
+
+/// Normalized associated Legendre functions P̄_l^m(x) for l in [m, lmax],
+/// at a single x = cosθ, using the stable ascending-l recurrence with
+/// spherical-harmonic normalization:
+/// P̄ includes the factor sqrt((2l+1)/(4π)·(l−m)!/(l+m)!).
+pub fn assoc_legendre_normalized(lmax: usize, m: usize, x: f64) -> Vec<f64> {
+    assert!(m <= lmax);
+    let mut out = Vec::with_capacity(lmax - m + 1);
+    // P̄_m^m
+    let mut pmm = (1.0 / (4.0 * std::f64::consts::PI)).sqrt();
+    if m > 0 {
+        let sx2 = ((1.0 - x) * (1.0 + x)).max(0.0);
+        for k in 1..=m {
+            pmm *= -(((2 * k + 1) as f64) / (2 * k) as f64).sqrt() * sx2.sqrt();
+        }
+    }
+    out.push(pmm);
+    if lmax == m {
+        return out;
+    }
+    // P̄_{m+1}^m
+    let pmm1 = x * ((2 * m + 3) as f64).sqrt() * pmm;
+    out.push(pmm1);
+    let (mut plm2, mut plm1) = (pmm, pmm1);
+    for l in (m + 2)..=lmax {
+        let lf = l as f64;
+        let mf = m as f64;
+        let a = ((4.0 * lf * lf - 1.0) / (lf * lf - mf * mf)).sqrt();
+        let b = (((lf - 1.0).powi(2) - mf * mf) / (4.0 * (lf - 1.0).powi(2) - 1.0)).sqrt();
+        let pl = a * (x * plm1 - b * plm2);
+        out.push(pl);
+        plm2 = plm1;
+        plm1 = pl;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cg_solves_diagonal() {
+        let diag = [2.0, 3.0, 4.0, 5.0];
+        let b = [2.0, 6.0, 12.0, 20.0];
+        let (x, it, _res) = conjugate_gradient(
+            |v, out| {
+                for i in 0..4 {
+                    out[i] = diag[i] * v[i];
+                }
+            },
+            &b,
+            1e-12,
+            100,
+        );
+        for (xi, want) in x.iter().zip([1.0, 2.0, 3.0, 4.0]) {
+            assert!((xi - want).abs() < 1e-10);
+        }
+        assert!(it <= 4, "CG must converge in <= rank steps, took {it}");
+    }
+
+    #[test]
+    fn cg_solves_laplacian_1d() {
+        // Tridiagonal -u'' with Dirichlet BC, f = 1 -> u = x(1-x)/2.
+        let n = 63;
+        let h = 1.0 / (n + 1) as f64;
+        let apply = |v: &[f64], out: &mut [f64]| {
+            for i in 0..n {
+                let l = if i > 0 { v[i - 1] } else { 0.0 };
+                let r = if i + 1 < n { v[i + 1] } else { 0.0 };
+                out[i] = (2.0 * v[i] - l - r) / (h * h);
+            }
+        };
+        let b = vec![1.0; n];
+        let (x, _it, res) = conjugate_gradient(apply, &b, 1e-10, 1000);
+        assert!(res < 1e-8);
+        for (i, &xi) in x.iter().enumerate() {
+            let t = (i + 1) as f64 * h;
+            let want = t * (1.0 - t) / 2.0;
+            assert!((xi - want).abs() < 1e-6, "i={i}: {xi} vs {want}");
+        }
+    }
+
+    #[test]
+    fn gauss_legendre_integrates_polynomials_exactly() {
+        let (x, w) = gauss_legendre(5);
+        // Degree <= 9 exact. ∫ x^8 dx over [-1,1] = 2/9.
+        let s: f64 = x.iter().zip(&w).map(|(&xi, &wi)| wi * xi.powi(8)).sum();
+        assert!((s - 2.0 / 9.0).abs() < 1e-12, "{s}");
+        // Weights sum to 2.
+        assert!((w.iter().sum::<f64>() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn legendre_recurrence_known_values() {
+        let (p2, dp2) = legendre_p_and_dp(2, 0.5);
+        assert!((p2 - (3.0 * 0.25 - 1.0) / 2.0).abs() < 1e-14);
+        assert!((dp2 - 3.0 * 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn assoc_legendre_orthonormal() {
+        // ∫ P̄_l^m P̄_l'^m sinθ dθ dφ = δ: check with GL quadrature, 2π from φ.
+        let lmax = 6;
+        let (nodes, weights) = gauss_legendre(64);
+        for m in 0..=2usize {
+            for l1 in m..=lmax {
+                for l2 in m..=lmax {
+                    let mut s = 0.0;
+                    for (&x, &w) in nodes.iter().zip(&weights) {
+                        let p = assoc_legendre_normalized(lmax, m, x);
+                        s += w * p[l1 - m] * p[l2 - m];
+                    }
+                    s *= 2.0 * std::f64::consts::PI;
+                    let want = if l1 == l2 { 1.0 } else { 0.0 };
+                    assert!((s - want).abs() < 1e-9, "m={m} l1={l1} l2={l2}: {s}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,6 @@
+fn main() {
+    if let Err(e) = mpno::cli::main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,407 @@
+//! Analytic GPU memory + throughput model.
+//!
+//! We have no CUDA device, so the paper's `nvidia-smi` numbers are
+//! reproduced analytically (substitution documented in DESIGN.md): peak
+//! training memory is weights + optimizer state + autograd-saved
+//! activations + contraction workspace, each term a closed-form function
+//! of tensor shapes × dtype widths. The *ratios* between precision
+//! configurations — the content of Figs. 1/3 and Tables 8/10/11 — depend
+//! only on these widths and orders, which the model captures exactly.
+//!
+//! The throughput model (Fig. 4, Table 7) is a roofline: samples/s =
+//! 1 / max(flops / peak_flops, bytes / bandwidth) per device profile.
+
+use crate::fp::Precision;
+
+/// Memory accounting for one training configuration, in bytes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemBreakdown {
+    pub weights: usize,
+    pub optimizer: usize,
+    pub activations_dense: usize,
+    pub activations_spectral: usize,
+    pub workspace: usize,
+}
+
+impl MemBreakdown {
+    pub fn total(&self) -> usize {
+        self.weights
+            + self.optimizer
+            + self.activations_dense
+            + self.activations_spectral
+            + self.workspace
+    }
+
+    pub fn mb(&self) -> f64 {
+        self.total() as f64 / (1024.0 * 1024.0)
+    }
+}
+
+/// Which mixed-precision method is applied (the Fig. 3 bar chart's x-axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Baseline fp32.
+    Full,
+    /// torch AMP only: dense ops f16, spectral untouched (complex64).
+    AmpOnly,
+    /// The paper's half-precision FNO block only (no AMP outside).
+    HalfFno,
+    /// AMP + half FNO block = the paper's full method.
+    AmpHalf,
+}
+
+impl Method {
+    pub const ALL: [Method; 4] =
+        [Method::Full, Method::AmpOnly, Method::HalfFno, Method::AmpHalf];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Method::Full => "Full-Precision",
+            Method::AmpOnly => "AMP",
+            Method::HalfFno => "Half-Prec FNO",
+            Method::AmpHalf => "AMP + Half-Prec FNO (ours)",
+        }
+    }
+
+    fn dense_bytes(self) -> usize {
+        match self {
+            Method::Full | Method::HalfFno => 4,
+            Method::AmpOnly | Method::AmpHalf => 2,
+        }
+    }
+
+    fn spectral_bytes(self) -> usize {
+        match self {
+            Method::Full | Method::AmpOnly => 8, // complex64
+            Method::HalfFno | Method::AmpHalf => 4, // chalf
+        }
+    }
+
+    pub fn from_precision(p: Precision) -> Method {
+        match p {
+            Precision::Full | Precision::Tf32 => Method::Full,
+            Precision::Amp => Method::AmpOnly,
+            Precision::Mixed | Precision::Bf16 | Precision::Fp8 => Method::AmpHalf,
+        }
+    }
+}
+
+/// FNO-family architecture description for the model.
+#[derive(Debug, Clone, Copy)]
+pub struct FnoArch {
+    pub batch: usize,
+    pub width: usize,
+    pub modes: usize, // per-side kept modes (block is (2m)^d)
+    pub layers: usize,
+    pub spatial: [usize; 3], // h, w, d (d = 1 for 2-D problems)
+    pub in_channels: usize,
+    pub out_channels: usize,
+    pub cp_rank: usize, // 0 = dense
+}
+
+impl FnoArch {
+    pub fn grid_elems(&self) -> usize {
+        self.spatial.iter().product()
+    }
+
+    pub fn mode_block_elems(&self) -> usize {
+        let d = if self.spatial[2] > 1 { 3 } else { 2 };
+        (2 * self.modes).pow(d as u32)
+    }
+
+    /// Parameter element count (complex counted as 2 reals).
+    pub fn param_elems(&self) -> usize {
+        let w = self.width;
+        let spec = if self.cp_rank > 0 {
+            let r = self.cp_rank;
+            r + 2 * r * (2 * w + 2 * (2 * self.modes))
+        } else {
+            2 * w * w * self.mode_block_elems()
+        };
+        let per_layer = spec + w * w + w;
+        (self.in_channels + 2) * w + w + self.layers * per_layer + w * 2 * w + 2 * w
+            + 2 * w * self.out_channels + self.out_channels
+    }
+}
+
+/// View-as-real strategy for the contraction workspace (Table 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContractImpl {
+    /// Option A: one giant viewed-real einsum — materializes the full
+    /// broadcast product.
+    OptionA,
+    /// Option B: pairwise with all planes materialized.
+    OptionB,
+    /// Option C (ours): pairwise, planes only for high-dim operands.
+    OptionC,
+}
+
+/// Extra knobs for the ablation tables.
+#[derive(Debug, Clone, Copy)]
+pub struct MemOptions {
+    pub contract_impl: ContractImpl,
+    /// Table 11: keep einsum *inputs* in f32 (only weights half).
+    pub inputs_full: bool,
+}
+
+impl Default for MemOptions {
+    fn default() -> Self {
+        MemOptions { contract_impl: ContractImpl::OptionC, inputs_full: false }
+    }
+}
+
+/// Peak training memory for an FNO under a given method.
+pub fn fno_memory(arch: &FnoArch, method: Method, opts: &MemOptions) -> MemBreakdown {
+    let b = arch.batch;
+    let c = arch.width;
+    let grid = arch.grid_elems();
+    let blk = arch.mode_block_elems();
+    let dense = method.dense_bytes();
+    let spec = method.spectral_bytes();
+
+    // Weights (fp32 master) + Adam m/v (fp32 each).
+    let weights = arch.param_elems() * 4;
+    let optimizer = arch.param_elems() * 8;
+
+    // Autograd-saved activations per layer:
+    //   dense: block input, skip output, gelu output   (3 x b*c*grid)
+    //   spectral: full spectrum after fft + scattered spectrum before
+    //   ifft (2 x b*c*grid complex) + truncated/contracted mode blocks
+    //   (2 x b*c*blk complex).
+    // Table 11's "inputs full" configuration keeps the einsum *inputs*
+    // (the stored spectra) at complex64 — which is also why PyTorch then
+    // picks the memory-hungry kernel the paper observes on NS.
+    let act_spec_bytes = if opts.inputs_full { 8 } else { spec };
+    let act_dense_per_layer = 3 * b * c * grid * dense;
+    let act_spec_per_layer =
+        2 * b * c * grid * act_spec_bytes + 2 * b * c * blk * act_spec_bytes;
+    let lift_proj = (2 * b * c * grid + b * 2 * c * grid) * dense;
+    let activations_dense = arch.layers * act_dense_per_layer + lift_proj;
+    let activations_spectral = arch.layers * act_spec_per_layer;
+
+    // Contraction workspace (live only during the op, counted once —
+    // it overlaps the peak).
+    let x_elems = b * c * blk; // complex
+    let w_elems = c * c * blk;
+    let o_elems = b * c * blk;
+    let in_bytes = if opts.inputs_full { 8 } else { spec };
+    let workspace = match opts.contract_impl {
+        ContractImpl::OptionA => {
+            // Full broadcast product b*c_in*c_out*blk viewed as real pairs,
+            // plus viewed copies of both operands.
+            (b * c * c * blk) * in_bytes + (x_elems + w_elems) * in_bytes
+        }
+        ContractImpl::OptionB => {
+            // 4 real planes of x, w and out live at once.
+            2 * (x_elems + w_elems) * in_bytes / 2 * 2 + 2 * o_elems * spec
+        }
+        ContractImpl::OptionC => {
+            // Planes materialized only for the (big) pair actually viewed.
+            (x_elems + w_elems) * in_bytes + o_elems * spec
+        }
+    };
+
+    MemBreakdown { weights, optimizer, activations_dense, activations_spectral, workspace }
+}
+
+/// Device profiles for the throughput roofline (Fig. 4's three GPUs +
+/// Table 7's A100).
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    pub f32_tflops: f64,
+    pub f16_tflops: f64,
+    pub tf32_tflops: f64,
+    pub bandwidth_gbs: f64,
+    pub mem_gb: f64,
+}
+
+pub const RTX_3090TI: DeviceProfile = DeviceProfile {
+    name: "RTX 3090 Ti",
+    f32_tflops: 40.0,
+    f16_tflops: 80.0,
+    tf32_tflops: 40.0,
+    bandwidth_gbs: 1008.0,
+    mem_gb: 24.0,
+};
+
+pub const V100: DeviceProfile = DeviceProfile {
+    name: "V100",
+    f32_tflops: 15.7,
+    f16_tflops: 125.0,
+    tf32_tflops: 15.7,
+    bandwidth_gbs: 900.0,
+    mem_gb: 32.0,
+};
+
+pub const A6000: DeviceProfile = DeviceProfile {
+    name: "RTX A6000",
+    f32_tflops: 38.7,
+    f16_tflops: 77.4,
+    tf32_tflops: 77.4,
+    bandwidth_gbs: 768.0,
+    mem_gb: 48.0,
+};
+
+pub const A100: DeviceProfile = DeviceProfile {
+    name: "A100",
+    f32_tflops: 19.5,
+    f16_tflops: 312.0,
+    tf32_tflops: 156.0,
+    bandwidth_gbs: 1555.0,
+    mem_gb: 40.0,
+};
+
+/// FLOPs for one training step (fwd + bwd ~ 3x fwd).
+pub fn fno_step_flops(arch: &FnoArch) -> f64 {
+    let b = arch.batch as f64;
+    let c = arch.width as f64;
+    let grid = arch.grid_elems() as f64;
+    let blk = arch.mode_block_elems() as f64;
+    // FFT+iFFT: 2 * 5 n log n per channel; contraction: 8 c^2 per mode pt
+    // (complex mad = 4 mul + 4 add); pointwise convs: 2 c^2 per grid pt.
+    let fft = 2.0 * 5.0 * grid * grid.log2() * c * b;
+    let contract = 8.0 * c * c * blk * b;
+    let dense = 2.0 * c * c * grid * b * (arch.layers as f64 + 2.0);
+    3.0 * (arch.layers as f64 * (fft + contract) + dense)
+}
+
+/// Bytes moved per training step (roofline memory term): every saved
+/// activation is written once and read once in backward.
+pub fn fno_step_bytes(arch: &FnoArch, method: Method) -> f64 {
+    let m = fno_memory(arch, method, &MemOptions::default());
+    2.0 * (m.activations_dense + m.activations_spectral + m.workspace) as f64
+        + 3.0 * m.weights as f64
+}
+
+/// Roofline samples/s on a device under a method.
+pub fn throughput(arch: &FnoArch, method: Method, dev: &DeviceProfile) -> f64 {
+    let flops = fno_step_flops(arch);
+    let bytes = fno_step_bytes(arch, method);
+    // FFT + contraction run at f16 rate when the FNO block is half; dense
+    // matmuls at f16 under AMP.
+    let eff_tflops = match method {
+        Method::Full => dev.f32_tflops,
+        Method::AmpOnly => 0.5 * dev.f32_tflops + 0.5 * dev.f16_tflops,
+        Method::HalfFno => 0.6 * dev.f32_tflops + 0.4 * dev.f16_tflops,
+        Method::AmpHalf => dev.f16_tflops,
+    };
+    let t_compute = flops / (eff_tflops * 1e12);
+    let t_mem = bytes / (dev.bandwidth_gbs * 1e9);
+    arch.batch as f64 / t_compute.max(t_mem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_arch() -> FnoArch {
+        // The paper's Navier-Stokes config scale: 128^2, width 64, 16 modes.
+        FnoArch {
+            batch: 8,
+            width: 64,
+            modes: 16,
+            layers: 4,
+            spatial: [128, 128, 1],
+            in_channels: 1,
+            out_channels: 1,
+            cp_rank: 0,
+        }
+    }
+
+    #[test]
+    fn mixed_halves_spectral_activations() {
+        let a = paper_arch();
+        let full = fno_memory(&a, Method::Full, &MemOptions::default());
+        let ours = fno_memory(&a, Method::AmpHalf, &MemOptions::default());
+        assert_eq!(full.activations_spectral, 2 * ours.activations_spectral);
+        assert_eq!(full.activations_dense, 2 * ours.activations_dense);
+    }
+
+    #[test]
+    fn fig3_ordering_holds() {
+        // Full > AMP-only, Full > Half-FNO, and AMP+Half is the smallest —
+        // with the combination saving more than either alone (Fig. 3's
+        // "super-linear combination").
+        let a = paper_arch();
+        let m: Vec<usize> = Method::ALL
+            .iter()
+            .map(|&meth| fno_memory(&a, meth, &MemOptions::default()).total())
+            .collect();
+        let (full, amp, half, both) = (m[0], m[1], m[2], m[3]);
+        assert!(amp < full && half < full && both < amp && both < half);
+        let save_amp = full - amp;
+        let save_half = full - half;
+        let save_both = full - both;
+        assert!(save_both as f64 > 0.9 * (save_amp + save_half) as f64);
+    }
+
+    #[test]
+    fn total_reduction_in_paper_range() {
+        // Paper: up to ~50% total memory reduction on NS (Table "50.4%"),
+        // 25-40% elsewhere. The model should land in that band.
+        let a = paper_arch();
+        let full = fno_memory(&a, Method::Full, &MemOptions::default()).total();
+        let ours = fno_memory(&a, Method::AmpHalf, &MemOptions::default()).total();
+        let reduction = 1.0 - ours as f64 / full as f64;
+        assert!(
+            (0.25..=0.55).contains(&reduction),
+            "reduction {reduction} outside paper band"
+        );
+    }
+
+    #[test]
+    fn option_a_workspace_dominates() {
+        // Table 8: Option A's memory is about 2x Option C's total at NS
+        // scale (10310 vs 4832 MB).
+        let a = paper_arch();
+        let oa = fno_memory(
+            &a,
+            Method::AmpHalf,
+            &MemOptions { contract_impl: ContractImpl::OptionA, inputs_full: false },
+        );
+        let oc = fno_memory(&a, Method::AmpHalf, &MemOptions::default());
+        assert!(oa.total() > oc.total());
+        assert!(oa.workspace > 3 * oc.workspace);
+    }
+
+    #[test]
+    fn inputs_full_costs_memory() {
+        // Table 11: keeping einsum inputs in f32 wastes workspace.
+        let a = paper_arch();
+        let half = fno_memory(&a, Method::AmpHalf, &MemOptions::default());
+        let inputs_full = fno_memory(
+            &a,
+            Method::AmpHalf,
+            &MemOptions { contract_impl: ContractImpl::OptionC, inputs_full: true },
+        );
+        assert!(inputs_full.workspace > half.workspace);
+        let red = 1.0 - half.total() as f64 / inputs_full.total() as f64;
+        assert!(red > 0.02, "reduction {red}");
+    }
+
+    #[test]
+    fn throughput_improves_under_mixed() {
+        let a = paper_arch();
+        for dev in [RTX_3090TI, V100, A6000] {
+            let full = throughput(&a, Method::Full, &dev);
+            let ours = throughput(&a, Method::AmpHalf, &dev);
+            let ratio = ours / full;
+            // Paper: 1.23x - 1.58x.
+            assert!(
+                (1.05..=2.5).contains(&ratio),
+                "{}: ratio {ratio}",
+                dev.name
+            );
+        }
+    }
+
+    #[test]
+    fn cp_params_smaller_than_dense() {
+        let mut a = paper_arch();
+        let dense = a.param_elems();
+        a.cp_rank = 16;
+        let cp = a.param_elems();
+        assert!(cp < dense / 4, "cp {cp} vs dense {dense}");
+    }
+}

@@ -1,0 +1,203 @@
+//! Operator-learning metrics at L3: relative L2, relative H1 (spectral
+//! Sobolev — twin of python/compile/losses.py), spectrum amplitude/phase
+//! comparison (Fig. 11), and a tiny CSV logger for training curves
+//! (Figs. 5, 8, 13).
+
+use crate::fft::fft2;
+use crate::fp::Cplx;
+use crate::tensor::Tensor;
+use std::io::Write;
+
+/// Mean-over-batch relative L2 for (b, c, h, w) stacks.
+pub fn relative_l2(pred: &Tensor, target: &Tensor) -> f64 {
+    assert_eq!(pred.shape(), target.shape());
+    let b = pred.shape()[0];
+    let stride: usize = pred.shape()[1..].iter().product();
+    let mut acc = 0.0;
+    for i in 0..b {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for j in 0..stride {
+            let p = pred.data()[i * stride + j] as f64;
+            let t = target.data()[i * stride + j] as f64;
+            num += (p - t) * (p - t);
+            den += t * t;
+        }
+        acc += (num / den.max(1e-24)).sqrt();
+    }
+    acc / b as f64
+}
+
+/// Mean-over-batch relative H1 via the spectral Sobolev norm.
+pub fn relative_h1(pred: &Tensor, target: &Tensor) -> f64 {
+    assert_eq!(pred.shape(), target.shape());
+    let (b, c, h, w) = (
+        pred.shape()[0],
+        pred.shape()[1],
+        pred.shape()[2],
+        pred.shape()[3],
+    );
+    let weights: Vec<f64> = (0..h * w)
+        .map(|id| {
+            let iy = id / w;
+            let ix = id % w;
+            let fy = if iy <= h / 2 { iy as f64 } else { iy as f64 - h as f64 };
+            let fx = if ix <= w / 2 { ix as f64 } else { ix as f64 - w as f64 };
+            1.0 + fy * fy + fx * fx
+        })
+        .collect();
+    let mut acc = 0.0;
+    for i in 0..b {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for ch in 0..c {
+            let off = (i * c + ch) * h * w;
+            let mut ph: Vec<Cplx<f64>> = pred.data()[off..off + h * w]
+                .iter()
+                .map(|&x| Cplx::from_f64(x as f64, 0.0))
+                .collect();
+            let mut th: Vec<Cplx<f64>> = target.data()[off..off + h * w]
+                .iter()
+                .map(|&x| Cplx::from_f64(x as f64, 0.0))
+                .collect();
+            fft2(&mut ph, h, w);
+            fft2(&mut th, h, w);
+            for ((p, t), &wt) in ph.iter().zip(&th).zip(&weights) {
+                num += wt * p.sub(*t).norm_sqr();
+                den += wt * t.norm_sqr();
+            }
+        }
+        acc += (num / den.max(1e-24)).sqrt();
+    }
+    acc / b as f64
+}
+
+/// Fig. 11's measurement: mean |amplitude difference| and mean |phase
+/// difference| between the spectra of two fields (e.g. with and without
+/// tanh pre-activation).
+pub fn spectrum_diff(a: &Tensor, b: &Tensor) -> (f64, f64) {
+    assert_eq!(a.shape(), b.shape());
+    let h = a.shape()[a.ndim() - 2];
+    let w = a.shape()[a.ndim() - 1];
+    let planes = a.len() / (h * w);
+    let mut amp = 0.0;
+    let mut phase = 0.0;
+    let mut count = 0usize;
+    for p in 0..planes {
+        let off = p * h * w;
+        let mut ah: Vec<Cplx<f64>> = a.data()[off..off + h * w]
+            .iter()
+            .map(|&x| Cplx::from_f64(x as f64, 0.0))
+            .collect();
+        let mut bh: Vec<Cplx<f64>> = b.data()[off..off + h * w]
+            .iter()
+            .map(|&x| Cplx::from_f64(x as f64, 0.0))
+            .collect();
+        fft2(&mut ah, h, w);
+        fft2(&mut bh, h, w);
+        for (x, y) in ah.iter().zip(&bh) {
+            amp += (x.abs() - y.abs()).abs();
+            if x.abs() > 1e-9 && y.abs() > 1e-9 {
+                let mut d = (x.arg() - y.arg()).abs();
+                if d > std::f64::consts::PI {
+                    d = 2.0 * std::f64::consts::PI - d;
+                }
+                phase += d;
+            }
+            count += 1;
+        }
+    }
+    (amp / count as f64, phase / count as f64)
+}
+
+/// Append-only CSV logger for curves.
+pub struct CsvLogger {
+    file: std::io::BufWriter<std::fs::File>,
+}
+
+impl CsvLogger {
+    pub fn create(path: &std::path::Path, header: &str) -> anyhow::Result<CsvLogger> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(file, "{header}")?;
+        Ok(CsvLogger { file })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> anyhow::Result<()> {
+        let line: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.file, "{}", line.join(","))?;
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn field(h: usize, w: usize, f: impl Fn(f64, f64) -> f64) -> Tensor {
+        Tensor::from_fn(&[1, 1, h, w], |i| {
+            f(i[2] as f64 / h as f64, i[3] as f64 / w as f64) as f32
+        })
+    }
+
+    #[test]
+    fn l2_matches_hand_value() {
+        let a = field(8, 8, |_, _| 1.0);
+        let b = field(8, 8, |_, _| 1.1);
+        assert!((relative_l2(&b, &a) - 0.1).abs() < 1e-6);
+        assert_eq!(relative_l2(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn h1_weights_high_frequencies() {
+        let tau = std::f64::consts::TAU;
+        let base = field(32, 32, |_, x| (tau * x).sin());
+        let lo = field(32, 32, |_, x| (tau * x).sin() * 1.1);
+        let hi = field(32, 32, |_, x| (tau * x).sin() + 0.1 * (tau * 8.0 * x).sin());
+        let l2_lo = relative_l2(&lo, &base);
+        let l2_hi = relative_l2(&hi, &base);
+        assert!((l2_lo - l2_hi).abs() < 0.02);
+        let h1_lo = relative_h1(&lo, &base);
+        let h1_hi = relative_h1(&hi, &base);
+        assert!(h1_hi > 2.0 * h1_lo, "H1 lo={h1_lo} hi={h1_hi}");
+    }
+
+    #[test]
+    fn h1_agrees_with_python_on_scaling() {
+        // rel H1 of 1.1*u vs u is exactly 0.1 (norm scales out).
+        let tau = std::f64::consts::TAU;
+        let base = field(16, 16, |y, x| (tau * x).sin() + (tau * 2.0 * y).cos());
+        let scaled = base.scale(1.1);
+        assert!((relative_h1(&scaled, &base) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spectrum_diff_zero_for_identical() {
+        let a = field(16, 16, |y, x| (x + y).sin());
+        let (da, dp) = spectrum_diff(&a, &a);
+        assert_eq!(da, 0.0);
+        assert_eq!(dp, 0.0);
+        // tanh of a small-amplitude field barely changes the spectrum —
+        // the Fig. 11 claim.
+        let small = field(16, 16, |y, x| 0.1 * ((std::f64::consts::TAU * x).sin() + y));
+        let tanhed = small.map(|v| v.tanh());
+        let (da2, _) = spectrum_diff(&small, &tanhed);
+        let scale: f64 = small.data().iter().map(|&x| x.abs() as f64).sum::<f64>()
+            / small.len() as f64;
+        assert!(da2 < 0.05 * scale * 256.0, "amp diff {da2}");
+    }
+
+    #[test]
+    fn csv_logger_writes() {
+        let path = std::env::temp_dir().join("mpno_csv_test/log.csv");
+        let mut log = CsvLogger::create(&path, "step,loss").unwrap();
+        log.row(&[1.0, 0.5]).unwrap();
+        log.row(&[2.0, 0.25]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("step,loss\n1,0.5\n2,0.25"));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,275 @@
+//! Optimizers with fp32 master weights — the L3 half of mixed-precision
+//! training. Gradients arrive from the PJRT grads graph (possibly
+//! loss-scaled); the optimizer unscales, clips, skips non-finite steps and
+//! updates fp32 master copies (the standard AMP recipe, Micikevicius et
+//! al. 2017, which the paper composes with).
+//!
+//! Also hosts the App. B.5 baseline knobs: gradient clipping and delayed
+//! updates (gradient accumulation).
+
+use crate::tensor::Tensor;
+
+/// Adam with fp32 master weights.
+#[derive(Debug)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    /// Max global grad-norm; 0 disables clipping.
+    pub clip_norm: f64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(lr: f64, params: &[Tensor]) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            clip_norm: 0.0,
+            m: params.iter().map(|p| vec![0.0; p.len()]).collect(),
+            v: params.iter().map(|p| vec![0.0; p.len()]).collect(),
+            t: 0,
+        }
+    }
+
+    pub fn with_clip(mut self, clip: f64) -> Adam {
+        self.clip_norm = clip;
+        self
+    }
+
+    pub fn with_weight_decay(mut self, wd: f64) -> Adam {
+        self.weight_decay = wd;
+        self
+    }
+
+    /// Global L2 norm of a gradient set.
+    pub fn grad_norm(grads: &[Tensor]) -> f64 {
+        grads
+            .iter()
+            .flat_map(|g| g.data())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// One update step. `inv_scale` divides the (possibly loss-scaled)
+    /// gradients back to true scale. Returns false (step skipped) if any
+    /// gradient is non-finite after unscaling — the AMP skip rule.
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], inv_scale: f32) -> bool {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        // Unscale + finiteness scan first (no state mutation on skip).
+        let mut norm_sq = 0.0f64;
+        for g in grads {
+            for &x in g.data() {
+                let u = x * inv_scale;
+                if !u.is_finite() {
+                    return false;
+                }
+                norm_sq += (u as f64) * (u as f64);
+            }
+        }
+        let mut clip_mul = 1.0f32;
+        if self.clip_norm > 0.0 {
+            let norm = norm_sq.sqrt();
+            if norm > self.clip_norm {
+                clip_mul = (self.clip_norm / norm) as f32;
+            }
+        }
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        // Hot loop in f32 (bias correction folded into lr): ~3x faster than
+        // per-element f64 round-trips and auto-vectorizes (§Perf L3).
+        let lr_t = (self.lr * bc2.sqrt() / bc1) as f32;
+        let b1 = self.beta1 as f32;
+        let b2 = self.beta2 as f32;
+        let eps = self.eps as f32;
+        let wd = self.weight_decay as f32;
+        let gmul = inv_scale * clip_mul;
+        for ((p, g), (m, v)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            let pd = p.data_mut();
+            let gd = g.data();
+            for i in 0..pd.len() {
+                let gi = gd[i] * gmul + wd * pd[i];
+                m[i] = b1 * m[i] + (1.0 - b1) * gi;
+                v[i] = b2 * v[i] + (1.0 - b2) * gi * gi;
+                pd[i] -= lr_t * m[i] / (v[i].sqrt() + eps);
+            }
+        }
+        true
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.t
+    }
+}
+
+/// Delayed updates (App. B.5): accumulate `every` microbatches before one
+/// optimizer step.
+pub struct GradAccumulator {
+    acc: Option<Vec<Tensor>>,
+    count: usize,
+    pub every: usize,
+}
+
+impl GradAccumulator {
+    pub fn new(every: usize) -> Self {
+        assert!(every >= 1);
+        GradAccumulator { acc: None, count: 0, every }
+    }
+
+    /// Add one microbatch's grads; returns averaged grads when a full
+    /// accumulation window closes.
+    pub fn push(&mut self, grads: &[Tensor]) -> Option<Vec<Tensor>> {
+        match &mut self.acc {
+            None => self.acc = Some(grads.to_vec()),
+            Some(acc) => {
+                for (a, g) in acc.iter_mut().zip(grads) {
+                    *a = a.add(g);
+                }
+            }
+        }
+        self.count += 1;
+        if self.count >= self.every {
+            let scale = 1.0 / self.count as f32;
+            let out = self.acc.take().map(|gs| gs.iter().map(|g| g.scale(scale)).collect());
+            self.count = 0;
+            out
+        } else {
+            None
+        }
+    }
+}
+
+/// Plain SGD (used by ablation benches).
+pub struct Sgd {
+    pub lr: f64,
+    pub momentum: f64,
+    vel: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f64, momentum: f64, params: &[Tensor]) -> Sgd {
+        Sgd { lr, momentum, vel: params.iter().map(|p| vec![0.0; p.len()]).collect() }
+    }
+
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        for ((p, g), v) in params.iter_mut().zip(grads).zip(self.vel.iter_mut()) {
+            let pd = p.data_mut();
+            for i in 0..pd.len() {
+                v[i] = (self.momentum * v[i] as f64 + g.data()[i] as f64) as f32;
+                pd[i] -= (self.lr * v[i] as f64) as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quadratic_grads(params: &[Tensor]) -> Vec<Tensor> {
+        // f = 0.5 * sum (p - 3)^2 -> grad = p - 3.
+        params.iter().map(|p| p.map(|x| x - 3.0)).collect()
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut params = vec![Tensor::zeros(&[4]), Tensor::full(&[2, 2], 10.0)];
+        let mut adam = Adam::new(0.1, &params);
+        for _ in 0..500 {
+            let g = quadratic_grads(&params);
+            assert!(adam.step(&mut params, &g, 1.0));
+        }
+        for p in &params {
+            for &x in p.data() {
+                assert!((x - 3.0).abs() < 1e-2, "{x}");
+            }
+        }
+    }
+
+    #[test]
+    fn skips_nonfinite_gradients() {
+        let mut params = vec![Tensor::zeros(&[2])];
+        let before = params[0].clone();
+        let mut adam = Adam::new(0.1, &params);
+        let mut g = vec![Tensor::zeros(&[2])];
+        g[0].set(&[0], f32::NAN);
+        assert!(!adam.step(&mut params, &g, 1.0));
+        assert_eq!(params[0], before, "skipped step must not touch weights");
+        assert_eq!(adam.steps_taken(), 0);
+        // Inf after unscaling is also caught.
+        let mut g2 = vec![Tensor::full(&[2], f32::MAX)];
+        g2[0].set(&[1], f32::MAX);
+        assert!(!adam.step(&mut params, &g2, 1e30));
+    }
+
+    #[test]
+    fn unscaling_matches_unit_scale() {
+        // step(g * s, 1/s) == step(g, 1).
+        let init = vec![Tensor::full(&[8], 5.0)];
+        let g: Vec<Tensor> = vec![Tensor::from_fn(&[8], |i| 0.1 * (i[0] as f32 + 1.0))];
+
+        let mut p1 = init.clone();
+        let mut a1 = Adam::new(0.05, &p1);
+        a1.step(&mut p1, &g, 1.0);
+
+        let scaled: Vec<Tensor> = g.iter().map(|t| t.scale(1024.0)).collect();
+        let mut p2 = init.clone();
+        let mut a2 = Adam::new(0.05, &p2);
+        a2.step(&mut p2, &scaled, 1.0 / 1024.0);
+
+        assert!(p1[0].rel_l2(&p2[0]) < 1e-6);
+    }
+
+    #[test]
+    fn clipping_bounds_update_norm() {
+        let mut params = vec![Tensor::zeros(&[4])];
+        let g = vec![Tensor::full(&[4], 100.0)];
+        let mut adam = Adam::new(1.0, &params).with_clip(1.0);
+        adam.step(&mut params, &g, 1.0);
+        // First Adam step magnitude is lr regardless, but m/v see clipped g;
+        // check the second moment reflects clipping (v ~ (clipped g)^2).
+        let gnorm = Adam::grad_norm(&g);
+        assert!(gnorm > 1.0);
+        let v_val = adam.v[0][0];
+        assert!(v_val < 1.0, "v should reflect clipped grad, got {v_val}");
+    }
+
+    #[test]
+    fn accumulator_averages() {
+        let mut acc = GradAccumulator::new(3);
+        let g1 = vec![Tensor::full(&[2], 1.0)];
+        let g2 = vec![Tensor::full(&[2], 2.0)];
+        let g3 = vec![Tensor::full(&[2], 6.0)];
+        assert!(acc.push(&g1).is_none());
+        assert!(acc.push(&g2).is_none());
+        let out = acc.push(&g3).unwrap();
+        assert_eq!(out[0].data(), &[3.0, 3.0]);
+        // Resets cleanly.
+        assert!(acc.push(&g1).is_none());
+    }
+
+    #[test]
+    fn sgd_descends() {
+        let mut params = vec![Tensor::full(&[1], 10.0)];
+        let mut sgd = Sgd::new(0.1, 0.9, &params);
+        for _ in 0..200 {
+            let g = quadratic_grads(&params);
+            sgd.step(&mut params, &g);
+        }
+        assert!((params[0].data()[0] - 3.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,167 @@
+//! Steady-state 2-D Darcy flow: −∇·(a(x)∇u(x)) = f(x) on (0,1)²,
+//! u = 0 on the boundary (paper App. B.2, Eq. 42-43, f ≡ 1).
+//!
+//! Coefficients follow Li et al. 2021: a two-phase medium obtained by
+//! thresholding a smooth GRF ψ — a(x) = 12 where ψ ≥ 0, a(x) = 4 where
+//! ψ < 0. Discretization: cell-centered finite volumes with harmonic-mean
+//! face transmissibilities (the standard choice for discontinuous
+//! coefficients), solved with matrix-free CG.
+
+use super::grf::{sample_grf, GrfConfig};
+use crate::linalg::conjugate_gradient;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// One Darcy sample: piecewise-constant coefficient and its solution.
+#[derive(Debug, Clone)]
+pub struct DarcySample {
+    /// a(x) on the s×s grid (values in {4, 12}).
+    pub coeff: Tensor,
+    /// u(x) on the s×s grid.
+    pub solution: Tensor,
+}
+
+/// Generate the two-phase coefficient field (12 above the GRF zero set,
+/// 4 below — Li et al.'s convention).
+pub fn sample_coefficient(s: usize, rng: &mut Rng) -> Tensor {
+    let psi = sample_grf(&GrfConfig::darcy_coefficient(), s, rng);
+    psi.map(|x| if x >= 0.0 { 12.0 } else { 4.0 })
+}
+
+/// Solve −∇·(a∇u) = f with homogeneous Dirichlet BC on the unit square.
+/// `a` and `f` are cell-centered on an s×s grid.
+pub fn solve_darcy(a: &Tensor, f: &Tensor, tol: f64) -> Tensor {
+    assert_eq!(a.shape(), f.shape());
+    let s = a.shape()[0];
+    assert_eq!(a.shape(), &[s, s]);
+    let h = 1.0 / s as f64;
+    let a64: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+
+    // Harmonic mean of a at the face between two cells; ghost cells carry
+    // the boundary value via the cell's own coefficient (Dirichlet u=0).
+    let harm = |x: f64, y: f64| 2.0 * x * y / (x + y);
+    let idx = |i: usize, j: usize| i * s + j;
+
+    let apply = |v: &[f64], out: &mut [f64]| {
+        for i in 0..s {
+            for j in 0..s {
+                let c = a64[idx(i, j)];
+                let u = v[idx(i, j)];
+                let mut acc = 0.0;
+                // North face.
+                let tn = if i + 1 < s { harm(c, a64[idx(i + 1, j)]) } else { 2.0 * c };
+                let un = if i + 1 < s { v[idx(i + 1, j)] } else { 0.0 };
+                acc += tn * (u - un);
+                // South.
+                let ts = if i > 0 { harm(c, a64[idx(i - 1, j)]) } else { 2.0 * c };
+                let us = if i > 0 { v[idx(i - 1, j)] } else { 0.0 };
+                acc += ts * (u - us);
+                // East.
+                let te = if j + 1 < s { harm(c, a64[idx(i, j + 1)]) } else { 2.0 * c };
+                let ue = if j + 1 < s { v[idx(i, j + 1)] } else { 0.0 };
+                acc += te * (u - ue);
+                // West.
+                let tw = if j > 0 { harm(c, a64[idx(i, j - 1)]) } else { 2.0 * c };
+                let uw = if j > 0 { v[idx(i, j - 1)] } else { 0.0 };
+                acc += tw * (u - uw);
+                out[idx(i, j)] = acc / (h * h);
+            }
+        }
+    };
+
+    let b: Vec<f64> = f.data().iter().map(|&x| x as f64).collect();
+    let (u, _iters, _res) = conjugate_gradient(apply, &b, tol, 20 * s * s);
+    Tensor::from_vec(vec![s, s], u.iter().map(|&x| x as f32).collect())
+}
+
+/// Generate a full Darcy sample (coefficient + solution), f ≡ 1.
+pub fn generate_sample(s: usize, rng: &mut Rng) -> DarcySample {
+    let coeff = sample_coefficient(s, rng);
+    let f = Tensor::ones(&[s, s]);
+    let solution = solve_darcy(&coeff, &f, 1e-8);
+    DarcySample { coeff, solution }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_coefficient_matches_poisson() {
+        // a ≡ 1 reduces to -Δu = 1; compare with the separable series
+        // solution value at the center: u(0.5,0.5) ≈ 0.07367.
+        let s = 33;
+        let a = Tensor::ones(&[s, s]);
+        let f = Tensor::ones(&[s, s]);
+        let u = solve_darcy(&a, &f, 1e-10);
+        let center = u.at(&[s / 2, s / 2]) as f64;
+        assert!((center - 0.07367).abs() < 3e-3, "center={center}");
+    }
+
+    #[test]
+    fn solution_positive_and_zero_at_boundary_limit() {
+        let mut rng = Rng::new(5);
+        let sample = generate_sample(24, &mut rng);
+        // Interior maximum principle: u > 0 inside for f > 0.
+        let interior_min = (1..23)
+            .flat_map(|i| (1..23).map(move |j| (i, j)))
+            .map(|(i, j)| sample.solution.at(&[i, j]))
+            .fold(f32::INFINITY, f32::min);
+        assert!(interior_min > 0.0);
+        // Boundary cells are small (half-cell from the u=0 wall).
+        let edge_max = (0..24)
+            .map(|j| sample.solution.at(&[0, j]).abs())
+            .fold(0.0f32, f32::max);
+        let center = sample.solution.at(&[12, 12]);
+        assert!(edge_max < center, "edge {edge_max} vs center {center}");
+    }
+
+    #[test]
+    fn coefficient_is_two_phase() {
+        let mut rng = Rng::new(9);
+        let a = sample_coefficient(32, &mut rng);
+        let mut n4 = 0;
+        let mut n12 = 0;
+        for &v in a.data() {
+            if v == 4.0 {
+                n4 += 1;
+            } else if v == 12.0 {
+                n12 += 1;
+            } else {
+                panic!("unexpected coefficient {v}");
+            }
+        }
+        // Zero-mean GRF: both phases present in sizable fractions.
+        assert!(n4 > 100 && n12 > 100, "n4={n4} n12={n12}");
+    }
+
+    #[test]
+    fn higher_coefficient_lowers_solution() {
+        // Scaling a up by 3x scales u down by ~3x (linearity in 1/a).
+        let s = 17;
+        let mut rng = Rng::new(11);
+        let a1 = sample_coefficient(s, &mut rng);
+        let a3 = a1.scale(3.0);
+        let f = Tensor::ones(&[s, s]);
+        let u1 = solve_darcy(&a1, &f, 1e-10);
+        let u3 = solve_darcy(&a3, &f, 1e-10);
+        assert!(u3.scale(3.0).rel_l2(&u1) < 1e-5);
+    }
+
+    #[test]
+    fn grid_refinement_converges() {
+        // Same coefficient pattern (constant 4) at two resolutions: center
+        // value converges.
+        let f_of = |s: usize| {
+            let a = Tensor::full(&[s, s], 4.0);
+            let f = Tensor::ones(&[s, s]);
+            let u = solve_darcy(&a, &f, 1e-10);
+            u.at(&[s / 2, s / 2]) as f64
+        };
+        let c17 = f_of(17);
+        let c33 = f_of(33);
+        let exact = 0.07367 / 4.0;
+        assert!((c33 - exact).abs() < (c17 - exact).abs() + 1e-6);
+        assert!((c33 - exact).abs() < 1e-3, "c33={c33} exact={exact}");
+    }
+}

@@ -1,0 +1,31 @@
+//! PDE data-generation substrates.
+//!
+//! The paper trains on datasets produced by classical solvers (a
+//! pseudo-spectral Navier–Stokes solver, a Darcy-flow solver, the
+//! torch-harmonics spherical SWE solver, OpenFOAM RANS for the car
+//! datasets). Those datasets are not available here, so — per the
+//! substitution rule in DESIGN.md — we implement the same solver families
+//! from scratch and generate statistically matching datasets at CPU-scaled
+//! resolutions:
+//!
+//! * [`grf`] — Gaussian random fields N(0, σ²(−Δ + τ²I)^{−α}) on the torus
+//!   (the measure used for NS forcings and Darcy coefficients);
+//! * [`darcy`] — steady-state 2-D Darcy flow −∇·(a∇u) = f via a 5-point
+//!   finite-volume discretization with harmonic-mean transmissibilities and
+//!   conjugate gradients;
+//! * [`navier_stokes`] — 2-D incompressible NS in vorticity form on the
+//!   unit torus, pseudo-spectral with 2/3 dealiasing and Crank–Nicolson /
+//!   Heun time stepping (Re = 500, T = 5, matching Kossaifi et al. 2023);
+//! * [`swe`] — rotating shallow-water equations on a lat-lon sphere grid
+//!   (FD in latitude, spectral filtering in longitude) — a CPU-sized stand-
+//!   in for the torch-harmonics spectral solver of Bonev et al. 2023;
+//! * [`geometry`] — procedural car-like / Ahmed-body-like surface point
+//!   clouds with a panel-method-inspired surrogate pressure field, plus the
+//!   interpolation matrices GINO needs between the point cloud and a
+//!   regular latent grid.
+
+pub mod darcy;
+pub mod geometry;
+pub mod grf;
+pub mod navier_stokes;
+pub mod swe;

@@ -1,0 +1,252 @@
+//! 2-D incompressible Navier–Stokes in vorticity form on the unit torus
+//! (paper App. B.2 Eq. 41):
+//!
+//!   ∂_t ω + u·∇ω = (1/Re) Δω + f,   u = ∇^⊥ ψ,  −Δψ = ω
+//!
+//! with ω(0,·) = 0, f drawn from N(0, 27(−Δ+9I)^{−4}) and Re = 500. The
+//! operator-learning task is f ↦ ω(T,·) at T = 5 (Kossaifi et al. 2023).
+//!
+//! Solver: Fourier pseudo-spectral (exact inverse Laplacian in spectral
+//! space), 2/3-rule dealiasing for the advection product, and semi-implicit
+//! Crank–Nicolson for diffusion with Heun (RK2) for the nonlinear term —
+//! the same family as the Chandler–Kerswell solver the dataset used.
+
+use crate::fft::{fft2, ifft2};
+use crate::fp::Cplx;
+use crate::pde::grf::{sample_grf, GrfConfig};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Navier–Stokes problem configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct NsConfig {
+    pub reynolds: f64,
+    pub t_final: f64,
+    pub dt: f64,
+    pub resolution: usize,
+}
+
+impl Default for NsConfig {
+    fn default() -> Self {
+        // CPU-scaled default (paper uses 128², T=5).
+        NsConfig { reynolds: 500.0, t_final: 5.0, dt: 5e-3, resolution: 64 }
+    }
+}
+
+/// One NS sample: forcing f and terminal vorticity ω(T).
+#[derive(Debug, Clone)]
+pub struct NsSample {
+    pub forcing: Tensor,
+    pub vorticity: Tensor,
+}
+
+type Spec = Vec<Cplx<f64>>;
+
+/// Wavenumbers in FFT order (domain [0,1)² with 2π-periodic convention:
+/// k_j = 2π·f_j).
+fn wavenumber(i: usize, n: usize) -> f64 {
+    let f = if i <= n / 2 { i as i64 } else { i as i64 - n as i64 };
+    std::f64::consts::TAU * f as f64
+}
+
+/// Pseudo-spectral NS solver state.
+pub struct NsSolver {
+    cfg: NsConfig,
+    /// Forcing in spectral space.
+    f_hat: Spec,
+    /// Current vorticity in spectral space.
+    w_hat: Spec,
+    /// |k|² table.
+    k2: Vec<f64>,
+    kx: Vec<f64>,
+    ky: Vec<f64>,
+    /// 2/3 dealiasing mask.
+    mask: Vec<f64>,
+    n: usize,
+}
+
+impl NsSolver {
+    pub fn new(cfg: NsConfig, forcing: &Tensor) -> NsSolver {
+        let n = cfg.resolution;
+        assert_eq!(forcing.shape(), &[n, n]);
+        let mut f_hat: Spec =
+            forcing.data().iter().map(|&x| Cplx::from_f64(x as f64, 0.0)).collect();
+        fft2(&mut f_hat, n, n);
+        let mut k2 = vec![0.0; n * n];
+        let mut kx = vec![0.0; n * n];
+        let mut ky = vec![0.0; n * n];
+        let mut mask = vec![0.0; n * n];
+        let cutoff = (n as f64) / 3.0;
+        for iy in 0..n {
+            for ix in 0..n {
+                let kxx = wavenumber(ix, n);
+                let kyy = wavenumber(iy, n);
+                let id = iy * n + ix;
+                kx[id] = kxx;
+                ky[id] = kyy;
+                k2[id] = kxx * kxx + kyy * kyy;
+                let fx = (if ix <= n / 2 { ix as i64 } else { ix as i64 - n as i64 }).abs();
+                let fy = (if iy <= n / 2 { iy as i64 } else { iy as i64 - n as i64 }).abs();
+                mask[id] = if (fx as f64) < cutoff && (fy as f64) < cutoff { 1.0 } else { 0.0 };
+            }
+        }
+        NsSolver { cfg, f_hat, w_hat: vec![Cplx::zero(); n * n], k2, kx, ky, mask, n }
+    }
+
+    /// Nonlinear term N(ω̂) = −(u·∇ω)^ in spectral space, dealiased.
+    fn nonlinear(&self, w_hat: &Spec) -> Spec {
+        let n = self.n;
+        // ψ̂ = ω̂ / |k|²; û = (∂_y ψ, −∂_x ψ) = (i k_y ψ̂, −i k_x ψ̂).
+        let mut ux = vec![Cplx::<f64>::zero(); n * n];
+        let mut uy = vec![Cplx::<f64>::zero(); n * n];
+        let mut wx = vec![Cplx::<f64>::zero(); n * n];
+        let mut wy = vec![Cplx::<f64>::zero(); n * n];
+        for id in 0..n * n {
+            let k2 = self.k2[id];
+            let w = w_hat[id].scale(self.mask[id]);
+            if k2 > 0.0 {
+                let psi = w.scale(1.0 / k2);
+                // i·k·ψ : (a+bi)·i·k = (−b·k) + (a·k)i
+                ux[id] = Cplx::from_f64(-psi.im * self.ky[id], psi.re * self.ky[id]);
+                uy[id] = Cplx::from_f64(psi.im * self.kx[id], -psi.re * self.kx[id]);
+            }
+            wx[id] = Cplx::from_f64(-w.im * self.kx[id], w.re * self.kx[id]);
+            wy[id] = Cplx::from_f64(-w.im * self.ky[id], w.re * self.ky[id]);
+        }
+        ifft2(&mut ux, n, n);
+        ifft2(&mut uy, n, n);
+        ifft2(&mut wx, n, n);
+        ifft2(&mut wy, n, n);
+        let mut adv = vec![Cplx::<f64>::zero(); n * n];
+        for id in 0..n * n {
+            let a = ux[id].re * wx[id].re + uy[id].re * wy[id].re;
+            adv[id] = Cplx::from_f64(-a, 0.0);
+        }
+        fft2(&mut adv, n, n);
+        for id in 0..n * n {
+            adv[id] = adv[id].scale(self.mask[id]);
+        }
+        adv
+    }
+
+    /// Advance one time step (Heun for N, Crank–Nicolson for diffusion).
+    pub fn step(&mut self) {
+        let n2 = self.n * self.n;
+        let nu = 1.0 / self.cfg.reynolds;
+        let dt = self.cfg.dt;
+        let n1 = self.nonlinear(&self.w_hat);
+        // Predictor: w* = ((1 - dt/2 ν k²) w + dt (N1 + f)) / (1 + dt/2 ν k²)
+        let mut w_star = vec![Cplx::<f64>::zero(); n2];
+        for id in 0..n2 {
+            let den = 1.0 + 0.5 * dt * nu * self.k2[id];
+            let num = self.w_hat[id].scale(1.0 - 0.5 * dt * nu * self.k2[id]);
+            let rhs = n1[id].add(self.f_hat[id]).scale(dt);
+            w_star[id] = num.add(rhs).scale(1.0 / den);
+        }
+        // Corrector with averaged nonlinear term.
+        let n2_term = self.nonlinear(&w_star);
+        for id in 0..n2 {
+            let den = 1.0 + 0.5 * dt * nu * self.k2[id];
+            let num = self.w_hat[id].scale(1.0 - 0.5 * dt * nu * self.k2[id]);
+            let avg = n1[id].add(n2_term[id]).scale(0.5);
+            let rhs = avg.add(self.f_hat[id]).scale(dt);
+            self.w_hat[id] = num.add(rhs).scale(1.0 / den);
+        }
+    }
+
+    /// Current vorticity in physical space.
+    pub fn vorticity(&self) -> Tensor {
+        let n = self.n;
+        let mut w = self.w_hat.clone();
+        ifft2(&mut w, n, n);
+        Tensor::from_vec(vec![n, n], w.iter().map(|z| z.re as f32).collect())
+    }
+
+    /// Run to T_final.
+    pub fn run(&mut self) -> Tensor {
+        let steps = (self.cfg.t_final / self.cfg.dt).round() as usize;
+        for _ in 0..steps {
+            self.step();
+        }
+        self.vorticity()
+    }
+}
+
+/// Generate one (forcing, ω(T)) pair.
+pub fn generate_sample(cfg: &NsConfig, rng: &mut Rng) -> NsSample {
+    let forcing = sample_grf(&GrfConfig::navier_stokes_forcing(), cfg.resolution, rng);
+    let mut solver = NsSolver::new(*cfg, &forcing);
+    let vorticity = solver.run();
+    NsSample { forcing, vorticity }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> NsConfig {
+        NsConfig { reynolds: 500.0, t_final: 0.5, dt: 1e-2, resolution: 32 }
+    }
+
+    #[test]
+    fn zero_forcing_stays_zero() {
+        let cfg = small_cfg();
+        let f = Tensor::zeros(&[32, 32]);
+        let mut s = NsSolver::new(cfg, &f);
+        let w = s.run();
+        assert!(w.abs_max() < 1e-12);
+    }
+
+    #[test]
+    fn taylor_green_decays_at_viscous_rate() {
+        // Unforced ω0 = cos(2πx)+cos(2πy) is an exact NS solution (no
+        // advection contribution): ω(t) = e^{−ν k² t} ω0 with k = 2π.
+        let n = 32;
+        let cfg = NsConfig { reynolds: 100.0, t_final: 0.25, dt: 2.5e-3, resolution: n };
+        let f = Tensor::zeros(&[n, n]);
+        let mut s = NsSolver::new(cfg, &f);
+        let w0 = Tensor::from_fn(&[n, n], |i| {
+            let x = i[1] as f64 / n as f64;
+            let y = i[0] as f64 / n as f64;
+            ((std::f64::consts::TAU * x).cos() + (std::f64::consts::TAU * y).cos()) as f32
+        });
+        // Inject the initial condition.
+        let mut w_hat: Vec<Cplx<f64>> =
+            w0.data().iter().map(|&x| Cplx::from_f64(x as f64, 0.0)).collect();
+        fft2(&mut w_hat, n, n);
+        s.w_hat = w_hat;
+        let w = s.run();
+        let nu = 1.0 / 100.0;
+        let k2 = std::f64::consts::TAU.powi(2);
+        let decay = (-nu * k2 * 0.25).exp();
+        let want = w0.scale(decay as f32);
+        assert!(w.rel_l2(&want) < 2e-3, "err={}", w.rel_l2(&want));
+    }
+
+    #[test]
+    fn forced_flow_develops_and_stays_finite() {
+        let cfg = small_cfg();
+        let mut rng = Rng::new(42);
+        let sample = generate_sample(&cfg, &mut rng);
+        assert!(!sample.vorticity.has_nan());
+        assert!(sample.vorticity.abs_max() > 1e-4, "flow should develop");
+        assert!(sample.vorticity.abs_max() < 1e3, "flow should stay bounded");
+    }
+
+    #[test]
+    fn mean_vorticity_conserved_at_zero() {
+        // ∫ω = 0 is conserved (periodic domain, zero-mean forcing).
+        let cfg = small_cfg();
+        let mut rng = Rng::new(7);
+        let sample = generate_sample(&cfg, &mut rng);
+        assert!(sample.vorticity.mean().abs() < 1e-8);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = small_cfg();
+        let a = generate_sample(&cfg, &mut Rng::new(3));
+        let b = generate_sample(&cfg, &mut Rng::new(3));
+        assert_eq!(a.vorticity, b.vorticity);
+    }
+}

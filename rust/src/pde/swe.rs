@@ -1,0 +1,350 @@
+//! Rotating shallow-water equations on the sphere (paper App. B.2,
+//! Eqs. 44-45) — the SFNO dataset (Bonev et al. 2023).
+//!
+//! The original dataset is produced by the torch-harmonics *spectral*
+//! solver on a 256×512 Gauss–Legendre grid. Substitution (DESIGN.md):
+//! a finite-difference solver on an equiangular lat-lon grid with
+//! longitude spectral filtering near the poles, at CPU scale (32×64).
+//! It preserves what the experiment needs: smooth random geopotential
+//! initial states evolved by the same PDE family, producing (φ₀, u₀) ↦
+//! φ(T) pairs on a spherical grid with pole-heavy anisotropy.
+//!
+//! State: geopotential φ and tangential velocity (u, v) (λ = longitude,
+//! θ = colatitude). Advection-free "vortical" form with Coriolis
+//! S = −2Ω x × (φu); gravity-wave terms retained.
+
+use crate::fft::{fft, ifft};
+use crate::fp::Cplx;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// SWE configuration (non-dimensionalized; Ω and φ̄ tuned for stable
+/// gravity-wave dynamics at CPU resolution).
+#[derive(Debug, Clone, Copy)]
+pub struct SweConfig {
+    pub nlat: usize,
+    pub nlon: usize,
+    /// Mean geopotential (sets gravity-wave speed).
+    pub phi_bar: f64,
+    /// Rotation rate.
+    pub omega: f64,
+    pub dt: f64,
+    pub steps: usize,
+    /// Hyperdiffusion coefficient for stability.
+    pub nu: f64,
+}
+
+impl Default for SweConfig {
+    fn default() -> Self {
+        SweConfig {
+            nlat: 32,
+            nlon: 64,
+            phi_bar: 1.0,
+            omega: 2.0,
+            dt: 2e-3,
+            steps: 150,
+            nu: 5e-5,
+        }
+    }
+}
+
+/// One SWE sample: initial and final geopotential + velocities, each of
+/// shape (3, nlat, nlon) channel-stacked as [φ, u, v].
+#[derive(Debug, Clone)]
+pub struct SweSample {
+    pub initial: Tensor,
+    pub finalst: Tensor,
+}
+
+pub struct SweSolver {
+    cfg: SweConfig,
+    /// φ perturbation, u (zonal), v (meridional); each nlat*nlon.
+    phi: Vec<f64>,
+    u: Vec<f64>,
+    v: Vec<f64>,
+    /// Colatitudes (cell centers, poles excluded).
+    theta: Vec<f64>,
+}
+
+impl SweSolver {
+    pub fn new(cfg: SweConfig, initial: &Tensor) -> SweSolver {
+        let (nlat, nlon) = (cfg.nlat, cfg.nlon);
+        assert_eq!(initial.shape(), &[3, nlat, nlon]);
+        let plane = nlat * nlon;
+        let phi = initial.data()[0..plane].iter().map(|&x| x as f64).collect();
+        let u = initial.data()[plane..2 * plane].iter().map(|&x| x as f64).collect();
+        let v = initial.data()[2 * plane..].iter().map(|&x| x as f64).collect();
+        let theta: Vec<f64> = (0..nlat)
+            .map(|i| std::f64::consts::PI * (i as f64 + 0.5) / nlat as f64)
+            .collect();
+        SweSolver { cfg, phi, u, v, theta }
+    }
+
+    fn idx(&self, i: usize, j: usize) -> usize {
+        i * self.cfg.nlon + j
+    }
+
+    /// ∂/∂λ via spectral differentiation along each latitude ring.
+    fn dlambda(&self, f: &[f64]) -> Vec<f64> {
+        let (nlat, nlon) = (self.cfg.nlat, self.cfg.nlon);
+        let mut out = vec![0.0; nlat * nlon];
+        let mut ring = vec![Cplx::<f64>::zero(); nlon];
+        for i in 0..nlat {
+            for j in 0..nlon {
+                ring[j] = Cplx::from_f64(f[self.idx(i, j)], 0.0);
+            }
+            fft(&mut ring);
+            for (m, z) in ring.iter_mut().enumerate() {
+                let fm = if m <= nlon / 2 { m as i64 } else { m as i64 - nlon as i64 };
+                // d/dλ -> multiply by i·m; kill the Nyquist mode.
+                let k = if m == nlon / 2 { 0.0 } else { fm as f64 };
+                *z = Cplx::from_f64(-z.im * k, z.re * k);
+            }
+            ifft(&mut ring);
+            for j in 0..nlon {
+                out[self.idx(i, j)] = ring[j].re;
+            }
+        }
+        out
+    }
+
+    /// ∂/∂θ via centered differences; pole rows use one-sided stencils to
+    /// their antipodal continuation (f(θ<0, λ) = f(−θ, λ+π)).
+    fn dtheta(&self, f: &[f64]) -> Vec<f64> {
+        let (nlat, nlon) = (self.cfg.nlat, self.cfg.nlon);
+        let dth = std::f64::consts::PI / nlat as f64;
+        let mut out = vec![0.0; nlat * nlon];
+        for i in 0..nlat {
+            for j in 0..nlon {
+                let jp = (j + nlon / 2) % nlon; // antipodal longitude
+                let up = if i > 0 { f[self.idx(i - 1, j)] } else { f[self.idx(0, jp)] };
+                let dn = if i + 1 < nlat {
+                    f[self.idx(i + 1, j)]
+                } else {
+                    f[self.idx(nlat - 1, jp)]
+                };
+                out[self.idx(i, j)] = (dn - up) / (2.0 * dth);
+            }
+        }
+        out
+    }
+
+    /// Zonal spectral filter: progressively truncate longitudinal modes
+    /// toward the poles (keeps the CFL bounded on the converging grid).
+    fn polar_filter(theta: &[f64], nlat: usize, nlon: usize, f: &mut [f64]) {
+        let mut ring = vec![Cplx::<f64>::zero(); nlon];
+        for i in 0..nlat {
+            let sin_t = theta[i].sin().max(1e-3);
+            let mmax = ((nlon as f64 / 2.0) * sin_t).ceil() as i64;
+            for j in 0..nlon {
+                ring[j] = Cplx::from_f64(f[i * nlon + j], 0.0);
+            }
+            fft(&mut ring);
+            for (m, z) in ring.iter_mut().enumerate() {
+                let fm = if m <= nlon / 2 { m as i64 } else { m as i64 - nlon as i64 };
+                if fm.abs() > mmax {
+                    *z = Cplx::zero();
+                }
+            }
+            ifft(&mut ring);
+            for j in 0..nlon {
+                f[i * nlon + j] = ring[j].re;
+            }
+        }
+    }
+
+    /// One forward-Euler step of the filtered FD dynamics plus Laplacian
+    /// smoothing (θ-direction diffusion via 1-2-1 kernel).
+    pub fn step(&mut self) {
+        let (nlat, nlon) = (self.cfg.nlat, self.cfg.nlon);
+        let dt = self.cfg.dt;
+        let pb = self.cfg.phi_bar;
+        let n = nlat * nlon;
+
+        let phi_l = self.dlambda(&self.phi);
+        let phi_t = self.dtheta(&self.phi);
+        let u_l = self.dlambda(&self.u);
+        let v_t = self.dtheta(&self.v);
+        let v_l = self.dlambda(&self.v);
+        let u_t = self.dtheta(&self.u);
+
+        let mut nphi = vec![0.0; n];
+        let mut nu_ = vec![0.0; n];
+        let mut nv = vec![0.0; n];
+        for i in 0..nlat {
+            let sin_t = self.theta[i].sin().max(5e-2);
+            let cos_t = self.theta[i].cos();
+            let fcor = 2.0 * self.cfg.omega * cos_t;
+            for j in 0..nlon {
+                let id = i * nlon + j;
+                // Continuity: ∂φ/∂t = −φ̄ (∇·u) − u·∇φ.
+                let div = u_l[id] / sin_t + v_t[id] + self.v[id] * cos_t / sin_t;
+                nphi[id] = -(pb + self.phi[id]) * div
+                    - self.u[id] * phi_l[id] / sin_t
+                    - self.v[id] * phi_t[id];
+                // Momentum: ∂u/∂t = f v − ∂φ/∂λ / sinθ − advection.
+                nu_[id] = fcor * self.v[id] - phi_l[id] / sin_t
+                    - self.u[id] * u_l[id] / sin_t
+                    - self.v[id] * u_t[id];
+                nv[id] = -fcor * self.u[id] - phi_t[id]
+                    - self.u[id] * v_l[id] / sin_t
+                    - self.v[id] * v_t[id];
+            }
+        }
+        for id in 0..n {
+            self.phi[id] += dt * nphi[id];
+            self.u[id] += dt * nu_[id];
+            self.v[id] += dt * nv[id];
+        }
+        // Meridional 1-2-1 smoothing scaled by nu (discrete diffusion).
+        let smooth = |f: &mut Vec<f64>, nu: f64, nlat: usize, nlon: usize| {
+            let src = f.clone();
+            for i in 0..nlat {
+                for j in 0..nlon {
+                    let jp = (j + nlon / 2) % nlon;
+                    let up = if i > 0 { src[(i - 1) * nlon + j] } else { src[jp] };
+                    let dn = if i + 1 < nlat {
+                        src[(i + 1) * nlon + j]
+                    } else {
+                        src[(nlat - 1) * nlon + jp]
+                    };
+                    f[i * nlon + j] =
+                        (1.0 - nu) * src[i * nlon + j] + nu * 0.5 * (up + dn);
+                }
+            }
+        };
+        let s = (self.cfg.nu * 1e4).min(0.45);
+        smooth(&mut self.phi, s, nlat, nlon);
+        smooth(&mut self.u, s, nlat, nlon);
+        smooth(&mut self.v, s, nlat, nlon);
+        Self::polar_filter(&self.theta, nlat, nlon, &mut self.phi);
+        Self::polar_filter(&self.theta, nlat, nlon, &mut self.u);
+        Self::polar_filter(&self.theta, nlat, nlon, &mut self.v);
+    }
+
+    pub fn state(&self) -> Tensor {
+        let n = self.cfg.nlat * self.cfg.nlon;
+        let mut d = Vec::with_capacity(3 * n);
+        d.extend(self.phi.iter().map(|&x| x as f32));
+        d.extend(self.u.iter().map(|&x| x as f32));
+        d.extend(self.v.iter().map(|&x| x as f32));
+        Tensor::from_vec(vec![3, self.cfg.nlat, self.cfg.nlon], d)
+    }
+
+    pub fn run(&mut self) -> Tensor {
+        for _ in 0..self.cfg.steps {
+            self.step();
+        }
+        self.state()
+    }
+}
+
+/// Random smooth initial condition: low-order zonal+wave geopotential
+/// perturbation, geostrophically balanced-ish winds.
+pub fn random_initial(cfg: &SweConfig, rng: &mut Rng) -> Tensor {
+    let (nlat, nlon) = (cfg.nlat, cfg.nlon);
+    let mut modes = vec![];
+    for _ in 0..4 {
+        let m = 1 + rng.below(4) as i32; // zonal wavenumber
+        let l = 1 + rng.below(3) as i32; // meridional
+        let amp = rng.normal() * 0.05;
+        let phase = rng.uniform_in(0.0, std::f64::consts::TAU);
+        modes.push((m, l, amp, phase));
+    }
+    let mut data = Vec::with_capacity(3 * nlat * nlon);
+    // φ
+    for i in 0..nlat {
+        let th = std::f64::consts::PI * (i as f64 + 0.5) / nlat as f64;
+        for j in 0..nlon {
+            let lam = std::f64::consts::TAU * j as f64 / nlon as f64;
+            let mut v = 0.0;
+            for &(m, l, amp, phase) in &modes {
+                v += amp
+                    * (m as f64 * lam + phase).cos()
+                    * (l as f64 * th).sin().powi(2)
+                    * th.sin();
+            }
+            data.push(v as f32);
+        }
+    }
+    // u: weak zonal jet + perturbation; v: zero.
+    for i in 0..nlat {
+        let th = std::f64::consts::PI * (i as f64 + 0.5) / nlat as f64;
+        for _j in 0..nlon {
+            let jet = 0.1 * (2.0 * th).sin().powi(2);
+            data.push(jet as f32);
+        }
+    }
+    data.extend(std::iter::repeat(0f32).take(nlat * nlon));
+    Tensor::from_vec(vec![3, nlat, nlon], data)
+}
+
+/// Generate one (initial, final) SWE pair.
+pub fn generate_sample(cfg: &SweConfig, rng: &mut Rng) -> SweSample {
+    let initial = random_initial(cfg, rng);
+    let mut solver = SweSolver::new(*cfg, &initial);
+    let finalst = solver.run();
+    SweSample { initial, finalst }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> SweConfig {
+        SweConfig { nlat: 16, nlon: 32, steps: 50, ..Default::default() }
+    }
+
+    #[test]
+    fn rest_state_stays_at_rest() {
+        let cfg = tiny_cfg();
+        let zero = Tensor::zeros(&[3, 16, 32]);
+        let mut s = SweSolver::new(cfg, &zero);
+        let out = s.run();
+        assert!(out.abs_max() < 1e-10);
+    }
+
+    #[test]
+    fn evolution_stays_finite_and_moves() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(11);
+        let sample = generate_sample(&cfg, &mut rng);
+        assert!(!sample.finalst.has_nan());
+        assert!(sample.finalst.abs_max() < 10.0, "max={}", sample.finalst.abs_max());
+        // The state must actually evolve.
+        assert!(sample.finalst.rel_l2(&sample.initial) > 1e-3);
+    }
+
+    #[test]
+    fn mass_approximately_conserved() {
+        // ∫φ over the sphere (area-weighted by sinθ) should drift slowly.
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(5);
+        let init = random_initial(&cfg, &mut rng);
+        let mass = |t: &Tensor| -> f64 {
+            let (nlat, nlon) = (cfg.nlat, cfg.nlon);
+            let mut m = 0.0;
+            for i in 0..nlat {
+                let th = std::f64::consts::PI * (i as f64 + 0.5) / nlat as f64;
+                for j in 0..nlon {
+                    m += t.data()[i * nlon + j] as f64 * th.sin();
+                }
+            }
+            m / (nlat * nlon) as f64
+        };
+        let m0 = mass(&init);
+        let mut s = SweSolver::new(cfg, &init);
+        let out = s.run();
+        let m1 = mass(&out);
+        // Perturbation amplitude ~0.05; mass drift should be well below it.
+        assert!((m1 - m0).abs() < 0.01, "m0={m0} m1={m1}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = tiny_cfg();
+        let a = generate_sample(&cfg, &mut Rng::new(2));
+        let b = generate_sample(&cfg, &mut Rng::new(2));
+        assert_eq!(a.finalst, b.finalst);
+    }
+}

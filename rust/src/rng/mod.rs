@@ -1,0 +1,184 @@
+//! Deterministic PRNG substrate: xoshiro256++ with splittable seeding,
+//! uniform/normal/complex-normal sampling. Every experiment in the harness
+//! takes an explicit seed so paper figures with "3 random seeds" error bars
+//! (Figs. 5, 8, 13, Table 6) are exactly reproducible.
+
+/// xoshiro256++ (Blackman & Vigna). Fast, passes BigCrush, tiny state.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 expansion, as recommended by the authors.
+    pub fn new(seed: u64) -> Rng {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Derive an independent stream for a named sub-task (dataset split,
+    /// weight init, batch shuffling, ...).
+    pub fn split(&mut self, tag: u64) -> Rng {
+        let a = self.next_u64();
+        Rng::new(a ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        // Lemire-style rejection-free for our purposes (n << 2^64).
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (uses both outputs).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return r * (2.0 * std::f64::consts::PI * u2).cos();
+        }
+    }
+
+    /// N(mu, sigma^2).
+    pub fn normal_ms(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Complex standard normal: re, im ~ N(0, 1/2) so E|z|^2 = 1.
+    pub fn cnormal(&mut self) -> (f64, f64) {
+        let s = std::f64::consts::FRAC_1_SQRT_2;
+        (self.normal() * s, self.normal() * s)
+    }
+
+    /// Fill a f32 vector with N(0, sigma^2).
+    pub fn normal_vec(&mut self, n: usize, sigma: f64) -> Vec<f32> {
+        (0..n).map(|_| (self.normal() * sigma) as f32).collect()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut v);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_moments() {
+        let mut r = Rng::new(7);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.uniform()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var={var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let kurt = xs.iter().map(|x| (x - mean).powi(4)).sum::<f64>() / n as f64 / var / var;
+        assert!(mean.abs() < 0.01);
+        assert!((var - 1.0).abs() < 0.02);
+        assert!((kurt - 3.0).abs() < 0.1, "kurtosis={kurt}");
+    }
+
+    #[test]
+    fn split_streams_are_independent_ish() {
+        let mut root = Rng::new(1);
+        let mut a = root.split(1);
+        let mut b = root.split(2);
+        let n = 10_000;
+        let mut dot = 0.0;
+        for _ in 0..n {
+            dot += a.normal() * b.normal();
+        }
+        assert!((dot / n as f64).abs() < 0.05);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(3);
+        let p = r.permutation(100);
+        let mut seen = vec![false; 100];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn below_covers_range() {
+        let mut r = Rng::new(9);
+        let mut hit = [0usize; 7];
+        for _ in 0..7000 {
+            hit[r.below(7)] += 1;
+        }
+        for h in hit {
+            assert!(h > 700, "bucket too empty: {h}");
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Typed view of artifacts/manifest.json.
+
+use crate::fp::Precision;
+use crate::jsonlite::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// One parameter tensor's spec (order matters — it is the HLO arg order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Init std for Gaussian init; 0.0 means zero-init (biases).
+    pub std: f64,
+}
+
+/// One AOT artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub dataset: String,
+    pub graph: String,
+    pub precision: Precision,
+    pub stabilizer: String,
+    pub loss: String,
+    pub batch: usize,
+    pub params: Vec<ParamSpec>,
+    /// (name, shape) of non-parameter inputs, in order after the params.
+    pub extra_inputs: Vec<(String, Vec<usize>)>,
+    /// Model-specific config (width/modes/layers/...).
+    pub config: std::collections::BTreeMap<String, f64>,
+}
+
+impl ArtifactEntry {
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.shape.iter().product::<usize>()).sum()
+    }
+
+    pub fn cfg(&self, key: &str) -> Option<f64> {
+        self.config.get(key).copied()
+    }
+
+    /// Spatial resolution (h, w) for grid models.
+    pub fn resolution(&self) -> Option<(usize, usize)> {
+        match (self.cfg("height"), self.cfg("width_grid")) {
+            (Some(h), Some(w)) => Some((h as usize, w as usize)),
+            _ => match (self.cfg("nlat"), self.cfg("nlon")) {
+                (Some(h), Some(w)) => Some((h as usize, w as usize)),
+                _ => None,
+            },
+        }
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest is not valid JSON")?;
+        let version = j.usize_field("version")?;
+        if version != 1 {
+            anyhow::bail!("unsupported manifest version {version}");
+        }
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing artifacts array"))?;
+        let artifacts = arts.iter().map(parse_entry).collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All artifacts matching a (model, dataset, graph) triple.
+    pub fn select(&self, model: &str, dataset: &str, graph: &str) -> Vec<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.model == model && a.dataset == dataset && a.graph == graph)
+            .collect()
+    }
+}
+
+fn parse_entry(j: &Json) -> Result<ArtifactEntry> {
+    let shapes = |v: &Json| -> Result<Vec<usize>> {
+        v.as_arr()
+            .ok_or_else(|| anyhow!("shape not an array"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect()
+    };
+    let params = j
+        .get("params")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing params"))?
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: p.str_field("name")?.to_string(),
+                shape: shapes(p.get("shape").ok_or_else(|| anyhow!("no shape"))?)?,
+                std: p.get("std").and_then(Json::as_f64).unwrap_or(0.0),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let extra_inputs = j
+        .get("extra_inputs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing extra_inputs"))?
+        .iter()
+        .map(|p| {
+            Ok((
+                p.str_field("name")?.to_string(),
+                shapes(p.get("shape").ok_or_else(|| anyhow!("no shape"))?)?,
+            ))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut config = std::collections::BTreeMap::new();
+    if let Some(Json::Obj(m)) = j.get("config") {
+        for (k, v) in m {
+            if let Some(n) = v.as_f64() {
+                config.insert(k.clone(), n);
+            }
+        }
+    }
+    let prec_tok = j.str_field("precision")?;
+    Ok(ArtifactEntry {
+        name: j.str_field("name")?.to_string(),
+        file: j.str_field("file")?.to_string(),
+        model: j.str_field("model")?.to_string(),
+        dataset: j.str_field("dataset")?.to_string(),
+        graph: j.str_field("graph")?.to_string(),
+        precision: Precision::from_token(prec_tok)
+            .ok_or_else(|| anyhow!("bad precision {prec_tok:?}"))?,
+        stabilizer: j.str_field("stabilizer")?.to_string(),
+        loss: j.str_field("loss")?.to_string(),
+        batch: j.usize_field("batch")?,
+        params,
+        extra_inputs,
+        config,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "fno_darcy_r32_full_none_fwd", "file": "f.hlo.txt",
+         "model": "fno", "dataset": "darcy", "graph": "fwd",
+         "precision": "full", "stabilizer": "none", "loss": "h1", "batch": 4,
+         "params": [
+           {"name": "lift_w", "shape": [3, 32], "std": 0.577},
+           {"name": "lift_b", "shape": [32], "std": 0.0}
+         ],
+         "extra_inputs": [{"name": "x", "shape": [4, 1, 32, 32]}],
+         "config": {"width": 32, "modes": 8, "height": 32, "width_grid": 32}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.precision, Precision::Full);
+        assert_eq!(a.params[0].shape, vec![3, 32]);
+        assert_eq!(a.params[1].std, 0.0);
+        assert_eq!(a.extra_inputs[0].1, vec![4, 1, 32, 32]);
+        assert_eq!(a.resolution(), Some((32, 32)));
+        assert_eq!(a.param_count(), 3 * 32 + 32);
+        assert!(m.find("fno_darcy_r32_full_none_fwd").is_some());
+        assert!(m.find("nope").is_none());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json");
+        if !path.exists() {
+            return;
+        }
+        let m = Manifest::load(&path).unwrap();
+        assert!(m.artifacts.len() >= 50, "expected full matrix, got {}", m.artifacts.len());
+        // Every referenced file exists.
+        for a in &m.artifacts {
+            assert!(
+                path.parent().unwrap().join(&a.file).exists(),
+                "missing {}",
+                a.file
+            );
+        }
+        // The grads graphs end with (target, loss_scale).
+        for a in m.artifacts.iter().filter(|a| a.graph == "grads") {
+            let last = a.extra_inputs.last().unwrap();
+            assert_eq!(last.0, "loss_scale");
+            assert!(last.1.is_empty());
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! This is the only place Python's output touches the Rust system. The
+//! [`Manifest`] (artifacts/manifest.json, written by `python -m
+//! compile.aot`) declares every artifact's parameter list and extra
+//! inputs; [`Engine`] compiles artifacts on demand (with an in-process
+//! cache) and [`Executable`] marshals [`Tensor`]s across the PJRT
+//! boundary.
+//!
+//! Performance notes (§Perf in EXPERIMENTS.md): parameters are uploaded
+//! once per step as literals; the dominant cost on the hot path is
+//! `buffer_from_host` + `to_literal_sync` copies, which we minimize by
+//! (a) feeding raw host buffers (`create_from_shape_and_untyped_data`)
+//! instead of `vec1().reshape()` round-trips and (b) keeping executables
+//! cached across steps/epochs.
+
+mod manifest;
+
+pub use manifest::{ArtifactEntry, Manifest, ParamSpec};
+
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// A compiled artifact plus its manifest entry.
+pub struct Executable {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative device-execution time, for the Fig. 9 breakdown.
+    pub exec_seconds: std::cell::Cell<f64>,
+    pub exec_calls: std::cell::Cell<u64>,
+}
+
+impl Executable {
+    /// Run with the given inputs (params ++ extra inputs, in manifest
+    /// order). Returns the flattened output tuple as host tensors.
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let want = self.entry.params.len() + self.entry.extra_inputs.len();
+        if inputs.len() != want {
+            bail!(
+                "{}: expected {} inputs ({} params + {} extra), got {}",
+                self.entry.name,
+                want,
+                self.entry.params.len(),
+                self.entry.extra_inputs.len(),
+                inputs.len()
+            );
+        }
+        let lits: Vec<xla::Literal> = inputs.iter().map(|t| tensor_to_literal(t)).collect();
+        let t0 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&lits)?;
+        let out = result[0][0].to_literal_sync()?;
+        self.exec_seconds
+            .set(self.exec_seconds.get() + t0.elapsed().as_secs_f64());
+        self.exec_calls.set(self.exec_calls.get() + 1);
+        let parts = out.to_tuple()?;
+        parts.iter().map(literal_to_tensor).collect()
+    }
+}
+
+/// Convert a host tensor to an XLA literal without intermediate copies.
+pub fn tensor_to_literal(t: &Tensor) -> xla::Literal {
+    let mut lit = xla::Literal::create_from_shape(
+        xla::PrimitiveType::F32,
+        t.shape(),
+    );
+    lit.copy_raw_from(t.data()).expect("raw copy into literal");
+    lit
+}
+
+/// Convert an XLA literal (f32 array) back to a host tensor.
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Ok(Tensor::from_vec(dims, data))
+}
+
+/// The runtime engine: one PJRT client + a compile cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, std::rc::Rc<Executable>>,
+    /// Cumulative compile time (Fig. 9 / §Perf bookkeeping).
+    pub compile_seconds: f64,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest_path = artifacts_dir.join("manifest.json");
+        let manifest = Manifest::load(&manifest_path)
+            .with_context(|| format!("loading {manifest_path:?} — run `make artifacts`"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            manifest,
+            cache: HashMap::new(),
+            compile_seconds: 0.0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        let path = self.artifacts_dir.join(&entry.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compile_seconds += t0.elapsed().as_secs_f64();
+        let executable = std::rc::Rc::new(Executable {
+            entry,
+            exe,
+            exec_seconds: std::cell::Cell::new(0.0),
+            exec_calls: std::cell::Cell::new(0),
+        });
+        self.cache.insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    /// Initialize parameters for an artifact from its manifest specs
+    /// (Gaussian with the recorded std; biases zero), seeded.
+    pub fn init_params(&self, entry: &ArtifactEntry, seed: u64) -> Vec<Tensor> {
+        let mut rng = crate::rng::Rng::new(seed);
+        entry
+            .params
+            .iter()
+            .map(|p| {
+                if p.std == 0.0 {
+                    Tensor::zeros(&p.shape)
+                } else {
+                    let n: usize = p.shape.iter().product();
+                    Tensor::from_vec(p.shape.clone(), rng.normal_vec(n, p.std))
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // Tests run from the crate root.
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn engine_loads_and_runs_fwd() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut eng = Engine::new(&artifacts_dir()).unwrap();
+        let exe = eng.load("fno_darcy_r32_full_none_fwd").unwrap();
+        let params = eng.init_params(&exe.entry, 42);
+        let x = Tensor::from_fn(&[4, 1, 32, 32], |i| {
+            ((i[2] + i[3]) as f32 / 64.0).sin()
+        });
+        let mut inputs: Vec<&Tensor> = params.iter().collect();
+        inputs.push(&x);
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[4, 1, 32, 32]);
+        assert!(!out[0].has_nan());
+    }
+
+    #[test]
+    fn grads_graph_returns_loss_and_grads() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut eng = Engine::new(&artifacts_dir()).unwrap();
+        let exe = eng.load("fno_darcy_r32_full_none_grads").unwrap();
+        let params = eng.init_params(&exe.entry, 1);
+        let x = Tensor::from_fn(&[4, 1, 32, 32], |i| (i[2] as f32 / 32.0).cos());
+        let y = Tensor::from_fn(&[4, 1, 32, 32], |i| (i[3] as f32 / 32.0).sin());
+        let scale = Tensor::from_vec(vec![], vec![1.0f32]);
+        let mut inputs: Vec<&Tensor> = params.iter().collect();
+        inputs.push(&x);
+        inputs.push(&y);
+        inputs.push(&scale);
+        let out = exe.run(&inputs).unwrap();
+        // (loss, grads...) — one grad per param, same shapes.
+        assert_eq!(out.len(), 1 + params.len());
+        assert!(out[0].len() == 1 && out[0].data()[0].is_finite());
+        for (g, p) in out[1..].iter().zip(&params) {
+            assert_eq!(g.shape(), p.shape());
+        }
+        // Loss scaling scales gradients linearly.
+        let scale2 = Tensor::from_vec(vec![], vec![256.0f32]);
+        let mut inputs2: Vec<&Tensor> = params.iter().collect();
+        inputs2.push(&x);
+        inputs2.push(&y);
+        inputs2.push(&scale2);
+        let out2 = exe.run(&inputs2).unwrap();
+        let g1 = out[1].abs_max();
+        let g2 = out2[1].abs_max();
+        assert!((g2 / g1 - 256.0).abs() / 256.0 < 1e-3, "{g1} {g2}");
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::from_fn(&[2, 3, 4], |i| (i[0] * 12 + i[1] * 4 + i[2]) as f32);
+        let lit = tensor_to_literal(&t);
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+}

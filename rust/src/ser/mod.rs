@@ -1,0 +1,132 @@
+//! Minimal binary serialization for tensors and datasets (no serde
+//! available offline). Format: magic "MPNO", version u32, then a sequence
+//! of named tensor records: name-len u32, name bytes, ndim u32, dims u64…,
+//! f32 payload little-endian.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"MPNO";
+const VERSION: u32 = 1;
+
+/// Write a set of named tensors to a file.
+pub fn save_tensors(path: &Path, tensors: &[(&str, &Tensor)]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u32).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&(t.ndim() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &v in t.data() {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read all named tensors from a file.
+pub fn load_tensors(path: &Path) -> Result<Vec<(String, Tensor)>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not an MPNO tensor file");
+    }
+    let ver = read_u32(&mut f)?;
+    if ver != VERSION {
+        bail!("{path:?}: unsupported version {ver}");
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut f)? as usize;
+        if name_len > 4096 {
+            bail!("corrupt name length {name_len}");
+        }
+        let mut nb = vec![0u8; name_len];
+        f.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb).context("tensor name not utf8")?;
+        let ndim = read_u32(&mut f)? as usize;
+        if ndim > 16 {
+            bail!("corrupt ndim {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            f.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let n: usize = shape.iter().product();
+        if n > 1usize << 32 {
+            bail!("corrupt element count {n}");
+        }
+        let mut buf = vec![0u8; n * 4];
+        f.read_exact(&mut buf)?;
+        let data: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push((name, Tensor::from_vec(shape, data)));
+    }
+    Ok(out)
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("mpno_ser_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.mpno");
+        let a = Tensor::from_fn(&[2, 3], |i| (i[0] * 3 + i[1]) as f32 * 0.5);
+        let b = Tensor::from_fn(&[4], |i| -(i[0] as f32));
+        save_tensors(&path, &[("a", &a), ("bee", &b)]).unwrap();
+        let loaded = load_tensors(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].0, "a");
+        assert_eq!(loaded[0].1, a);
+        assert_eq!(loaded[1].0, "bee");
+        assert_eq!(loaded[1].1, b);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("mpno_ser_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.mpno");
+        std::fs::write(&path, b"not a tensor file at all").unwrap();
+        assert!(load_tensors(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_set() {
+        let dir = std::env::temp_dir().join("mpno_ser_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.mpno");
+        save_tensors(&path, &[]).unwrap();
+        assert!(load_tensors(&path).unwrap().is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,195 @@
+//! Numerical-stability policy layer (§4.3, App. B.5/B.6).
+//!
+//! Two families of mitigations:
+//! * **pre-FFT** (local, baked into the L2 graphs at export): `none`,
+//!   `tanh` (the paper's method), `hardclip`, `sigclip`, `div` — selected
+//!   here by artifact name;
+//! * **post-forward** (global, implemented at L3): dynamic loss scaling
+//!   ([`crate::amp::GradScaler`]), gradient clipping and delayed updates
+//!   ([`crate::optim`]).
+//!
+//! The [`DivergenceDetector`] is the watchdog the coordinator uses to
+//! declare a run dead (Fig. 10's "all three global methods diverge during
+//! the first epoch").
+
+/// Pre-FFT stabilizers (must match python/compile/models/fno.py tokens).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PreActivation {
+    None,
+    Tanh,
+    HardClip,
+    SigClip,
+    Div,
+}
+
+impl PreActivation {
+    pub const ALL: [PreActivation; 5] = [
+        PreActivation::None,
+        PreActivation::Tanh,
+        PreActivation::HardClip,
+        PreActivation::SigClip,
+        PreActivation::Div,
+    ];
+
+    pub fn token(self) -> &'static str {
+        match self {
+            PreActivation::None => "none",
+            PreActivation::Tanh => "tanh",
+            PreActivation::HardClip => "hardclip",
+            PreActivation::SigClip => "sigclip",
+            PreActivation::Div => "div",
+        }
+    }
+
+    pub fn from_token(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|p| p.token() == s)
+    }
+
+    /// Host-side reference implementation (used by tests and the Fig. 11
+    /// spectrum study so L3 can stabilize fields without a graph).
+    pub fn apply(self, v: &mut [f32]) {
+        match self {
+            PreActivation::None => {}
+            PreActivation::Tanh => {
+                for x in v.iter_mut() {
+                    *x = x.tanh();
+                }
+            }
+            PreActivation::HardClip => {
+                for x in v.iter_mut() {
+                    *x = x.clamp(-1.0, 1.0);
+                }
+            }
+            PreActivation::SigClip => {
+                let n = v.len() as f64;
+                let mean = v.iter().map(|&x| x as f64).sum::<f64>() / n;
+                let var =
+                    v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+                let (lo, hi) = (
+                    (mean - 2.0 * var.sqrt()) as f32,
+                    (mean + 2.0 * var.sqrt()) as f32,
+                );
+                for x in v.iter_mut() {
+                    *x = x.clamp(lo, hi);
+                }
+            }
+            PreActivation::Div => {
+                for x in v.iter_mut() {
+                    *x /= 100.0;
+                }
+            }
+        }
+    }
+}
+
+/// Post-forward stabilizer selection for the App. B.5 study.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GlobalStabilizer {
+    None,
+    LossScaling,
+    GradClip,
+    DelayedUpdates,
+}
+
+impl GlobalStabilizer {
+    pub fn label(self) -> &'static str {
+        match self {
+            GlobalStabilizer::None => "no stabilizer",
+            GlobalStabilizer::LossScaling => "loss scaling",
+            GlobalStabilizer::GradClip => "gradient clipping (5.0)",
+            GlobalStabilizer::DelayedUpdates => "delayed updates (every 3)",
+        }
+    }
+}
+
+/// Declares a training run diverged: `patience` consecutive steps with a
+/// non-finite or exploding loss.
+#[derive(Debug)]
+pub struct DivergenceDetector {
+    pub patience: usize,
+    bad_streak: usize,
+    pub explode_threshold: f64,
+    pub diverged_at: Option<usize>,
+    step: usize,
+}
+
+impl DivergenceDetector {
+    pub fn new(patience: usize) -> Self {
+        DivergenceDetector {
+            patience,
+            bad_streak: 0,
+            explode_threshold: 1e6,
+            diverged_at: None,
+            step: 0,
+        }
+    }
+
+    /// Feed one step's loss; returns true once divergence is declared.
+    pub fn observe(&mut self, loss: f64) -> bool {
+        self.step += 1;
+        if !loss.is_finite() || loss.abs() > self.explode_threshold {
+            self.bad_streak += 1;
+            if self.bad_streak >= self.patience && self.diverged_at.is_none() {
+                self.diverged_at = Some(self.step);
+            }
+        } else {
+            self.bad_streak = 0;
+        }
+        self.diverged_at.is_some()
+    }
+
+    pub fn diverged(&self) -> bool {
+        self.diverged_at.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_roundtrip() {
+        for p in PreActivation::ALL {
+            assert_eq!(PreActivation::from_token(p.token()), Some(p));
+        }
+    }
+
+    #[test]
+    fn tanh_bounds_everything() {
+        let mut v = vec![-1e6f32, -1.0, 0.0, 0.5, 1e6];
+        PreActivation::Tanh.apply(&mut v);
+        assert!(v.iter().all(|x| x.abs() <= 1.0));
+        // Near-identity at 0 (the paper's argument for tanh over clipping).
+        assert!((v[3] - 0.4621f32).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sigclip_uses_data_statistics() {
+        let mut v: Vec<f32> = (0..100).map(|i| i as f32 * 0.01).collect();
+        v.push(1e5); // outlier
+        PreActivation::SigClip.apply(&mut v);
+        assert!(v[100] < 1e5, "outlier must be clipped");
+        assert_eq!(v[50], 0.5, "bulk untouched");
+    }
+
+    #[test]
+    fn divergence_detector_fires_on_nan_streak() {
+        let mut d = DivergenceDetector::new(3);
+        assert!(!d.observe(0.5));
+        assert!(!d.observe(f64::NAN));
+        assert!(!d.observe(f64::NAN));
+        assert!(d.observe(f64::NAN));
+        assert_eq!(d.diverged_at, Some(4));
+        // Stays diverged.
+        assert!(d.observe(0.1));
+    }
+
+    #[test]
+    fn recovery_resets_streak() {
+        let mut d = DivergenceDetector::new(2);
+        d.observe(f64::INFINITY);
+        d.observe(0.5);
+        d.observe(f64::INFINITY);
+        assert!(!d.diverged());
+    }
+}

@@ -1,0 +1,76 @@
+//! Dense row-major n-d arrays. The runtime feeds PJRT with [`Tensor`]
+//! (f32) buffers; the contraction engine and the spectral tooling use
+//! [`CTensor`] (complex f64 pairs). No external array crate is available
+//! offline, so this is a from-scratch substrate: shapes, strides, multi-
+//! index iteration, elementwise ops, matmul, permutation, padding/cropping
+//! and spectral resampling (in [`resample`]).
+
+mod ndarray;
+pub mod resample;
+
+pub use ndarray::{CTensor, NdArray, Tensor};
+
+/// Row-major strides for a shape.
+pub fn strides_for(shape: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * shape[i + 1];
+    }
+    s
+}
+
+/// Total element count.
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Iterate all multi-indices of `shape` in row-major order, calling `f`.
+pub fn for_each_index(shape: &[usize], mut f: impl FnMut(&[usize])) {
+    if shape.is_empty() {
+        f(&[]);
+        return;
+    }
+    let mut idx = vec![0usize; shape.len()];
+    loop {
+        f(&idx);
+        // Increment odometer.
+        let mut d = shape.len();
+        loop {
+            if d == 0 {
+                return;
+            }
+            d -= 1;
+            idx[d] += 1;
+            if idx[d] < shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(strides_for(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides_for(&[5]), vec![1]);
+        assert_eq!(strides_for(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn odometer_order() {
+        let mut seen = vec![];
+        for_each_index(&[2, 3], |i| seen.push((i[0], i[1])));
+        assert_eq!(seen, vec![(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn scalar_shape_visits_once() {
+        let mut n = 0;
+        for_each_index(&[], |_| n += 1);
+        assert_eq!(n, 1);
+    }
+}

@@ -1,0 +1,359 @@
+//! The generic dense array and its f32/complex aliases.
+
+use super::{for_each_index, numel, strides_for};
+use crate::fp::Cplx;
+
+/// Dense, owned, row-major n-dimensional array.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NdArray<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+/// Real f32 tensor — the host-side mirror of an XLA f32 buffer.
+pub type Tensor = NdArray<f32>;
+/// Complex f64 tensor used by the contraction engine and spectral tools.
+pub type CTensor = NdArray<Cplx<f64>>;
+
+impl<T: Copy> NdArray<T> {
+    pub fn from_vec(shape: Vec<usize>, data: Vec<T>) -> Self {
+        assert_eq!(numel(&shape), data.len(), "shape {shape:?} vs len {}", data.len());
+        NdArray { shape, data }
+    }
+
+    pub fn full(shape: &[usize], v: T) -> Self {
+        NdArray { shape: shape.to_vec(), data: vec![v; numel(shape)] }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(&[usize]) -> T) -> Self {
+        let mut data = Vec::with_capacity(numel(shape));
+        for_each_index(shape, |idx| data.push(f(idx)));
+        NdArray { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<T> {
+        self.data
+    }
+
+    fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let strides = strides_for(&self.shape);
+        idx.iter()
+            .zip(&self.shape)
+            .zip(&strides)
+            .map(|((&i, &s), &st)| {
+                debug_assert!(i < s, "index {i} out of bounds for dim of size {s}");
+                i * st
+            })
+            .sum()
+    }
+
+    pub fn at(&self, idx: &[usize]) -> T {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: T) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    /// Reshape without moving data (row-major reinterpretation).
+    pub fn reshape(&self, shape: &[usize]) -> Self {
+        assert_eq!(numel(shape), self.data.len());
+        NdArray { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    /// Permute axes (materialized transpose).
+    pub fn permute(&self, perm: &[usize]) -> Self {
+        assert_eq!(perm.len(), self.shape.len());
+        let new_shape: Vec<usize> = perm.iter().map(|&p| self.shape[p]).collect();
+        let mut out = Vec::with_capacity(self.data.len());
+        let mut src_idx = vec![0usize; perm.len()];
+        for_each_index(&new_shape, |idx| {
+            for (d, &p) in perm.iter().enumerate() {
+                src_idx[p] = idx[d];
+            }
+            out.push(self.at(&src_idx));
+        });
+        NdArray { shape: new_shape, data: out }
+    }
+
+    pub fn map<U: Copy>(&self, f: impl Fn(T) -> U) -> NdArray<U> {
+        NdArray { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    pub fn zip_with(&self, rhs: &Self, f: impl Fn(T, T) -> T) -> Self {
+        assert_eq!(self.shape, rhs.shape, "shape mismatch");
+        NdArray {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&rhs.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    /// Crop / zero-pad to a target shape, anchored at the origin corner.
+    pub fn crop_or_pad(&self, shape: &[usize], fill: T) -> Self {
+        assert_eq!(shape.len(), self.shape.len());
+        let mut out = NdArray::full(shape, fill);
+        // Copy the overlapping region.
+        let overlap: Vec<usize> =
+            shape.iter().zip(&self.shape).map(|(&a, &b)| a.min(b)).collect();
+        for_each_index(&overlap, |idx| {
+            out.set(idx, self.at(idx));
+        });
+        out
+    }
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor::full(shape, 0.0)
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor::full(shape, 1.0)
+    }
+
+    pub fn add(&self, rhs: &Tensor) -> Tensor {
+        self.zip_with(rhs, |a, b| a + b)
+    }
+
+    pub fn sub(&self, rhs: &Tensor) -> Tensor {
+        self.zip_with(rhs, |a, b| a - b)
+    }
+
+    pub fn mul(&self, rhs: &Tensor) -> Tensor {
+        self.zip_with(rhs, |a, b| a * b)
+    }
+
+    pub fn scale(&self, k: f32) -> Tensor {
+        self.map(|x| x * k)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.sum() / self.data.len() as f64
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        (self.data.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>()
+            / self.data.len() as f64)
+            .sqrt()
+    }
+
+    /// Relative L2 distance ‖a−b‖₂ / ‖b‖₂ — the paper's test metric.
+    pub fn rel_l2(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (&a, &b) in self.data.iter().zip(&other.data) {
+            num += ((a - b) as f64).powi(2);
+            den += (b as f64).powi(2);
+        }
+        (num / den.max(1e-30)).sqrt()
+    }
+
+    pub fn has_nan(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+
+    /// 2-D matmul: (m,k) x (k,n) -> (m,n). Blocked over k for locality.
+    pub fn matmul(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        assert_eq!(rhs.ndim(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(k, k2, "inner dims: {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        let a = &self.data;
+        let b = &rhs.data;
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        Tensor::from_vec(vec![m, n], out)
+    }
+}
+
+impl CTensor {
+    pub fn czeros(shape: &[usize]) -> CTensor {
+        CTensor::full(shape, Cplx::zero())
+    }
+
+    pub fn from_re(t: &Tensor) -> CTensor {
+        CTensor {
+            shape: t.shape().to_vec(),
+            data: t.data().iter().map(|&x| Cplx::from_f64(x as f64, 0.0)).collect(),
+        }
+    }
+
+    pub fn re(&self) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|z| z.re as f32).collect(),
+        }
+    }
+
+    pub fn cadd(&self, rhs: &CTensor) -> CTensor {
+        self.zip_with(rhs, |a, b| a.add(b))
+    }
+
+    pub fn cmul(&self, rhs: &CTensor) -> CTensor {
+        self.zip_with(rhs, |a, b| a.mul(b))
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, z| m.max(z.abs()))
+    }
+
+    /// Frobenius distance ‖a−b‖ / ‖b‖.
+    pub fn rel_fro(&self, other: &CTensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            num += a.sub(*b).norm_sqr();
+            den += b.norm_sqr();
+        }
+        (num / den.max(1e-300)).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_index_set() {
+        let mut t = Tensor::zeros(&[2, 3]);
+        t.set(&[1, 2], 7.0);
+        assert_eq!(t.at(&[1, 2]), 7.0);
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.data()[5], 7.0); // row-major layout
+    }
+
+    #[test]
+    fn from_fn_row_major() {
+        let t = Tensor::from_fn(&[2, 2], |i| (i[0] * 10 + i[1]) as f32);
+        assert_eq!(t.data(), &[0.0, 1.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn permute_transposes() {
+        let t = Tensor::from_fn(&[2, 3], |i| (i[0] * 3 + i[1]) as f32);
+        let tt = t.permute(&[1, 0]);
+        assert_eq!(tt.shape(), &[3, 2]);
+        for i in 0..2 {
+            for j in 0..3 {
+                assert_eq!(t.at(&[i, j]), tt.at(&[j, i]));
+            }
+        }
+        // Double transpose is identity.
+        assert_eq!(tt.permute(&[1, 0]), t);
+    }
+
+    #[test]
+    fn matmul_identity_and_known() {
+        let a = Tensor::from_vec(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let eye = Tensor::from_fn(&[2, 2], |i| if i[0] == i[1] { 1.0 } else { 0.0 });
+        assert_eq!(a.matmul(&eye), a);
+        let b = Tensor::from_vec(vec![2, 2], vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        let a = Tensor::from_fn(&[3, 4], |i| (i[0] + i[1]) as f32);
+        let b = Tensor::from_fn(&[4, 2], |i| (i[0] * 2 + i[1]) as f32);
+        let c = a.matmul(&b);
+        assert_eq!(c.shape(), &[3, 2]);
+        // Spot check c[1,1] = sum_k a[1,k] * b[k,1].
+        let want: f32 = (0..4).map(|k| (1 + k) as f32 * (k * 2 + 1) as f32).sum();
+        assert_eq!(c.at(&[1, 1]), want);
+    }
+
+    #[test]
+    fn crop_and_pad() {
+        let t = Tensor::from_fn(&[3, 3], |i| (i[0] * 3 + i[1]) as f32);
+        let cropped = t.crop_or_pad(&[2, 2], 0.0);
+        assert_eq!(cropped.data(), &[0.0, 1.0, 3.0, 4.0]);
+        let padded = t.crop_or_pad(&[4, 2], -1.0);
+        assert_eq!(padded.at(&[3, 0]), -1.0);
+        assert_eq!(padded.at(&[2, 1]), 7.0);
+    }
+
+    #[test]
+    fn rel_l2_zero_for_equal() {
+        let t = Tensor::from_fn(&[4, 4], |i| (i[0] + i[1]) as f32 + 1.0);
+        assert_eq!(t.rel_l2(&t), 0.0);
+        let o = t.scale(1.01);
+        assert!((o.rel_l2(&t) - 0.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_fn(&[2, 6], |i| (i[0] * 6 + i[1]) as f32);
+        let r = t.reshape(&[3, 4]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.at(&[2, 3]), 11.0);
+    }
+
+    #[test]
+    fn nan_detector() {
+        let mut t = Tensor::zeros(&[2, 2]);
+        assert!(!t.has_nan());
+        t.set(&[0, 1], f32::NAN);
+        assert!(t.has_nan());
+    }
+
+    #[test]
+    fn ctensor_ops() {
+        let a = CTensor::from_fn(&[2], |i| Cplx::from_f64(i[0] as f64 + 1.0, 1.0));
+        let b = a.cmul(&a);
+        // (1+i)^2 = 2i ; (2+i)^2 = 3+4i
+        assert_eq!(b.at(&[0]).to_f64(), (0.0, 2.0));
+        assert_eq!(b.at(&[1]).to_f64(), (3.0, 4.0));
+        assert!(a.rel_fro(&a) < 1e-15);
+    }
+}

@@ -1,0 +1,149 @@
+//! Spectral (Fourier) resampling of 2-D fields — the mechanism behind the
+//! paper's *zero-shot super-resolution* experiments (Table 1): a neural
+//! operator trained at 128² is evaluated at 256²…1024² by presenting the
+//! same underlying function discretized on a finer grid. We generate the
+//! finer/coarser discretizations by zero-padding / truncating the Fourier
+//! spectrum, which is exact for band-limited functions (and is also how
+//! the FNO literature constructs multi-resolution versions of a sample).
+
+use crate::fft::{fft2, ifft2};
+use crate::fp::Cplx;
+use crate::tensor::Tensor;
+
+/// Resample a (h, w) real field to (h2, w2) by Fourier zero-pad/truncation.
+pub fn resample2d(t: &Tensor, h2: usize, w2: usize) -> Tensor {
+    assert_eq!(t.ndim(), 2, "resample2d expects a 2-D field");
+    let (h, w) = (t.shape()[0], t.shape()[1]);
+    if (h, w) == (h2, w2) {
+        return t.clone();
+    }
+    let mut spec: Vec<Cplx<f64>> =
+        t.data().iter().map(|&x| Cplx::from_f64(x as f64, 0.0)).collect();
+    fft2(&mut spec, h, w);
+
+    // Move modes between centred spectra. Frequencies along an axis of
+    // length n are {0, 1, …, n/2, −(n−1)/2, …, −1} in FFT order; we copy
+    // each (ky, kx) that both grids can represent.
+    let mut out = vec![Cplx::<f64>::zero(); h2 * w2];
+    let keep_h = h.min(h2);
+    let keep_w = w.min(w2);
+    for ky in 0..keep_h {
+        // signed frequency of row ky in the source grid
+        let fy = signed_freq(ky, h.min(h2), h);
+        let sy = fy_to_row(fy, h);
+        let dy = fy_to_row(fy, h2);
+        for kx in 0..keep_w {
+            let fx = signed_freq(kx, w.min(w2), w);
+            let sx = fy_to_row(fx, w);
+            let dx = fy_to_row(fx, w2);
+            out[dy * w2 + dx] = spec[sy * w + sx];
+        }
+    }
+    ifft2(&mut out, h2, w2);
+    let scale = (h2 * w2) as f64 / (h * w) as f64;
+    Tensor::from_vec(
+        vec![h2, w2],
+        out.iter().map(|z| (z.re * scale) as f32).collect(),
+    )
+}
+
+/// Enumerate the `keep` lowest signed frequencies representable on a grid of
+/// size `n`: index i in [0, keep) maps to frequency i for i <= keep/2, else
+/// i - keep (negative side).
+fn signed_freq(i: usize, keep: usize, _n: usize) -> i64 {
+    if i <= keep / 2 {
+        i as i64
+    } else {
+        i as i64 - keep as i64
+    }
+}
+
+/// FFT-order row index of signed frequency f on a grid of size n.
+fn fy_to_row(f: i64, n: usize) -> usize {
+    if f >= 0 {
+        f as usize
+    } else {
+        (n as i64 + f) as usize
+    }
+}
+
+/// Batch version: resample every (h, w) slice of a (b, h, w) stack.
+pub fn resample_batch(t: &Tensor, h2: usize, w2: usize) -> Tensor {
+    assert_eq!(t.ndim(), 3);
+    let (b, h, w) = (t.shape()[0], t.shape()[1], t.shape()[2]);
+    let mut out = Tensor::zeros(&[b, h2, w2]);
+    for i in 0..b {
+        let slice = Tensor::from_vec(
+            vec![h, w],
+            t.data()[i * h * w..(i + 1) * h * w].to_vec(),
+        );
+        let r = resample2d(&slice, h2, w2);
+        out.data_mut()[i * h2 * w2..(i + 1) * h2 * w2].copy_from_slice(r.data());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn band_limited(h: usize, w: usize) -> Tensor {
+        // Sum of a few low modes — exactly representable at >= 16².
+        Tensor::from_fn(&[h, w], |i| {
+            let y = i[0] as f64 / h as f64;
+            let x = i[1] as f64 / w as f64;
+            let tau = std::f64::consts::TAU;
+            ((tau * x).sin() + 0.5 * (2.0 * tau * y).cos() + 0.25 * (tau * (x + y)).sin())
+                as f32
+        })
+    }
+
+    #[test]
+    fn upsample_is_exact_for_band_limited() {
+        let lo = band_limited(16, 16);
+        let hi_direct = band_limited(32, 32);
+        let hi = resample2d(&lo, 32, 32);
+        assert!(hi.rel_l2(&hi_direct) < 1e-5, "err={}", hi.rel_l2(&hi_direct));
+    }
+
+    #[test]
+    fn downsample_then_upsample_recovers_band_limited() {
+        let hi = band_limited(64, 64);
+        let lo = resample2d(&hi, 16, 16);
+        let back = resample2d(&lo, 64, 64);
+        assert!(back.rel_l2(&hi) < 1e-5);
+    }
+
+    #[test]
+    fn identity_resample_is_noop() {
+        let t = band_limited(16, 16);
+        assert_eq!(resample2d(&t, 16, 16), t);
+    }
+
+    #[test]
+    fn mean_preserved() {
+        let t = Tensor::from_fn(&[16, 16], |i| 3.0 + (i[0] as f32) * 0.01);
+        let up = resample2d(&t, 48, 48);
+        assert!((up.mean() - t.mean()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let a = band_limited(16, 16);
+        let mut stack = Tensor::zeros(&[2, 16, 16]);
+        stack.data_mut()[..256].copy_from_slice(a.data());
+        stack.data_mut()[256..].copy_from_slice(a.data());
+        let up = resample_batch(&stack, 32, 32);
+        let single = resample2d(&a, 32, 32);
+        assert_eq!(&up.data()[..1024], single.data());
+        assert_eq!(&up.data()[1024..], single.data());
+    }
+
+    #[test]
+    fn rectangular_grids() {
+        let t = band_limited(16, 32);
+        let up = resample2d(&t, 32, 64);
+        let direct = band_limited(32, 64);
+        assert!(up.rel_l2(&direct) < 1e-5);
+    }
+}

@@ -1,0 +1,113 @@
+//! Mini property-testing framework (proptest is not resolvable offline):
+//! seeded generators + a `forall` runner that reports the failing case and
+//! shrinks scalar inputs by bisection toward zero.
+
+use crate::rng::Rng;
+
+/// A seeded generator of values of type T.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+}
+
+impl<'a> Gen<'a> {
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_normal(&mut self, sigma: f64) -> f32 {
+        (self.rng.normal() * sigma) as f32
+    }
+
+    pub fn vec_f32(&mut self, len: usize, sigma: f64) -> Vec<f32> {
+        (0..len).map(|_| self.f32_normal(sigma)).collect()
+    }
+
+    /// Includes adversarial values (0, subnormals, huge, negatives).
+    pub fn f32_adversarial(&mut self) -> f32 {
+        match self.rng.below(8) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f32::MIN_POSITIVE,
+            3 => 65504.0,
+            4 => 65520.0,
+            5 => 1e-8,
+            6 => -(self.rng.uniform_in(0.0, 1e5) as f32),
+            _ => self.rng.uniform_in(-10.0, 10.0) as f32,
+        }
+    }
+}
+
+/// Run `prop` on `cases` random inputs produced by `make`; on failure,
+/// re-raise with the seed and case index for reproduction.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    make: impl Fn(&mut Gen) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut g = Gen { rng: &mut rng };
+        let input = make(&mut g);
+        assert!(
+            prop(&input),
+            "property failed at seed={seed} case={case}: {input:?}"
+        );
+    }
+}
+
+/// Shrink a failing f64 input toward zero by bisection, returning the
+/// smallest magnitude that still fails.
+pub fn shrink_f64(mut failing: f64, still_fails: impl Fn(f64) -> bool) -> f64 {
+    debug_assert!(still_fails(failing));
+    let mut lo = 0.0f64;
+    for _ in 0..64 {
+        let mid = 0.5 * (lo + failing);
+        if still_fails(mid) {
+            failing = mid;
+        } else {
+            lo = mid;
+        }
+        if (failing - lo).abs() < 1e-12 * failing.abs().max(1.0) {
+            break;
+        }
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_true_property() {
+        forall(1, 200, |g| g.f64_in(0.0, 1.0), |&x| (0.0..1.0).contains(&x));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(2, 100, |g| g.usize_in(0, 10), |&x| x < 10);
+    }
+
+    #[test]
+    fn shrinker_finds_boundary() {
+        // Fails iff x >= 3.0; shrink from 1000 should land near 3.
+        let s = shrink_f64(1000.0, |x| x >= 3.0);
+        assert!((s - 3.0).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn adversarial_covers_special_values() {
+        let mut rng = Rng::new(5);
+        let mut g = Gen { rng: &mut rng };
+        let vals: Vec<f32> = (0..200).map(|_| g.f32_adversarial()).collect();
+        assert!(vals.iter().any(|&v| v == 0.0));
+        assert!(vals.iter().any(|&v| v == 65504.0));
+        assert!(vals.iter().any(|&v| v < 0.0));
+    }
+}

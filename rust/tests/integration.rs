@@ -1,0 +1,239 @@
+//! Cross-layer integration tests: Rust coordinator x PJRT runtime x AOT
+//! artifacts x PDE data generators. These need `make artifacts` (they
+//! self-skip otherwise, so `cargo test` stays green on a fresh checkout).
+
+use mpno::coordinator::{
+    evaluate_super_resolution, train_grid, PrecisionSchedule, TrainConfig,
+};
+use mpno::data::{load_or_generate, DatasetKind, GenSpec, GeomDataset, GridDataset};
+use mpno::runtime::Engine;
+use mpno::tensor::{resample::resample_batch, Tensor};
+
+fn root() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn have_artifacts() -> bool {
+    root().join("artifacts/manifest.json").exists()
+}
+
+fn engine() -> Engine {
+    Engine::new(&root().join("artifacts")).unwrap()
+}
+
+fn darcy(n: usize) -> (GridDataset, GridDataset) {
+    let spec = GenSpec {
+        kind: DatasetKind::DarcyFlow,
+        n_samples: n,
+        resolution: 32,
+        seed: 7,
+    };
+    load_or_generate(&spec, &root().join("datasets"))
+        .unwrap()
+        .split(n / 3)
+}
+
+#[test]
+fn full_pipeline_darcy_all_precisions() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut eng = engine();
+    let (train, test) = darcy(24);
+    for art in [
+        "fno_darcy_r32_full_none_grads",
+        "fno_darcy_r32_amp_none_grads",
+        "fno_darcy_r32_mixed_tanh_grads",
+    ] {
+        let mut cfg = TrainConfig::new(art);
+        cfg.epochs = 3;
+        cfg.lr = 2e-3;
+        cfg.loss_scaling = art.contains("mixed");
+        let report = train_grid(&mut eng, &train, &test, &cfg).unwrap();
+        assert!(!report.diverged, "{art} diverged");
+        let first = report.epochs.first().unwrap().train_loss;
+        let last = report.epochs.last().unwrap().train_loss;
+        assert!(last < first, "{art}: loss {first} -> {last}");
+        assert!(report.final_test_l2().is_finite());
+    }
+}
+
+#[test]
+fn super_resolution_transfers_weights() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut eng = engine();
+    // Train at 32 on NS, evaluate the same params at 64 via resampled data.
+    let spec = GenSpec {
+        kind: DatasetKind::NavierStokes,
+        n_samples: 18,
+        resolution: 64,
+        seed: 5,
+    };
+    let hires = load_or_generate(&spec, &root().join("datasets")).unwrap();
+    let down = |t: &Tensor, r: usize| {
+        let b = t.shape()[0];
+        let flat = t.reshape(&[b, t.shape()[2], t.shape()[3]]);
+        resample_batch(&flat, r, r).reshape(&[b, 1, r, r])
+    };
+    let lo = GridDataset {
+        kind: DatasetKind::NavierStokes,
+        inputs: down(&hires.inputs, 32),
+        targets: down(&hires.targets, 32),
+    };
+    let (train, lo_test) = lo.clone().split(6);
+    let mut cfg = TrainConfig::new("fno_ns_r32_full_none_grads");
+    cfg.epochs = 4;
+    cfg.lr = 2e-3;
+    let (_, hi_test) = GridDataset {
+        kind: DatasetKind::NavierStokes,
+        inputs: hires.inputs.clone(),
+        targets: hires.targets.clone(),
+    }
+    .split(6);
+    let report = train_grid(&mut eng, &train, &lo_test, &cfg).unwrap();
+    let (l2_64, h1_64) = evaluate_super_resolution(
+        &mut eng,
+        &report.params,
+        "fno_ns_r64_full_none_fwd",
+        &hi_test,
+    )
+    .unwrap();
+    // Zero-shot error should be finite and in the same ballpark as the
+    // training-resolution error (discretization convergence).
+    let l2_32 = report.final_test_l2();
+    assert!(l2_64.is_finite() && h1_64.is_finite());
+    assert!(
+        l2_64 < 3.0 * l2_32 + 0.5,
+        "64x64 zero-shot err {l2_64} too far from 32x32 err {l2_32}"
+    );
+}
+
+#[test]
+fn gino_trains_one_epoch() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut eng = engine();
+    let ds = GeomDataset::generate(DatasetKind::ShapeNetCar, 3, 256, 8, 1);
+    let exe = eng.load("gino_car_p256_full_none_grads").unwrap();
+    let mut params = eng.init_params(&exe.entry, 0);
+    let mut adam = mpno::optim::Adam::new(1e-3, &params);
+    let p = 256;
+    let g3 = 512;
+    let mut losses = vec![];
+    for _round in 0..4 {
+        for i in 0..2 {
+            let feats = Tensor::from_vec(
+                vec![1, p, 7],
+                ds.features.data()[i * p * 7..(i + 1) * p * 7].to_vec(),
+            );
+            let tg = Tensor::from_vec(
+                vec![1, g3, p],
+                ds.to_grid.data()[i * g3 * p..(i + 1) * g3 * p].to_vec(),
+            );
+            let fg = Tensor::from_vec(
+                vec![1, p, g3],
+                ds.from_grid.data()[i * p * g3..(i + 1) * p * g3].to_vec(),
+            );
+            let y =
+                Tensor::from_vec(vec![1, p], ds.pressure.data()[i * p..(i + 1) * p].to_vec());
+            let scale = Tensor::from_vec(vec![], vec![1.0f32]);
+            let mut inputs: Vec<&Tensor> = params.iter().collect();
+            inputs.push(&feats);
+            inputs.push(&tg);
+            inputs.push(&fg);
+            inputs.push(&y);
+            inputs.push(&scale);
+            let out = exe.run(&inputs).unwrap();
+            losses.push(out[0].data()[0] as f64);
+            assert!(adam.step(&mut params, &out[1..], 1.0));
+        }
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "GINO loss should decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn sfno_trains_on_swe() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut eng = engine();
+    let spec = GenSpec {
+        kind: DatasetKind::SphericalSwe,
+        n_samples: 12,
+        resolution: 16,
+        seed: 3,
+    };
+    let data = load_or_generate(&spec, &root().join("datasets")).unwrap();
+    let (train, test) = data.split(4);
+    let mut cfg = TrainConfig::new("sfno_swe_r16_mixed_tanh_grads");
+    cfg.epochs = 3;
+    cfg.lr = 1e-3;
+    cfg.loss_scaling = true;
+    let report = train_grid(&mut eng, &train, &test, &cfg).unwrap();
+    assert!(!report.diverged);
+    let first = report.epochs.first().unwrap().train_loss;
+    let last = report.epochs.last().unwrap().train_loss;
+    assert!(last < first, "SFNO loss {first} -> {last}");
+}
+
+#[test]
+fn schedule_carries_weights_across_swaps() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut eng = engine();
+    let (train, test) = darcy(24);
+    let mut cfg = TrainConfig::new("fno_darcy_r32_mixed_tanh_grads");
+    cfg.schedule = PrecisionSchedule::paper_default(
+        "fno_darcy_r32_mixed_tanh_grads",
+        "fno_darcy_r32_amp_none_grads",
+        "fno_darcy_r32_full_none_grads",
+    );
+    cfg.epochs = 8;
+    cfg.lr = 2e-3;
+    cfg.loss_scaling = true;
+    let report = train_grid(&mut eng, &train, &test, &cfg).unwrap();
+    assert!(!report.diverged);
+    // Loss must not reset at phase boundaries (weights carried over):
+    // the first full-precision epoch should be no worse than 2x the last
+    // mixed epoch.
+    let by_artifact: Vec<(&str, f64)> = report
+        .epochs
+        .iter()
+        .map(|e| (e.artifact.as_str(), e.train_loss))
+        .collect();
+    let last_mixed = by_artifact
+        .iter()
+        .filter(|(a, _)| a.contains("mixed"))
+        .map(|(_, l)| *l)
+        .next_back()
+        .unwrap();
+    let first_full = by_artifact
+        .iter()
+        .find(|(a, _)| a.contains("full"))
+        .map(|(_, l)| *l)
+        .unwrap();
+    assert!(
+        first_full < 2.0 * last_mixed,
+        "weight carry-over broken: mixed {last_mixed} -> full {first_full}"
+    );
+}
+
+#[test]
+fn cli_dispatch_works() {
+    // Experiments that need no artifacts/training: fig3 (memory model).
+    let argv: Vec<String> = ["exp", "fig3", "--quick"].iter().map(|s| s.to_string()).collect();
+    mpno::cli::run_argv(&argv).unwrap();
+}

@@ -1,0 +1,249 @@
+//! Property-based tests over the numeric substrates, using the in-tree
+//! mini-framework (`mpno::testing`) since proptest is unavailable offline.
+//! Each property is an invariant the paper's analysis leans on.
+
+use mpno::contract::{contract_complex, plan, EinsumExpr, PathStrategy, ViewAsReal};
+use mpno::fft::{dft_naive, fft, ifft};
+use mpno::fp::{round_trip, Cplx, F16, Precision, PrecisionSystem};
+use mpno::tensor::CTensor;
+use mpno::testing::{forall, Gen};
+
+// ---- floating-point formats -------------------------------------------
+
+#[test]
+fn prop_rounding_idempotent_all_formats() {
+    for p in [Precision::Mixed, Precision::Bf16, Precision::Fp8, Precision::Tf32] {
+        forall(
+            11,
+            500,
+            |g: &mut Gen| g.f32_adversarial(),
+            |&x| {
+                let once = round_trip(x, p);
+                let twice = round_trip(once, p);
+                once.to_bits() == twice.to_bits() || (once.is_nan() && twice.is_nan())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_rounding_monotone() {
+    // x <= y  =>  q(x) <= q(y): rounding never reorders values (RNE is
+    // monotone) — needed for the clip-based stabilizers to compose.
+    for p in [Precision::Mixed, Precision::Bf16, Precision::Tf32] {
+        forall(
+            13,
+            500,
+            |g: &mut Gen| (g.f32_normal(1e3), g.f32_normal(1e3)),
+            |&(a, b)| {
+                let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+                round_trip(lo, p) <= round_trip(hi, p)
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_rounding_error_bounded_by_eps() {
+    // |q(x) - x| <= eps * |x| for normal-range x (Theorem 3.2's premise).
+    forall(
+        17,
+        500,
+        |g: &mut Gen| g.f32_normal(100.0),
+        |&x| {
+            if x == 0.0 || x.abs() < 1e-4 {
+                return true;
+            }
+            let err = (round_trip(x, Precision::Mixed) - x).abs();
+            err as f64 <= Precision::Mixed.epsilon() * x.abs() as f64
+        },
+    );
+}
+
+#[test]
+fn prop_half_sign_symmetry() {
+    forall(
+        19,
+        500,
+        |g: &mut Gen| g.f32_adversarial(),
+        |&x| {
+            let a = F16::from_f32(x);
+            let b = F16::from_f32(-x);
+            a.is_nan() && b.is_nan() || a.to_f32() == -b.to_f32()
+        },
+    );
+}
+
+#[test]
+fn prop_precision_system_q_is_projection() {
+    let q = PrecisionSystem::like_f16();
+    forall(
+        23,
+        300,
+        |g: &mut Gen| g.f64_in(-1e5, 1e5),
+        |&x| {
+            let y = q.q(x);
+            (q.q(y) - y).abs() <= f64::EPSILON * y.abs().max(1.0)
+        },
+    );
+}
+
+// ---- FFT ----------------------------------------------------------------
+
+fn random_signal(g: &mut Gen, n: usize) -> Vec<Cplx<f64>> {
+    (0..n)
+        .map(|_| Cplx::from_f64(g.f32_normal(1.0) as f64, g.f32_normal(1.0) as f64))
+        .collect()
+}
+
+#[test]
+fn prop_fft_linear() {
+    forall(
+        29,
+        40,
+        |g: &mut Gen| {
+            let n = 1 << g.usize_in(2, 6);
+            (random_signal(g, n), random_signal(g, n), g.f64_in(-2.0, 2.0))
+        },
+        |(a, b, k)| {
+            // fft(a + k b) == fft(a) + k fft(b)
+            let mut sum: Vec<Cplx<f64>> = a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| x.add(y.scale(*k)))
+                .collect();
+            fft(&mut sum);
+            let mut fa = a.clone();
+            fft(&mut fa);
+            let mut fb = b.clone();
+            fft(&mut fb);
+            sum.iter()
+                .zip(fa.iter().zip(&fb))
+                .all(|(s, (x, y))| s.sub(x.add(y.scale(*k))).abs() < 1e-8 * (a.len() as f64))
+        },
+    );
+}
+
+#[test]
+fn prop_fft_roundtrip_arbitrary_sizes() {
+    forall(
+        31,
+        25,
+        |g: &mut Gen| {
+            let n = g.usize_in(2, 97);
+            random_signal(g, n)
+        },
+        |x| {
+            let mut y = x.clone();
+            fft(&mut y);
+            ifft(&mut y);
+            x.iter()
+                .zip(&y)
+                .all(|(a, b)| a.sub(*b).abs() < 1e-8 * x.len() as f64)
+        },
+    );
+}
+
+#[test]
+fn prop_fft_matches_naive_dft() {
+    forall(
+        37,
+        15,
+        |g: &mut Gen| {
+            let n = g.usize_in(2, 40);
+            random_signal(g, n)
+        },
+        |x| {
+            let want = dft_naive(x);
+            let mut got = x.clone();
+            fft(&mut got);
+            got.iter()
+                .zip(&want)
+                .all(|(a, b)| a.sub(*b).abs() < 1e-7 * x.len() as f64)
+        },
+    );
+}
+
+// ---- contraction engine ---------------------------------------------------
+
+#[test]
+fn prop_contraction_strategies_agree() {
+    forall(
+        41,
+        12,
+        |g: &mut Gen| {
+            let b = g.usize_in(1, 3);
+            let ci = g.usize_in(1, 4);
+            let co = g.usize_in(1, 4);
+            let k = g.usize_in(1, 4);
+            let mk = |shape: &[usize], g: &mut Gen| {
+                CTensor::from_fn(shape, |_| {
+                    Cplx::from_f64(g.f32_normal(1.0) as f64, g.f32_normal(1.0) as f64)
+                })
+            };
+            let x = mk(&[b, ci, k, k], g);
+            let w = mk(&[ci, co, k, k], g);
+            (x, w)
+        },
+        |(x, w)| {
+            let expr = EinsumExpr::parse("bixy,ioxy->boxy").unwrap();
+            let shapes: Vec<&[usize]> = vec![x.shape(), w.shape()];
+            let run = |strat, var| {
+                let p = plan(&expr, &shapes, strat).unwrap();
+                contract_complex(&expr, &[x.clone(), w.clone()], &p, var).unwrap()
+            };
+            let base = run(PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
+            let b2 = run(PathStrategy::FlopOptimal, ViewAsReal::OptionB);
+            let b3 = run(PathStrategy::Naive, ViewAsReal::OptionA);
+            base.rel_fro(&b2) < 1e-10 && base.rel_fro(&b3) < 1e-10
+        },
+    );
+}
+
+#[test]
+fn prop_contraction_linear_in_inputs() {
+    // contract(k*x, w) == k * contract(x, w) — bilinearity spot check.
+    forall(
+        43,
+        15,
+        |g: &mut Gen| {
+            let x = CTensor::from_fn(&[2, 3, 2, 2], |_| {
+                Cplx::from_f64(g.f32_normal(1.0) as f64, g.f32_normal(1.0) as f64)
+            });
+            let w = CTensor::from_fn(&[3, 2, 2, 2], |_| {
+                Cplx::from_f64(g.f32_normal(1.0) as f64, g.f32_normal(1.0) as f64)
+            });
+            (x, w, g.f64_in(-3.0, 3.0))
+        },
+        |(x, w, k)| {
+            let expr = EinsumExpr::parse("bixy,ioxy->boxy").unwrap();
+            let shapes: Vec<&[usize]> = vec![x.shape(), w.shape()];
+            let p = plan(&expr, &shapes, PathStrategy::MemoryGreedy).unwrap();
+            let xk = x.map(|z| z.scale(*k));
+            let a = contract_complex(&expr, &[xk, w.clone()], &p, ViewAsReal::OptionC).unwrap();
+            let b = contract_complex(&expr, &[x.clone(), w.clone()], &p, ViewAsReal::OptionC)
+                .unwrap()
+                .map(|z| z.scale(*k));
+            a.rel_fro(&b) < 1e-10
+        },
+    );
+}
+
+// ---- resampling -----------------------------------------------------------
+
+#[test]
+fn prop_upsample_preserves_mean() {
+    use mpno::tensor::{resample::resample2d, Tensor};
+    forall(
+        47,
+        20,
+        |g: &mut Gen| {
+            let n = 8 * g.usize_in(1, 3);
+            Tensor::from_vec(vec![n, n], g.vec_f32(n * n, 1.0))
+        },
+        |t| {
+            let up = resample2d(t, 2 * t.shape()[0], 2 * t.shape()[1]);
+            (up.mean() - t.mean()).abs() < 1e-4
+        },
+    );
+}
