@@ -1,12 +1,15 @@
 //! Contraction-engine micro-benchmarks (Tables 8/9/10 machinery):
-//! planner strategies, path caching, view-as-real execution options.
-//! Run: `cargo bench --bench bench_contract`
+//! planner strategies, path caching, view-as-real execution options and
+//! serial-vs-parallel einsum execution.
+//! Run: `cargo bench --bench bench_contract` (threads via PALLAS_THREADS)
 
-use mpno::bench::{bench_auto, Table};
+use mpno::bench::{bench_auto, speedup, Table};
 use mpno::contract::{
-    contract_complex, plan, EinsumExpr, PathCache, PathStrategy, ViewAsReal,
+    contract_complex, contract_complex_with, plan, EinsumExpr, PathCache, PathStrategy,
+    ViewAsReal,
 };
 use mpno::fp::Cplx;
+use mpno::parallel::Executor;
 use mpno::rng::Rng;
 use mpno::tensor::CTensor;
 
@@ -77,5 +80,40 @@ fn main() {
     });
     println!("{s}");
     t.row(&[s.name.clone(), mpno::bench::fmt_secs(s.mean_s), mpno::bench::fmt_secs(s.p95_s)]);
+
+    // Serial vs parallel execution: the dense FNO contraction and a
+    // 5-operand CP-factorized einsum at larger-than-quick shapes — the
+    // same case list `mpno exp parbench` reports on.
+    let par = Executor::current();
+    println!("\n-- parallel executor: {} threads --", par.threads());
+    for (label, expr_s, shapes) in mpno::experiments::parallel_einsum_cases(8, 32, 16) {
+        let expr = EinsumExpr::parse(&expr_s).unwrap();
+        let ops: Vec<CTensor> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| rand_ct(s, 100 + i as u64))
+            .collect();
+        let refs: Vec<&[usize]> = shapes.iter().map(|s| s.as_slice()).collect();
+        let path = plan(&expr, &refs, PathStrategy::MemoryGreedy).unwrap();
+        let (e1, o1, p1) = (expr.clone(), ops.clone(), path.clone());
+        let serial = bench_auto(&format!("{label} serial"), 0.6, move || {
+            let out = contract_complex_with(&e1, &o1, &p1, ViewAsReal::OptionC, &Executor::serial())
+                .unwrap();
+            std::hint::black_box(out.len());
+        });
+        println!("{serial}");
+        let (e2, o2, p2) = (expr.clone(), ops.clone(), path.clone());
+        let parallel = bench_auto(&format!("{label} {}t", par.threads()), 0.6, move || {
+            let out = contract_complex_with(&e2, &o2, &p2, ViewAsReal::OptionC, &par).unwrap();
+            std::hint::black_box(out.len());
+        });
+        println!("{parallel}");
+        println!("  -> speedup {:.2}x", speedup(&serial, &parallel));
+        t.row(&[
+            format!("{label} speedup"),
+            format!("{:.2}x", speedup(&serial, &parallel)),
+            String::new(),
+        ]);
+    }
     t.print();
 }

@@ -1,10 +1,12 @@
 //! FFT substrate benchmarks across precisions — quantifies the cost of
-//! the per-butterfly rounding emulation and the radix-2 vs Bluestein gap.
-//! Run: `cargo bench --bench bench_fft`
+//! the per-butterfly rounding emulation, the radix-2 vs Bluestein gap and
+//! the serial-vs-parallel throughput of the batched 2-D drivers.
+//! Run: `cargo bench --bench bench_fft` (threads via PALLAS_THREADS)
 
-use mpno::bench::bench_auto;
-use mpno::fft::{fft, fft2};
+use mpno::bench::{bench_auto, speedup};
+use mpno::fft::{fft, fft2, fft2_batch, fft2_with};
 use mpno::fp::{Cplx, F16};
+use mpno::parallel::Executor;
 use mpno::rng::Rng;
 
 fn signal<S: mpno::fp::Scalar>(n: usize, seed: u64) -> Vec<Cplx<S>> {
@@ -75,5 +77,55 @@ fn main() {
             std::hint::black_box(x[0].re);
         });
         println!("{s}");
+    }
+
+    // Serial vs parallel: batched 2-D FFT (the FNO spectral-layer shape,
+    // shared with `mpno exp parbench`) and the fanned row/column passes
+    // of one large transform.
+    let par = Executor::current();
+    println!("\n-- parallel executor: {} threads --", par.threads());
+    for (b, hw) in [mpno::experiments::parallel_fft_case(false), (8, 128)] {
+        let base: Vec<Cplx<f64>> = signal(b * hw * hw, 4);
+        let b1 = base.clone();
+        let serial = bench_auto(&format!("fft2_batch {b}x{hw}x{hw} serial"), 0.5, move || {
+            let mut x = b1.clone();
+            fft2_batch(&mut x, hw, hw, &Executor::serial());
+            std::hint::black_box(x[0].re);
+        });
+        println!("{serial}");
+        let b2 = base.clone();
+        let parallel = bench_auto(
+            &format!("fft2_batch {b}x{hw}x{hw} {}t", par.threads()),
+            0.5,
+            move || {
+                let mut x = b2.clone();
+                fft2_batch(&mut x, hw, hw, &par);
+                std::hint::black_box(x[0].re);
+            },
+        );
+        println!("{parallel}");
+        println!("  -> speedup {:.2}x", speedup(&serial, &parallel));
+    }
+
+    {
+        // Same driver at 1 thread vs N threads, so the ratio isolates the
+        // executor (fft2_with's transpose locality win is in both legs).
+        let hw = 256usize;
+        let base: Vec<Cplx<f64>> = signal(hw * hw, 5);
+        let b1 = base.clone();
+        let serial = bench_auto(&format!("fft2_with {hw}x{hw} serial"), 0.5, move || {
+            let mut x = b1.clone();
+            fft2_with(&mut x, hw, hw, &Executor::serial());
+            std::hint::black_box(x[0].re);
+        });
+        println!("{serial}");
+        let b2 = base.clone();
+        let parallel = bench_auto(&format!("fft2_with {hw}x{hw} {}t", par.threads()), 0.5, move || {
+            let mut x = b2.clone();
+            fft2_with(&mut x, hw, hw, &par);
+            std::hint::black_box(x[0].re);
+        });
+        println!("{parallel}");
+        println!("  -> speedup {:.2}x", speedup(&serial, &parallel));
     }
 }

@@ -1,14 +1,25 @@
 //! End-to-end PJRT hot-path benchmarks: fwd and grads executions per
 //! precision mode, literal marshalling overhead, and the Adam update —
 //! the data behind EXPERIMENTS.md §Perf (L3).
-//! Run: `cargo bench --bench bench_runtime` (needs `make artifacts`)
+//! Run: `cargo bench --bench bench_runtime --features pjrt`
+//! (needs `make artifacts`; without the pjrt feature this prints a notice
+//! and exits, since the xla crate is not vendored offline.)
 
-use mpno::bench::bench_auto;
-use mpno::optim::Adam;
-use mpno::runtime::{tensor_to_literal, Engine};
-use mpno::tensor::Tensor;
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "bench_runtime needs the PJRT runtime; rebuild with `--features pjrt` \
+         in an environment where the xla crate resolves"
+    );
+}
 
+#[cfg(feature = "pjrt")]
 fn main() -> anyhow::Result<()> {
+    use mpno::bench::bench_auto;
+    use mpno::optim::Adam;
+    use mpno::runtime::{tensor_to_literal, Engine};
+    use mpno::tensor::Tensor;
+
     let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
     let dir = root.join("artifacts");
     if !dir.join("manifest.json").exists() {

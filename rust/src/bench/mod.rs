@@ -54,6 +54,11 @@ pub fn bench_auto(name: &str, budget_s: f64, mut f: impl FnMut()) -> BenchStats 
     bench(name, (iters / 10).max(1), iters, f)
 }
 
+/// Mean-time speedup of `parallel` over `serial` (>1 means faster).
+pub fn speedup(serial: &BenchStats, parallel: &BenchStats) -> f64 {
+    serial.mean_s / parallel.mean_s.max(1e-12)
+}
+
 /// Format seconds human-readably.
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-6 {
@@ -175,6 +180,19 @@ mod tests {
         assert!(md.contains("| a | bee |"));
         assert!(md.contains("| 1 | 2 |"));
         t.print();
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let mk = |mean: f64| BenchStats {
+            name: "x".into(),
+            iters: 1,
+            mean_s: mean,
+            p50_s: mean,
+            p95_s: mean,
+            min_s: mean,
+        };
+        assert!((speedup(&mk(1.0), &mk(0.25)) - 4.0).abs() < 1e-12);
     }
 
     #[test]

@@ -5,8 +5,13 @@
 //! mpno gen-data --dataset darcy --res 32 --n 48 [--seed S]
 //! mpno train --artifact NAME [--epochs N] [--lr X] [--schedule paper]
 //! mpno exp <id|all> [--quick]       regenerate a paper table/figure
+//! mpno bench-par [--quick]          serial vs parallel kernel throughput
 //! mpno dump-fp-vectors              fp-emulation vectors for pytest
 //! ```
+//!
+//! Every command accepts `--threads N` to size the parallel executor
+//! (equivalent to `PALLAS_THREADS=N`; `--threads 1` is the deterministic
+//! serial mode).
 
 use crate::coordinator::{train_grid, PrecisionSchedule, TrainConfig};
 use crate::data::{DatasetKind, GenSpec};
@@ -82,12 +87,21 @@ pub fn run_argv(argv: &[String]) -> Result<()> {
     }
     let cmd = argv[0].as_str();
     let args = Args::parse(&argv[1..]);
+    if let Some(t) = args.flag("threads") {
+        let n: usize = t
+            .parse()
+            .ok()
+            .filter(|&n| n > 0)
+            .with_context(|| format!("--threads must be a positive integer, got {t:?}"))?;
+        crate::parallel::set_num_threads(n);
+    }
     match cmd {
         "info" => cmd_info(),
         "gen-data" => cmd_gen_data(&args),
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "exp" => cmd_exp(&args),
+        "bench-par" => cmd_bench_par(&args),
         "dump-fp-vectors" => cmd_dump_fp_vectors(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -110,7 +124,11 @@ USAGE:
   mpno eval --checkpoint PATH [--artifact FWD_NAME]
              evaluate a saved model, incl. zero-shot at other resolutions
   mpno exp <id|all> [--quick]     ids: {}
-  mpno dump-fp-vectors",
+  mpno bench-par [--quick]        serial vs parallel kernel throughput
+  mpno dump-fp-vectors
+
+Global: --threads N   worker threads for the parallel kernels
+                      (default: PALLAS_THREADS, else available cores)",
         experiments::ALL_EXPERIMENTS.join(", ")
     );
 }
@@ -269,6 +287,19 @@ fn cmd_exp(args: &Args) -> Result<()> {
     experiments::run(&id, &ctx)
 }
 
+/// Serial-vs-parallel throughput report for the FFT + contraction hot
+/// paths (alias for `mpno exp parbench`).
+fn cmd_bench_par(args: &Args) -> Result<()> {
+    println!(
+        "parallel executor: {} worker threads (override with --threads / {})",
+        crate::parallel::num_threads(),
+        crate::parallel::THREADS_ENV
+    );
+    let mut ctx = Ctx::new(args.has("quick"));
+    ctx.seed = args.get_u64("seed", 0);
+    experiments::run("parbench", &ctx)
+}
+
 /// Dump (input, output) vectors of every Rust softfloat rounder so pytest
 /// can verify the JAX emulation is bit-identical (test_quantize.py).
 fn cmd_dump_fp_vectors() -> Result<()> {
@@ -339,5 +370,15 @@ mod tests {
     fn unknown_command_errors() {
         let argv = vec!["frobnicate".to_string()];
         assert!(run_argv(&argv).is_err());
+    }
+
+    #[test]
+    fn threads_flag_must_be_positive_integer() {
+        for bad in ["zero", "0", "-2"] {
+            let argv: Vec<String> =
+                ["help", "--threads", bad].iter().map(|s| s.to_string()).collect();
+            let err = run_argv(&argv).unwrap_err();
+            assert!(format!("{err}").contains("--threads"), "{err}");
+        }
     }
 }

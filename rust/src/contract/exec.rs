@@ -14,6 +14,7 @@
 use super::expr::EinsumExpr;
 use super::path::{PlannedPath, PathStrategy};
 use crate::fp::Cplx;
+use crate::parallel::Executor;
 use crate::tensor::{for_each_index, CTensor, NdArray, Tensor};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
@@ -26,20 +27,48 @@ pub enum ViewAsReal {
     OptionC,
 }
 
-/// Contract real f32 operands along `path`.
+/// Contract real f32 operands along `path` (serial).
 pub fn contract(expr: &EinsumExpr, operands: &[Tensor], path: &PlannedPath) -> Result<Tensor> {
+    contract_with(expr, operands, path, &Executor::serial())
+}
+
+/// Contract real f32 operands along `path`, fanning each pairwise step's
+/// output rows over `ex`.
+pub fn contract_with(
+    expr: &EinsumExpr,
+    operands: &[Tensor],
+    path: &PlannedPath,
+    ex: &Executor,
+) -> Result<Tensor> {
     let c: Vec<CTensor> = operands.iter().map(CTensor::from_re).collect();
-    let out = contract_complex(expr, &c, path, ViewAsReal::OptionC)?;
+    let out = contract_complex_with(expr, &c, path, ViewAsReal::OptionC, ex)?;
     Ok(out.re())
 }
 
 /// Contract complex operands along `path` with the given view-as-real
-/// strategy.
+/// strategy, serially — the parity oracle for
+/// [`contract_complex_with`].
 pub fn contract_complex(
     expr: &EinsumExpr,
     operands: &[CTensor],
     path: &PlannedPath,
     var: ViewAsReal,
+) -> Result<CTensor> {
+    contract_complex_with(expr, operands, path, var, &Executor::serial())
+}
+
+/// Contract complex operands along `path`, splitting the output index
+/// space of each pairwise step into rows evaluated concurrently on `ex`.
+/// Every output element accumulates its `ic` sum in the same order as the
+/// serial path, so results match [`contract_complex`] exactly. The Option
+/// A / Naive giant-loop baseline stays serial on purpose: it exists to
+/// measure the un-planned contraction cost (Table 8).
+pub fn contract_complex_with(
+    expr: &EinsumExpr,
+    operands: &[CTensor],
+    path: &PlannedPath,
+    var: ViewAsReal,
+    ex: &Executor,
 ) -> Result<CTensor> {
     if operands.len() != expr.inputs.len() {
         bail!("expected {} operands, got {}", expr.inputs.len(), operands.len());
@@ -62,7 +91,7 @@ pub fn contract_complex(
         let keep = surviving_labels(&ops, i, j, &expr.output);
         let (la, ta) = ops[i].clone();
         let (lb, tb) = ops[j].clone();
-        let (lr, tr) = contract_pair(&la, &ta, &lb, &tb, &keep, &dims, var)?;
+        let (lr, tr) = contract_pair(&la, &ta, &lb, &tb, &keep, &dims, var, ex)?;
         ops.remove(j);
         ops.remove(i);
         ops.push((lr, tr));
@@ -119,7 +148,10 @@ fn sum_out(labels: &[char], t: &CTensor, drop: &[char]) -> (Vec<char>, CTensor) 
     (kept, out)
 }
 
-/// Contract one pair via permute → batched matmul → reshape.
+/// Contract one pair via permute → batched matmul → reshape. The batched
+/// matmul's output rows (nb·nl rows of nr) are independent, so they are
+/// fanned over `ex`; per-row accumulation order is unchanged.
+#[allow(clippy::too_many_arguments)]
 fn contract_pair(
     la: &[char],
     ta: &CTensor,
@@ -128,6 +160,7 @@ fn contract_pair(
     keep: &[char],
     dims: &BTreeMap<char, usize>,
     var: ViewAsReal,
+    ex: &Executor,
 ) -> Result<(Vec<char>, CTensor)> {
     // Sum out labels unique to one operand and not kept.
     let drop_a: Vec<char> =
@@ -175,24 +208,24 @@ fn contract_pair(
             let br: Vec<f64> = b.iter().map(|z| z.re).collect();
             let bi: Vec<f64> = b.iter().map(|z| z.im).collect();
             let mm = |x: &[f64], y: &[f64], out: &mut [f64], sign: f64| {
-                for ib in 0..nb {
+                // One work item per output row (ib, il); same per-element
+                // accumulation order as the serial loop.
+                ex.for_each_chunk(out, nr, |row, orow| {
+                    let ib = row / nl;
+                    let il = row % nl;
                     let xo = ib * nl * nc;
                     let yo = ib * nc * nr;
-                    let oo = ib * nl * nr;
-                    for il in 0..nl {
-                        for ic in 0..nc {
-                            let xv = x[xo + il * nc + ic];
-                            if xv == 0.0 {
-                                continue;
-                            }
-                            let yrow = &y[yo + ic * nr..yo + (ic + 1) * nr];
-                            let orow = &mut out[oo + il * nr..oo + (il + 1) * nr];
-                            for (o, &yv) in orow.iter_mut().zip(yrow) {
-                                *o += sign * xv * yv;
-                            }
+                    for ic in 0..nc {
+                        let xv = x[xo + il * nc + ic];
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let yrow = &y[yo + ic * nr..yo + (ic + 1) * nr];
+                        for (o, &yv) in orow.iter_mut().zip(yrow) {
+                            *o += sign * xv * yv;
                         }
                     }
-                }
+                });
             };
             let mut ore = vec![0.0f64; nb * nl * nr];
             let mut oim = vec![0.0f64; nb * nl * nr];
@@ -206,22 +239,20 @@ fn contract_pair(
         }
         _ => {
             // Option C / default: direct complex accumulation, no plane
-            // materialization.
-            for ib in 0..nb {
+            // materialization. One work item per output row (ib, il).
+            ex.for_each_chunk(&mut out, nr, |row, orow| {
+                let ib = row / nl;
+                let il = row % nl;
                 let ao = ib * nl * nc;
                 let bo = ib * nc * nr;
-                let oo = ib * nl * nr;
-                for il in 0..nl {
-                    for ic in 0..nc {
-                        let av = a[ao + il * nc + ic];
-                        let brow = &b[bo + ic * nr..bo + (ic + 1) * nr];
-                        let orow = &mut out[oo + il * nr..oo + (il + 1) * nr];
-                        for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o = o.add(av.mul(bv));
-                        }
+                for ic in 0..nc {
+                    let av = a[ao + il * nc + ic];
+                    let brow = &b[bo + ic * nr..bo + (ic + 1) * nr];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o = o.add(av.mul(bv));
                     }
                 }
-            }
+            });
         }
     }
 
@@ -392,6 +423,36 @@ mod tests {
         let ab = run("ij,jk->ik", &[a, b], PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
         let want = run("ik,kl->il", &[ab, c], PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
         assert!(abc.rel_fro(&want) < 1e-12);
+    }
+
+    #[test]
+    fn parallel_execution_matches_serial() {
+        // 2*5*8*8 = 640-element output exceeds parallel::MIN_PARALLEL_ELEMS,
+        // so the chunked path actually runs multi-worker.
+        let x = rand_ct(&[2, 3, 8, 8], 60);
+        let w = rand_ct(&[3, 5, 8, 8], 61);
+        let expr = EinsumExpr::parse("bixy,ioxy->boxy").unwrap();
+        let shapes: Vec<&[usize]> = vec![x.shape(), w.shape()];
+        let path = plan(&expr, &shapes, PathStrategy::MemoryGreedy).unwrap();
+        let want =
+            contract_complex(&expr, &[x.clone(), w.clone()], &path, ViewAsReal::OptionC).unwrap();
+        for threads in [1usize, 2, 8] {
+            for var in [ViewAsReal::OptionB, ViewAsReal::OptionC] {
+                let got = contract_complex_with(
+                    &expr,
+                    &[x.clone(), w.clone()],
+                    &path,
+                    var,
+                    &crate::parallel::Executor::new(threads),
+                )
+                .unwrap();
+                assert!(
+                    got.rel_fro(&want) < 1e-12,
+                    "threads={threads} {var:?}: {}",
+                    got.rel_fro(&want)
+                );
+            }
+        }
     }
 
     #[test]

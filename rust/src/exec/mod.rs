@@ -1,61 +1,6 @@
-//! Execution substrate: a small scoped thread-pool (tokio is not
-//! resolvable offline, and the coordinator's needs are synchronous
-//! fan-out — dataset generation, per-seed experiment sweeps — not async
-//! I/O).
-
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-
-/// Run `f(i)` for i in 0..n on up to `threads` workers, collecting results
-/// in order.
-pub fn parallel_map<T: Send + 'static>(
-    n: usize,
-    threads: usize,
-    f: impl Fn(usize) -> T + Send + Sync + 'static,
-) -> Vec<T> {
-    if n == 0 {
-        return vec![];
-    }
-    let threads = threads.max(1).min(n);
-    let f = Arc::new(f);
-    let next = Arc::new(Mutex::new(0usize));
-    let (tx, rx) = mpsc::channel::<(usize, T)>();
-    let mut handles = vec![];
-    for _ in 0..threads {
-        let f = f.clone();
-        let next = next.clone();
-        let tx = tx.clone();
-        handles.push(std::thread::spawn(move || loop {
-            let i = {
-                let mut g = next.lock().unwrap();
-                if *g >= n {
-                    return;
-                }
-                let i = *g;
-                *g += 1;
-                i
-            };
-            let out = f(i);
-            if tx.send((i, out)).is_err() {
-                return;
-            }
-        }));
-    }
-    drop(tx);
-    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    for (i, v) in rx {
-        slots[i] = Some(v);
-    }
-    for h in handles {
-        h.join().expect("worker panicked");
-    }
-    slots.into_iter().map(|s| s.expect("missing result")).collect()
-}
-
-/// Default worker count: physical cores, capped.
-pub fn default_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
-}
+//! Wall-clock instrumentation for the Fig. 9 runtime breakdown. The
+//! thread-pool that used to live here moved to [`crate::parallel`] — the
+//! scoped work-queue executor driving the FFT/contraction/data hot paths.
 
 /// Wall-clock stopwatch with named laps (Fig. 9 runtime breakdown).
 #[derive(Debug, Default)]
@@ -97,33 +42,6 @@ impl Stopwatch {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn parallel_map_ordered_and_complete() {
-        let out = parallel_map(100, 8, |i| i * i);
-        assert_eq!(out.len(), 100);
-        for (i, v) in out.iter().enumerate() {
-            assert_eq!(*v, i * i);
-        }
-    }
-
-    #[test]
-    fn single_thread_fallback() {
-        let out = parallel_map(5, 1, |i| i + 1);
-        assert_eq!(out, vec![1, 2, 3, 4, 5]);
-        assert!(parallel_map(0, 4, |i| i).is_empty());
-    }
-
-    #[test]
-    fn parallel_actually_uses_threads() {
-        use std::collections::HashSet;
-        let ids = parallel_map(32, 4, |_| {
-            std::thread::sleep(std::time::Duration::from_millis(5));
-            format!("{:?}", std::thread::current().id())
-        });
-        let distinct: HashSet<_> = ids.into_iter().collect();
-        assert!(distinct.len() > 1, "expected multiple workers");
-    }
 
     #[test]
     fn stopwatch_accumulates_by_name() {

@@ -3,11 +3,13 @@
 //! memory model supplying the paper-scale byte counts.
 
 use super::Ctx;
-use crate::bench::{bench_auto, Table};
+use crate::bench::{bench_auto, speedup, Table};
 use crate::contract::{
-    contract_complex, plan, EinsumExpr, PathCache, PathStrategy, ViewAsReal,
+    contract_complex, contract_complex_with, plan, EinsumExpr, PathCache, PathStrategy,
+    ViewAsReal,
 };
 use crate::fp::Cplx;
+use crate::parallel::{self, Executor};
 use crate::rng::Rng;
 use crate::tensor::CTensor;
 use anyhow::Result;
@@ -115,6 +117,116 @@ pub fn tab9(ctx: &Ctx) -> Result<()> {
     ]);
     t.rows_str(&["paper", "0.57ms / 0.44ms", "0.75ms / 0.72ms", "76.3% / 61.6% -> ~0 cached"]);
     ctx.emit("tab9", &t)
+}
+
+/// Batched 2-D FFT benchmark shape (batch, side) shared by `mpno exp
+/// parbench` and `cargo bench --bench bench_fft` so the two reports
+/// cannot drift.
+pub fn parallel_fft_case(quick: bool) -> (usize, usize) {
+    if quick { (8, 32) } else { (16, 64) }
+}
+
+/// The serial-vs-parallel einsum benchmark cases — (label, expression,
+/// operand shapes) — shared by `mpno exp parbench` and
+/// `cargo bench --bench bench_contract` so the two reports cannot drift.
+pub fn parallel_einsum_cases(b: usize, c: usize, m: usize) -> Vec<(String, String, Vec<Vec<usize>>)> {
+    vec![
+        (
+            format!("dense bixy,ioxy->boxy b{b} c{c} m{m}"),
+            "bixy,ioxy->boxy".to_string(),
+            vec![vec![b, c, m, m], vec![c, c, m, m]],
+        ),
+        (
+            format!("cp-5op bixy,ir,or,xr,yr->boxy b{b} c{c} m{m} r{c}"),
+            "bixy,ir,or,xr,yr->boxy".to_string(),
+            vec![
+                vec![b, c, m, m],
+                vec![c, c],
+                vec![c, c],
+                vec![m, c],
+                vec![m, c],
+            ],
+        ),
+    ]
+}
+
+/// Serial vs parallel kernel throughput on the two hot paths (batched
+/// 2-D FFT and einsum execution) — the executor ablation backing the
+/// paper's claim that the half-precision pipeline is memory-bound compute
+/// worth parallelizing. Thread count comes from `--threads` /
+/// `PALLAS_THREADS` (see [`crate::parallel::num_threads`]).
+pub fn parbench(ctx: &Ctx) -> Result<()> {
+    let par = Executor::current();
+    let mut t = Table::new(
+        &format!(
+            "Parallel executor ablation ({} worker threads)",
+            parallel::num_threads()
+        ),
+        &["kernel", "serial mean", "parallel mean", "speedup"],
+    );
+
+    // Batched 2-D FFT at FNO spectral-layer shape.
+    let (b, hw) = parallel_fft_case(ctx.quick);
+    let base: Vec<Cplx<f64>> = {
+        let mut rng = Rng::new(ctx.seed + 1);
+        (0..b * hw * hw)
+            .map(|_| {
+                let (re, im) = rng.cnormal();
+                Cplx::from_f64(re, im)
+            })
+            .collect()
+    };
+    let budget = if ctx.quick { 0.2 } else { 0.6 };
+    let b1 = base.clone();
+    let s_fft = bench_auto("fft2_batch serial", budget, move || {
+        let mut x = b1.clone();
+        crate::fft::fft2_batch(&mut x, hw, hw, &Executor::serial());
+        std::hint::black_box(x[0].re);
+    });
+    let b2 = base.clone();
+    let p_fft = bench_auto("fft2_batch parallel", budget, move || {
+        let mut x = b2.clone();
+        crate::fft::fft2_batch(&mut x, hw, hw, &par);
+        std::hint::black_box(x[0].re);
+    });
+    t.row(&[
+        format!("fft2_batch {b}x{hw}x{hw} f64"),
+        crate::bench::fmt_secs(s_fft.mean_s),
+        crate::bench::fmt_secs(p_fft.mean_s),
+        format!("{:.2}x", speedup(&s_fft, &p_fft)),
+    ]);
+
+    // Einsum execution: dense FNO and 5-operand CP-factorized.
+    let (bb, c, m) = if ctx.quick { (4usize, 16usize, 8usize) } else { (8, 32, 16) };
+    for (label, expr_s, shapes) in parallel_einsum_cases(bb, c, m) {
+        let expr = EinsumExpr::parse(&expr_s)?;
+        let ops: Vec<CTensor> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| rand_ct(s, ctx.seed + 10 + i as u64))
+            .collect();
+        let refs: Vec<&[usize]> = shapes.iter().map(|s| s.as_slice()).collect();
+        let path = plan(&expr, &refs, PathStrategy::MemoryGreedy)?;
+        let (e1, o1, p1) = (expr.clone(), ops.clone(), path.clone());
+        let s_c = bench_auto("einsum serial", budget, move || {
+            let out =
+                contract_complex_with(&e1, &o1, &p1, ViewAsReal::OptionC, &Executor::serial())
+                    .unwrap();
+            std::hint::black_box(out.len());
+        });
+        let (e2, o2, p2) = (expr, ops, path);
+        let p_c = bench_auto("einsum parallel", budget, move || {
+            let out = contract_complex_with(&e2, &o2, &p2, ViewAsReal::OptionC, &par).unwrap();
+            std::hint::black_box(out.len());
+        });
+        t.row(&[
+            label,
+            crate::bench::fmt_secs(s_c.mean_s),
+            crate::bench::fmt_secs(p_c.mean_s),
+            format!("{:.2}x", speedup(&s_c, &p_c)),
+        ]);
+    }
+    ctx.emit("parbench", &t)
 }
 
 /// Table 10: FLOP-optimal vs memory-greedy path on 3-D (GINO-scale)

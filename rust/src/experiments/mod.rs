@@ -11,6 +11,8 @@ mod memory_exps;
 mod theory_exps;
 mod training_exps;
 
+pub use contract_exps::{parallel_einsum_cases, parallel_fft_case};
+
 use crate::bench::Table;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
@@ -67,6 +69,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1", "fig3", "fig4", "fig5", "tab1", "tab2", "fig6", "fig7", "fig8",
     "fig9", "fig10", "fig11", "tab3", "tab4", "tab5", "tab6", "tab7",
     "fig14", "fig13", "fig15", "fig16", "tab8", "tab9", "tab10", "tab11",
+    "parbench",
 ];
 
 /// Run one experiment by id.
@@ -97,6 +100,7 @@ pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
         "tab9" => contract_exps::tab9(ctx),
         "tab10" => contract_exps::tab10(ctx),
         "tab11" => memory_exps::tab11(ctx),
+        "parbench" => contract_exps::parbench(ctx),
         "all" => {
             for e in ALL_EXPERIMENTS {
                 println!("\n########## {e} ##########");

@@ -12,8 +12,17 @@
 //! Algorithms: iterative radix-2 Cooley–Tukey for power-of-two sizes,
 //! Bluestein's chirp-z for everything else, separable row/column passes for
 //! 2-D/3-D. A naive O(n²) DFT is kept as the test oracle.
+//!
+//! The separable passes are embarrassingly parallel: every 1-D transform
+//! of a pass is independent. The `*_with` variants ([`fft2_with`],
+//! [`fft3_with`], [`fft_batch`], [`fft2_batch`]) dispatch those transforms
+//! over a [`crate::parallel::Executor`]; each 1-D transform runs the same
+//! serial kernel on the same values in the same order, so the parallel
+//! drivers agree with the serial references ([`fft2`], [`fft3`]) at every
+//! [`Scalar`] precision (see `tests/parallel_parity.rs`).
 
 use crate::fp::{Cplx, Scalar};
+use crate::parallel::Executor;
 
 /// Forward DFT convention: X[k] = Σ_j x[j]·e^{−2πi jk/n} (unnormalized,
 /// matching `jnp.fft.fft` / `torch.fft.fft`).
@@ -177,6 +186,154 @@ pub fn ifft2<S: Scalar>(data: &mut [Cplx<S>], h: usize, w: usize) {
             data[r * w + c] = col[r];
         }
     }
+}
+
+/// 3-D FFT over a row-major (d, h, w) buffer: per-slab 2-D pass, then
+/// lines along the leading axis.
+pub fn fft3<S: Scalar>(data: &mut [Cplx<S>], d: usize, h: usize, w: usize) {
+    fft3_serial(data, d, h, w, false);
+}
+
+/// 3-D inverse FFT (normalized by 1/(d·h·w) via the 1-D ifft passes).
+pub fn ifft3<S: Scalar>(data: &mut [Cplx<S>], d: usize, h: usize, w: usize) {
+    fft3_serial(data, d, h, w, true);
+}
+
+fn fft3_serial<S: Scalar>(data: &mut [Cplx<S>], d: usize, h: usize, w: usize, inverse: bool) {
+    assert_eq!(data.len(), d * h * w);
+    let slab = h * w;
+    for z in 0..d {
+        if inverse {
+            ifft2(&mut data[z * slab..(z + 1) * slab], h, w);
+        } else {
+            fft2(&mut data[z * slab..(z + 1) * slab], h, w);
+        }
+    }
+    let mut line = vec![Cplx::<S>::zero(); d];
+    for rc in 0..slab {
+        for z in 0..d {
+            line[z] = data[z * slab + rc];
+        }
+        if inverse {
+            ifft(&mut line);
+        } else {
+            fft(&mut line);
+        }
+        for z in 0..d {
+            data[z * slab + rc] = line[z];
+        }
+    }
+}
+
+// ---- parallel drivers -----------------------------------------------------
+
+/// Batched independent 1-D forward FFTs: `data` holds contiguous length-`n`
+/// signals, each transformed in place, fanned over `ex`.
+pub fn fft_batch<S: Scalar>(data: &mut [Cplx<S>], n: usize, ex: &Executor) {
+    assert!(n > 0 && data.len() % n == 0, "buffer not a multiple of n={n}");
+    ex.for_each_chunk(data, n, |_, row| fft(row));
+}
+
+/// Batched independent 1-D inverse FFTs (see [`fft_batch`]).
+pub fn ifft_batch<S: Scalar>(data: &mut [Cplx<S>], n: usize, ex: &Executor) {
+    assert!(n > 0 && data.len() % n == 0, "buffer not a multiple of n={n}");
+    ex.for_each_chunk(data, n, |_, row| ifft(row));
+}
+
+/// 2-D FFT with the row and column passes fanned over `ex`. The column
+/// pass runs on a transposed scratch buffer so each 1-D transform is a
+/// contiguous chunk (better locality than the serial strided gather, same
+/// arithmetic per transform).
+pub fn fft2_with<S: Scalar>(data: &mut [Cplx<S>], h: usize, w: usize, ex: &Executor) {
+    fft2_passes(data, h, w, ex, false);
+}
+
+/// 2-D inverse FFT over `ex` (see [`fft2_with`]).
+pub fn ifft2_with<S: Scalar>(data: &mut [Cplx<S>], h: usize, w: usize, ex: &Executor) {
+    fft2_passes(data, h, w, ex, true);
+}
+
+fn fft2_passes<S: Scalar>(data: &mut [Cplx<S>], h: usize, w: usize, ex: &Executor, inverse: bool) {
+    assert_eq!(data.len(), h * w);
+    let one_d: fn(&mut [Cplx<S>]) = if inverse { ifft } else { fft };
+    // Row pass: h independent contiguous transforms.
+    ex.for_each_chunk(data, w, |_, row| one_d(row));
+    // Column pass: gather column c into scratch row c, transform, scatter.
+    let mut scratch = vec![Cplx::<S>::zero(); h * w];
+    {
+        let src: &[Cplx<S>] = data;
+        ex.for_each_chunk(&mut scratch, h, |c, col| {
+            for (r, v) in col.iter_mut().enumerate() {
+                *v = src[r * w + c];
+            }
+            one_d(col);
+        });
+    }
+    let src: &[Cplx<S>] = &scratch;
+    ex.for_each_chunk(data, w, |r, row| {
+        for (c, v) in row.iter_mut().enumerate() {
+            *v = src[c * h + r];
+        }
+    });
+}
+
+/// Batch of independent 2-D forward FFTs over contiguous (h, w) samples,
+/// one sample per work item — the shape of the FNO spectral layer's input,
+/// and the highest-leverage parallel grain (no per-pass synchronization).
+pub fn fft2_batch<S: Scalar>(data: &mut [Cplx<S>], h: usize, w: usize, ex: &Executor) {
+    let slab = h * w;
+    assert!(slab > 0 && data.len() % slab == 0, "buffer not a multiple of h*w");
+    ex.for_each_chunk(data, slab, |_, sample| fft2(sample, h, w));
+}
+
+/// Batch of independent 2-D inverse FFTs (see [`fft2_batch`]).
+pub fn ifft2_batch<S: Scalar>(data: &mut [Cplx<S>], h: usize, w: usize, ex: &Executor) {
+    let slab = h * w;
+    assert!(slab > 0 && data.len() % slab == 0, "buffer not a multiple of h*w");
+    ex.for_each_chunk(data, slab, |_, sample| ifft2(sample, h, w));
+}
+
+/// 3-D FFT with the slab and line passes fanned over `ex`.
+pub fn fft3_with<S: Scalar>(data: &mut [Cplx<S>], d: usize, h: usize, w: usize, ex: &Executor) {
+    fft3_passes(data, d, h, w, ex, false);
+}
+
+/// 3-D inverse FFT over `ex` (see [`fft3_with`]).
+pub fn ifft3_with<S: Scalar>(data: &mut [Cplx<S>], d: usize, h: usize, w: usize, ex: &Executor) {
+    fft3_passes(data, d, h, w, ex, true);
+}
+
+fn fft3_passes<S: Scalar>(
+    data: &mut [Cplx<S>],
+    d: usize,
+    h: usize,
+    w: usize,
+    ex: &Executor,
+    inverse: bool,
+) {
+    assert_eq!(data.len(), d * h * w);
+    let slab = h * w;
+    let one_d: fn(&mut [Cplx<S>]) = if inverse { ifft } else { fft };
+    let two_d: fn(&mut [Cplx<S>], usize, usize) = if inverse { ifft2 } else { fft2 };
+    // Slab pass: d independent 2-D transforms.
+    ex.for_each_chunk(data, slab, |_, s| two_d(s, h, w));
+    // Leading-axis pass: h*w independent length-d lines via scratch.
+    let mut scratch = vec![Cplx::<S>::zero(); d * slab];
+    {
+        let src: &[Cplx<S>] = data;
+        ex.for_each_chunk(&mut scratch, d, |rc, line| {
+            for (z, v) in line.iter_mut().enumerate() {
+                *v = src[z * slab + rc];
+            }
+            one_d(line);
+        });
+    }
+    let src: &[Cplx<S>] = &scratch;
+    ex.for_each_chunk(data, slab, |z, s| {
+        for (rc, v) in s.iter_mut().enumerate() {
+            *v = src[rc * d + z];
+        }
+    });
 }
 
 /// Real forward FFT: returns the full complex spectrum of a real signal.
@@ -346,6 +503,107 @@ mod tests {
             (0..n).map(|_| Cplx::from_f64(30000.0_f64.tanh(), 0.0)).collect();
         fft(&mut tanh_stab);
         assert!(tanh_stab.iter().all(|z| z.is_finite()));
+    }
+
+    #[test]
+    fn fft3_separable_matches_1d_composition() {
+        // fft3 == DFT along w, then h, then d (any order — transforms on
+        // distinct axes commute). Build the oracle from dft_naive lines.
+        let (d, h, w) = (3usize, 4, 5);
+        let x = random_signal(d * h * w, 123);
+        let mut got = x.clone();
+        fft3(&mut got, d, h, w);
+        let mut want = x;
+        for z in 0..d {
+            for r in 0..h {
+                let o = z * h * w + r * w;
+                let row = dft_naive(&want[o..o + w]);
+                want[o..o + w].copy_from_slice(&row);
+            }
+        }
+        for z in 0..d {
+            for c in 0..w {
+                let col: Vec<_> = (0..h).map(|r| want[z * h * w + r * w + c]).collect();
+                let colf = dft_naive(&col);
+                for r in 0..h {
+                    want[z * h * w + r * w + c] = colf[r];
+                }
+            }
+        }
+        for rc in 0..h * w {
+            let line: Vec<_> = (0..d).map(|z| want[z * h * w + rc]).collect();
+            let linef = dft_naive(&line);
+            for z in 0..d {
+                want[z * h * w + rc] = linef[z];
+            }
+        }
+        assert_close(&got, &want, 1e-9 * (d * h * w) as f64);
+    }
+
+    #[test]
+    fn fft3_roundtrip() {
+        let (d, h, w) = (4usize, 6, 8);
+        let x = random_signal(d * h * w, 31);
+        let mut y = x.clone();
+        fft3(&mut y, d, h, w);
+        ifft3(&mut y, d, h, w);
+        assert_close(&y, &x, 1e-10 * (d * h * w) as f64);
+    }
+
+    #[test]
+    fn parallel_drivers_match_serial() {
+        // Shapes exceed parallel::MIN_PARALLEL_ELEMS so workers engage.
+        use crate::parallel::Executor;
+        let (h, w) = (24usize, 32);
+        let x = random_signal(h * w, 55);
+        let mut want2 = x.clone();
+        fft2(&mut want2, h, w);
+        for threads in [1usize, 2, 8] {
+            let ex = Executor::new(threads);
+            let mut got = x.clone();
+            fft2_with(&mut got, h, w, &ex);
+            assert_close(&got, &want2, 1e-12);
+            ifft2_with(&mut got, h, w, &ex);
+            assert_close(&got, &x, 1e-12);
+        }
+        let (d, h, w) = (4usize, 8, 16);
+        let x3 = random_signal(d * h * w, 56);
+        let mut want3 = x3.clone();
+        fft3(&mut want3, d, h, w);
+        for threads in [1usize, 2, 8] {
+            let mut got = x3.clone();
+            fft3_with(&mut got, d, h, w, &Executor::new(threads));
+            assert_close(&got, &want3, 1e-12);
+        }
+    }
+
+    #[test]
+    fn batched_drivers_match_per_sample_serial() {
+        use crate::parallel::Executor;
+        let (b, n) = (8usize, 64);
+        let x = random_signal(b * n, 77);
+        let mut want = x.clone();
+        for i in 0..b {
+            fft(&mut want[i * n..(i + 1) * n]);
+        }
+        let ex = Executor::new(8);
+        let mut got = x.clone();
+        fft_batch(&mut got, n, &ex);
+        assert_close(&got, &want, 1e-12);
+        ifft_batch(&mut got, n, &ex);
+        assert_close(&got, &x, 1e-12 * n as f64);
+
+        let (b, h, w) = (6usize, 8, 12);
+        let x2 = random_signal(b * h * w, 78);
+        let mut want2 = x2.clone();
+        for i in 0..b {
+            fft2(&mut want2[i * h * w..(i + 1) * h * w], h, w);
+        }
+        let mut got2 = x2.clone();
+        fft2_batch(&mut got2, h, w, &ex);
+        assert_close(&got2, &want2, 1e-12);
+        ifft2_batch(&mut got2, h, w, &ex);
+        assert_close(&got2, &x2, 1e-12 * (h * w) as f64);
     }
 
     #[test]

@@ -10,7 +10,11 @@
 use crate::fp::{Bf16, F16, Fp8E5M2, Tf32};
 
 /// Real scalar arithmetic with per-operation rounding semantics.
-pub trait Scalar: Copy + Clone + PartialEq + std::fmt::Debug {
+///
+/// `Send + Sync + 'static` supertraits let [`crate::parallel`] fan
+/// `Cplx<S>` buffers across worker threads; every implementor is a plain
+/// `Copy` value type, so the bounds are automatic.
+pub trait Scalar: Copy + Clone + PartialEq + std::fmt::Debug + Send + Sync + 'static {
     fn from_f64(x: f64) -> Self;
     fn to_f64(self) -> f64;
     fn add(self, rhs: Self) -> Self;

@@ -13,7 +13,9 @@
 //!    for data generation ([`pde`]), linear algebra ([`linalg`]), a JSON
 //!    subset parser ([`jsonlite`]), binary serialization ([`ser`]), a
 //!    property-testing mini-framework ([`testing`]), a bench harness
-//!    ([`bench`]) and a thread-pool ([`exec`]).
+//!    ([`bench`]), a scoped work-queue executor for the FFT/contraction
+//!    /data hot paths ([`parallel`]) and wall-clock lap instrumentation
+//!    ([`exec`]).
 //! 2. **Core library** — the paper's contribution: approximation-bound
 //!    theory ([`theory`]), the PJRT runtime ([`runtime`]), optimizers with
 //!    fp32 master weights ([`optim`]), AMP semantics + dynamic loss scaling
@@ -43,6 +45,7 @@ pub mod linalg;
 pub mod memmodel;
 pub mod metrics;
 pub mod optim;
+pub mod parallel;
 pub mod pde;
 pub mod rng;
 pub mod runtime;

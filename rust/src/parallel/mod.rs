@@ -1,0 +1,298 @@
+//! Parallel execution substrate for the memory-bound hot paths.
+//!
+//! The paper's throughput gains come from the half-precision FFT +
+//! contraction pipeline; on CPU those kernels are memory-bound loops over
+//! independent sub-problems (1-D transforms of a separable FFT, output
+//! rows of a pairwise einsum step, samples of a dataset), so the natural
+//! speedup is fanning the independent pieces over worker threads. Neither
+//! rayon nor tokio is resolvable offline, so this module provides a small
+//! dependency-free [`Executor`]: scoped worker threads pulling work items
+//! off a shared queue, safe to use over borrowed (non-`'static`) data.
+//!
+//! Design rules the rest of the crate relies on:
+//!
+//! * **Serial oracle.** Every parallel driver (`fft::fft2_with`,
+//!   `contract::contract_complex_with`, …) partitions work so each output
+//!   element is produced by the *same* sequence of rounded operations as
+//!   the serial reference; `Executor::serial()` (or one worker) executes
+//!   chunks in index order. Parallel/serial parity therefore holds to
+//!   within the per-precision tolerance at every [`crate::fp::Scalar`]
+//!   precision — bit-exactly, in fact, for the chunkings used in-tree —
+//!   and `tests/parallel_parity.rs` enforces it.
+//! * **Thread-count resolution.** [`num_threads`] resolves, in order: a
+//!   process-wide override set by [`set_num_threads`] (the CLI's
+//!   `--threads` flag), the `PALLAS_THREADS` environment variable, then
+//!   `available_parallelism` capped at 16. `PALLAS_THREADS=1` gives the
+//!   deterministic single-threaded mode used by `scripts/ci.sh`.
+//! * **No persistent pool.** Workers are scoped to one executor call
+//!   (`std::thread::scope`), so there is no global mutable state, no
+//!   shutdown ordering, and panics propagate to the caller. Spawn cost is
+//!   tens of microseconds — callers parallelize at the outermost batch
+//!   level (whole samples, whole transforms) so it amortizes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Environment variable consulted by [`num_threads`].
+pub const THREADS_ENV: &str = "PALLAS_THREADS";
+
+/// Minimum total element count before [`Executor::for_each_chunk`] spawns
+/// workers; below this the inline loop beats thread-spawn overhead (a few
+/// tens of microseconds) for every kernel in this crate. Small pairwise
+/// einsum steps (e.g. factor-matrix contractions inside a CP plan) and
+/// tiny FFTs stay serial. [`Executor::map`] has no such cutoff: its work
+/// items (PDE solves, whole samples) are coarse by construction.
+pub const MIN_PARALLEL_ELEMS: usize = 512;
+
+/// Process-wide thread-count override (0 = unset). Set via
+/// [`set_num_threads`], typically from the CLI `--threads` flag.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the worker count for subsequently created
+/// [`Executor::current`] executors. `0` clears the override.
+pub fn set_num_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Worker count for the process: [`set_num_threads`] override, then
+/// `PALLAS_THREADS`, then `available_parallelism` capped at 16.
+pub fn num_threads() -> usize {
+    let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
+    if let Ok(v) = std::env::var(THREADS_ENV) {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// A scoped fork-join executor with a fixed worker count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Executor {
+    threads: usize,
+}
+
+impl Executor {
+    /// Executor with exactly `threads` workers (min 1).
+    pub fn new(threads: usize) -> Executor {
+        Executor { threads: threads.max(1) }
+    }
+
+    /// Executor sized by [`num_threads`].
+    pub fn current() -> Executor {
+        Executor::new(num_threads())
+    }
+
+    /// Single-worker executor: runs everything inline, in index order —
+    /// the reference against which parallel runs are tested.
+    pub fn serial() -> Executor {
+        Executor::new(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn is_serial(&self) -> bool {
+        self.threads == 1
+    }
+
+    /// Run `f(i)` for `i in 0..n`, collecting results in index order.
+    /// Work items are claimed from a shared atomic counter, so uneven item
+    /// costs balance across workers.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if self.threads <= 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let workers = self.threads.min(n);
+        let next = AtomicUsize::new(0);
+        let next = &next;
+        let f = &f;
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    s.spawn(move || {
+                        let mut local: Vec<(usize, T)> = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            local.push((i, f(i)));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, v) in h.join().expect("parallel worker panicked") {
+                    slots[i] = Some(v);
+                }
+            }
+        });
+        slots.into_iter().map(|s| s.expect("work item lost")).collect()
+    }
+
+    /// Split `data` into consecutive `chunk_len`-sized chunks (last chunk
+    /// ragged) and run `f(chunk_index, chunk)` over them on the worker
+    /// pool. Chunks are disjoint `&mut` slices, so no synchronization is
+    /// needed inside `f`; a shared queue balances uneven chunk costs.
+    pub fn for_each_chunk<T, F>(&self, data: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        if data.is_empty() {
+            // Zero-sized sub-problems (e.g. a contraction step whose row
+            // length is 0) are a no-op, matching the serial loops they
+            // replaced; only non-empty data requires a valid chunk size.
+            return;
+        }
+        assert!(chunk_len > 0, "chunk_len must be positive");
+        let n_chunks = (data.len() + chunk_len - 1) / chunk_len;
+        if self.threads <= 1 || n_chunks <= 1 || data.len() < MIN_PARALLEL_ELEMS {
+            for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+                f(i, chunk);
+            }
+            return;
+        }
+        let workers = self.threads.min(n_chunks);
+        // Work queue of (index, chunk). Workers pop from the back; order
+        // of execution is irrelevant because chunks are disjoint.
+        let queue: Mutex<Vec<(usize, &mut [T])>> =
+            Mutex::new(data.chunks_mut(chunk_len).enumerate().collect());
+        let queue = &queue;
+        let f = &f;
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(move || loop {
+                    let item = queue.lock().expect("queue poisoned").pop();
+                    match item {
+                        Some((i, chunk)) => f(i, chunk),
+                        None => break,
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn map_ordered_and_complete() {
+        for threads in [1usize, 2, 8] {
+            let out = Executor::new(threads).map(100, |i| i * i);
+            assert_eq!(out.len(), 100);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * i);
+            }
+        }
+        assert!(Executor::new(4).map(0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn map_uses_multiple_workers() {
+        let ids = Executor::new(4).map(32, |_| {
+            std::thread::sleep(std::time::Duration::from_millis(3));
+            format!("{:?}", std::thread::current().id())
+        });
+        let distinct: HashSet<_> = ids.into_iter().collect();
+        assert!(distinct.len() > 1, "expected multiple workers");
+    }
+
+    #[test]
+    fn for_each_chunk_covers_all_chunks() {
+        // 1003 > MIN_PARALLEL_ELEMS so multi-worker paths engage; the
+        // ragged tail chunk has 3 elements.
+        for threads in [1usize, 2, 8] {
+            let mut data = vec![0u64; 1003];
+            Executor::new(threads).for_each_chunk(&mut data, 10, |i, c| {
+                for v in c.iter_mut() {
+                    *v = i as u64 + 1;
+                }
+            });
+            for (j, v) in data.iter().enumerate() {
+                assert_eq!(*v, (j / 10) as u64 + 1, "at {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_uses_multiple_workers_above_grain() {
+        let mut data = vec![0u64; MIN_PARALLEL_ELEMS * 4];
+        let ids = Mutex::new(HashSet::new());
+        Executor::new(4).for_each_chunk(&mut data, 64, |i, c| {
+            ids.lock()
+                .unwrap()
+                .insert(format!("{:?}", std::thread::current().id()));
+            for v in c.iter_mut() {
+                *v = i as u64;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert!(ids.into_inner().unwrap().len() > 1, "expected multiple workers");
+        for (j, v) in data.iter().enumerate() {
+            assert_eq!(*v, (j / 64) as u64);
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_over_borrowed_input() {
+        // Non-'static closures: read a borrowed source while writing chunks.
+        let src: Vec<f64> = (0..64).map(|i| i as f64).collect();
+        let mut dst = vec![0.0f64; 64];
+        let src_ref = &src;
+        Executor::new(3).for_each_chunk(&mut dst, 8, |i, c| {
+            for (k, v) in c.iter_mut().enumerate() {
+                *v = 2.0 * src_ref[i * 8 + k];
+            }
+        });
+        for (i, v) in dst.iter().enumerate() {
+            assert_eq!(*v, 2.0 * i as f64);
+        }
+    }
+
+    #[test]
+    fn serial_matches_parallel_results() {
+        let a = Executor::serial().map(50, |i| (i as f64).sqrt());
+        let b = Executor::new(8).map(50, |i| (i as f64).sqrt());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn override_wins_over_env() {
+        set_num_threads(3);
+        assert_eq!(num_threads(), 3);
+        set_num_threads(0);
+        assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let mut empty: Vec<u8> = vec![];
+        Executor::new(8).for_each_chunk(&mut empty, 4, |_, _| panic!("no chunks"));
+        // Zero-sized sub-problems are a no-op, not a panic (serial parity).
+        Executor::new(8).for_each_chunk(&mut empty, 0, |_, _| panic!("no chunks"));
+        let mut one = vec![7u8];
+        Executor::new(8).for_each_chunk(&mut one, 4, |i, c| {
+            assert_eq!(i, 0);
+            c[0] = 9;
+        });
+        assert_eq!(one, vec![9]);
+    }
+}

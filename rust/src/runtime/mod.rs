@@ -7,6 +7,15 @@
 //! cache) and [`Executable`] marshals [`Tensor`]s across the PJRT
 //! boundary.
 //!
+//! **Feature gating:** the PJRT bindings come from the `xla` crate, which
+//! is not vendored and not resolvable offline. With the default feature
+//! set this module compiles a *stub* with the same API surface: manifest
+//! loading and parameter initialization work (they are pure Rust), while
+//! [`Engine::load`] / [`Executable::run`] return a descriptive error.
+//! Building with `--features pjrt` selects the real implementation, which
+//! additionally requires adding `xla` to `rust/Cargo.toml` in an
+//! environment where it resolves.
+//!
 //! Performance notes (§Perf in EXPERIMENTS.md): parameters are uploaded
 //! once per step as literals; the dominant cost on the hot path is
 //! `buffer_from_host` + `to_literal_sync` copies, which we minimize by
@@ -19,12 +28,18 @@ mod manifest;
 pub use manifest::{ArtifactEntry, Manifest, ParamSpec};
 
 use crate::tensor::Tensor;
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
+
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, bail};
+#[cfg(feature = "pjrt")]
+use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
 /// A compiled artifact plus its manifest entry.
+#[cfg(feature = "pjrt")]
 pub struct Executable {
     pub entry: ArtifactEntry,
     exe: xla::PjRtLoadedExecutable,
@@ -33,6 +48,7 @@ pub struct Executable {
     pub exec_calls: std::cell::Cell<u64>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Run with the given inputs (params ++ extra inputs, in manifest
     /// order). Returns the flattened output tuple as host tensors.
@@ -61,6 +77,7 @@ impl Executable {
 }
 
 /// Convert a host tensor to an XLA literal without intermediate copies.
+#[cfg(feature = "pjrt")]
 pub fn tensor_to_literal(t: &Tensor) -> xla::Literal {
     let mut lit = xla::Literal::create_from_shape(
         xla::PrimitiveType::F32,
@@ -71,6 +88,7 @@ pub fn tensor_to_literal(t: &Tensor) -> xla::Literal {
 }
 
 /// Convert an XLA literal (f32 array) back to a host tensor.
+#[cfg(feature = "pjrt")]
 pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
     let shape = lit.array_shape()?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -79,6 +97,7 @@ pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
 }
 
 /// The runtime engine: one PJRT client + a compile cache.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     artifacts_dir: PathBuf,
@@ -88,11 +107,10 @@ pub struct Engine {
     pub compile_seconds: f64,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     pub fn new(artifacts_dir: &Path) -> Result<Engine> {
-        let manifest_path = artifacts_dir.join("manifest.json");
-        let manifest = Manifest::load(&manifest_path)
-            .with_context(|| format!("loading {manifest_path:?} — run `make artifacts`"))?;
+        let manifest = load_manifest(artifacts_dir)?;
         let client = xla::PjRtClient::cpu()?;
         Ok(Engine {
             client,
@@ -140,23 +158,96 @@ impl Engine {
     /// Initialize parameters for an artifact from its manifest specs
     /// (Gaussian with the recorded std; biases zero), seeded.
     pub fn init_params(&self, entry: &ArtifactEntry, seed: u64) -> Vec<Tensor> {
-        let mut rng = crate::rng::Rng::new(seed);
-        entry
-            .params
-            .iter()
-            .map(|p| {
-                if p.std == 0.0 {
-                    Tensor::zeros(&p.shape)
-                } else {
-                    let n: usize = p.shape.iter().product();
-                    Tensor::from_vec(p.shape.clone(), rng.normal_vec(n, p.std))
-                }
-            })
-            .collect()
+        init_params_impl(entry, seed)
     }
 }
 
-#[cfg(test)]
+/// Stub compiled when the `pjrt` feature is off: manifest metadata and
+/// parameter initialization keep working, execution errors out.
+#[cfg(not(feature = "pjrt"))]
+pub struct Executable {
+    pub entry: ArtifactEntry,
+    /// Cumulative device-execution time, for the Fig. 9 breakdown.
+    pub exec_seconds: std::cell::Cell<f64>,
+    pub exec_calls: std::cell::Cell<u64>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Executable {
+    /// Always errors: there is no device runtime in a stub build.
+    pub fn run(&self, _inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        Err(anyhow::anyhow!(
+            "{}: artifact execution requires the `pjrt` feature (xla crate)",
+            self.entry.name
+        ))
+    }
+}
+
+/// Stub engine: loads the manifest, initializes parameters, reports a stub
+/// platform; `load` errors with build instructions.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    artifacts_dir: PathBuf,
+    pub manifest: Manifest,
+    /// Cumulative compile time (Fig. 9 / §Perf bookkeeping).
+    pub compile_seconds: f64,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = load_manifest(artifacts_dir)?;
+        Ok(Engine {
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            manifest,
+            compile_seconds: 0.0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (built without the `pjrt` feature)".to_string()
+    }
+
+    /// Always errors in a stub build; the artifact dir is reported so the
+    /// caller knows what *would* have been compiled.
+    pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        Err(anyhow::anyhow!(
+            "cannot compile artifact {name:?} from {}: built without the \
+             `pjrt` feature (the xla crate is not vendored offline)",
+            self.artifacts_dir.display()
+        ))
+    }
+
+    /// Initialize parameters for an artifact from its manifest specs
+    /// (Gaussian with the recorded std; biases zero), seeded.
+    pub fn init_params(&self, entry: &ArtifactEntry, seed: u64) -> Vec<Tensor> {
+        init_params_impl(entry, seed)
+    }
+}
+
+fn load_manifest(artifacts_dir: &Path) -> Result<Manifest> {
+    let manifest_path = artifacts_dir.join("manifest.json");
+    Manifest::load(&manifest_path)
+        .with_context(|| format!("loading {manifest_path:?} — run `make artifacts`"))
+}
+
+fn init_params_impl(entry: &ArtifactEntry, seed: u64) -> Vec<Tensor> {
+    let mut rng = crate::rng::Rng::new(seed);
+    entry
+        .params
+        .iter()
+        .map(|p| {
+            if p.std == 0.0 {
+                Tensor::zeros(&p.shape)
+            } else {
+                let n: usize = p.shape.iter().product();
+                Tensor::from_vec(p.shape.clone(), rng.normal_vec(n, p.std))
+            }
+        })
+        .collect()
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 
@@ -230,5 +321,29 @@ mod tests {
         let lit = tensor_to_literal(&t);
         let back = literal_to_tensor(&lit).unwrap();
         assert_eq!(back, t);
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_errors_without_manifest() {
+        let dir = std::env::temp_dir().join("mpno_no_artifacts_here");
+        let err = Engine::new(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"), "{err:#}");
+    }
+
+    #[test]
+    fn stub_load_reports_missing_feature() {
+        // Fabricate an engine with an empty manifest to exercise load().
+        let mut eng = Engine {
+            artifacts_dir: PathBuf::from("/nonexistent"),
+            manifest: Manifest { artifacts: vec![] },
+            compile_seconds: 0.0,
+        };
+        let err = eng.load("fno_darcy_r32_full_none_fwd").unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
     }
 }

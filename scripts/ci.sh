@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 CI for the Rust workspace: release build + full test suite, then
+# a deterministic single-threaded re-run of the parallel parity suite.
+#
+# PALLAS_THREADS=1 pins the parallel executor to one worker (see
+# rust/src/parallel/mod.rs), so a parity failure reported by the normal
+# run can be re-checked without scheduling in play: if it persists at one
+# thread the kernel itself is wrong; if it disappears the parallel
+# partitioning is at fault. Data generation is thread-count invariant by
+# construction (per-sample PRNG streams), which the suite also asserts.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+
+echo "== deterministic single-threaded parity re-run (PALLAS_THREADS=1) =="
+PALLAS_THREADS=1 cargo test -q --test parallel_parity
