@@ -1,13 +1,17 @@
 //! FFT substrate benchmarks across precisions — quantifies the cost of
-//! the per-butterfly rounding emulation, the radix-2 vs Bluestein gap and
-//! the serial-vs-parallel throughput of the batched 2-D drivers.
-//! Run: `cargo bench --bench bench_fft` (threads via PALLAS_THREADS)
+//! the per-butterfly rounding emulation, the radix-2 vs Bluestein gap,
+//! the serial-vs-parallel throughput of the batched 2-D drivers, and the
+//! planned/truncated/fused spectral-conv engine against its composed
+//! full-FFT baseline (rows recorded in `BENCH_spectral.json`).
+//! Run: `cargo bench --bench bench_fft` (threads via PALLAS_THREADS;
+//! MPNO_BENCH_SMOKE=1 for the 1-warmup/1-iter CI smoke mode)
 
-use mpno::bench::{bench_auto, speedup};
-use mpno::fft::{fft, fft2, fft2_batch, fft2_with};
+use mpno::bench::{bench_auto, bench_json_path, smoke_mode, speedup, update_bench_json};
+use mpno::fft::{fft, fft2, fft2_batch, fft2_with, Plan};
 use mpno::fp::{Cplx, F16};
 use mpno::parallel::Executor;
 use mpno::rng::Rng;
+use mpno::spectral::bench_ns_case;
 
 fn signal<S: mpno::fp::Scalar>(n: usize, seed: u64) -> Vec<Cplx<S>> {
     let mut rng = Rng::new(seed);
@@ -105,6 +109,54 @@ fn main() {
         );
         println!("{parallel}");
         println!("  -> speedup {:.2}x", speedup(&serial, &parallel));
+    }
+
+    // Planned vs ad-hoc 1-D kernels: same arithmetic, cached twiddles.
+    for n in [128usize, 1024, 243] {
+        let base: Vec<Cplx<f64>> = signal(n, 6);
+        let b1 = base.clone();
+        let adhoc = bench_auto(&format!("fft f64 n={n} ad-hoc"), 0.3, move || {
+            let mut x = b1.clone();
+            fft(&mut x);
+            std::hint::black_box(x[0].re);
+        });
+        println!("{adhoc}");
+        let plan = Plan::<f64>::forward(n);
+        let mut scratch = Vec::new();
+        let planned = bench_auto(&format!("fft f64 n={n} planned"), 0.3, move || {
+            let mut x = base.clone();
+            plan.apply(&mut x, &mut scratch);
+            std::hint::black_box(x[0].re);
+        });
+        println!("{planned}");
+        println!("  -> planned speedup {:.2}x", speedup(&adhoc, &planned));
+    }
+
+    // Fused mode-truncated spectral layer vs the composed full-FFT
+    // pipeline at the paper's NS shape (batch 8 x 128^2, width 64,
+    // k_max 16; CPU-quick shape under MPNO_BENCH_SMOKE). The triple is
+    // shared with `mpno bench-par --json` via `spectral::bench_ns_case`
+    // so the two reports cannot drift.
+    {
+        let report = bench_ns_case(smoke_mode(), 1.0, 7, &par);
+        println!("\n-- fused spectral layer ({}) --", report.shape);
+        println!("{}", report.composed);
+        println!("{}", report.fused_serial);
+        println!("{}", report.fused_parallel);
+        println!(
+            "  -> fused speedup: {:.2}x serial, {:.2}x at {} threads",
+            speedup(&report.composed, &report.fused_serial),
+            speedup(&report.composed, &report.fused_parallel),
+            report.threads
+        );
+        let path = bench_json_path();
+        // Smoke rows (1 iter, quick shape) land in their own section so
+        // CI runs never clobber the recorded measurement-grade numbers.
+        let section = mpno::bench::bench_json_section("bench_fft_spectral", false);
+        match update_bench_json(&path, &section, report.json_rows()) {
+            Ok(()) => println!("  [saved {} ({section})]", path.display()),
+            Err(e) => eprintln!("  !! could not write {}: {e:#}", path.display()),
+        }
     }
 
     {

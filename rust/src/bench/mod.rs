@@ -1,9 +1,26 @@
 //! Hand-rolled benchmark harness (criterion is not resolvable offline):
-//! warmup + timed iterations with mean/p50/p95 statistics, and a tiny
+//! warmup + timed iterations with mean/p50/p95 statistics, a tiny
 //! table printer shared by the experiment drivers so every regenerated
-//! paper table prints in a uniform format.
+//! paper table prints in a uniform format, and a machine-readable JSON
+//! report ([`update_bench_json`]) feeding the perf trajectory in
+//! `BENCH_spectral.json`. Setting [`BENCH_SMOKE_ENV`] collapses
+//! [`bench_auto`] to 1 warmup + 1 iteration per case — the CI smoke mode
+//! `scripts/ci.sh` uses to keep every bench and experiment driver
+//! compiled *and executed* without paying measurement-grade runtimes.
 
+use crate::jsonlite::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+/// Env var: when set to a non-empty value other than `0`, [`bench_auto`]
+/// runs exactly 1 warmup + 1 measured iteration per case.
+pub const BENCH_SMOKE_ENV: &str = "MPNO_BENCH_SMOKE";
+
+/// True when the CI bench-smoke mode is active (see [`BENCH_SMOKE_ENV`]).
+pub fn smoke_mode() -> bool {
+    std::env::var(BENCH_SMOKE_ENV).map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
 
 /// Result statistics for one benchmark case.
 #[derive(Debug, Clone)]
@@ -46,7 +63,12 @@ pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Be
 }
 
 /// Auto-calibrated variant: choose iteration count to hit ~`budget_s`.
+/// Under [`smoke_mode`] the calibration run is skipped and exactly
+/// 1 warmup + 1 iteration execute.
 pub fn bench_auto(name: &str, budget_s: f64, mut f: impl FnMut()) -> BenchStats {
+    if smoke_mode() {
+        return bench(name, 1, 1, f);
+    }
     let t0 = Instant::now();
     f();
     let once = t0.elapsed().as_secs_f64().max(1e-9);
@@ -57,6 +79,90 @@ pub fn bench_auto(name: &str, budget_s: f64, mut f: impl FnMut()) -> BenchStats 
 /// Mean-time speedup of `parallel` over `serial` (>1 means faster).
 pub fn speedup(serial: &BenchStats, parallel: &BenchStats) -> f64 {
     serial.mean_s / parallel.mean_s.max(1e-12)
+}
+
+impl BenchStats {
+    /// Machine-readable form for the JSON bench reports.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::from(self.name.clone()));
+        m.insert("iters".to_string(), Json::from(self.iters));
+        m.insert("mean_s".to_string(), Json::from(self.mean_s));
+        m.insert("p50_s".to_string(), Json::from(self.p50_s));
+        m.insert("p95_s".to_string(), Json::from(self.p95_s));
+        m.insert("min_s".to_string(), Json::from(self.min_s));
+        Json::Obj(m)
+    }
+
+    /// [`BenchStats::to_json`] plus the row-identity fields every
+    /// `BENCH_spectral.json` section shares — the single place the row
+    /// schema is defined, used by both report writers (`bench_fft`,
+    /// `mpno bench-par --json`).
+    pub fn to_json_tagged(&self, case: &str, threads: usize) -> Json {
+        let mut j = self.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("case".to_string(), Json::from(case));
+            m.insert("threads".to_string(), Json::from(threads));
+        }
+        j
+    }
+}
+
+/// Section name for a `BENCH_spectral.json` writer: measurement-grade
+/// rows go to `base`; quick-shape or smoke-mode rows go to a suffixed
+/// section so they can never clobber recorded acceptance numbers.
+pub fn bench_json_section(base: &str, quick: bool) -> String {
+    if smoke_mode() {
+        format!("{base}_smoke")
+    } else if quick {
+        format!("{base}_quick")
+    } else {
+        base.to_string()
+    }
+}
+
+/// Canonical location of the machine-readable spectral bench report:
+/// `BENCH_spectral.json` at the repository root, next to CHANGES.md, so
+/// the perf trajectory is versioned alongside the code it measures.
+/// Resolved from compile-time `CARGO_MANIFEST_DIR`, like every other
+/// repo-relative path in this crate (`cli::repo_root`, `Ctx::new`) —
+/// binaries are expected to run from the tree that built them.
+pub fn bench_json_path() -> PathBuf {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or(manifest)
+        .join("BENCH_spectral.json")
+}
+
+/// Merge `entries` into the JSON report at `path` under `section`,
+/// preserving other sections (each writer — `bench_fft`, `mpno
+/// bench-par` — owns one section and they may run in any order). A
+/// missing file starts a fresh document; an existing file that is not a
+/// parsable JSON object is an error, never silently discarded — other
+/// sections hold recorded acceptance numbers.
+pub fn update_bench_json(path: &Path, section: &str, entries: Vec<Json>) -> anyhow::Result<()> {
+    let mut doc = match std::fs::read_to_string(path) {
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => BTreeMap::new(),
+        Err(e) => {
+            anyhow::bail!("reading {}: {e} (refusing to overwrite blindly)", path.display())
+        }
+        Ok(s) => match Json::parse(&s) {
+            Ok(Json::Obj(m)) => m,
+            Ok(_) | Err(_) => anyhow::bail!(
+                "existing {} is not a JSON object; refusing to overwrite it \
+                 (fix or remove the file first)",
+                path.display()
+            ),
+        },
+    };
+    doc.insert(section.to_string(), Json::Arr(entries));
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    std::fs::write(path, Json::Obj(doc).render() + "\n")?;
+    Ok(())
 }
 
 /// Format seconds human-readably.
@@ -193,6 +299,36 @@ mod tests {
             min_s: mean,
         };
         assert!((speedup(&mk(1.0), &mk(0.25)) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_json_report_merges_sections() {
+        let path =
+            std::env::temp_dir().join(format!("mpno_bench_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let s = BenchStats {
+            name: "a".into(),
+            iters: 1,
+            mean_s: 0.5,
+            p50_s: 0.5,
+            p95_s: 0.5,
+            min_s: 0.5,
+        };
+        update_bench_json(&path, "alpha", vec![s.to_json()]).unwrap();
+        // Second section must not clobber the first.
+        update_bench_json(&path, "beta", vec![Json::from("x")]).unwrap();
+        let doc = Json::parse(std::fs::read_to_string(&path).unwrap().trim()).unwrap();
+        let entry = &doc.get("alpha").unwrap().as_arr().unwrap()[0];
+        assert_eq!(entry.str_field("name").unwrap(), "a");
+        assert!((entry.get("mean_s").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(doc.get("beta").unwrap().as_arr().unwrap().len(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bench_json_path_is_repo_root() {
+        let p = bench_json_path();
+        assert!(p.ends_with("BENCH_spectral.json"));
     }
 
     #[test]

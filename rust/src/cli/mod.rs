@@ -4,8 +4,9 @@
 //! mpno info                          list artifacts + platform
 //! mpno gen-data --dataset darcy --res 32 --n 48 [--seed S]
 //! mpno train --artifact NAME [--epochs N] [--lr X] [--schedule paper]
-//! mpno exp <id|all> [--quick]       regenerate a paper table/figure
-//! mpno bench-par [--quick]          serial vs parallel kernel throughput
+//! mpno exp <id|all> [--quick] [--json]  regenerate a paper table/figure
+//! mpno bench-par [--quick] [--json] serial vs parallel kernel throughput
+//!                                   (--json -> BENCH_spectral.json)
 //! mpno dump-fp-vectors              fp-emulation vectors for pytest
 //! ```
 //!
@@ -123,8 +124,11 @@ USAGE:
              [--checkpoint PATH]     (resumes if the file exists)
   mpno eval --checkpoint PATH [--artifact FWD_NAME]
              evaluate a saved model, incl. zero-shot at other resolutions
-  mpno exp <id|all> [--quick]     ids: {}
-  mpno bench-par [--quick]        serial vs parallel kernel throughput
+  mpno exp <id|all> [--quick] [--json]   ids: {}
+  mpno bench-par [--quick] [--json]      serial vs parallel kernel
+                                  throughput incl. the fused spectral
+                                  layer; --json appends machine-readable
+                                  rows to BENCH_spectral.json
   mpno dump-fp-vectors
 
 Global: --threads N   worker threads for the parallel kernels
@@ -280,15 +284,17 @@ fn cmd_exp(args: &Args) -> Result<()> {
     let id = args
         .positional
         .first()
-        .context("usage: mpno exp <id|all> [--quick]")?
+        .context("usage: mpno exp <id|all> [--quick] [--json]")?
         .clone();
     let mut ctx = Ctx::new(args.has("quick"));
     ctx.seed = args.get_u64("seed", 0);
+    ctx.json = args.has("json");
     experiments::run(&id, &ctx)
 }
 
-/// Serial-vs-parallel throughput report for the FFT + contraction hot
-/// paths (alias for `mpno exp parbench`).
+/// Serial-vs-parallel throughput report for the FFT + contraction +
+/// fused spectral hot paths (alias for `mpno exp parbench`); `--json`
+/// additionally writes the rows to `BENCH_spectral.json`.
 fn cmd_bench_par(args: &Args) -> Result<()> {
     println!(
         "parallel executor: {} worker threads (override with --threads / {})",
@@ -297,6 +303,7 @@ fn cmd_bench_par(args: &Args) -> Result<()> {
     );
     let mut ctx = Ctx::new(args.has("quick"));
     ctx.seed = args.get_u64("seed", 0);
+    ctx.json = args.has("json");
     experiments::run("parbench", &ctx)
 }
 

@@ -13,11 +13,63 @@
 
 use super::expr::EinsumExpr;
 use super::path::{PlannedPath, PathStrategy};
-use crate::fp::Cplx;
+use crate::fp::{Cplx, Scalar};
 use crate::parallel::Executor;
 use crate::tensor::{for_each_index, CTensor, NdArray, Tensor};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
+
+/// The FNO spectral contraction `ixy,ioxy->oxy` for one sample, generic
+/// over [`Scalar`] precision — the per-mode channel mixing at the heart
+/// of the fused spectral layer ([`crate::spectral`]).
+///
+/// This replays, op for op, the pairwise kernel [`contract_complex`]
+/// executes for that expression under the memory-greedy path (Option C):
+/// permute to (modes, i) × (modes, i, o), one batched-matmul row per
+/// mode with the `i` accumulation in ascending order from a zeroed
+/// output, then permute to (o, modes). At f64 the result is therefore
+/// bit-identical to the einsum engine's (asserted by
+/// `contract_modes_matches_einsum_engine` below); at lower precisions it
+/// is the serial oracle the fused engine is tested against.
+///
+/// Layouts: `x` is (ci, n_modes) channel-major; `w_mio` is
+/// (n_modes, ci, co) mode-major (the permuted copy a
+/// `spectral::SpectralConv2d` materializes once at construction);
+/// `tmp_mo` ((n_modes, co)) is caller-provided scratch so a batch loop
+/// allocates nothing; `out` is (co, n_modes).
+pub fn contract_modes<S: Scalar>(
+    x: &[Cplx<S>],
+    w_mio: &[Cplx<S>],
+    ci: usize,
+    co: usize,
+    n_modes: usize,
+    tmp_mo: &mut [Cplx<S>],
+    out: &mut [Cplx<S>],
+) {
+    assert_eq!(x.len(), ci * n_modes, "x must be (ci, n_modes)");
+    assert_eq!(w_mio.len(), n_modes * ci * co, "w must be (n_modes, ci, co)");
+    assert_eq!(tmp_mo.len(), n_modes * co, "tmp must be (n_modes, co)");
+    assert_eq!(out.len(), co * n_modes, "out must be (co, n_modes)");
+    for v in tmp_mo.iter_mut() {
+        *v = Cplx::zero();
+    }
+    for m in 0..n_modes {
+        let orow = &mut tmp_mo[m * co..(m + 1) * co];
+        for ic in 0..ci {
+            let av = x[ic * n_modes + m];
+            let brow = &w_mio[(m * ci + ic) * co..(m * ci + ic + 1) * co];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o = o.add(av.mul(bv));
+            }
+        }
+    }
+    // Output permutation (m, o) -> (o, m): pure data movement, exact.
+    for o in 0..co {
+        for m in 0..n_modes {
+            out[o * n_modes + m] = tmp_mo[m * co + o];
+        }
+    }
+}
 
 /// View-as-real strategy (Table 8 options).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -452,6 +504,40 @@ mod tests {
                     got.rel_fro(&want)
                 );
             }
+        }
+    }
+
+    #[test]
+    fn contract_modes_matches_einsum_engine() {
+        // The generic kernel must be bit-identical (at f64) to the real
+        // pairwise engine on the per-sample FNO expression under the
+        // memory-greedy path — the fused spectral layer leans on this.
+        let (ci, co, mh, mw) = (3usize, 5usize, 4usize, 6usize);
+        let n_modes = mh * mw;
+        let x = rand_ct(&[ci, mh, mw], 70);
+        let w = rand_ct(&[ci, co, mh, mw], 71);
+        let expr = EinsumExpr::parse("ixy,ioxy->oxy").unwrap();
+        let path =
+            plan(&expr, &[x.shape(), w.shape()], PathStrategy::MemoryGreedy).unwrap();
+        let want =
+            contract_complex(&expr, &[x.clone(), w.clone()], &path, ViewAsReal::OptionC)
+                .unwrap();
+
+        // (ci, co, mh, mw) -> (mh*mw, ci, co) mode-major weight copy.
+        let wd = w.data();
+        let mut w_mio = vec![Cplx::<f64>::zero(); n_modes * ci * co];
+        for i in 0..ci {
+            for o in 0..co {
+                for m in 0..n_modes {
+                    w_mio[(m * ci + i) * co + o] = wd[(i * co + o) * n_modes + m];
+                }
+            }
+        }
+        let mut tmp = vec![Cplx::<f64>::zero(); n_modes * co];
+        let mut out = vec![Cplx::<f64>::zero(); co * n_modes];
+        contract_modes(x.data(), &w_mio, ci, co, n_modes, &mut tmp, &mut out);
+        for (g, wv) in out.iter().zip(want.data()) {
+            assert_eq!(g.to_f64(), wv.to_f64(), "bitwise mismatch");
         }
     }
 

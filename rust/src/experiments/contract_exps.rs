@@ -3,14 +3,16 @@
 //! memory model supplying the paper-scale byte counts.
 
 use super::Ctx;
-use crate::bench::{bench_auto, speedup, Table};
+use crate::bench::{bench_auto, bench_json_path, speedup, update_bench_json, BenchStats, Table};
 use crate::contract::{
     contract_complex, contract_complex_with, plan, EinsumExpr, PathCache, PathStrategy,
     ViewAsReal,
 };
 use crate::fp::Cplx;
+use crate::jsonlite::Json;
 use crate::parallel::{self, Executor};
 use crate::rng::Rng;
+use crate::spectral::bench_ns_case;
 use crate::tensor::CTensor;
 use anyhow::Result;
 
@@ -150,11 +152,14 @@ pub fn parallel_einsum_cases(b: usize, c: usize, m: usize) -> Vec<(String, Strin
     ]
 }
 
-/// Serial vs parallel kernel throughput on the two hot paths (batched
-/// 2-D FFT and einsum execution) — the executor ablation backing the
-/// paper's claim that the half-precision pipeline is memory-bound compute
-/// worth parallelizing. Thread count comes from `--threads` /
-/// `PALLAS_THREADS` (see [`crate::parallel::num_threads`]).
+/// Serial vs parallel kernel throughput on the hot paths (batched 2-D
+/// FFT, einsum execution, and the fused mode-truncated spectral layer
+/// vs its composed full-FFT baseline) — the executor ablation backing
+/// the paper's claim that the half-precision pipeline is memory-bound
+/// compute worth parallelizing. Thread count comes from `--threads` /
+/// `PALLAS_THREADS` (see [`crate::parallel::num_threads`]). With
+/// `ctx.json` (CLI `--json`) the rows are also written to the
+/// `bench_par` section of `BENCH_spectral.json`.
 pub fn parbench(ctx: &Ctx) -> Result<()> {
     let par = Executor::current();
     let mut t = Table::new(
@@ -164,6 +169,8 @@ pub fn parbench(ctx: &Ctx) -> Result<()> {
         ),
         &["kernel", "serial mean", "parallel mean", "speedup"],
     );
+    let mut json_rows: Vec<Json> = vec![];
+    let tag = |s: &BenchStats, case: &str, threads: usize| -> Json { s.to_json_tagged(case, threads) };
 
     // Batched 2-D FFT at FNO spectral-layer shape.
     let (b, hw) = parallel_fft_case(ctx.quick);
@@ -195,6 +202,8 @@ pub fn parbench(ctx: &Ctx) -> Result<()> {
         crate::bench::fmt_secs(p_fft.mean_s),
         format!("{:.2}x", speedup(&s_fft, &p_fft)),
     ]);
+    json_rows.push(tag(&s_fft, &format!("fft2_batch {b}x{hw}x{hw} f64"), 1));
+    json_rows.push(tag(&p_fft, &format!("fft2_batch {b}x{hw}x{hw} f64"), par.threads()));
 
     // Einsum execution: dense FNO and 5-operand CP-factorized.
     let (bb, c, m) = if ctx.quick { (4usize, 16usize, 8usize) } else { (8, 32, 16) };
@@ -220,11 +229,42 @@ pub fn parbench(ctx: &Ctx) -> Result<()> {
             std::hint::black_box(out.len());
         });
         t.row(&[
-            label,
+            label.clone(),
             crate::bench::fmt_secs(s_c.mean_s),
             crate::bench::fmt_secs(p_c.mean_s),
             format!("{:.2}x", speedup(&s_c, &p_c)),
         ]);
+        json_rows.push(tag(&s_c, &label, 1));
+        json_rows.push(tag(&p_c, &label, par.threads()));
+    }
+
+    // Fused mode-truncated spectral layer vs the composed full-FFT
+    // pipeline — the ISSUE 3 acceptance measurement. Non-quick runs use
+    // the paper's NS shape (batch 8 × 128², width 64, k_max 16). The
+    // triple is shared with `cargo bench --bench bench_fft` via
+    // `spectral::bench_ns_case` so the two reports cannot drift.
+    let report = bench_ns_case(ctx.quick, budget, ctx.seed + 40, &par);
+    t.row(&[
+        format!("{} composed->fused serial", report.shape),
+        crate::bench::fmt_secs(report.composed.mean_s),
+        crate::bench::fmt_secs(report.fused_serial.mean_s),
+        format!("{:.2}x", speedup(&report.composed, &report.fused_serial)),
+    ]);
+    t.row(&[
+        format!("{} composed->fused {}t", report.shape, report.threads),
+        crate::bench::fmt_secs(report.composed.mean_s),
+        crate::bench::fmt_secs(report.fused_parallel.mean_s),
+        format!("{:.2}x", speedup(&report.composed, &report.fused_parallel)),
+    ]);
+    json_rows.extend(report.json_rows());
+
+    if ctx.json {
+        let path = bench_json_path();
+        // Quick-shape and smoke rows go to suffixed sections so sanity
+        // and CI runs never clobber the recorded acceptance numbers.
+        let section = crate::bench::bench_json_section("bench_par", ctx.quick);
+        update_bench_json(&path, &section, json_rows)?;
+        println!("[saved {} ({section})]", path.display());
     }
     ctx.emit("parbench", &t)
 }

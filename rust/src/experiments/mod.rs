@@ -25,6 +25,9 @@ pub struct Ctx {
     /// Smaller datasets / fewer epochs for CI-speed runs.
     pub quick: bool,
     pub seed: u64,
+    /// Also write machine-readable output (`BENCH_spectral.json`) for
+    /// drivers that support it (`parbench`). CLI: `--json`.
+    pub json: bool,
 }
 
 impl Ctx {
@@ -36,6 +39,7 @@ impl Ctx {
             results_dir: root.join("results"),
             quick,
             seed: 0,
+            json: false,
         }
     }
 

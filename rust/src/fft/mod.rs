@@ -21,6 +21,24 @@
 //! drivers agree with the serial references ([`fft2`], [`fft3`]) at every
 //! [`Scalar`] precision (see `tests/parallel_parity.rs`).
 
+//! For repeated transforms of the same size, [`plan`] caches the
+//! f64-derived constants (twiddles, bit-reversal, Bluestein chirp and
+//! kernel spectra) so results stay bit-identical while the per-butterfly
+//! `cos`/`sin` cost disappears, and [`trunc`] provides mode-truncated
+//! separable 2-D passes for FNO-style spectral layers (only `k_max`
+//! modes per side survive, so most 1-D transforms of the full passes are
+//! wasted work). The fused spectral layer built on both lives in
+//! [`crate::spectral`].
+
+pub mod plan;
+pub mod trunc;
+
+pub use plan::{plan_for, Plan};
+pub use trunc::{
+    embed_modes, fft2_kept, fft2_trunc, ifft2_kept, ifft2_trunc, kept_indices, truncate_modes,
+    SpectralScratch,
+};
+
 use crate::fp::{Cplx, Scalar};
 use crate::parallel::Executor;
 
@@ -133,11 +151,13 @@ fn bluestein<S: Scalar>(x: &mut [Cplx<S>], inverse: bool) {
     let mut a = vec![Cplx::<S>::zero(); m];
     let mut b = vec![Cplx::<S>::zero(); m];
     for j in 0..n {
-        a[j] = x[j].mul(chirp(j));
-        let c = chirp(j).conj();
-        b[j] = c;
+        // One cis evaluation per j: a takes the chirp, b its conjugate.
+        let c = chirp(j);
+        a[j] = x[j].mul(c);
+        let cc = c.conj();
+        b[j] = cc;
         if j > 0 {
-            b[m - j] = c;
+            b[m - j] = cc;
         }
     }
     radix2(&mut a, false);

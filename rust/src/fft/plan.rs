@@ -1,0 +1,365 @@
+//! Planned FFTs: per-(n, direction) cached twiddle tables, bit-reversal
+//! permutations and Bluestein chirp/b-spectra.
+//!
+//! # Why planned results are bit-identical to the ad-hoc kernels
+//!
+//! The serial kernels in [`super`] derive every constant from the same
+//! f64 formula — `Cplx::<S>::cis(theta)` evaluates `cos`/`sin` in f64 and
+//! rounds *once* into `S` (the precomputed-table model of real FFT
+//! libraries). A [`Plan`] evaluates exactly those formulas, at exactly the
+//! same `theta` arguments, once at construction instead of once per
+//! butterfly per call. The butterfly/convolution arithmetic then consumes
+//! the cached values in the same order as the ad-hoc kernel, so every
+//! output element sees the *same sequence of rounded operations* at every
+//! [`Scalar`] precision and the results are bit-identical (enforced by
+//! `tests/spectral_parity.rs`). Concretely:
+//!
+//! * radix-2 twiddles: `cis(sign·2π/len · k)` for each stage length
+//!   `len` and `k < len/2` — cached flat with stage offset `len/2 − 1`;
+//! * the bit-reversal permutation — a pure index table;
+//! * Bluestein: the chirp `cis(sign·π·(j² mod 2n)/n)`, its conjugate
+//!   padded into the length-`m` kernel, and that kernel's forward
+//!   spectrum (computed once *in `S`* by the same cached-twiddle radix-2,
+//!   so it matches the per-call `radix2(&mut b, false)` of the ad-hoc
+//!   path bit-for-bit).
+//!
+//! Plans are immutable after construction and shared via `Arc`; a global
+//! per-precision cache ([`plan_for`]) memoizes them by (n, direction).
+//! Hot paths (the fused spectral engine, truncated 2-D passes, spectral
+//! resampling) hold their plans directly so the cache lock is off the
+//! per-transform path.
+
+use crate::fp::{Cplx, Scalar};
+use std::any::{Any, TypeId};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Cached tables for an in-place radix-2 transform of power-of-two size.
+#[derive(Debug)]
+pub(crate) struct RadixTables<S: Scalar> {
+    n: usize,
+    /// `bitrev[i]` = bit-reversed index of `i`; applied as `swap(i, bitrev[i])`
+    /// for `i < bitrev[i]`, matching the serial kernel's incremental loop.
+    bitrev: Vec<u32>,
+    /// Stage twiddles, flattened: stage of length `len` starts at
+    /// `len/2 − 1` and holds `len/2` entries `cis(sign·2π·k/len)`.
+    twiddles: Vec<Cplx<S>>,
+}
+
+impl<S: Scalar> RadixTables<S> {
+    fn new(n: usize, inverse: bool) -> Self {
+        debug_assert!(n.is_power_of_two());
+        // Same incremental bit-reversal walk as the serial kernel.
+        let mut bitrev = vec![0u32; n];
+        let mut j = 0usize;
+        for i in 1..n {
+            let mut bit = n >> 1;
+            while j & bit != 0 {
+                j ^= bit;
+                bit >>= 1;
+            }
+            j |= bit;
+            bitrev[i] = j as u32;
+        }
+        let sign = if inverse { 1.0 } else { -1.0 };
+        let mut twiddles = Vec::with_capacity(n.saturating_sub(1));
+        let mut len = 2usize;
+        while len <= n {
+            let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+            for k in 0..len / 2 {
+                twiddles.push(Cplx::<S>::cis(ang * k as f64));
+            }
+            len <<= 1;
+        }
+        RadixTables { n, bitrev, twiddles }
+    }
+
+    /// In-place radix-2 pass from cached tables — the same operation
+    /// sequence as the serial `radix2`, with table lookups replacing the
+    /// per-butterfly `cis` evaluation.
+    fn apply(&self, x: &mut [Cplx<S>]) {
+        let n = self.n;
+        debug_assert_eq!(x.len(), n);
+        for i in 1..n {
+            let j = self.bitrev[i] as usize;
+            if i < j {
+                x.swap(i, j);
+            }
+        }
+        let mut len = 2usize;
+        while len <= n {
+            let half = len / 2;
+            let tw = &self.twiddles[half - 1..half - 1 + half];
+            for start in (0..n).step_by(len) {
+                for k in 0..half {
+                    let w = tw[k];
+                    let u = x[start + k];
+                    let v = x[start + k + half].mul(w);
+                    x[start + k] = u.add(v);
+                    x[start + k + half] = u.sub(v);
+                }
+            }
+            len <<= 1;
+        }
+    }
+}
+
+/// Bluestein chirp-z tables for an arbitrary size `n`.
+#[derive(Debug)]
+struct BluesteinTables<S: Scalar> {
+    /// Convolution size: next power of two ≥ 2n−1.
+    m: usize,
+    /// `chirp[j] = cis(sign·π·(j² mod 2n)/n)` for `j < n`.
+    chirp: Vec<Cplx<S>>,
+    /// Forward spectrum of the padded conjugate-chirp kernel, computed in
+    /// `S` by the cached-twiddle radix-2 — identical to the ad-hoc path's
+    /// per-call `radix2(&mut b, false)`.
+    b_spec: Vec<Cplx<S>>,
+    m_fwd: RadixTables<S>,
+    m_inv: RadixTables<S>,
+}
+
+impl<S: Scalar> BluesteinTables<S> {
+    fn new(n: usize, inverse: bool) -> Self {
+        let sign = if inverse { 1.0 } else { -1.0 };
+        let m = (2 * n - 1).next_power_of_two();
+        let chirp: Vec<Cplx<S>> = (0..n)
+            .map(|j| {
+                // j² mod 2n keeps the angle small & exact (as in the
+                // serial kernel).
+                let jj = ((j as u128 * j as u128) % (2 * n as u128)) as f64;
+                Cplx::cis(sign * std::f64::consts::PI * jj / n as f64)
+            })
+            .collect();
+        let m_fwd = RadixTables::new(m, false);
+        let m_inv = RadixTables::new(m, true);
+        let mut b = vec![Cplx::<S>::zero(); m];
+        for (j, c) in chirp.iter().enumerate() {
+            let cc = c.conj();
+            b[j] = cc;
+            if j > 0 {
+                b[m - j] = cc;
+            }
+        }
+        m_fwd.apply(&mut b);
+        BluesteinTables { m, chirp, b_spec: b, m_fwd, m_inv }
+    }
+}
+
+#[derive(Debug)]
+enum PlanKind<S: Scalar> {
+    /// n ≤ 1: identity.
+    Tiny,
+    Radix2(RadixTables<S>),
+    Bluestein(Box<BluesteinTables<S>>),
+}
+
+/// A reusable 1-D DFT plan for one (size, direction) pair at precision `S`.
+///
+/// Invariant: applying a plan is bit-identical to the ad-hoc serial
+/// [`super::fft`] / [`super::ifft`] at every `Scalar` precision (see the
+/// module docs for why).
+#[derive(Debug)]
+pub struct Plan<S: Scalar> {
+    n: usize,
+    inverse: bool,
+    kind: PlanKind<S>,
+}
+
+impl<S: Scalar> Plan<S> {
+    /// Build a forward-DFT plan of size `n`.
+    pub fn forward(n: usize) -> Plan<S> {
+        Plan::new(n, false)
+    }
+
+    /// Build an inverse-DFT plan of size `n` (1/n-normalized, like
+    /// [`super::ifft`]).
+    pub fn inverse(n: usize) -> Plan<S> {
+        Plan::new(n, true)
+    }
+
+    fn new(n: usize, inverse: bool) -> Plan<S> {
+        let kind = if n <= 1 {
+            PlanKind::Tiny
+        } else if n.is_power_of_two() {
+            PlanKind::Radix2(RadixTables::new(n, inverse))
+        } else {
+            PlanKind::Bluestein(Box::new(BluesteinTables::new(n, inverse)))
+        };
+        Plan { n, inverse, kind }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn is_inverse(&self) -> bool {
+        self.inverse
+    }
+
+    /// Scratch length [`Plan::apply`] needs (0 unless Bluestein).
+    pub fn scratch_len(&self) -> usize {
+        match &self.kind {
+            PlanKind::Bluestein(b) => b.m,
+            _ => 0,
+        }
+    }
+
+    /// Transform `x` in place. `scratch` is grown to [`Plan::scratch_len`]
+    /// on demand and never shrunk, so a caller looping over many
+    /// transforms allocates once.
+    pub fn apply(&self, x: &mut [Cplx<S>], scratch: &mut Vec<Cplx<S>>) {
+        assert_eq!(x.len(), self.n, "plan is for n={}, got {}", self.n, x.len());
+        match &self.kind {
+            PlanKind::Tiny => {}
+            PlanKind::Radix2(t) => t.apply(x),
+            PlanKind::Bluestein(b) => {
+                let n = self.n;
+                let m = b.m;
+                if scratch.len() < m {
+                    scratch.resize(m, Cplx::zero());
+                }
+                let a = &mut scratch[..m];
+                for v in a.iter_mut() {
+                    *v = Cplx::zero();
+                }
+                for j in 0..n {
+                    a[j] = x[j].mul(b.chirp[j]);
+                }
+                b.m_fwd.apply(a);
+                for (av, bv) in a.iter_mut().zip(&b.b_spec) {
+                    *av = av.mul(*bv);
+                }
+                b.m_inv.apply(a);
+                let inv_m = S::from_f64(1.0 / m as f64);
+                for (k, out) in x.iter_mut().enumerate() {
+                    *out = a[k].scale(inv_m).mul(b.chirp[k]);
+                }
+            }
+        }
+        if self.inverse && self.n > 1 {
+            let inv = S::from_f64(1.0 / self.n as f64);
+            for z in x.iter_mut() {
+                *z = z.scale(inv);
+            }
+        }
+    }
+
+    /// Convenience wrapper that allocates its own scratch.
+    pub fn apply_alloc(&self, x: &mut [Cplx<S>]) {
+        let mut scratch = Vec::new();
+        self.apply(x, &mut scratch);
+    }
+}
+
+/// Global per-precision plan cache keyed by (n, direction). Used by entry
+/// points without a natural place to store plans (e.g. spectral
+/// resampling); long-lived engines hold their `Arc<Plan>` directly.
+fn cache() -> &'static Mutex<HashMap<(TypeId, usize, bool), Arc<dyn Any + Send + Sync>>> {
+    static CACHE: OnceLock<Mutex<HashMap<(TypeId, usize, bool), Arc<dyn Any + Send + Sync>>>> =
+        OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Memoized [`Plan`] lookup: builds the plan on first use of each
+/// (precision, n, direction) triple, then returns the shared copy.
+pub fn plan_for<S: Scalar>(n: usize, inverse: bool) -> Arc<Plan<S>> {
+    let key = (TypeId::of::<S>(), n, inverse);
+    if let Some(hit) = cache().lock().expect("plan cache poisoned").get(&key).cloned() {
+        return match hit.downcast::<Plan<S>>() {
+            Ok(p) => p,
+            Err(_) => unreachable!("plan cache type confusion"),
+        };
+    }
+    // Build outside the lock: a Bluestein plan costs a kernel FFT, and
+    // holding the global mutex through it would serialize every other
+    // first-use caller. Racing duplicate builds are harmless — the
+    // first insert wins and losers drop their copy (plans of the same
+    // key are identical by construction).
+    let built = Arc::new(Plan::<S>::new(n, inverse));
+    let mut map = cache().lock().expect("plan cache poisoned");
+    let entry =
+        map.entry(key).or_insert_with(|| built as Arc<dyn Any + Send + Sync>);
+    match entry.clone().downcast::<Plan<S>>() {
+        Ok(p) => p,
+        Err(_) => unreachable!("plan cache type confusion"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{fft, ifft};
+    use crate::fp::{Bf16, F16};
+    use crate::rng::Rng;
+
+    fn signal<S: Scalar>(n: usize, seed: u64) -> Vec<Cplx<S>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let (r, i) = rng.cnormal();
+                Cplx::from_f64(r, i)
+            })
+            .collect()
+    }
+
+    fn bit_identical<S: Scalar>(a: &[Cplx<S>], b: &[Cplx<S>]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| x.to_f64() == y.to_f64())
+    }
+
+    fn planned_matches_adhoc<S: Scalar>(n: usize, seed: u64) {
+        let x: Vec<Cplx<S>> = signal(n, seed);
+        let mut want = x.clone();
+        fft(&mut want);
+        let mut got = x.clone();
+        Plan::<S>::forward(n).apply_alloc(&mut got);
+        assert!(bit_identical(&got, &want), "fwd n={n} {}", S::name());
+
+        let mut want_inv = x.clone();
+        ifft(&mut want_inv);
+        let mut got_inv = x.clone();
+        Plan::<S>::inverse(n).apply_alloc(&mut got_inv);
+        assert!(bit_identical(&got_inv, &want_inv), "inv n={n} {}", S::name());
+    }
+
+    #[test]
+    fn planned_fft_bit_identical_to_adhoc_all_precisions() {
+        // Radix-2 and Bluestein sizes, forward and inverse.
+        for n in [1usize, 2, 4, 8, 64, 128, 3, 5, 12, 100, 243] {
+            planned_matches_adhoc::<f64>(n, 7 + n as u64);
+            planned_matches_adhoc::<f32>(n, 7 + n as u64);
+            planned_matches_adhoc::<Bf16>(n, 7 + n as u64);
+            planned_matches_adhoc::<F16>(n, 7 + n as u64);
+        }
+    }
+
+    #[test]
+    fn plan_reuse_is_deterministic() {
+        let n = 60;
+        let x: Vec<Cplx<f64>> = signal(n, 3);
+        let plan = Plan::<f64>::forward(n);
+        let mut scratch = Vec::new();
+        let mut a = x.clone();
+        plan.apply(&mut a, &mut scratch);
+        let mut b = x.clone();
+        plan.apply(&mut b, &mut scratch);
+        assert!(bit_identical(&a, &b));
+        assert!(scratch.len() >= plan.scratch_len());
+    }
+
+    #[test]
+    fn cache_returns_shared_plans() {
+        let a = plan_for::<f64>(48, false);
+        let b = plan_for::<f64>(48, false);
+        assert!(Arc::ptr_eq(&a, &b));
+        let inv = plan_for::<f64>(48, true);
+        assert!(!Arc::ptr_eq(&a, &inv));
+        let other: Arc<Plan<f32>> = plan_for::<f32>(48, false);
+        assert_eq!(other.len(), 48);
+    }
+}

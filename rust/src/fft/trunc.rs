@@ -1,0 +1,331 @@
+//! Mode-truncated separable 2-D passes over planned FFTs.
+//!
+//! FNO keeps only the `k_max` lowest positive and negative frequencies
+//! per axis (16 of 128 in the paper's NS config), so most of a full
+//! `fft2`'s second pass — and most of a full `ifft2`'s first pass — is
+//! spent computing coefficients that are immediately discarded (forward)
+//! or known to be zero (inverse). The kept-mode passes here exploit that
+//! structurally:
+//!
+//! * **forward** ([`fft2_kept`]): row pass over all `h` rows (every
+//!   kept coefficient depends on every input column), then the column
+//!   pass only over the kept columns — `kept_cols.len()` instead of `w`
+//!   length-`h` transforms — then gather the kept rows;
+//! * **inverse** ([`ifft2_kept`]): scatter the kept block into zeroed
+//!   full-width rows and row-transform only the kept rows —
+//!   `kept_rows.len()` instead of `h` length-`w` transforms — then
+//!   column-transform all `w` columns (every output sample depends on
+//!   every kept row).
+//!
+//! # Parity with the serial composed oracle
+//!
+//! Each 1-D transform consumes exactly the values the full-grid pass
+//! would (zeros where the embedded spectrum is zero) through the same
+//! planned kernel, which is itself bit-identical to the ad-hoc serial
+//! `fft`/`ifft` (see [`super::plan`]). Hence
+//! `fft2_kept == truncate_modes(fft2(..))` and
+//! `ifft2_kept == ifft2(embed_modes(..))` hold bit-for-bit at every
+//! [`Scalar`] precision, up to the sign of exact zeros: the oracle's row
+//! pass over an all-zero row can produce `-0.0` components where the
+//! truncated path skips the row and keeps `+0.0`. Signed zeros are
+//! indistinguishable to every downstream add/sub/mul chain in this
+//! crate, and `tests/spectral_parity.rs` asserts `to_f64` equality.
+
+use super::plan::Plan;
+use crate::fp::{Cplx, Scalar};
+
+/// FFT-order indices of the `2·k_max` kept frequencies on an axis of
+/// length `n`: the positive block `[0, k_max)` then the negative block
+/// `[n − k_max, n)`. `2·k_max == n` yields the identity ordering.
+pub fn kept_indices(n: usize, k_max: usize) -> Vec<usize> {
+    assert!(k_max >= 1, "k_max must be >= 1");
+    assert!(2 * k_max <= n, "2*k_max={} exceeds axis length {n}", 2 * k_max);
+    (0..k_max).chain(n - k_max..n).collect()
+}
+
+/// Reusable buffers for the kept-mode passes; grown on demand, never
+/// shrunk, so one arena serves a whole batch of transforms (the
+/// per-worker scratch of the fused spectral engine).
+#[derive(Debug)]
+pub struct SpectralScratch<S: Scalar> {
+    /// Row-pass intermediate (forward: `h·w`; inverse: `kept_rows·w`).
+    rows: Vec<Cplx<S>>,
+    /// One gathered column / scattered line (`max(h, w)`).
+    line: Vec<Cplx<S>>,
+    /// Bluestein convolution scratch for the 1-D plans.
+    blue: Vec<Cplx<S>>,
+}
+
+impl<S: Scalar> SpectralScratch<S> {
+    pub fn new() -> Self {
+        SpectralScratch { rows: Vec::new(), line: Vec::new(), blue: Vec::new() }
+    }
+}
+
+impl<S: Scalar> Default for SpectralScratch<S> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn grow<S: Scalar>(buf: &mut Vec<Cplx<S>>, len: usize) {
+    if buf.len() < len {
+        buf.resize(len, Cplx::zero());
+    }
+}
+
+/// Forward 2-D DFT of a row-major (h, w) buffer, keeping only the
+/// (kept_rows × kept_cols) block of the spectrum. `out` is row-major
+/// (kept_rows.len(), kept_cols.len()), `out[i][j]` holding coefficient
+/// (kept_rows[i], kept_cols[j]) of the full transform. `row_plan` /
+/// `col_plan` must be forward plans of length `w` / `h`.
+pub fn fft2_kept<S: Scalar>(
+    src: &[Cplx<S>],
+    h: usize,
+    w: usize,
+    kept_rows: &[usize],
+    kept_cols: &[usize],
+    row_plan: &Plan<S>,
+    col_plan: &Plan<S>,
+    out: &mut [Cplx<S>],
+    scratch: &mut SpectralScratch<S>,
+) {
+    assert_eq!(src.len(), h * w);
+    assert_eq!(row_plan.len(), w, "row plan length");
+    assert_eq!(col_plan.len(), h, "col plan length");
+    assert!(!row_plan.is_inverse() && !col_plan.is_inverse(), "need forward plans");
+    let (kr, kc) = (kept_rows.len(), kept_cols.len());
+    assert_eq!(out.len(), kr * kc);
+    let SpectralScratch { rows, line, blue } = scratch;
+    // Row pass in full: every kept coefficient mixes all w input columns.
+    grow(rows, h * w);
+    rows[..h * w].copy_from_slice(src);
+    for r in 0..h {
+        row_plan.apply(&mut rows[r * w..(r + 1) * w], blue);
+    }
+    // Column pass on the kept columns only.
+    grow(line, h);
+    for (j, &c) in kept_cols.iter().enumerate() {
+        for r in 0..h {
+            line[r] = rows[r * w + c];
+        }
+        col_plan.apply(&mut line[..h], blue);
+        for (i, &r) in kept_rows.iter().enumerate() {
+            out[i * kc + j] = line[r];
+        }
+    }
+}
+
+/// Inverse of [`fft2_kept`]: treat `spec` (row-major kept_rows × kept_cols)
+/// as the only nonzero block of a full (h, w) spectrum and inverse-
+/// transform to the full grid in `out`. `row_plan` / `col_plan` must be
+/// inverse plans of length `w` / `h`.
+pub fn ifft2_kept<S: Scalar>(
+    spec: &[Cplx<S>],
+    h: usize,
+    w: usize,
+    kept_rows: &[usize],
+    kept_cols: &[usize],
+    row_plan: &Plan<S>,
+    col_plan: &Plan<S>,
+    out: &mut [Cplx<S>],
+    scratch: &mut SpectralScratch<S>,
+) {
+    let (kr, kc) = (kept_rows.len(), kept_cols.len());
+    assert_eq!(spec.len(), kr * kc);
+    assert_eq!(out.len(), h * w);
+    assert_eq!(row_plan.len(), w, "row plan length");
+    assert_eq!(col_plan.len(), h, "col plan length");
+    assert!(row_plan.is_inverse() && col_plan.is_inverse(), "need inverse plans");
+    let SpectralScratch { rows, line, blue } = scratch;
+    // Row pass on the kept rows only: all other rows of the embedded
+    // spectrum are zero and inverse-transform to exact zeros.
+    grow(rows, kr * w);
+    for i in 0..kr {
+        let row = &mut rows[i * w..(i + 1) * w];
+        for v in row.iter_mut() {
+            *v = Cplx::zero();
+        }
+        for (j, &c) in kept_cols.iter().enumerate() {
+            row[c] = spec[i * kc + j];
+        }
+        row_plan.apply(row, blue);
+    }
+    // Column pass over all w columns, scattering the kept rows into a
+    // zeroed length-h line (the zeros other rows would contribute).
+    grow(line, h);
+    for c in 0..w {
+        for v in line[..h].iter_mut() {
+            *v = Cplx::zero();
+        }
+        for (i, &r) in kept_rows.iter().enumerate() {
+            line[r] = rows[i * w + c];
+        }
+        col_plan.apply(&mut line[..h], blue);
+        for r in 0..h {
+            out[r * w + c] = line[r];
+        }
+    }
+}
+
+/// Gather the (kept_rows × kept_cols) block out of a full (h, w)
+/// spectrum — the oracle-side counterpart of [`fft2_kept`].
+pub fn truncate_modes<S: Scalar>(
+    full: &[Cplx<S>],
+    h: usize,
+    w: usize,
+    kept_rows: &[usize],
+    kept_cols: &[usize],
+) -> Vec<Cplx<S>> {
+    assert_eq!(full.len(), h * w);
+    let mut out = Vec::with_capacity(kept_rows.len() * kept_cols.len());
+    for &r in kept_rows {
+        for &c in kept_cols {
+            out.push(full[r * w + c]);
+        }
+    }
+    out
+}
+
+/// Scatter a (kept_rows × kept_cols) block into a zeroed full (h, w)
+/// spectrum — the oracle-side counterpart of [`ifft2_kept`].
+pub fn embed_modes<S: Scalar>(
+    trunc: &[Cplx<S>],
+    h: usize,
+    w: usize,
+    kept_rows: &[usize],
+    kept_cols: &[usize],
+) -> Vec<Cplx<S>> {
+    let kc = kept_cols.len();
+    assert_eq!(trunc.len(), kept_rows.len() * kc);
+    let mut out = vec![Cplx::<S>::zero(); h * w];
+    for (i, &r) in kept_rows.iter().enumerate() {
+        for (j, &c) in kept_cols.iter().enumerate() {
+            out[r * w + c] = trunc[i * kc + j];
+        }
+    }
+    out
+}
+
+/// Convenience wrapper: symmetric `k_max`-mode truncated forward 2-D FFT
+/// using the global plan cache and a fresh scratch. Returns the
+/// (2·k_max, 2·k_max) kept block.
+pub fn fft2_trunc<S: Scalar>(data: &[Cplx<S>], h: usize, w: usize, k_max: usize) -> Vec<Cplx<S>> {
+    let kept_rows = kept_indices(h, k_max);
+    let kept_cols = kept_indices(w, k_max);
+    let row_plan = super::plan::plan_for::<S>(w, false);
+    let col_plan = super::plan::plan_for::<S>(h, false);
+    let mut out = vec![Cplx::<S>::zero(); kept_rows.len() * kept_cols.len()];
+    let mut scratch = SpectralScratch::new();
+    fft2_kept(data, h, w, &kept_rows, &kept_cols, &row_plan, &col_plan, &mut out, &mut scratch);
+    out
+}
+
+/// Convenience wrapper: inverse of [`fft2_trunc`] back to the full
+/// (h, w) grid.
+pub fn ifft2_trunc<S: Scalar>(spec: &[Cplx<S>], h: usize, w: usize, k_max: usize) -> Vec<Cplx<S>> {
+    let kept_rows = kept_indices(h, k_max);
+    let kept_cols = kept_indices(w, k_max);
+    let row_plan = super::plan::plan_for::<S>(w, true);
+    let col_plan = super::plan::plan_for::<S>(h, true);
+    let mut out = vec![Cplx::<S>::zero(); h * w];
+    let mut scratch = SpectralScratch::new();
+    ifft2_kept(spec, h, w, &kept_rows, &kept_cols, &row_plan, &col_plan, &mut out, &mut scratch);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{fft2, ifft2};
+    use crate::rng::Rng;
+
+    fn signal(n: usize, seed: u64) -> Vec<Cplx<f64>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let (r, i) = rng.cnormal();
+                Cplx::from_f64(r, i)
+            })
+            .collect()
+    }
+
+    fn exact(a: &[Cplx<f64>], b: &[Cplx<f64>]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_f64() == y.to_f64())
+    }
+
+    #[test]
+    fn kept_indices_layout() {
+        assert_eq!(kept_indices(8, 2), vec![0, 1, 6, 7]);
+        assert_eq!(kept_indices(6, 3), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn kept_indices_rejects_oversized_k() {
+        kept_indices(8, 5);
+    }
+
+    #[test]
+    fn forward_truncation_matches_full_fft2() {
+        for (h, w, k) in [(8usize, 8usize, 2usize), (16, 8, 3), (12, 20, 4), (16, 16, 8)] {
+            let x = signal(h * w, (h * w) as u64);
+            let mut full = x.clone();
+            fft2(&mut full, h, w);
+            let want = truncate_modes(&full, h, w, &kept_indices(h, k), &kept_indices(w, k));
+            let got = fft2_trunc(&x, h, w, k);
+            assert!(exact(&got, &want), "h={h} w={w} k={k}");
+        }
+    }
+
+    #[test]
+    fn inverse_truncation_matches_embedded_full_ifft2() {
+        for (h, w, k) in [(8usize, 8usize, 2usize), (16, 8, 3), (12, 20, 4)] {
+            let spec = signal(4 * k * k, 99 + (h + w) as u64);
+            let mut want = embed_modes(&spec, h, w, &kept_indices(h, k), &kept_indices(w, k));
+            ifft2(&mut want, h, w);
+            let got = ifft2_trunc(&spec, h, w, k);
+            assert!(exact(&got, &want), "h={h} w={w} k={k}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_band_limited_fields() {
+        // A field supported on the kept modes survives truncated fwd+inv.
+        let (h, w, k) = (16usize, 16usize, 3usize);
+        let x: Vec<Cplx<f64>> = (0..h * w)
+            .map(|i| {
+                let (r, c) = (i / w, i % w);
+                let v = (std::f64::consts::TAU * (r as f64 * 2.0 / h as f64)).cos()
+                    + (std::f64::consts::TAU * (c as f64 / w as f64)).sin();
+                Cplx::from_f64(v, 0.0)
+            })
+            .collect();
+        let spec = fft2_trunc(&x, h, w, k);
+        let back = ifft2_trunc(&spec, h, w, k);
+        for (a, b) in back.iter().zip(&x) {
+            assert!(a.sub(*b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        let (h, w, k) = (12usize, 20usize, 4usize);
+        let kept_r = kept_indices(h, k);
+        let kept_c = kept_indices(w, k);
+        let rp = crate::fft::plan_for::<f64>(w, false);
+        let cp = crate::fft::plan_for::<f64>(h, false);
+        let mut scratch = SpectralScratch::new();
+        let x = signal(h * w, 5);
+        let y = signal(h * w, 6);
+        let mut out_x1 = vec![Cplx::zero(); kept_r.len() * kept_c.len()];
+        fft2_kept(&x, h, w, &kept_r, &kept_c, &rp, &cp, &mut out_x1, &mut scratch);
+        // Interleave a different transform through the same arena, then
+        // repeat x — the arena must not leak state between calls.
+        let mut out_y = vec![Cplx::zero(); kept_r.len() * kept_c.len()];
+        fft2_kept(&y, h, w, &kept_r, &kept_c, &rp, &cp, &mut out_y, &mut scratch);
+        let mut out_x2 = vec![Cplx::zero(); kept_r.len() * kept_c.len()];
+        fft2_kept(&x, h, w, &kept_r, &kept_c, &rp, &cp, &mut out_x2, &mut scratch);
+        assert!(exact(&out_x1, &out_x2));
+    }
+}

@@ -1,7 +1,9 @@
-//! Minimal JSON parser (serde is not resolvable offline): enough for the
-//! AOT manifest — objects, arrays, strings (with escapes), numbers, bools,
-//! null. Recursive descent over bytes; no document size limits beyond the
-//! manifest's needs.
+//! Minimal JSON parser + writer (serde is not resolvable offline):
+//! enough for the AOT manifest and the machine-readable bench reports
+//! (`BENCH_spectral.json`) — objects, arrays, strings (with escapes),
+//! numbers, bools, null. Recursive descent over bytes; no document size
+//! limits beyond those callers' needs. [`Json::render`] round-trips
+//! through [`Json::parse`].
 
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
@@ -72,6 +74,103 @@ impl Json {
         self.get(key)
             .and_then(Json::as_usize)
             .ok_or_else(|| anyhow::anyhow!("missing numeric field {key:?}"))
+    }
+
+    /// Serialize to a compact JSON string. Non-finite numbers render as
+    /// `null` (JSON has no inf/nan); everything else round-trips through
+    /// [`Json::parse`].
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.render_into(&mut s);
+        s
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
+                    out.push_str(&format!("{:.0}", n));
+                } else {
+                    // Rust's shortest-roundtrip f64 formatting is valid
+                    // JSON for finite values.
+                    out.push_str(&format!("{}", n));
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32))
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).render_into(out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Convenience constructors for report writers.
+impl From<f64> for Json {
+    fn from(n: f64) -> Json {
+        Json::Num(n)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(n: usize) -> Json {
+        Json::Num(n as f64)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(s: String) -> Json {
+        Json::Str(s)
+    }
+}
+
+impl From<Vec<Json>> for Json {
+    fn from(v: Vec<Json>) -> Json {
+        Json::Arr(v)
     }
 }
 
@@ -293,5 +392,29 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn render_round_trips() {
+        for doc in [
+            r#"{"a": [1, -2.5, 1e-9], "b": {"s": "x\n\"y\"", "t": true, "n": null}}"#,
+            "[0, 65536, 3.141592653589793]",
+            r#""plain string""#,
+            "{}",
+            "[]",
+        ] {
+            let v = Json::parse(doc).unwrap();
+            let rendered = v.render();
+            assert_eq!(Json::parse(&rendered).unwrap(), v, "{doc} -> {rendered}");
+        }
+    }
+
+    #[test]
+    fn render_handles_non_finite_and_integers() {
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+        assert_eq!(Json::Num(12.0).render(), "12");
+        assert_eq!(Json::from("a\tb").render(), "\"a\\tb\"");
+        let arr: Json = vec![Json::from(1usize), Json::from(0.5)].into();
+        assert_eq!(arr.render(), "[1,0.5]");
     }
 }

@@ -14,8 +14,9 @@
 //!    subset parser ([`jsonlite`]), binary serialization ([`ser`]), a
 //!    property-testing mini-framework ([`testing`]), a bench harness
 //!    ([`bench`]), a scoped work-queue executor for the FFT/contraction
-//!    /data hot paths ([`parallel`]) and wall-clock lap instrumentation
-//!    ([`exec`]).
+//!    /data hot paths ([`parallel`]), the fused mode-truncated spectral
+//!    convolution engine built on planned FFTs ([`spectral`]) and
+//!    wall-clock lap instrumentation ([`exec`]).
 //! 2. **Core library** — the paper's contribution: approximation-bound
 //!    theory ([`theory`]), the PJRT runtime ([`runtime`]), optimizers with
 //!    fp32 master weights ([`optim`]), AMP semantics + dynamic loss scaling
@@ -50,6 +51,7 @@ pub mod pde;
 pub mod rng;
 pub mod runtime;
 pub mod ser;
+pub mod spectral;
 pub mod stability;
 pub mod tensor;
 pub mod testing;

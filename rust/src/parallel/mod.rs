@@ -153,6 +153,24 @@ impl Executor {
         T: Send,
         F: Fn(usize, &mut [T]) + Sync,
     {
+        self.for_each_chunk_with(data, chunk_len, || (), |i, chunk, _| f(i, chunk));
+    }
+
+    /// [`Executor::for_each_chunk`] with a per-worker scratch arena:
+    /// every worker thread calls `mk` exactly once and threads the
+    /// resulting state through each chunk it claims. This is how the
+    /// fused spectral engine ([`crate::spectral`]) reuses FFT scratch and
+    /// mode buffers across the samples a worker processes instead of
+    /// allocating per pass. The serial path creates one state and runs
+    /// chunks in index order, so per-chunk results must not depend on the
+    /// arena's history (arenas are overwritten, never accumulated into —
+    /// the parity tests catch violations).
+    pub fn for_each_chunk_with<T, W, M, F>(&self, data: &mut [T], chunk_len: usize, mk: M, f: F)
+    where
+        T: Send,
+        M: Fn() -> W + Sync,
+        F: Fn(usize, &mut [T], &mut W) + Sync,
+    {
         if data.is_empty() {
             // Zero-sized sub-problems (e.g. a contraction step whose row
             // length is 0) are a no-op, matching the serial loops they
@@ -162,8 +180,9 @@ impl Executor {
         assert!(chunk_len > 0, "chunk_len must be positive");
         let n_chunks = (data.len() + chunk_len - 1) / chunk_len;
         if self.threads <= 1 || n_chunks <= 1 || data.len() < MIN_PARALLEL_ELEMS {
+            let mut state = mk();
             for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
-                f(i, chunk);
+                f(i, chunk, &mut state);
             }
             return;
         }
@@ -174,13 +193,17 @@ impl Executor {
             Mutex::new(data.chunks_mut(chunk_len).enumerate().collect());
         let queue = &queue;
         let f = &f;
+        let mk = &mk;
         std::thread::scope(|s| {
             for _ in 0..workers {
-                s.spawn(move || loop {
-                    let item = queue.lock().expect("queue poisoned").pop();
-                    match item {
-                        Some((i, chunk)) => f(i, chunk),
-                        None => break,
+                s.spawn(move || {
+                    let mut state = mk();
+                    loop {
+                        let item = queue.lock().expect("queue poisoned").pop();
+                        match item {
+                            Some((i, chunk)) => f(i, chunk, &mut state),
+                            None => break,
+                        }
                     }
                 });
             }
@@ -264,6 +287,35 @@ mod tests {
         });
         for (i, v) in dst.iter().enumerate() {
             assert_eq!(*v, 2.0 * i as f64);
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_with_builds_one_state_per_worker() {
+        for threads in [1usize, 2, 8] {
+            // 1024 elements / 64-chunks = 16 chunks, above the grain.
+            let mut data = vec![0u64; MIN_PARALLEL_ELEMS * 2];
+            let made = AtomicUsize::new(0);
+            Executor::new(threads).for_each_chunk_with(
+                &mut data,
+                64,
+                || {
+                    made.fetch_add(1, Ordering::Relaxed);
+                    vec![0u64; 8]
+                },
+                |i, c, scratch| {
+                    // The arena is overwritten per chunk, never read back,
+                    // so results cannot depend on chunk distribution.
+                    scratch[0] = i as u64;
+                    for v in c.iter_mut() {
+                        *v = i as u64 + scratch[0];
+                    }
+                },
+            );
+            for (j, v) in data.iter().enumerate() {
+                assert_eq!(*v, 2 * (j / 64) as u64, "at {j} (threads={threads})");
+            }
+            assert_eq!(made.load(Ordering::Relaxed), threads, "one arena per worker");
         }
     }
 

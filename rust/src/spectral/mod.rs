@@ -1,0 +1,431 @@
+//! Fused, mode-truncated spectral convolution — the FNO block the
+//! paper's profiling puts at the top of the GPU kernel list (FFT →
+//! mode-truncated tensor contraction → iFFT is 4 of the top-5 kernels),
+//! and the block its mixed-precision method targets.
+//!
+//! [`SpectralConv2d`] runs the whole pipeline per sample as a single
+//! [`Executor`] work item:
+//!
+//! * **planned FFTs** ([`crate::fft::plan`]) — twiddles, bit-reversal
+//!   tables and Bluestein kernels are cached in the layer, so the hot
+//!   loop does no `cos`/`sin`;
+//! * **mode truncation** ([`crate::fft::trunc`]) — only the
+//!   `2·k_max` kept frequencies per side are column-transformed forward
+//!   and row-transformed inverse (16 of 128 per side in the paper's NS
+//!   config ⇒ the second pass shrinks by 4×);
+//! * **fused contraction** ([`crate::contract::contract_modes`]) — the
+//!   per-mode channel mixing runs on the truncated block straight out of
+//!   the forward pass, generic over [`Scalar`] precision;
+//! * **per-worker scratch arenas** ([`Executor::for_each_chunk_with`]) —
+//!   FFT scratch, truncated spectra and the contraction intermediate are
+//!   allocated once per worker and reused across samples, eliminating
+//!   the per-pass allocations and per-pass joins of the composed path.
+//!
+//! The composed serial pipeline ([`SpectralConv2d::forward_composed`]:
+//! ad-hoc `fft2` → truncate → contract → embed → `ifft2`) remains the
+//! parity oracle: the fused path is bit-identical to it at every
+//! precision and thread count (up to the sign of exact zeros — see
+//! [`crate::fft::trunc`]), enforced by `tests/spectral_parity.rs`.
+
+use crate::contract::contract_modes;
+use crate::fft::plan::{plan_for, Plan};
+use crate::fft::trunc::{
+    embed_modes, fft2_kept, ifft2_kept, kept_indices, truncate_modes, SpectralScratch,
+};
+use crate::fft::{fft2, ifft2};
+use crate::fp::{Cplx, Scalar};
+use crate::parallel::Executor;
+use crate::rng::Rng;
+use std::sync::Arc;
+
+/// Benchmark shape for the paper's NS spectral layer — (batch, grid
+/// side, channel width, k_max): 8 × 128² × 64 channels keeping 16 modes
+/// per side, or a CPU-quick counterpart. Shared by `cargo bench --bench
+/// bench_fft` and `mpno exp parbench` / `mpno bench-par` so the two
+/// reports cannot drift.
+pub fn ns_paper_case(quick: bool) -> (usize, usize, usize, usize) {
+    if quick {
+        (2, 32, 8, 4)
+    } else {
+        (8, 128, 64, 16)
+    }
+}
+
+/// Per-worker scratch arena for the fused forward pass. Buffers are
+/// sized at construction and overwritten (never accumulated into) on
+/// every sample, so results are independent of which worker processes
+/// which sample.
+#[derive(Debug)]
+pub struct ConvScratch<S: Scalar> {
+    fft: SpectralScratch<S>,
+    /// Truncated input spectrum, (ci, n_modes).
+    spec_in: Vec<Cplx<S>>,
+    /// Contraction intermediate, (n_modes, co).
+    tmp_mo: Vec<Cplx<S>>,
+    /// Truncated output spectrum, (co, n_modes).
+    spec_out: Vec<Cplx<S>>,
+}
+
+/// A fused 2-D spectral convolution layer: `ci` input channels, `co`
+/// output channels on an (h, w) grid, keeping `k_max` positive and
+/// negative frequencies per axis. Weights are complex, laid out
+/// (ci, co, 2·k_max, 2·k_max) over the kept-mode block in
+/// [`kept_indices`] order.
+#[derive(Debug)]
+pub struct SpectralConv2d<S: Scalar> {
+    ci: usize,
+    co: usize,
+    h: usize,
+    w: usize,
+    k_max: usize,
+    kept_rows: Vec<usize>,
+    kept_cols: Vec<usize>,
+    /// Weights in the natural (ci, co, 2k, 2k) layout (oracle + I/O).
+    w_ioxy: Vec<Cplx<S>>,
+    /// Mode-major (n_modes, ci, co) copy consumed by the fused kernel —
+    /// the permutation [`crate::contract::contract_modes`] expects,
+    /// materialized once instead of per call.
+    w_mio: Vec<Cplx<S>>,
+    row_fwd: Arc<Plan<S>>,
+    col_fwd: Arc<Plan<S>>,
+    row_inv: Arc<Plan<S>>,
+    col_inv: Arc<Plan<S>>,
+}
+
+impl<S: Scalar> SpectralConv2d<S> {
+    /// Build a layer from explicit weights in (ci, co, 2k, 2k) layout.
+    pub fn new(
+        ci: usize,
+        co: usize,
+        h: usize,
+        w: usize,
+        k_max: usize,
+        w_ioxy: Vec<Cplx<S>>,
+    ) -> Self {
+        assert!(ci >= 1 && co >= 1, "need at least one channel each way");
+        let kept_rows = kept_indices(h, k_max);
+        let kept_cols = kept_indices(w, k_max);
+        let n_modes = kept_rows.len() * kept_cols.len();
+        assert_eq!(
+            w_ioxy.len(),
+            ci * co * n_modes,
+            "weights must be (ci={ci}, co={co}, 2k={}, 2k={})",
+            kept_rows.len(),
+            kept_cols.len()
+        );
+        let mut w_mio = vec![Cplx::<S>::zero(); n_modes * ci * co];
+        for i in 0..ci {
+            for o in 0..co {
+                for m in 0..n_modes {
+                    w_mio[(m * ci + i) * co + o] = w_ioxy[(i * co + o) * n_modes + m];
+                }
+            }
+        }
+        SpectralConv2d {
+            ci,
+            co,
+            h,
+            w,
+            k_max,
+            kept_rows,
+            kept_cols,
+            w_ioxy,
+            w_mio,
+            row_fwd: plan_for(w, false),
+            col_fwd: plan_for(h, false),
+            row_inv: plan_for(w, true),
+            col_inv: plan_for(h, true),
+        }
+    }
+
+    /// FNO-style random initialization: complex normal scaled by
+    /// 1/(ci·co), deterministic in `seed`.
+    pub fn random(ci: usize, co: usize, h: usize, w: usize, k_max: usize, seed: u64) -> Self {
+        let k2 = 4 * k_max * k_max;
+        let scale = 1.0 / (ci as f64 * co as f64);
+        let mut rng = Rng::new(seed);
+        let weights: Vec<Cplx<S>> = (0..ci * co * k2)
+            .map(|_| {
+                let (re, im) = rng.cnormal();
+                Cplx::from_f64(re * scale, im * scale)
+            })
+            .collect();
+        SpectralConv2d::new(ci, co, h, w, k_max, weights)
+    }
+
+    pub fn in_channels(&self) -> usize {
+        self.ci
+    }
+
+    pub fn out_channels(&self) -> usize {
+        self.co
+    }
+
+    pub fn grid(&self) -> (usize, usize) {
+        (self.h, self.w)
+    }
+
+    pub fn k_max(&self) -> usize {
+        self.k_max
+    }
+
+    /// Kept modes per sample-channel: (2·k_max)².
+    pub fn n_modes(&self) -> usize {
+        self.kept_rows.len() * self.kept_cols.len()
+    }
+
+    /// Weights in (ci, co, 2k, 2k) layout.
+    pub fn weight(&self) -> &[Cplx<S>] {
+        &self.w_ioxy
+    }
+
+    /// Fresh per-worker scratch arena sized for this layer.
+    pub fn scratch(&self) -> ConvScratch<S> {
+        let n_modes = self.n_modes();
+        ConvScratch {
+            fft: SpectralScratch::new(),
+            spec_in: vec![Cplx::zero(); self.ci * n_modes],
+            tmp_mo: vec![Cplx::zero(); n_modes * self.co],
+            spec_out: vec![Cplx::zero(); self.co * n_modes],
+        }
+    }
+
+    /// Fused forward pass over a (batch, ci, h, w) buffer, one work item
+    /// per sample fanned over `ex`, each worker reusing one
+    /// [`ConvScratch`] arena. Returns (batch, co, h, w).
+    pub fn forward(&self, input: &[Cplx<S>], batch: usize, ex: &Executor) -> Vec<Cplx<S>> {
+        let slab_in = self.ci * self.h * self.w;
+        let slab_out = self.co * self.h * self.w;
+        assert_eq!(input.len(), batch * slab_in, "input must be (batch, ci, h, w)");
+        let mut out = vec![Cplx::<S>::zero(); batch * slab_out];
+        ex.for_each_chunk_with(
+            &mut out,
+            slab_out,
+            || self.scratch(),
+            |b, sample_out, scratch| {
+                self.forward_sample(&input[b * slab_in..(b + 1) * slab_in], sample_out, scratch);
+            },
+        );
+        out
+    }
+
+    /// One sample through the fused pipeline: truncated planned FFT per
+    /// input channel → per-mode contraction → truncated planned iFFT per
+    /// output channel, all through the caller's arena.
+    pub fn forward_sample(
+        &self,
+        x: &[Cplx<S>],
+        out: &mut [Cplx<S>],
+        scratch: &mut ConvScratch<S>,
+    ) {
+        let hw = self.h * self.w;
+        let n_modes = self.n_modes();
+        assert_eq!(x.len(), self.ci * hw, "sample must be (ci, h, w)");
+        assert_eq!(out.len(), self.co * hw, "output must be (co, h, w)");
+        for i in 0..self.ci {
+            fft2_kept(
+                &x[i * hw..(i + 1) * hw],
+                self.h,
+                self.w,
+                &self.kept_rows,
+                &self.kept_cols,
+                &self.row_fwd,
+                &self.col_fwd,
+                &mut scratch.spec_in[i * n_modes..(i + 1) * n_modes],
+                &mut scratch.fft,
+            );
+        }
+        contract_modes(
+            &scratch.spec_in,
+            &self.w_mio,
+            self.ci,
+            self.co,
+            n_modes,
+            &mut scratch.tmp_mo,
+            &mut scratch.spec_out,
+        );
+        for o in 0..self.co {
+            ifft2_kept(
+                &scratch.spec_out[o * n_modes..(o + 1) * n_modes],
+                self.h,
+                self.w,
+                &self.kept_rows,
+                &self.kept_cols,
+                &self.row_inv,
+                &self.col_inv,
+                &mut out[o * hw..(o + 1) * hw],
+                &mut scratch.fft,
+            );
+        }
+    }
+
+    /// The serial composed parity oracle: per channel ad-hoc full-grid
+    /// [`fft2`], mode truncation by gather, the serial mode contraction,
+    /// zero-embedding, and ad-hoc full-grid [`ifft2`] — fresh
+    /// allocations per pass, no executor. This is the pipeline the
+    /// fused path must match bit-for-bit, and the baseline the
+    /// speedup claims in `BENCH_spectral.json` are measured against.
+    pub fn forward_composed(&self, input: &[Cplx<S>], batch: usize) -> Vec<Cplx<S>> {
+        let hw = self.h * self.w;
+        let slab_in = self.ci * hw;
+        let slab_out = self.co * hw;
+        let n_modes = self.n_modes();
+        assert_eq!(input.len(), batch * slab_in, "input must be (batch, ci, h, w)");
+        let mut out = vec![Cplx::<S>::zero(); batch * slab_out];
+        for b in 0..batch {
+            let xs = &input[b * slab_in..(b + 1) * slab_in];
+            let mut spec_in: Vec<Cplx<S>> = Vec::with_capacity(self.ci * n_modes);
+            for i in 0..self.ci {
+                let mut g = xs[i * hw..(i + 1) * hw].to_vec();
+                fft2(&mut g, self.h, self.w);
+                spec_in.extend(truncate_modes(
+                    &g,
+                    self.h,
+                    self.w,
+                    &self.kept_rows,
+                    &self.kept_cols,
+                ));
+            }
+            let mut tmp = vec![Cplx::<S>::zero(); n_modes * self.co];
+            let mut spec_out = vec![Cplx::<S>::zero(); self.co * n_modes];
+            contract_modes(&spec_in, &self.w_mio, self.ci, self.co, n_modes, &mut tmp, &mut spec_out);
+            for o in 0..self.co {
+                let mut g = embed_modes(
+                    &spec_out[o * n_modes..(o + 1) * n_modes],
+                    self.h,
+                    self.w,
+                    &self.kept_rows,
+                    &self.kept_cols,
+                );
+                ifft2(&mut g, self.h, self.w);
+                out[b * slab_out + o * hw..b * slab_out + (o + 1) * hw].copy_from_slice(&g);
+            }
+        }
+        out
+    }
+}
+
+/// Deterministic complex test/bench field of shape (batch, ci, h, w).
+pub fn random_field<S: Scalar>(n: usize, seed: u64) -> Vec<Cplx<S>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let (re, im) = rng.cnormal();
+            Cplx::from_f64(re, im)
+        })
+        .collect()
+}
+
+/// The composed-vs-fused spectral bench triple at the [`ns_paper_case`]
+/// shape — the single implementation behind both `BENCH_spectral.json`
+/// writers (`cargo bench --bench bench_fft` and `mpno bench-par
+/// --json`), so their labels, seeds, budgets and row schema cannot
+/// drift.
+#[derive(Debug)]
+pub struct SpectralBenchReport {
+    /// Human-readable shape tag, e.g. `spectral b8 128x128 w64 k16`.
+    pub shape: String,
+    /// Worker threads the parallel leg ran with.
+    pub threads: usize,
+    pub composed: crate::bench::BenchStats,
+    pub fused_serial: crate::bench::BenchStats,
+    pub fused_parallel: crate::bench::BenchStats,
+}
+
+impl SpectralBenchReport {
+    /// The three tagged rows every `BENCH_spectral.json` section holds.
+    pub fn json_rows(&self) -> Vec<crate::jsonlite::Json> {
+        vec![
+            self.composed.to_json_tagged(&format!("{} composed", self.shape), 1),
+            self.fused_serial.to_json_tagged(&format!("{} fused", self.shape), 1),
+            self.fused_parallel.to_json_tagged(&format!("{} fused", self.shape), self.threads),
+        ]
+    }
+}
+
+/// Run the composed serial / fused serial / fused parallel bench triple
+/// at the [`ns_paper_case`] shape for `quick`.
+pub fn bench_ns_case(quick: bool, budget_s: f64, seed: u64, par: &Executor) -> SpectralBenchReport {
+    use crate::bench::bench_auto;
+    let (sb, hw, width, k_max) = ns_paper_case(quick);
+    let layer = SpectralConv2d::<f64>::random(width, width, hw, hw, k_max, seed);
+    let input = random_field::<f64>(sb * width * hw * hw, seed + 1);
+    let shape = format!("spectral b{sb} {hw}x{hw} w{width} k{k_max}");
+    let composed = bench_auto(&format!("{shape} composed serial"), budget_s, || {
+        let out = layer.forward_composed(&input, sb);
+        std::hint::black_box(out.len());
+    });
+    let fused_serial = bench_auto(&format!("{shape} fused serial"), budget_s, || {
+        let out = layer.forward(&input, sb, &Executor::serial());
+        std::hint::black_box(out.len());
+    });
+    let fused_parallel = bench_auto(&format!("{shape} fused {}t", par.threads()), budget_s, || {
+        let out = layer.forward(&input, sb, par);
+        std::hint::black_box(out.len());
+    });
+    SpectralBenchReport { shape, threads: par.threads(), composed, fused_serial, fused_parallel }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exact<S: Scalar>(a: &[Cplx<S>], b: &[Cplx<S>]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_f64() == y.to_f64())
+    }
+
+    #[test]
+    fn fused_matches_composed_f64_all_thread_counts() {
+        let (b, ci, co, h, w, k) = (3usize, 2usize, 4usize, 16usize, 8usize, 2usize);
+        let layer = SpectralConv2d::<f64>::random(ci, co, h, w, k, 11);
+        let input = random_field::<f64>(b * ci * h * w, 12);
+        let want = layer.forward_composed(&input, b);
+        for threads in [1usize, 2, 8] {
+            let got = layer.forward(&input, b, &Executor::new(threads));
+            assert!(exact(&got, &want), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn forward_sample_matches_batch_forward() {
+        let (ci, co, h, w, k) = (3usize, 3usize, 8usize, 8usize, 2usize);
+        let layer = SpectralConv2d::<f64>::random(ci, co, h, w, k, 21);
+        let input = random_field::<f64>(2 * ci * h * w, 22);
+        let batch = layer.forward(&input, 2, &Executor::serial());
+        let mut scratch = layer.scratch();
+        for b in 0..2 {
+            let mut one = vec![Cplx::zero(); co * h * w];
+            layer.forward_sample(&input[b * ci * h * w..(b + 1) * ci * h * w], &mut one, &mut scratch);
+            assert!(exact(&one, &batch[b * co * h * w..(b + 1) * co * h * w]));
+        }
+    }
+
+    #[test]
+    fn identity_weight_truncates_to_kept_band() {
+        // With w[i][o] = δ_io on every mode, the layer is an ideal
+        // band-pass: band-limited inputs pass through unchanged.
+        let (ci, h, w, k) = (1usize, 16usize, 16usize, 3usize);
+        let n_modes = 4 * k * k;
+        let weights = vec![Cplx::<f64>::one(); n_modes];
+        let layer = SpectralConv2d::new(ci, ci, h, w, k, weights);
+        let x: Vec<Cplx<f64>> = (0..h * w)
+            .map(|i| {
+                let (r, c) = (i / w, i % w);
+                let v = (std::f64::consts::TAU * (2.0 * r as f64 / h as f64)).cos()
+                    + (std::f64::consts::TAU * (c as f64 / w as f64)).sin();
+                Cplx::from_f64(v, 0.0)
+            })
+            .collect();
+        let y = layer.forward(&x, 1, &Executor::serial());
+        for (a, b) in y.iter().zip(&x) {
+            assert!(a.sub(*b).abs() < 1e-10, "band-limited field should pass through");
+        }
+    }
+
+    #[test]
+    fn ns_paper_case_shapes() {
+        assert_eq!(ns_paper_case(false), (8, 128, 64, 16));
+        let (b, hw, c, k) = ns_paper_case(true);
+        assert!(b * hw * hw * c > 0 && 2 * k <= hw);
+    }
+}

@@ -6,40 +6,65 @@
 //! spectrum, which is exact for band-limited functions (and is also how
 //! the FNO literature constructs multi-resolution versions of a sample).
 
-use crate::fft::{fft2, ifft2};
+use crate::fft::{fft2_kept, ifft2_kept, plan_for, SpectralScratch};
 use crate::fp::Cplx;
 use crate::tensor::Tensor;
 
 /// Resample a (h, w) real field to (h2, w2) by Fourier zero-pad/truncation.
+///
+/// Runs on the kept-mode truncated passes ([`crate::fft::trunc`]) with
+/// plan-cached twiddles: only the modes both grids can represent are
+/// ever column-transformed forward or row-transformed inverse, instead
+/// of two full-grid `fft2`s. The kept coefficients — and hence the
+/// resampled field — are bit-identical to the full-grid pipeline this
+/// replaced (see the parity argument in [`crate::fft::trunc`]).
 pub fn resample2d(t: &Tensor, h2: usize, w2: usize) -> Tensor {
     assert_eq!(t.ndim(), 2, "resample2d expects a 2-D field");
     let (h, w) = (t.shape()[0], t.shape()[1]);
     if (h, w) == (h2, w2) {
         return t.clone();
     }
-    let mut spec: Vec<Cplx<f64>> =
-        t.data().iter().map(|&x| Cplx::from_f64(x as f64, 0.0)).collect();
-    fft2(&mut spec, h, w);
-
-    // Move modes between centred spectra. Frequencies along an axis of
-    // length n are {0, 1, …, n/2, −(n−1)/2, …, −1} in FFT order; we copy
-    // each (ky, kx) that both grids can represent.
-    let mut out = vec![Cplx::<f64>::zero(); h2 * w2];
+    // Frequencies along an axis of length n are {0, 1, …, n/2,
+    // −(n−1)/2, …, −1} in FFT order; both grids represent the `keep`
+    // lowest signed frequencies, enumerated in the same order on the
+    // source (gather) and destination (scatter) axes.
     let keep_h = h.min(h2);
     let keep_w = w.min(w2);
-    for ky in 0..keep_h {
-        // signed frequency of row ky in the source grid
-        let fy = signed_freq(ky, h.min(h2), h);
-        let sy = fy_to_row(fy, h);
-        let dy = fy_to_row(fy, h2);
-        for kx in 0..keep_w {
-            let fx = signed_freq(kx, w.min(w2), w);
-            let sx = fy_to_row(fx, w);
-            let dx = fy_to_row(fx, w2);
-            out[dy * w2 + dx] = spec[sy * w + sx];
-        }
-    }
-    ifft2(&mut out, h2, w2);
+    let rows_of = |keep: usize, n: usize| -> Vec<usize> {
+        (0..keep).map(|i| fy_to_row(signed_freq(i, keep, n), n)).collect()
+    };
+    let src_rows = rows_of(keep_h, h);
+    let src_cols = rows_of(keep_w, w);
+    let dst_rows = rows_of(keep_h, h2);
+    let dst_cols = rows_of(keep_w, w2);
+
+    let spec: Vec<Cplx<f64>> =
+        t.data().iter().map(|&x| Cplx::from_f64(x as f64, 0.0)).collect();
+    let mut scratch = SpectralScratch::new();
+    let mut kept = vec![Cplx::<f64>::zero(); keep_h * keep_w];
+    fft2_kept(
+        &spec,
+        h,
+        w,
+        &src_rows,
+        &src_cols,
+        &plan_for::<f64>(w, false),
+        &plan_for::<f64>(h, false),
+        &mut kept,
+        &mut scratch,
+    );
+    let mut out = vec![Cplx::<f64>::zero(); h2 * w2];
+    ifft2_kept(
+        &kept,
+        h2,
+        w2,
+        &dst_rows,
+        &dst_cols,
+        &plan_for::<f64>(w2, true),
+        &plan_for::<f64>(h2, true),
+        &mut out,
+        &mut scratch,
+    );
     let scale = (h2 * w2) as f64 / (h * w) as f64;
     Tensor::from_vec(
         vec![h2, w2],
@@ -137,6 +162,45 @@ mod tests {
         let single = resample2d(&a, 32, 32);
         assert_eq!(&up.data()[..1024], single.data());
         assert_eq!(&up.data()[1024..], single.data());
+    }
+
+    #[test]
+    fn truncated_pipeline_matches_full_grid_pipeline() {
+        // The pre-plan implementation: full fft2, mode copy, full ifft2.
+        // The truncated-pass port must reproduce it bitwise on arbitrary
+        // (non-band-limited) fields.
+        use crate::fft::{fft2, ifft2};
+        let full_grid = |t: &Tensor, h2: usize, w2: usize| -> Tensor {
+            let (h, w) = (t.shape()[0], t.shape()[1]);
+            let mut spec: Vec<Cplx<f64>> =
+                t.data().iter().map(|&x| Cplx::from_f64(x as f64, 0.0)).collect();
+            fft2(&mut spec, h, w);
+            let mut out = vec![Cplx::<f64>::zero(); h2 * w2];
+            let keep_h = h.min(h2);
+            let keep_w = w.min(w2);
+            for ky in 0..keep_h {
+                let fy = signed_freq(ky, keep_h, h);
+                let (sy, dy) = (fy_to_row(fy, h), fy_to_row(fy, h2));
+                for kx in 0..keep_w {
+                    let fx = signed_freq(kx, keep_w, w);
+                    let (sx, dx) = (fy_to_row(fx, w), fy_to_row(fx, w2));
+                    out[dy * w2 + dx] = spec[sy * w + sx];
+                }
+            }
+            ifft2(&mut out, h2, w2);
+            let scale = (h2 * w2) as f64 / (h * w) as f64;
+            Tensor::from_vec(
+                vec![h2, w2],
+                out.iter().map(|z| (z.re * scale) as f32).collect(),
+            )
+        };
+        let mut rng = crate::rng::Rng::new(314);
+        let t = Tensor::from_fn(&[12, 20], |_| rng.normal() as f32);
+        for (h2, w2) in [(24usize, 40usize), (6, 10), (16, 12), (12, 24)] {
+            let want = full_grid(&t, h2, w2);
+            let got = resample2d(&t, h2, w2);
+            assert_eq!(got.data(), want.data(), "{h2}x{w2}");
+        }
     }
 
     #[test]

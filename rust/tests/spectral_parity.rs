@@ -1,0 +1,227 @@
+//! Parity tests for the planned / mode-truncated / fused spectral engine
+//! (ISSUE 3): every new fast path must be bit-identical to the serial
+//! composed oracle — ad-hoc `fft2` → mode truncation → the serial mode
+//! contraction → zero-embedding → ad-hoc `ifft2` — at every [`Scalar`]
+//! precision and thread count {1, 2, 8}.
+//!
+//! "Bit-identical" is asserted as exact `to_f64` equality per component,
+//! which admits only a sign difference on exact zeros (the truncated
+//! inverse skips all-zero rows the oracle actually transforms; see the
+//! parity argument in `fft::trunc`). Re-run under `PALLAS_THREADS=1`
+//! (scripts/ci.sh) to rule out scheduling noise.
+
+use mpno::contract::{contract_complex, plan, EinsumExpr, PathStrategy, ViewAsReal};
+use mpno::fft::{
+    embed_modes, fft, fft2, ifft, ifft2, kept_indices, truncate_modes, Plan,
+};
+use mpno::fp::{Bf16, Cplx, Scalar, F16};
+use mpno::parallel::Executor;
+use mpno::spectral::{random_field, SpectralConv2d};
+use mpno::tensor::CTensor;
+use mpno::testing::{forall, Gen};
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+/// Seeded complex test signal — [`random_field`] is the one generator
+/// shared with the benches, so benches and parity tests see the same
+/// inputs for the same seed.
+fn signal<S: Scalar>(n: usize, seed: u64) -> Vec<Cplx<S>> {
+    random_field::<S>(n, seed)
+}
+
+/// Exact equality through f64 (±0 compare equal, anything else must
+/// match bitwise).
+fn exact<S: Scalar>(a: &[Cplx<S>], b: &[Cplx<S>]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_f64() == y.to_f64())
+}
+
+// ---- planned 1-D kernels ---------------------------------------------------
+
+fn planned_case<S: Scalar>(n: usize, seed: u64) -> bool {
+    let x: Vec<Cplx<S>> = signal(n, seed);
+    let mut want_f = x.clone();
+    fft(&mut want_f);
+    let mut got_f = x.clone();
+    Plan::<S>::forward(n).apply_alloc(&mut got_f);
+    let mut want_i = x.clone();
+    ifft(&mut want_i);
+    let mut got_i = x;
+    Plan::<S>::inverse(n).apply_alloc(&mut got_i);
+    exact(&got_f, &want_f) && exact(&got_i, &want_i)
+}
+
+#[test]
+fn prop_planned_fft_bit_identical_all_precisions() {
+    forall(
+        201,
+        14,
+        |g: &mut Gen| {
+            // Radix-2 and Bluestein sizes.
+            let n = [2usize, 4, 8, 16, 64, 128, 3, 5, 12, 20, 100, 60][g.usize_in(0, 11)];
+            (n, g.usize_in(0, 1_000_000) as u64)
+        },
+        |&(n, seed)| {
+            planned_case::<f64>(n, seed)
+                && planned_case::<f32>(n, seed)
+                && planned_case::<Bf16>(n, seed)
+                && planned_case::<F16>(n, seed)
+        },
+    );
+}
+
+// ---- truncated 2-D passes --------------------------------------------------
+
+fn trunc_fwd_case<S: Scalar>(h: usize, w: usize, k: usize, seed: u64) -> bool {
+    let x: Vec<Cplx<S>> = signal(h * w, seed);
+    let mut full = x.clone();
+    fft2(&mut full, h, w);
+    let want = truncate_modes(&full, h, w, &kept_indices(h, k), &kept_indices(w, k));
+    let got = mpno::fft::fft2_trunc(&x, h, w, k);
+    exact(&got, &want)
+}
+
+fn trunc_inv_case<S: Scalar>(h: usize, w: usize, k: usize, seed: u64) -> bool {
+    let spec: Vec<Cplx<S>> = signal(4 * k * k, seed);
+    let mut want = embed_modes(&spec, h, w, &kept_indices(h, k), &kept_indices(w, k));
+    ifft2(&mut want, h, w);
+    let got = mpno::fft::ifft2_trunc(&spec, h, w, k);
+    exact(&got, &want)
+}
+
+#[test]
+fn prop_truncated_fft2_matches_full_then_truncate_all_precisions() {
+    forall(
+        203,
+        10,
+        |g: &mut Gen| {
+            // Mix of radix-2 and Bluestein axis lengths; k small enough
+            // for every axis (2k <= min(h, w)).
+            let h = [8usize, 12, 16, 20, 32][g.usize_in(0, 4)];
+            let w = [8usize, 10, 16, 24][g.usize_in(0, 3)];
+            let k = g.usize_in(1, h.min(w) / 2);
+            (h, w, k, g.usize_in(0, 1_000_000) as u64)
+        },
+        |&(h, w, k, seed)| {
+            trunc_fwd_case::<f64>(h, w, k, seed)
+                && trunc_fwd_case::<f32>(h, w, k, seed)
+                && trunc_fwd_case::<Bf16>(h, w, k, seed)
+                && trunc_fwd_case::<F16>(h, w, k, seed)
+                && trunc_inv_case::<f64>(h, w, k, seed + 1)
+                && trunc_inv_case::<f32>(h, w, k, seed + 1)
+                && trunc_inv_case::<Bf16>(h, w, k, seed + 1)
+                && trunc_inv_case::<F16>(h, w, k, seed + 1)
+        },
+    );
+}
+
+// ---- fused spectral conv vs serial composed oracle -------------------------
+
+fn fused_case<S: Scalar>(
+    b: usize,
+    ci: usize,
+    co: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    seed: u64,
+) -> bool {
+    let layer = SpectralConv2d::<S>::random(ci, co, h, w, k, seed);
+    let input = random_field::<S>(b * ci * h * w, seed + 1);
+    let want = layer.forward_composed(&input, b);
+    THREAD_COUNTS.iter().all(|&t| {
+        let got = layer.forward(&input, b, &Executor::new(t));
+        exact(&got, &want)
+    })
+}
+
+#[test]
+fn prop_fused_conv_matches_composed_all_precisions_and_threads() {
+    forall(
+        205,
+        8,
+        |g: &mut Gen| {
+            // b*co*h*w can exceed the parallel grain (multi-worker path)
+            // while small cases still cover the serial fallback.
+            let b = g.usize_in(1, 4);
+            let ci = g.usize_in(1, 3);
+            let co = g.usize_in(1, 3);
+            let h = [8usize, 12, 16][g.usize_in(0, 2)];
+            let w = [8usize, 16][g.usize_in(0, 1)];
+            let k = g.usize_in(1, 4);
+            (b, ci, co, h, w, k, g.usize_in(0, 1_000_000) as u64)
+        },
+        |&(b, ci, co, h, w, k, seed)| {
+            fused_case::<f64>(b, ci, co, h, w, k, seed)
+                && fused_case::<f32>(b, ci, co, h, w, k, seed)
+                && fused_case::<Bf16>(b, ci, co, h, w, k, seed)
+                && fused_case::<F16>(b, ci, co, h, w, k, seed)
+        },
+    );
+}
+
+/// At f64 the composed oracle itself must match a composition through
+/// the *real einsum engine*: ad-hoc `fft2`, truncate, `contract_complex`
+/// under the memory-greedy path (Option C), embed, ad-hoc `ifft2`.
+#[test]
+fn fused_conv_matches_einsum_engine_composition_f64() {
+    let (b, ci, co, h, w, k) = (2usize, 3usize, 4usize, 16usize, 8usize, 2usize);
+    let layer = SpectralConv2d::<f64>::random(ci, co, h, w, k, 33);
+    let input = random_field::<f64>(b * ci * h * w, 34);
+    let kept_r = kept_indices(h, k);
+    let kept_c = kept_indices(w, k);
+    let (kh, kw) = (kept_r.len(), kept_c.len());
+    let n_modes = kh * kw;
+    let wt = CTensor::from_vec(vec![ci, co, kh, kw], layer.weight().to_vec());
+    let expr = EinsumExpr::parse("ixy,ioxy->oxy").unwrap();
+    let hw = h * w;
+
+    let mut want = Vec::with_capacity(b * co * hw);
+    for s in 0..b {
+        // Forward: full-grid FFT per channel, then gather kept modes.
+        let mut spec = Vec::with_capacity(ci * n_modes);
+        for i in 0..ci {
+            let mut g = input[s * ci * hw + i * hw..s * ci * hw + (i + 1) * hw].to_vec();
+            fft2(&mut g, h, w);
+            spec.extend(truncate_modes(&g, h, w, &kept_r, &kept_c));
+        }
+        let x_t = CTensor::from_vec(vec![ci, kh, kw], spec);
+        let path =
+            plan(&expr, &[x_t.shape(), wt.shape()], PathStrategy::MemoryGreedy).unwrap();
+        let out_t =
+            contract_complex(&expr, &[x_t, wt.clone()], &path, ViewAsReal::OptionC).unwrap();
+        // Inverse: embed each output channel and full-grid iFFT.
+        for o in 0..co {
+            let mut g = embed_modes(
+                &out_t.data()[o * n_modes..(o + 1) * n_modes],
+                h,
+                w,
+                &kept_r,
+                &kept_c,
+            );
+            ifft2(&mut g, h, w);
+            want.extend(g);
+        }
+    }
+
+    for threads in THREAD_COUNTS {
+        let got = layer.forward(&input, b, &Executor::new(threads));
+        assert!(
+            exact(&got, &want),
+            "fused path diverged from einsum-engine composition (threads={threads})"
+        );
+    }
+}
+
+/// The fused engine must be invariant to which worker processes which
+/// sample: shuffling thread counts and reusing one layer across calls
+/// cannot change a single bit.
+#[test]
+fn fused_conv_repeat_calls_are_deterministic() {
+    let layer = SpectralConv2d::<f32>::random(2, 2, 12, 20, 3, 55);
+    let input = random_field::<f32>(3 * 2 * 12 * 20, 56);
+    let first = layer.forward(&input, 3, &Executor::new(8));
+    for _ in 0..3 {
+        let again = layer.forward(&input, 3, &Executor::new(8));
+        assert!(exact(&again, &first));
+    }
+}

@@ -16,3 +16,18 @@ cargo test -q
 
 echo "== deterministic single-threaded parity re-run (PALLAS_THREADS=1) =="
 PALLAS_THREADS=1 cargo test -q --test parallel_parity
+PALLAS_THREADS=1 cargo test -q --test spectral_parity
+
+# Bench smoke: MPNO_BENCH_SMOKE=1 collapses bench_auto to 1 warmup +
+# 1 iteration per case (see rust/src/bench/mod.rs), so every bench and
+# experiment driver is compiled AND executed on each CI pass without
+# measurement-grade runtimes. bench_runtime prints its no-pjrt notice
+# and exits 0 in the default build.
+echo "== bench smoke (MPNO_BENCH_SMOKE=1: 1 warmup / 1 iter per case) =="
+cargo build --release --benches
+MPNO_BENCH_SMOKE=1 cargo bench --bench bench_fft
+MPNO_BENCH_SMOKE=1 cargo bench --bench bench_contract
+MPNO_BENCH_SMOKE=1 cargo bench --bench bench_fp
+MPNO_BENCH_SMOKE=1 cargo bench --bench bench_tables
+MPNO_BENCH_SMOKE=1 cargo bench --bench bench_runtime
+MPNO_BENCH_SMOKE=1 cargo run --release -- bench-par --quick --json
