@@ -1,0 +1,89 @@
+//! Native training-step benchmarks: forward + hand-derived backward
+//! through the fused spectral engine, serial vs parallel, at f32 and
+//! bf16 compute. Rows land in `BENCH_spectral.json` under the
+//! `bench_native` section (`_smoke` suffixed under MPNO_BENCH_SMOKE=1,
+//! so CI runs never clobber recorded numbers).
+//! Run: `cargo bench --bench bench_native`.
+
+use mpno::bench::{
+    bench_auto, bench_json_path, bench_json_section, smoke_mode, speedup, update_bench_json,
+};
+use mpno::fp::{Bf16, Scalar};
+use mpno::jsonlite::Json;
+use mpno::model::{Fno2d, FnoSpec};
+use mpno::parallel::Executor;
+use mpno::rng::Rng;
+use mpno::tensor::Tensor;
+
+fn rand_tensor(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape.to_vec(), rng.normal_vec(n, 1.0))
+}
+
+fn bench_precision<S: Scalar>(
+    spec: &FnoSpec,
+    batch: usize,
+    budget_s: f64,
+    par: &Executor,
+    rows: &mut Vec<Json>,
+) {
+    let params = spec.init_params(17);
+    let refs: Vec<&Tensor> = params.iter().collect();
+    let mut model = Fno2d::<S>::new(spec.clone());
+    model.set_params(&refs);
+    let x = rand_tensor(&[batch, spec.in_channels, spec.h, spec.w], 18);
+    let y = rand_tensor(&[batch, spec.out_channels, spec.h, spec.w], 19);
+    let shape = format!(
+        "native step {} b{batch} {}x{} w{} k{} l{}",
+        S::name(),
+        spec.h,
+        spec.w,
+        spec.width,
+        spec.k_max,
+        spec.n_layers
+    );
+    let serial = bench_auto(&format!("{shape} serial"), budget_s, || {
+        let (loss, grads) = model.train_batch(&x, &y, 1.0, &Executor::serial());
+        std::hint::black_box((loss, grads.len()));
+    });
+    println!("{serial}");
+    let parallel = bench_auto(&format!("{shape} {}t", par.threads()), budget_s, || {
+        let (loss, grads) = model.train_batch(&x, &y, 1.0, par);
+        std::hint::black_box((loss, grads.len()));
+    });
+    println!("{parallel}");
+    println!("  -> train-step speedup {:.2}x", speedup(&serial, &parallel));
+    rows.push(serial.to_json_tagged(&shape, 1));
+    rows.push(parallel.to_json_tagged(&shape, par.threads()));
+}
+
+fn main() {
+    let quick = smoke_mode();
+    let (batch, res, width, k_max, n_layers) =
+        if quick { (2, 16, 4, 2, 2) } else { (4, 32, 8, 4, 3) };
+    let spec = FnoSpec {
+        in_channels: 1,
+        out_channels: 1,
+        width,
+        k_max,
+        n_layers,
+        h: res,
+        w: res,
+    };
+    let par = Executor::current();
+    println!(
+        "-- native FNO training step (batch {batch}, {res}x{res}, width {width}, \
+         k {k_max}, {n_layers} layers; {} threads) --",
+        par.threads()
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    bench_precision::<f32>(&spec, batch, 0.5, &par, &mut rows);
+    bench_precision::<Bf16>(&spec, batch, 0.5, &par, &mut rows);
+    let path = bench_json_path();
+    let section = bench_json_section("bench_native", false);
+    match update_bench_json(&path, &section, rows) {
+        Ok(()) => println!("  [saved {} ({section})]", path.display()),
+        Err(e) => eprintln!("  !! could not write {}: {e:#}", path.display()),
+    }
+}

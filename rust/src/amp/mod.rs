@@ -45,6 +45,15 @@ impl GradScaler {
         s
     }
 
+    /// Restore a previously recorded scale (checkpoint resume): the
+    /// growth/backoff search continues from there instead of restarting
+    /// at the init scale mid-schedule. No-op bookkeeping otherwise —
+    /// history and step counters are unaffected.
+    pub fn set_scale(&mut self, scale: f64) {
+        self.scale = scale;
+        self.good_steps = 0;
+    }
+
     /// Scale to feed the grads graph this step.
     pub fn loss_scale(&self) -> f32 {
         if self.enabled {
@@ -159,6 +168,19 @@ mod tests {
         // History recorded for plotting.
         assert_eq!(s.history.len(), 60);
         assert!(s.history.windows(2).all(|w| w[1].1 <= w[0].1));
+    }
+
+    #[test]
+    fn set_scale_resumes_search_from_restored_value() {
+        let mut s = GradScaler::new(65536.0);
+        s.growth_interval = 4;
+        s.update(true);
+        s.set_scale(512.0);
+        assert_eq!(s.loss_scale(), 512.0);
+        for _ in 0..4 {
+            s.update(true);
+        }
+        assert_eq!(s.scale, 1024.0, "growth continues from the restored scale");
     }
 
     #[test]

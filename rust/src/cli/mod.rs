@@ -4,6 +4,7 @@
 //! mpno info                          list artifacts + platform
 //! mpno gen-data --dataset darcy --res 32 --n 48 [--seed S]
 //! mpno train --artifact NAME [--epochs N] [--lr X] [--schedule paper]
+//! mpno train --native [--precision P] [--schedule paper] [...]
 //! mpno exp <id|all> [--quick] [--json]  regenerate a paper table/figure
 //! mpno bench-par [--quick] [--json] serial vs parallel kernel throughput
 //!                                   (--json -> BENCH_spectral.json)
@@ -14,11 +15,12 @@
 //! (equivalent to `PALLAS_THREADS=N`; `--threads 1` is the deterministic
 //! serial mode).
 
-use crate::coordinator::{train_grid, PrecisionSchedule, TrainConfig};
+use crate::coordinator::{train_grid, PrecisionSchedule, TrainConfig, TrainReport};
 use crate::data::{DatasetKind, GenSpec};
 use crate::experiments::{self, Ctx};
 use crate::fp;
-use crate::runtime::Engine;
+use crate::model::FnoSpec;
+use crate::runtime::{Engine, NativeEngine, NATIVE_PRECISIONS};
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 
@@ -122,6 +124,13 @@ USAGE:
   mpno train --artifact NAME [--epochs N] [--lr X] [--seed S]
              [--schedule paper] [--loss-scaling] [--log PATH]
              [--checkpoint PATH]     (resumes if the file exists)
+  mpno train --native [--dataset ns|darcy|swe] [--res N] [--n N]
+             [--width W] [--modes K] [--layers L] [--batch-size B]
+             [--precision f64|f32|tf32|bf16|f16] [--schedule paper]
+             [--epochs N] [--lr X] [--lr-decay D] [--expect-improve]
+             CPU training on the fused spectral engine (no artifacts);
+             --schedule paper swaps bf16 -> tf32 -> f32 compute while
+             fp32 master weights carry across phases
   mpno eval --checkpoint PATH [--artifact FWD_NAME]
              evaluate a saved model, incl. zero-shot at other resolutions
   mpno exp <id|all> [--quick] [--json]   ids: {}
@@ -182,6 +191,9 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    if args.has("native") {
+        return cmd_train_native(args);
+    }
     let artifact = args.flag("artifact").context("--artifact required")?.to_string();
     let mut engine = Engine::new(&repo_root().join("artifacts"))?;
     let entry = engine
@@ -215,6 +227,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     println!("training {artifact}: {} epochs, lr {}", cfg.epochs, cfg.lr);
     let report = train_grid(&mut engine, &train, &test, &cfg)?;
+    print_report(&report);
+    Ok(())
+}
+
+fn print_report(report: &TrainReport) {
     for e in &report.epochs {
         println!(
             "epoch {:>3} [{}] train {:.5}  test L2 {:.5}  H1 {:.5}  {:.2}s ({:.1} samp/s)",
@@ -230,6 +247,119 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.final_test_l2(),
         report.final_test_h1()
     );
+}
+
+/// `mpno train --native`: full training epochs on the CPU engine — the
+/// fused spectral block's forward plus its hand-derived backward — with
+/// the precision schedule mapped onto `Scalar` swaps instead of AOT
+/// artifact swaps. No manifest or PJRT build required.
+fn cmd_train_native(args: &Args) -> Result<()> {
+    let ds_tok = args.flag("dataset").unwrap_or("darcy");
+    let kind =
+        DatasetKind::from_token(ds_tok).with_context(|| format!("unknown dataset {ds_tok}"))?;
+    if matches!(kind, DatasetKind::ShapeNetCar | DatasetKind::AhmedBody) {
+        bail!("--native trains grid datasets (ns|darcy|swe), not geometry sets");
+    }
+    let res = args.get_usize("res", 16);
+    let batch = args.get_usize("batch-size", 4);
+    let n = args.get_usize("n", 24);
+    let fno = FnoSpec {
+        in_channels: kind.in_channels(),
+        out_channels: kind.out_channels(),
+        width: args.get_usize("width", 8),
+        k_max: args.get_usize("modes", 4),
+        n_layers: args.get_usize("layers", 2),
+        h: res,
+        w: if kind == DatasetKind::SphericalSwe { 2 * res } else { res },
+    };
+    if fno.width == 0 || fno.n_layers == 0 || fno.k_max == 0 {
+        bail!("--width, --modes and --layers must all be positive");
+    }
+    if 2 * fno.k_max > fno.h.min(fno.w) {
+        bail!(
+            "--modes {} too large for --res {res}: need 2*modes <= grid side",
+            fno.k_max
+        );
+    }
+    let mut engine = NativeEngine::new(kind.token(), fno, batch);
+    let prec = args.flag("precision").unwrap_or("f32");
+    if !NATIVE_PRECISIONS.contains(&prec) {
+        bail!("unknown --precision {prec:?} (expected one of {})", NATIVE_PRECISIONS.join("|"));
+    }
+    let grads_name = engine.artifact(prec, "grads");
+
+    let spec = GenSpec { kind, n_samples: n, resolution: res, seed: args.get_u64("data-seed", 7) };
+    let data = crate::data::load_or_generate(&spec, &repo_root().join("datasets"))?;
+    let n_test = (n / 3).max(batch);
+    if n_test >= n || n - n_test < batch {
+        // BatchIter drops ragged tails, so a train split smaller than one
+        // batch would silently run zero steps per epoch.
+        bail!(
+            "--n {n} too small for batch size {batch}: {} test samples would leave \
+             {} training samples (need at least one full batch of each)",
+            n_test,
+            n.saturating_sub(n_test)
+        );
+    }
+    let (train, test) = data.split(n_test);
+
+    let mut cfg = TrainConfig::new(&grads_name);
+    cfg.epochs = args.get_usize("epochs", 10);
+    cfg.lr = args.get_f64("lr", 2e-3);
+    cfg.lr_decay = args.get_f64("lr-decay", 1.0);
+    cfg.seed = args.get_u64("seed", 0);
+    // Half-width compute wants loss scaling by default, like the paper's
+    // mixed artifacts.
+    cfg.loss_scaling = args.has("loss-scaling") || matches!(prec, "bf16" | "f16");
+    let paper_schedule = args.flag("schedule") == Some("paper");
+    if paper_schedule {
+        if args.has("precision") {
+            bail!(
+                "--precision conflicts with --schedule paper, whose phases are fixed \
+                 (bf16 -> tf32 -> f32); drop one of the two flags"
+            );
+        }
+        // 25/50/25 mapped onto native precisions: half-width block, then
+        // tf32 (the AMP-ish middle), then full f32.
+        cfg.schedule = PrecisionSchedule::paper_default(
+            &engine.artifact("bf16", "grads"),
+            &engine.artifact("tf32", "grads"),
+            &engine.artifact("f32", "grads"),
+        );
+        cfg.loss_scaling = true;
+    }
+    if let Some(p) = args.flag("log") {
+        cfg.log_path = Some(PathBuf::from(p));
+    }
+    if let Some(p) = args.flag("checkpoint") {
+        cfg.checkpoint_path = Some(PathBuf::from(p));
+    }
+    println!("platform: {}", engine.platform());
+    let label = if paper_schedule {
+        "25/50/25 schedule (native-bf16 -> native-tf32 -> native-f32)".to_string()
+    } else {
+        grads_name.clone()
+    };
+    println!(
+        "training {label}: {} epochs, lr {}, {} train / {} test samples",
+        cfg.epochs,
+        cfg.lr,
+        train.len(),
+        test.len()
+    );
+    let report = train_grid(&mut engine, &train, &test, &cfg)?;
+    print_report(&report);
+    if args.has("expect-improve") {
+        if report.diverged {
+            bail!("training diverged at step {:?}", report.diverged_at_step);
+        }
+        let first = report.epochs.first().map(|e| e.train_loss).unwrap_or(f64::NAN);
+        let last = report.epochs.last().map(|e| e.train_loss).unwrap_or(f64::NAN);
+        if !(last < first) {
+            bail!("expected train loss to improve, got {first} -> {last}");
+        }
+        println!("loss improved: {first:.5} -> {last:.5}");
+    }
     Ok(())
 }
 

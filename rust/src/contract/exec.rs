@@ -71,6 +71,48 @@ pub fn contract_modes<S: Scalar>(
     }
 }
 
+/// Adjoint of [`contract_modes`] with respect to its *input*: given the
+/// upstream gradient `g` in the (co, n_modes) layout the forward kernel
+/// produces, computes `out[i, m] = Σ_o g[o, m] · conj(w[i, o, m])` —
+/// the conjugate-transposed channel mixing the backward pass of the
+/// fused spectral block ([`crate::spectral`]) runs between its two
+/// adjoint FFT passes. Same layouts, scratch discipline and
+/// deterministic accumulation order (ascending `o` from a zeroed
+/// buffer) as the forward kernel; `tmp_mi` is (n_modes, ci) scratch.
+pub fn contract_modes_adjoint<S: Scalar>(
+    g: &[Cplx<S>],
+    w_mio: &[Cplx<S>],
+    ci: usize,
+    co: usize,
+    n_modes: usize,
+    tmp_mi: &mut [Cplx<S>],
+    out: &mut [Cplx<S>],
+) {
+    assert_eq!(g.len(), co * n_modes, "g must be (co, n_modes)");
+    assert_eq!(w_mio.len(), n_modes * ci * co, "w must be (n_modes, ci, co)");
+    assert_eq!(tmp_mi.len(), n_modes * ci, "tmp must be (n_modes, ci)");
+    assert_eq!(out.len(), ci * n_modes, "out must be (ci, n_modes)");
+    for v in tmp_mi.iter_mut() {
+        *v = Cplx::zero();
+    }
+    for m in 0..n_modes {
+        let irow = &mut tmp_mi[m * ci..(m + 1) * ci];
+        for o in 0..co {
+            let gv = g[o * n_modes + m];
+            for (i, acc) in irow.iter_mut().enumerate() {
+                let wv = w_mio[(m * ci + i) * co + o];
+                *acc = acc.add(gv.mul(wv.conj()));
+            }
+        }
+    }
+    // Output permutation (m, i) -> (i, m): pure data movement, exact.
+    for i in 0..ci {
+        for m in 0..n_modes {
+            out[i * n_modes + m] = tmp_mi[m * ci + i];
+        }
+    }
+}
+
 /// View-as-real strategy (Table 8 options).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ViewAsReal {
@@ -165,7 +207,12 @@ pub fn contract_complex_with(
     }
 }
 
-fn surviving_labels(ops: &[(Vec<char>, CTensor)], i: usize, j: usize, output: &[char]) -> Vec<char> {
+fn surviving_labels(
+    ops: &[(Vec<char>, CTensor)],
+    i: usize,
+    j: usize,
+    output: &[char],
+) -> Vec<char> {
     let mut keep: Vec<char> = output.to_vec();
     for (k, (labels, _)) in ops.iter().enumerate() {
         if k != i && k != j {
@@ -402,10 +449,47 @@ mod tests {
     }
 
     #[test]
+    fn contract_modes_adjoint_satisfies_inner_product_identity() {
+        // <contract(x, w), g>_R == <x, adjoint(g, w)>_R with the real
+        // inner product Σ (a.re·b.re + a.im·b.im) — the defining
+        // property of the backward kernel.
+        let (ci, co, n_modes) = (3usize, 4usize, 5usize);
+        let mut rng = Rng::new(42);
+        let mut cvec = |n: usize| -> Vec<Cplx<f64>> {
+            (0..n)
+                .map(|_| {
+                    let (r, i) = rng.cnormal();
+                    Cplx::from_f64(r, i)
+                })
+                .collect()
+        };
+        let x = cvec(ci * n_modes);
+        let w = cvec(n_modes * ci * co);
+        let g = cvec(co * n_modes);
+        let mut tmp_mo = vec![Cplx::<f64>::zero(); n_modes * co];
+        let mut y = vec![Cplx::<f64>::zero(); co * n_modes];
+        contract_modes(&x, &w, ci, co, n_modes, &mut tmp_mo, &mut y);
+        let mut tmp_mi = vec![Cplx::<f64>::zero(); n_modes * ci];
+        let mut gx = vec![Cplx::<f64>::zero(); ci * n_modes];
+        contract_modes_adjoint(&g, &w, ci, co, n_modes, &mut tmp_mi, &mut gx);
+        let dot = |a: &[Cplx<f64>], b: &[Cplx<f64>]| -> f64 {
+            a.iter().zip(b).map(|(p, q)| p.re * q.re + p.im * q.im).sum()
+        };
+        let lhs = dot(&y, &g);
+        let rhs = dot(&x, &gx);
+        assert!((lhs - rhs).abs() < 1e-10 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
     fn fno_contraction_all_strategies_agree() {
         let x = rand_ct(&[2, 3, 4, 4], 10);
         let w = rand_ct(&[3, 5, 4, 4], 11);
-        let base = run("bixy,ioxy->boxy", &[x.clone(), w.clone()], PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
+        let base = run(
+            "bixy,ioxy->boxy",
+            &[x.clone(), w.clone()],
+            PathStrategy::MemoryGreedy,
+            ViewAsReal::OptionC,
+        );
         assert_eq!(base.shape(), &[2, 5, 4, 4]);
         for (strat, var) in [
             (PathStrategy::FlopOptimal, ViewAsReal::OptionC),
@@ -428,7 +512,8 @@ mod tests {
         let fx = rand_ct(&[kx, r], 24);
         let fy = rand_ct(&[ky, r], 25);
         let ops = vec![x.clone(), lam.clone(), fi.clone(), fo.clone(), fx.clone(), fy.clone()];
-        let got = run("bixy,r,ir,or,xr,yr->boxy", &ops, PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
+        let got =
+            run("bixy,r,ir,or,xr,yr->boxy", &ops, PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
 
         // Reconstruct dense weight: w[i,o,x,y] = sum_r lam[r] fi[i,r] fo[o,r] fx[x,r] fy[y,r].
         let w = CTensor::from_fn(&[ci, co, kx, ky], |id| {
@@ -453,7 +538,12 @@ mod tests {
         // "ab,cb->c" must sum over a.
         let a = rand_ct(&[3, 4], 30);
         let b = rand_ct(&[5, 4], 31);
-        let got = run("ab,cb->c", &[a.clone(), b.clone()], PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
+        let got = run(
+            "ab,cb->c",
+            &[a.clone(), b.clone()],
+            PathStrategy::MemoryGreedy,
+            ViewAsReal::OptionC,
+        );
         let want = CTensor::from_fn(&[5], |i| {
             let mut acc = Cplx::<f64>::zero();
             for ia in 0..3 {
@@ -471,7 +561,12 @@ mod tests {
         let a = rand_ct(&[2, 3], 40);
         let b = rand_ct(&[3, 4], 41);
         let c = rand_ct(&[4, 5], 42);
-        let abc = run("ij,jk,kl->il", &[a.clone(), b.clone(), c.clone()], PathStrategy::FlopOptimal, ViewAsReal::OptionC);
+        let abc = run(
+            "ij,jk,kl->il",
+            &[a.clone(), b.clone(), c.clone()],
+            PathStrategy::FlopOptimal,
+            ViewAsReal::OptionC,
+        );
         let ab = run("ij,jk->ik", &[a, b], PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
         let want = run("ik,kl->il", &[ab, c], PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
         assert!(abc.rel_fro(&want) < 1e-12);
@@ -545,7 +640,12 @@ mod tests {
     fn output_permutation_respected() {
         let a = rand_ct(&[2, 3], 50);
         let b = rand_ct(&[3, 4], 51);
-        let ij = run("ij,jk->ik", &[a.clone(), b.clone()], PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
+        let ij = run(
+            "ij,jk->ik",
+            &[a.clone(), b.clone()],
+            PathStrategy::MemoryGreedy,
+            ViewAsReal::OptionC,
+        );
         let ji = run("ij,jk->ki", &[a, b], PathStrategy::MemoryGreedy, ViewAsReal::OptionC);
         assert_eq!(ji.shape(), &[4, 2]);
         assert!(ji.permute(&[1, 0]).rel_fro(&ij) < 1e-12);

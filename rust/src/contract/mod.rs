@@ -20,7 +20,8 @@ pub mod expr;
 pub mod path;
 
 pub use exec::{
-    contract, contract_complex, contract_complex_with, contract_modes, contract_with, ViewAsReal,
+    contract, contract_complex, contract_complex_with, contract_modes, contract_modes_adjoint,
+    contract_with, ViewAsReal,
 };
 pub use expr::EinsumExpr;
 pub use path::{plan, CostModel, PathCache, PathStrategy, PlannedPath};

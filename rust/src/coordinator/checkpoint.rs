@@ -14,6 +14,10 @@ pub struct Checkpoint {
     /// Artifact the params belong to (layout contract).
     pub artifact: String,
     pub epoch: usize,
+    /// Dynamic loss-scaler state at save time, so a resumed run does not
+    /// restart its scale-growth search mid-schedule (absent in
+    /// checkpoints written before this field existed).
+    pub loss_scale: Option<f64>,
     pub params: Vec<(String, Tensor)>,
 }
 
@@ -23,6 +27,7 @@ impl Checkpoint {
         Checkpoint {
             artifact: entry.name.clone(),
             epoch,
+            loss_scale: None,
             params: entry
                 .params
                 .iter()
@@ -32,14 +37,26 @@ impl Checkpoint {
         }
     }
 
+    /// Record the loss scaler's current scale alongside the weights.
+    pub fn with_loss_scale(mut self, scale: f64) -> Checkpoint {
+        self.loss_scale = Some(scale);
+        self
+    }
+
     /// Save to disk. Metadata rides along as tiny tensors so the format
     /// stays a plain named-tensor file.
     pub fn save(&self, path: &Path) -> Result<()> {
         let meta = Tensor::from_vec(vec![1], vec![self.epoch as f32]);
         let name_bytes: Vec<f32> = self.artifact.bytes().map(|b| b as f32).collect();
         let name_t = Tensor::from_vec(vec![name_bytes.len()], name_bytes);
+        let scale_t = self
+            .loss_scale
+            .map(|s| Tensor::from_vec(vec![1], vec![s as f32]));
         let mut recs: Vec<(&str, &Tensor)> =
             vec![("__epoch", &meta), ("__artifact", &name_t)];
+        if let Some(t) = &scale_t {
+            recs.push(("__loss_scale", t));
+        }
         for (n, t) in &self.params {
             recs.push((n.as_str(), t));
         }
@@ -50,6 +67,7 @@ impl Checkpoint {
         let recs = crate::ser::load_tensors(path)?;
         let mut epoch = None;
         let mut artifact = None;
+        let mut loss_scale = None;
         let mut params = vec![];
         for (name, t) in recs {
             match name.as_str() {
@@ -58,12 +76,14 @@ impl Checkpoint {
                     let bytes: Vec<u8> = t.data().iter().map(|&f| f as u8).collect();
                     artifact = Some(String::from_utf8(bytes).context("artifact name")?);
                 }
+                "__loss_scale" => loss_scale = Some(t.data()[0] as f64),
                 _ => params.push((name, t)),
             }
         }
         Ok(Checkpoint {
             artifact: artifact.context("missing __artifact record")?,
             epoch: epoch.context("missing __epoch record")?,
+            loss_scale,
             params,
         })
     }
@@ -144,8 +164,25 @@ mod tests {
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back.epoch, 7);
         assert_eq!(back.artifact, "fake_mixed_grads");
+        assert_eq!(back.loss_scale, None);
         let restored = back.params_for(&entry).unwrap();
         assert_eq!(restored, params);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn loss_scale_rides_along_without_polluting_params() {
+        let entry = fake_entry(&[("w", vec![4])]);
+        let params = vec![Tensor::full(&[4], 0.5)];
+        let ck = Checkpoint::from_params(&entry, 2, &params).with_loss_scale(4096.0);
+        let dir = std::env::temp_dir().join("mpno_ckpt_scale_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.mpno");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.loss_scale, Some(4096.0));
+        assert_eq!(back.params.len(), 1, "__loss_scale must not become a param");
+        assert_eq!(back.params_for(&entry).unwrap(), params);
         std::fs::remove_file(&path).ok();
     }
 

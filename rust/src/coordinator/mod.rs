@@ -1,10 +1,11 @@
 //! The training coordinator — L3's event loop.
 //!
-//! Owns: epoch/step iteration, batch assembly, the PJRT grads call, the
-//! dynamic loss scaler, Adam with fp32 master weights, the NaN watchdog,
-//! metric logging, and the paper's **precision schedule** (§4.4): train
-//! the first 25% of epochs on the mixed artifact, the middle 50% on the
-//! AMP artifact and the final 25% on the full-precision artifact, carrying
+//! Owns: epoch/step iteration, batch assembly, the grads call (PJRT or
+//! native CPU — anything implementing [`Backend`]), the dynamic loss
+//! scaler, Adam with fp32 master weights, the NaN watchdog, metric
+//! logging, and the paper's **precision schedule** (§4.4): train the
+//! first 25% of epochs on the mixed artifact, the middle 50% on the AMP
+//! artifact and the final 25% on the full-precision artifact, carrying
 //! the fp32 master weights across the executable swaps — possible because
 //! every precision variant of a model shares the same parameter list.
 
@@ -17,7 +18,7 @@ use crate::data::{BatchIter, GridDataset};
 use crate::metrics;
 use crate::optim::{Adam, GradAccumulator};
 use crate::rng::Rng;
-use crate::runtime::Engine;
+use crate::runtime::{Backend, ExecLike};
 use crate::stability::DivergenceDetector;
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
@@ -30,21 +31,37 @@ pub struct PrecisionSchedule {
 }
 
 impl PrecisionSchedule {
+    /// Build a schedule from (start_fraction, artifact) phases. Phases
+    /// are sorted by start fraction here, because [`PrecisionSchedule::active`]
+    /// scans in order and would silently mis-select on unsorted input.
+    /// Non-finite fractions are rejected (they have no defined order).
+    pub fn new(mut phases: Vec<(f64, String)>) -> Self {
+        assert!(!phases.is_empty(), "schedule needs at least one phase");
+        assert!(
+            phases.iter().all(|(f, _)| f.is_finite()),
+            "phase fractions must be finite"
+        );
+        phases.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite fractions compare"));
+        PrecisionSchedule { phases }
+    }
+
     /// The paper's 25/50/25 schedule.
     pub fn paper_default(mixed: &str, amp: &str, full: &str) -> Self {
-        PrecisionSchedule {
-            phases: vec![
-                (0.0, mixed.to_string()),
-                (0.25, amp.to_string()),
-                (0.75, full.to_string()),
-            ],
-        }
+        PrecisionSchedule::new(vec![
+            (0.0, mixed.to_string()),
+            (0.25, amp.to_string()),
+            (0.75, full.to_string()),
+        ])
     }
 
     pub fn constant(artifact: &str) -> Self {
-        PrecisionSchedule { phases: vec![(0.0, artifact.to_string())] }
+        PrecisionSchedule::new(vec![(0.0, artifact.to_string())])
     }
 
+    /// The artifact active at `progress` ∈ [0, 1): the last phase whose
+    /// start fraction is ≤ progress (phase starts are inclusive, so
+    /// progress 0.25 / 0.75 select the amp / full phases of the paper
+    /// schedule).
     pub fn active(&self, progress: f64) -> &str {
         let mut current = &self.phases[0].1;
         for (frac, name) in &self.phases {
@@ -64,6 +81,8 @@ pub struct TrainConfig {
     pub eval_artifact: Option<String>,
     pub epochs: usize,
     pub lr: f64,
+    /// Multiplicative per-epoch learning-rate decay (1.0 = constant).
+    pub lr_decay: f64,
     pub seed: u64,
     pub loss_scaling: bool,
     pub init_loss_scale: f64,
@@ -84,6 +103,7 @@ impl TrainConfig {
             eval_artifact: None,
             epochs: 5,
             lr: 1e-3,
+            lr_decay: 1.0,
             seed: 0,
             loss_scaling: false,
             init_loss_scale: 65536.0,
@@ -137,38 +157,53 @@ impl TrainReport {
     }
 }
 
-/// Train a grid model (FNO/TFNO/SFNO/U-Net) per the config.
-pub fn train_grid(
-    engine: &mut Engine,
+/// Train a grid model (FNO/TFNO/SFNO/U-Net) per the config, on any
+/// [`Backend`] — the PJRT engine's AOT artifacts and the native CPU
+/// engine's precision variants run through the same loop, loss scaler,
+/// optimizer and checkpointing.
+pub fn train_grid<B: Backend>(
+    engine: &mut B,
     train: &GridDataset,
     test: &GridDataset,
     cfg: &TrainConfig,
 ) -> Result<TrainReport> {
     let first = cfg.schedule.phases[0].1.clone();
     let first_exe = engine.load(&first)?;
-    let entry = first_exe.entry.clone();
+    let entry = first_exe.entry().clone();
     if entry.graph != "grads" {
         bail!("{first}: schedule must reference grads artifacts");
     }
     let batch = entry.batch;
     let mut params = engine.init_params(&entry, cfg.seed);
     let mut start_epoch = 0usize;
+    let mut restored_scale = None;
     if let Some(ck_path) = &cfg.checkpoint_path {
         if ck_path.exists() {
             if let Ok(ck) = Checkpoint::load(ck_path) {
                 if let Ok(restored) = ck.params_for(&entry) {
                     params = restored;
                     start_epoch = ck.epoch + 1;
+                    restored_scale = ck.loss_scale;
                 }
             }
         }
     }
-    let mut adam = Adam::new(cfg.lr, &params).with_clip(cfg.grad_clip);
+    // Replay the per-epoch decay products sequentially so a resumed run's
+    // learning rate is bit-identical to an uninterrupted one (powi would
+    // differ in the last ULPs by float non-associativity).
+    let mut lr0 = cfg.lr;
+    for _ in 0..start_epoch {
+        lr0 *= cfg.lr_decay;
+    }
+    let mut adam = Adam::new(lr0, &params).with_clip(cfg.grad_clip);
     let mut scaler = if cfg.loss_scaling {
         GradScaler::new(cfg.init_loss_scale)
     } else {
         GradScaler::disabled()
     };
+    if let Some(s) = restored_scale {
+        scaler.set_scale(s);
+    }
     let mut accum = GradAccumulator::new(cfg.accumulate);
     let mut watchdog = DivergenceDetector::new(8);
     let mut rng = Rng::new(cfg.seed ^ 0xBA7C4);
@@ -228,7 +263,10 @@ pub fn train_grid(
             }
         }
         let seconds = t0.elapsed().as_secs_f64();
-        let (test_l2, test_h1) = evaluate(engine, &params, test, cfg, &entry)?;
+        // Evaluate through the *active* phase's artifact, so a schedule's
+        // final epochs report metrics at the precision they trained in
+        // (not the phase-0 precision captured at startup).
+        let (test_l2, test_h1) = evaluate(engine, &params, test, cfg, exe.entry())?;
         let stats = EpochStats {
             epoch,
             artifact: art_name,
@@ -251,7 +289,18 @@ pub fn train_grid(
         }
         epochs.push(stats);
         if let Some(ck_path) = &cfg.checkpoint_path {
-            Checkpoint::from_params(&entry, epoch, &params).save(ck_path)?;
+            let mut ck = Checkpoint::from_params(&entry, epoch, &params);
+            // Record the scaler state only when loss scaling is live: a
+            // disabled scaler's constant 1.0 must not override a later
+            // scaling-enabled resume's init scale.
+            if cfg.loss_scaling {
+                ck = ck.with_loss_scale(scaler.scale);
+            }
+            ck.save(ck_path)?;
+        }
+        if cfg.lr_decay != 1.0 {
+            let lr = adam.lr * cfg.lr_decay;
+            adam.set_lr(lr);
         }
     }
     Ok(TrainReport {
@@ -265,8 +314,8 @@ pub fn train_grid(
 }
 
 /// Evaluate params on a test set with the fwd artifact; returns (L2, H1).
-pub fn evaluate(
-    engine: &mut Engine,
+pub fn evaluate<B: Backend>(
+    engine: &mut B,
     params: &[Tensor],
     test: &GridDataset,
     cfg: &TrainConfig,
@@ -278,9 +327,10 @@ pub fn evaluate(
             // Convention: <model>_<dataset>_..._fwd full-precision twin.
             let mut n = train_entry.name.clone();
             n = n.replace("_grads", "_fwd");
-            if engine.manifest.find(&n).is_none() {
+            if engine.manifest().find(&n).is_none() {
                 // Fall back to the full-precision fwd for this model/dataset.
-                let sel = engine.manifest.select(&train_entry.model, &train_entry.dataset, "fwd");
+                let sel =
+                    engine.manifest().select(&train_entry.model, &train_entry.dataset, "fwd");
                 let fallback = sel
                     .iter()
                     .find(|a| a.precision == crate::fp::Precision::Full)
@@ -295,9 +345,9 @@ pub fn evaluate(
     // Parameter layouts must match the training artifact (CP-factorized or
     // non-default-mode variants have no fwd twin); otherwise fall back to
     // computing the test *loss* through the training grads graph.
-    let compatible = exe.entry.params.len() == train_entry.params.len()
+    let compatible = exe.entry().params.len() == train_entry.params.len()
         && exe
-            .entry
+            .entry()
             .params
             .iter()
             .zip(&train_entry.params)
@@ -305,7 +355,7 @@ pub fn evaluate(
     if !compatible {
         return evaluate_via_grads(engine, params, test, train_entry);
     }
-    let batch = exe.entry.batch;
+    let batch = exe.entry().batch;
     let mut l2 = 0.0;
     let mut h1 = 0.0;
     let mut batches = 0usize;
@@ -332,14 +382,14 @@ pub fn evaluate(
 /// (used when no shape-compatible fwd artifact exists, e.g. CP weights).
 /// Returns the test loss in both slots (it is the artifact's configured
 /// loss — H1 for NS/Darcy, L2 elsewhere).
-fn evaluate_via_grads(
-    engine: &mut Engine,
+fn evaluate_via_grads<B: Backend>(
+    engine: &mut B,
     params: &[Tensor],
     test: &GridDataset,
     train_entry: &crate::runtime::ArtifactEntry,
 ) -> Result<(f64, f64)> {
     let exe = engine.load(&train_entry.name)?;
-    let batch = exe.entry.batch;
+    let batch = exe.entry().batch;
     let scale = Tensor::from_vec(vec![], vec![1.0f32]);
     let mut loss = 0.0;
     let mut batches = 0usize;
@@ -365,15 +415,15 @@ fn evaluate_via_grads(
 
 /// Zero-shot super-resolution eval (Table 1): run trained params through a
 /// fwd artifact at a finer resolution against a high-res dataset.
-pub fn evaluate_super_resolution(
-    engine: &mut Engine,
+pub fn evaluate_super_resolution<B: Backend>(
+    engine: &mut B,
     params: &[Tensor],
     fwd_artifact: &str,
     hires: &GridDataset,
 ) -> Result<(f64, f64)> {
     let exe = engine.load(fwd_artifact)?;
-    let batch = exe.entry.batch;
-    let (h, w) = exe.entry.resolution().context("artifact has no resolution")?;
+    let batch = exe.entry().batch;
+    let (h, w) = exe.entry().resolution().context("artifact has no resolution")?;
     let (dh, dw) = hires.resolution();
     if (h, w) != (dh, dw) {
         bail!("artifact is {h}x{w} but dataset is {dh}x{dw}");
@@ -400,6 +450,7 @@ pub fn evaluate_super_resolution(
 mod tests {
     use super::*;
     use crate::data::{DatasetKind, GenSpec};
+    use crate::runtime::Engine;
 
     fn artifacts_dir() -> std::path::PathBuf {
         std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -430,6 +481,46 @@ mod tests {
         assert_eq!(s.active(0.5), "amp");
         assert_eq!(s.active(0.75), "full");
         assert_eq!(s.active(0.99), "full");
+    }
+
+    #[test]
+    fn schedule_boundaries_are_inclusive_phase_starts() {
+        // The exact boundary progress values hand off to the next phase.
+        let s = PrecisionSchedule::paper_default("mixed", "amp", "full");
+        assert_eq!(s.active(0.25), "amp", "0.25 starts the amp phase");
+        assert_eq!(s.active(0.75), "full", "0.75 starts the full phase");
+        let eps = 1e-12;
+        assert_eq!(s.active(0.25 - eps), "mixed");
+        assert_eq!(s.active(0.75 - eps), "amp");
+    }
+
+    #[test]
+    fn schedule_constructor_sorts_unsorted_phases() {
+        // Before the sort, `active` scanned in declaration order and an
+        // unsorted phase list silently shadowed later fractions.
+        let s = PrecisionSchedule::new(vec![
+            (0.75, "full".to_string()),
+            (0.0, "mixed".to_string()),
+            (0.25, "amp".to_string()),
+        ]);
+        assert_eq!(s.phases[0].1, "mixed");
+        assert_eq!(s.active(0.0), "mixed");
+        assert_eq!(s.active(0.25), "amp");
+        assert_eq!(s.active(0.5), "amp");
+        assert_eq!(s.active(0.75), "full");
+        assert_eq!(s.active(1.0), "full");
+    }
+
+    #[test]
+    #[should_panic]
+    fn schedule_rejects_empty_phase_list() {
+        PrecisionSchedule::new(vec![]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn schedule_rejects_non_finite_fractions() {
+        PrecisionSchedule::new(vec![(f64::NAN, "x".to_string())]);
     }
 
     #[test]

@@ -66,7 +66,12 @@ pub fn tab8(ctx: &Ctx) -> Result<()> {
             format!("{}", path.cost.peak_intermediate),
         ]);
     }
-    t.rows_str(&["paper (NS epoch)", "1730s / 101.7s / 92.6s", "1 / 0.059 / 0.054", "10310 / 5048 / 4832 MB"]);
+    t.rows_str(&[
+        "paper (NS epoch)",
+        "1730s / 101.7s / 92.6s",
+        "1 / 0.059 / 0.054",
+        "10310 / 5048 / 4832 MB",
+    ]);
     ctx.emit("tab8", &t)
 }
 
@@ -131,7 +136,11 @@ pub fn parallel_fft_case(quick: bool) -> (usize, usize) {
 /// The serial-vs-parallel einsum benchmark cases — (label, expression,
 /// operand shapes) — shared by `mpno exp parbench` and
 /// `cargo bench --bench bench_contract` so the two reports cannot drift.
-pub fn parallel_einsum_cases(b: usize, c: usize, m: usize) -> Vec<(String, String, Vec<Vec<usize>>)> {
+pub fn parallel_einsum_cases(
+    b: usize,
+    c: usize,
+    m: usize,
+) -> Vec<(String, String, Vec<Vec<usize>>)> {
     vec![
         (
             format!("dense bixy,ioxy->boxy b{b} c{c} m{m}"),
@@ -170,7 +179,8 @@ pub fn parbench(ctx: &Ctx) -> Result<()> {
         &["kernel", "serial mean", "parallel mean", "speedup"],
     );
     let mut json_rows: Vec<Json> = vec![];
-    let tag = |s: &BenchStats, case: &str, threads: usize| -> Json { s.to_json_tagged(case, threads) };
+    let tag =
+        |s: &BenchStats, case: &str, threads: usize| -> Json { s.to_json_tagged(case, threads) };
 
     // Batched 2-D FFT at FNO spectral-layer shape.
     let (b, hw) = parallel_fft_case(ctx.quick);
@@ -274,7 +284,14 @@ pub fn parbench(ctx: &Ctx) -> Result<()> {
 pub fn tab10(ctx: &Ctx) -> Result<()> {
     let mut t = Table::new(
         "Table 10 — contraction path objective on 3-D factorized shapes",
-        &["dataset", "greedy peak (elems)", "flop-optimal peak (elems)", "greedy FLOPs", "flop-opt FLOPs", "mem reduction"],
+        &[
+            "dataset",
+            "greedy peak (elems)",
+            "flop-optimal peak (elems)",
+            "greedy FLOPs",
+            "flop-opt FLOPs",
+            "mem reduction",
+        ],
     );
     for (ds, c, m, r) in [("Shape-Net Car", 8usize, 8usize, 4usize), ("Ahmed-body", 8, 10, 4)] {
         // Tucker-ish 3-D TFNO contraction: data x factor matrices.
@@ -291,7 +308,9 @@ pub fn tab10(ctx: &Ctx) -> Result<()> {
         let greedy = plan(&expr, &refs, PathStrategy::MemoryGreedy)?;
         let flop = plan(&expr, &refs, PathStrategy::FlopOptimal)?;
         let red = 100.0
-            * (1.0 - greedy.cost.peak_intermediate as f64 / flop.cost.peak_intermediate.max(1) as f64);
+            * (1.0
+                - greedy.cost.peak_intermediate as f64
+                    / flop.cost.peak_intermediate.max(1) as f64);
         t.row(&[
             ds.to_string(),
             format!("{}", greedy.cost.peak_intermediate),

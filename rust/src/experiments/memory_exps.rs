@@ -103,8 +103,10 @@ pub fn tab7(ctx: &Ctx) -> Result<()> {
         let flops = crate::memmodel::fno_step_flops(&arch);
         let bytes_full = crate::memmodel::fno_step_bytes(&arch, Method::Full);
         let bytes_ours = crate::memmodel::fno_step_bytes(&arch, Method::AmpHalf);
-        let t_tf32 = (flops / (A100.tf32_tflops * 1e12)).max(bytes_full / (A100.bandwidth_gbs * 1e9));
-        let t_ours = (flops / (A100.f16_tflops * 1e12)).max(bytes_ours / (A100.bandwidth_gbs * 1e9));
+        let t_tf32 =
+            (flops / (A100.tf32_tflops * 1e12)).max(bytes_full / (A100.bandwidth_gbs * 1e9));
+        let t_ours =
+            (flops / (A100.f16_tflops * 1e12)).max(bytes_ours / (A100.bandwidth_gbs * 1e9));
         t.row(&[
             ds.to_string(),
             format!("{:.3}", t_tf32 / t_tf32),

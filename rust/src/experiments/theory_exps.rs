@@ -182,7 +182,10 @@ pub fn fig15(ctx: &Ctx) -> Result<()> {
         "trend",
         "",
         "",
-        &format!("low-f avg {low_avg:.3}% -> high-f avg {high_avg:.3}% (x{:.1})", high_avg / low_avg.max(1e-12)),
+        &format!(
+            "low-f avg {low_avg:.3}% -> high-f avg {high_avg:.3}% (x{:.1})",
+            high_avg / low_avg.max(1e-12)
+        ),
     ]);
     let _ = last_pct;
     ctx.emit("fig15", &t)

@@ -320,8 +320,10 @@ pub fn tab2(ctx: &Ctx) -> Result<()> {
         &["model", "dataset", "test L2", "mem reduction (model)"],
     );
     for (ds, kind) in [("ns", DatasetKind::NavierStokes), ("darcy", DatasetKind::DarcyFlow)] {
-        let full = run_one(ctx, &mut eng, &format!("fno_{ds}_r32_full_none_grads"), kind, 32, false)?;
-        let mixed = run_one(ctx, &mut eng, &format!("fno_{ds}_r32_mixed_tanh_grads"), kind, 32, true)?;
+        let full =
+            run_one(ctx, &mut eng, &format!("fno_{ds}_r32_full_none_grads"), kind, 32, false)?;
+        let mixed =
+            run_one(ctx, &mut eng, &format!("fno_{ds}_r32_mixed_tanh_grads"), kind, 32, true)?;
         let arch = super::memory_exps::paper_arch(ds);
         let m_full = fno_memory(&arch, Method::Full, &MemOptions::default()).total();
         let m_ours = fno_memory(&arch, Method::AmpHalf, &MemOptions::default()).total();
@@ -337,8 +339,10 @@ pub fn tab2(ctx: &Ctx) -> Result<()> {
             format!("{:.4}", mixed.final_test_l2()),
             format!("{:.1}%", 100.0 * (1.0 - m_ours as f64 / m_full as f64)),
         ]);
-        let ufull = run_one(ctx, &mut eng, &format!("unet_{ds}_r32_full_none_grads"), kind, 32, false)?;
-        let uamp = run_one(ctx, &mut eng, &format!("unet_{ds}_r32_amp_none_grads"), kind, 32, false)?;
+        let ufull =
+            run_one(ctx, &mut eng, &format!("unet_{ds}_r32_full_none_grads"), kind, 32, false)?;
+        let uamp =
+            run_one(ctx, &mut eng, &format!("unet_{ds}_r32_amp_none_grads"), kind, 32, false)?;
         // U-Net memory: no spectral domain — AMP's dense halving only.
         t.row(&[
             "Full U-Net".into(),
@@ -353,7 +357,12 @@ pub fn tab2(ctx: &Ctx) -> Result<()> {
             "~22% (dense only)".into(),
         ]);
     }
-    t.rows_str(&["paper", "NS: FNO .003/.004 UNet .111; Darcy FNO .01/.007 UNet .024", "", "50.4%/25.8% vs 20.9%/24.9%"]);
+    t.rows_str(&[
+        "paper",
+        "NS: FNO .003/.004 UNet .111; Darcy FNO .01/.007 UNet .024",
+        "",
+        "50.4%/25.8% vs 20.9%/24.9%",
+    ]);
     ctx.emit("tab2", &t)
 }
 
@@ -403,8 +412,10 @@ pub fn fig8(ctx: &Ctx) -> Result<()> {
     for &seed in seeds {
         let mut c = Ctx { seed, ..Ctx::new(ctx.quick) };
         c.results_dir = ctx.results_dir.clone();
-        let (lf, _) = train_geom(&c, &mut eng, "gino_ahmed_p256_full_none_grads", DatasetKind::AhmedBody)?;
-        let (lm, _) = train_geom(&c, &mut eng, "gino_ahmed_p256_mixed_tanh_grads", DatasetKind::AhmedBody)?;
+        let (lf, _) =
+            train_geom(&c, &mut eng, "gino_ahmed_p256_full_none_grads", DatasetKind::AhmedBody)?;
+        let (lm, _) =
+            train_geom(&c, &mut eng, "gino_ahmed_p256_mixed_tanh_grads", DatasetKind::AhmedBody)?;
         fulls.push(lf);
         mixeds.push(lm);
         t.row(&[format!("{seed}"), format!("{lf:.4}"), format!("{lm:.4}")]);
@@ -550,9 +561,15 @@ pub fn fig11(ctx: &Ctx) -> Result<()> {
         &["quantity", "value"],
     );
     t.row(&["mean |amplitude| difference".into(), format!("{amp:.4e}")]);
-    t.row(&["... relative to mean amplitude".into(), format!("{:.2}%", 100.0 * amp / spec_mean)]);
+    t.row(&[
+        "... relative to mean amplitude".into(),
+        format!("{:.2}%", 100.0 * amp / spec_mean),
+    ]);
     t.row(&["mean |phase| difference (rad)".into(), format!("{phase:.4}")]);
-    t.rows_str(&["paper", "changes an extremely small fraction of frequencies; well-aligned phase"]);
+    t.rows_str(&[
+        "paper",
+        "changes an extremely small fraction of frequencies; well-aligned phase",
+    ]);
     ctx.emit("fig11", &t)
 }
 
@@ -746,7 +763,13 @@ pub fn fig14(ctx: &Ctx) -> Result<()> {
         row.push(format!("{:.2}", times[1]));
         t.row(&row);
     }
-    t.rows_str(&["paper", "too few modes hurts accuracy", "half ≈ full at all mode counts", "more modes cost runtime", ""]);
+    t.rows_str(&[
+        "paper",
+        "too few modes hurts accuracy",
+        "half ≈ full at all mode counts",
+        "more modes cost runtime",
+        "",
+    ]);
     ctx.emit("fig14", &t)
 }
 

@@ -79,7 +79,8 @@ mod tests {
         // bf16 keeps f32's exponent: 1e9 is finite (this is why bf16 does
         // not need the tanh stabilizer — it trades mantissa for range).
         assert!(!Bf16::from_f32(1e9).is_infinite());
-        assert!(Bf16::from_f32(f32::MAX).0 == 0x7F80 || Bf16::from_f32(f32::MAX).to_f32() >= 3.3e38);
+        let big = Bf16::from_f32(f32::MAX);
+        assert!(big.0 == 0x7F80 || big.to_f32() >= 3.3e38);
     }
 
     #[test]

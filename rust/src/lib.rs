@@ -18,7 +18,9 @@
 //!    convolution engine built on planned FFTs ([`spectral`]) and
 //!    wall-clock lap instrumentation ([`exec`]).
 //! 2. **Core library** — the paper's contribution: approximation-bound
-//!    theory ([`theory`]), the PJRT runtime ([`runtime`]), optimizers with
+//!    theory ([`theory`]), the PJRT runtime and the native CPU engine
+//!    behind the shared `Backend` trait ([`runtime`]), the native FNO
+//!    with its hand-derived backward pass ([`model`]), optimizers with
 //!    fp32 master weights ([`optim`]), AMP semantics + dynamic loss scaling
 //!    ([`amp`]), numerical stabilizers ([`stability`]), the analytic GPU
 //!    memory model ([`memmodel`]), operator-learning metrics ([`metrics`]),
@@ -45,6 +47,7 @@ pub mod jsonlite;
 pub mod linalg;
 pub mod memmodel;
 pub mod metrics;
+pub mod model;
 pub mod optim;
 pub mod parallel;
 pub mod pde;

@@ -1,0 +1,681 @@
+//! Native CPU FNO: the training-time model behind `runtime::NativeEngine`.
+//!
+//! [`Fno2d`] is the paper's 2-D FNO (lifting → N × [fused spectral conv +
+//! pointwise channel mix + GELU] → projection), generic over [`Scalar`]
+//! so one implementation covers every precision variant of the schedule
+//! (§4.4): the 25/50/25 phases swap the *compute* precision while the
+//! fp32 master weights live outside the model and are pushed in per step
+//! via [`Fno2d::set_params`].
+//!
+//! The forward pass rides the fused spectral engine
+//! ([`crate::spectral::SpectralConv2d`]) — one [`Executor`] work item per
+//! sample, per-worker [`ConvScratch`] arenas, planned truncated FFTs. The
+//! backward pass is hand-derived: the spectral block is linear, so its
+//! adjoint is the reversed pipeline on the same arenas
+//! ([`SpectralConv2d::backward_sample`]: kept-mode FFT of the upstream
+//! gradient → conjugate-transposed mode contraction → kept-mode iFFT);
+//! GELU and the pointwise maps backpropagate elementwise. Per-sample
+//! gradient contributions are accumulated in f64 and reduced in sample
+//! order, so gradients are **bit-identical at every thread count**
+//! (enforced by `tests/native_grad.rs`, alongside a central-difference
+//! oracle at f64).
+
+use crate::fp::{Cplx, Scalar};
+use crate::parallel::Executor;
+use crate::runtime::ParamSpec;
+use crate::spectral::{ConvScratch, SpectralConv2d};
+use crate::tensor::Tensor;
+use std::ops::Range;
+
+/// Architecture of a native FNO: channel counts, grid, modes, depth.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FnoSpec {
+    pub in_channels: usize,
+    pub out_channels: usize,
+    /// Hidden channel width of every FNO block.
+    pub width: usize,
+    /// Kept positive/negative frequencies per axis.
+    pub k_max: usize,
+    pub n_layers: usize,
+    /// Grid height / width.
+    pub h: usize,
+    pub w: usize,
+}
+
+fn xavier(fan_in: usize, fan_out: usize) -> f64 {
+    (2.0 / (fan_in + fan_out) as f64).sqrt()
+}
+
+impl FnoSpec {
+    /// The ordered parameter list (names, shapes, init stds) — the single
+    /// source of truth shared by the model's flat gradient layout and the
+    /// `NativeEngine` manifest entries. Complex spectral weights are
+    /// stored as trailing interleaved (re, im) pairs so every parameter
+    /// is a plain f32 [`Tensor`] the optimizer and checkpoints already
+    /// understand.
+    pub fn param_specs(&self) -> Vec<ParamSpec> {
+        let (w, k2) = (self.width, 2 * self.k_max);
+        let mut v = vec![
+            ParamSpec {
+                name: "lift_w".to_string(),
+                shape: vec![w, self.in_channels],
+                std: xavier(self.in_channels, w),
+            },
+            ParamSpec { name: "lift_b".to_string(), shape: vec![w], std: 0.0 },
+        ];
+        for l in 0..self.n_layers {
+            v.push(ParamSpec {
+                name: format!("l{l}_spec_w"),
+                shape: vec![w, w, k2, k2, 2],
+                std: 1.0 / (w * w) as f64,
+            });
+            v.push(ParamSpec {
+                name: format!("l{l}_mix_w"),
+                shape: vec![w, w],
+                std: xavier(w, w),
+            });
+            v.push(ParamSpec { name: format!("l{l}_mix_b"), shape: vec![w], std: 0.0 });
+        }
+        v.push(ParamSpec {
+            name: "proj_w".to_string(),
+            shape: vec![self.out_channels, w],
+            std: xavier(w, self.out_channels),
+        });
+        v.push(ParamSpec { name: "proj_b".to_string(), shape: vec![self.out_channels], std: 0.0 });
+        v
+    }
+
+    /// Total scalar parameter count.
+    pub fn n_params(&self) -> usize {
+        self.param_specs().iter().map(|p| p.shape.iter().product::<usize>()).sum()
+    }
+
+    /// Seeded fp32 master-weight initialization (Gaussian with each
+    /// spec's std; biases zero) — delegates to the one shared recipe in
+    /// `runtime`, so `NativeEngine::init_params` and this agree
+    /// bit-for-bit (pinned by a test in `runtime::native`).
+    pub fn init_params(&self, seed: u64) -> Vec<Tensor> {
+        crate::runtime::init_params_from_specs(&self.param_specs(), seed)
+    }
+}
+
+/// GELU (tanh approximation), evaluated in f64 and rounded into `S` —
+/// the same "constants from f64 formulas" convention the FFT twiddles
+/// use, so activation values are identical across thread counts and
+/// depend only on the input value.
+pub fn gelu<S: Scalar>(x: S) -> S {
+    S::from_f64(gelu_f64(x.to_f64()))
+}
+
+/// d/dx of [`gelu`], evaluated in f64 and rounded into `S`.
+pub fn gelu_prime<S: Scalar>(x: S) -> S {
+    S::from_f64(gelu_prime_f64(x.to_f64()))
+}
+
+const GELU_C: f64 = 0.797_884_560_802_865_4; // sqrt(2/π)
+const GELU_A: f64 = 0.044715;
+
+/// Max samples whose per-sample gradient chunks are live at once in
+/// [`Fno2d::train_batch`]: bounds transient memory to
+/// `MAX_GRAD_BLOCK · (1 + n_params)` f64s for any batch size while still
+/// feeding every worker the executor can offer (the thread cap is 16).
+/// Block boundaries do not change results — see the reduction comment.
+const MAX_GRAD_BLOCK: usize = 16;
+
+fn gelu_f64(x: f64) -> f64 {
+    0.5 * x * (1.0 + (GELU_C * (x + GELU_A * x * x * x)).tanh())
+}
+
+fn gelu_prime_f64(x: f64) -> f64 {
+    let t = (GELU_C * (x + GELU_A * x * x * x)).tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * x * x)
+}
+
+/// Per-worker scratch + activation tape for one sample. Every buffer is
+/// overwritten (never accumulated into) per sample, so results are
+/// independent of which worker processes which sample.
+#[derive(Debug)]
+struct Scratch<S: Scalar> {
+    conv: ConvScratch<S>,
+    /// Input sample in `S`, (cin, h·w).
+    x_s: Vec<S>,
+    /// Block inputs: acts[0] is the lifted field, acts[l+1] = gelu(z_l).
+    acts: Vec<Vec<S>>,
+    /// Pre-activations per block (for the GELU backward).
+    zs: Vec<Vec<S>>,
+    /// Truncated input spectra per block (for the spectral backward).
+    specs: Vec<Vec<Cplx<S>>>,
+    /// Complex staging grids for the spectral conv, (width, h·w).
+    cgrid_a: Vec<Cplx<S>>,
+    cgrid_b: Vec<Cplx<S>>,
+    /// Model output, (cout, h·w).
+    pred: Vec<S>,
+    /// Loss gradient seed w.r.t. `pred`.
+    g_out: Vec<S>,
+    /// Backward staging, (width, h·w) each.
+    g_a: Vec<S>,
+    g_b: Vec<S>,
+}
+
+/// The native 2-D FNO. Weights live inside in `S` precision; training
+/// drivers keep fp32 master copies outside and push them in with
+/// [`Fno2d::set_params`] before each step (the AMP master-weight recipe).
+#[derive(Debug)]
+pub struct Fno2d<S: Scalar> {
+    spec: FnoSpec,
+    lift_w: Vec<S>,
+    lift_b: Vec<S>,
+    convs: Vec<SpectralConv2d<S>>,
+    mix_w: Vec<Vec<S>>,
+    mix_b: Vec<Vec<S>>,
+    proj_w: Vec<S>,
+    proj_b: Vec<S>,
+    /// Flat f64 gradient layout: one range per entry of
+    /// [`FnoSpec::param_specs`], in order.
+    offsets: Vec<Range<usize>>,
+    /// Parameter tensor shapes in the same order (cached at construction
+    /// so the training hot path never re-derives the spec list).
+    param_shapes: Vec<Vec<usize>>,
+}
+
+fn to_s<S: Scalar>(dst: &mut [S], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d = S::from_f64(v as f64);
+    }
+}
+
+/// Pointwise (1×1) channel map: `out[o, p] = b[o] + Σ_i w[o, i]·x[i, p]`,
+/// accumulated in `S` in ascending `i` — the fixed op order the parity
+/// tests rely on.
+fn pointwise_forward<S: Scalar>(
+    w: &[S],
+    bias: &[S],
+    x: &[S],
+    ci: usize,
+    co: usize,
+    hw: usize,
+    out: &mut [S],
+) {
+    for o in 0..co {
+        for p in 0..hw {
+            let mut acc = bias[o];
+            for i in 0..ci {
+                acc = acc.add(w[o * ci + i].mul(x[i * hw + p]));
+            }
+            out[o * hw + p] = acc;
+        }
+    }
+}
+
+/// Input gradient of [`pointwise_forward`]:
+/// `gx[i, p] = Σ_o w[o, i]·g[o, p]`, in `S`, ascending `o`.
+fn pointwise_backward_input<S: Scalar>(
+    w: &[S],
+    g: &[S],
+    ci: usize,
+    co: usize,
+    hw: usize,
+    gx: &mut [S],
+) {
+    for i in 0..ci {
+        for p in 0..hw {
+            let mut acc = S::zero();
+            for o in 0..co {
+                acc = acc.add(w[o * ci + i].mul(g[o * hw + p]));
+            }
+            gx[i * hw + p] = acc;
+        }
+    }
+}
+
+/// Weight/bias gradients of [`pointwise_forward`], accumulated (+=) into
+/// the flat f64 gradient buffer at `w_at`/`b_at` in ascending pixel
+/// order (deterministic at every thread count).
+fn pointwise_grads<S: Scalar>(
+    g: &[S],
+    x: &[S],
+    ci: usize,
+    co: usize,
+    hw: usize,
+    grads: &mut [f64],
+    w_at: usize,
+    b_at: usize,
+) {
+    for o in 0..co {
+        let mut bacc = 0.0f64;
+        for p in 0..hw {
+            bacc += g[o * hw + p].to_f64();
+        }
+        grads[b_at + o] += bacc;
+        for i in 0..ci {
+            let mut acc = 0.0f64;
+            for p in 0..hw {
+                acc += g[o * hw + p].to_f64() * x[i * hw + p].to_f64();
+            }
+            grads[w_at + o * ci + i] += acc;
+        }
+    }
+}
+
+impl<S: Scalar> Fno2d<S> {
+    /// Build a zero-weight model for `spec` (use [`Fno2d::set_params`] to
+    /// install weights; see [`FnoSpec::init_params`] for initialization).
+    pub fn new(spec: FnoSpec) -> Fno2d<S> {
+        assert!(spec.in_channels >= 1 && spec.out_channels >= 1, "need channels");
+        assert!(spec.width >= 1, "need a hidden width");
+        assert!(spec.n_layers >= 1, "need at least one FNO block");
+        let n_modes = 4 * spec.k_max * spec.k_max;
+        let convs: Vec<SpectralConv2d<S>> = (0..spec.n_layers)
+            .map(|_| {
+                SpectralConv2d::new(
+                    spec.width,
+                    spec.width,
+                    spec.h,
+                    spec.w,
+                    spec.k_max,
+                    vec![Cplx::zero(); spec.width * spec.width * n_modes],
+                )
+            })
+            .collect();
+        let mut offsets = Vec::new();
+        let mut param_shapes = Vec::new();
+        let mut at = 0usize;
+        for p in spec.param_specs() {
+            let n: usize = p.shape.iter().product();
+            offsets.push(at..at + n);
+            param_shapes.push(p.shape);
+            at += n;
+        }
+        Fno2d {
+            lift_w: vec![S::zero(); spec.width * spec.in_channels],
+            lift_b: vec![S::zero(); spec.width],
+            mix_w: (0..spec.n_layers).map(|_| vec![S::zero(); spec.width * spec.width]).collect(),
+            mix_b: (0..spec.n_layers).map(|_| vec![S::zero(); spec.width]).collect(),
+            proj_w: vec![S::zero(); spec.out_channels * spec.width],
+            proj_b: vec![S::zero(); spec.out_channels],
+            convs,
+            offsets,
+            param_shapes,
+            spec,
+        }
+    }
+
+    pub fn spec(&self) -> &FnoSpec {
+        &self.spec
+    }
+
+    /// Install fp32 master weights, rounding each into `S` — the
+    /// precision swap of the schedule is exactly this call with a
+    /// different `S`. `params` must follow [`FnoSpec::param_specs`] order.
+    pub fn set_params(&mut self, params: &[&Tensor]) {
+        let ll = self.spec.n_layers;
+        assert_eq!(params.len(), 4 + 3 * ll, "params must match FnoSpec::param_specs()");
+        to_s(&mut self.lift_w, params[0].data());
+        to_s(&mut self.lift_b, params[1].data());
+        let n_modes = 4 * self.spec.k_max * self.spec.k_max;
+        for l in 0..ll {
+            let wdat = params[2 + 3 * l].data();
+            assert_eq!(wdat.len(), 2 * self.spec.width * self.spec.width * n_modes);
+            let cw: Vec<Cplx<S>> = (0..wdat.len() / 2)
+                .map(|j| Cplx::from_f64(wdat[2 * j] as f64, wdat[2 * j + 1] as f64))
+                .collect();
+            self.convs[l].set_weights(cw);
+            to_s(&mut self.mix_w[l], params[3 + 3 * l].data());
+            to_s(&mut self.mix_b[l], params[4 + 3 * l].data());
+        }
+        to_s(&mut self.proj_w, params[2 + 3 * ll].data());
+        to_s(&mut self.proj_b, params[3 + 3 * ll].data());
+    }
+
+    fn scratch(&self) -> Scratch<S> {
+        let sp = &self.spec;
+        let hw = sp.h * sp.w;
+        let n_modes = 4 * sp.k_max * sp.k_max;
+        Scratch {
+            conv: self.convs[0].scratch(),
+            x_s: vec![S::zero(); sp.in_channels * hw],
+            acts: (0..=sp.n_layers).map(|_| vec![S::zero(); sp.width * hw]).collect(),
+            zs: (0..sp.n_layers).map(|_| vec![S::zero(); sp.width * hw]).collect(),
+            specs: (0..sp.n_layers).map(|_| vec![Cplx::zero(); sp.width * n_modes]).collect(),
+            cgrid_a: vec![Cplx::zero(); sp.width * hw],
+            cgrid_b: vec![Cplx::zero(); sp.width * hw],
+            pred: vec![S::zero(); sp.out_channels * hw],
+            g_out: vec![S::zero(); sp.out_channels * hw],
+            g_a: vec![S::zero(); sp.width * hw],
+            g_b: vec![S::zero(); sp.width * hw],
+        }
+    }
+
+    /// One sample forward, recording the activation tape in `ws`.
+    fn forward_sample_into(&self, x_f32: &[f32], ws: &mut Scratch<S>) {
+        let sp = &self.spec;
+        let hw = sp.h * sp.w;
+        to_s(&mut ws.x_s, x_f32);
+        pointwise_forward(
+            &self.lift_w,
+            &self.lift_b,
+            &ws.x_s,
+            sp.in_channels,
+            sp.width,
+            hw,
+            &mut ws.acts[0],
+        );
+        for l in 0..sp.n_layers {
+            let (head, tail) = ws.acts.split_at_mut(l + 1);
+            let a_in: &[S] = &head[l];
+            let a_out: &mut [S] = &mut tail[0];
+            for (c, &a) in ws.cgrid_a.iter_mut().zip(a_in.iter()) {
+                *c = Cplx::new(a, S::zero());
+            }
+            self.convs[l].forward_sample(&ws.cgrid_a, &mut ws.cgrid_b, &mut ws.conv);
+            ws.specs[l].copy_from_slice(ws.conv.spec_in());
+            let mw = &self.mix_w[l];
+            let mb = &self.mix_b[l];
+            for o in 0..sp.width {
+                for p in 0..hw {
+                    let mut acc = mb[o];
+                    for i in 0..sp.width {
+                        acc = acc.add(mw[o * sp.width + i].mul(a_in[i * hw + p]));
+                    }
+                    let zv = acc.add(ws.cgrid_b[o * hw + p].re);
+                    ws.zs[l][o * hw + p] = zv;
+                    a_out[o * hw + p] = gelu(zv);
+                }
+            }
+        }
+        pointwise_forward(
+            &self.proj_w,
+            &self.proj_b,
+            &ws.acts[sp.n_layers],
+            sp.width,
+            sp.out_channels,
+            hw,
+            &mut ws.pred,
+        );
+    }
+
+    /// One sample backward from the seed in `ws.g_out`, accumulating
+    /// parameter gradients (+=) into the flat f64 buffer `grads`
+    /// (layout: [`FnoSpec::param_specs`] order, complex weights as
+    /// interleaved re/im).
+    fn backward_sample_into(&self, ws: &mut Scratch<S>, grads: &mut [f64]) {
+        let sp = &self.spec;
+        let hw = sp.h * sp.w;
+        let ll = sp.n_layers;
+        let (ipw, ipb) = (2 + 3 * ll, 3 + 3 * ll);
+        pointwise_grads(
+            &ws.g_out,
+            &ws.acts[ll],
+            sp.width,
+            sp.out_channels,
+            hw,
+            grads,
+            self.offsets[ipw].start,
+            self.offsets[ipb].start,
+        );
+        pointwise_backward_input(
+            &self.proj_w,
+            &ws.g_out,
+            sp.width,
+            sp.out_channels,
+            hw,
+            &mut ws.g_a,
+        );
+        for l in (0..ll).rev() {
+            {
+                let zs = &ws.zs[l];
+                for ((gz, ga), z) in ws.g_b.iter_mut().zip(ws.g_a.iter()).zip(zs.iter()) {
+                    *gz = ga.mul(gelu_prime(*z));
+                }
+            }
+            pointwise_grads(
+                &ws.g_b,
+                &ws.acts[l],
+                sp.width,
+                sp.width,
+                hw,
+                grads,
+                self.offsets[3 + 3 * l].start,
+                self.offsets[4 + 3 * l].start,
+            );
+            pointwise_backward_input(&self.mix_w[l], &ws.g_b, sp.width, sp.width, hw, &mut ws.g_a);
+            for (c, &g) in ws.cgrid_a.iter_mut().zip(ws.g_b.iter()) {
+                *c = Cplx::new(g, S::zero());
+            }
+            let r = self.offsets[2 + 3 * l].clone();
+            self.convs[l].backward_sample(
+                &ws.cgrid_a,
+                &ws.specs[l],
+                &mut ws.cgrid_b,
+                &mut grads[r],
+                &mut ws.conv,
+            );
+            for (ga, gx) in ws.g_a.iter_mut().zip(ws.cgrid_b.iter()) {
+                *ga = ga.add(gx.re);
+            }
+        }
+        pointwise_grads(
+            &ws.g_a,
+            &ws.x_s,
+            sp.in_channels,
+            sp.width,
+            hw,
+            grads,
+            self.offsets[0].start,
+            self.offsets[1].start,
+        );
+    }
+
+    /// Batched forward: `x` is (batch, cin, h, w); returns
+    /// (batch, cout, h, w). One work item per sample over `ex`, per-worker
+    /// arenas, results independent of the thread count.
+    pub fn forward(&self, x: &Tensor, ex: &Executor) -> Tensor {
+        let sp = &self.spec;
+        let hw = sp.h * sp.w;
+        let b = x.shape()[0];
+        assert_eq!(x.shape(), [b, sp.in_channels, sp.h, sp.w].as_slice(), "input shape");
+        let in_slab = sp.in_channels * hw;
+        let out_slab = sp.out_channels * hw;
+        let xd = x.data();
+        let mut out = vec![0.0f32; b * out_slab];
+        ex.for_each_chunk_with(
+            &mut out,
+            out_slab,
+            || self.scratch(),
+            |s, chunk, ws| {
+                self.forward_sample_into(&xd[s * in_slab..(s + 1) * in_slab], ws);
+                for (d, v) in chunk.iter_mut().zip(&ws.pred) {
+                    *d = v.to_f64() as f32;
+                }
+            },
+        );
+        Tensor::from_vec(vec![b, sp.out_channels, sp.h, sp.w], out)
+    }
+
+    /// One training step's forward + backward over a batch: MSE loss
+    /// against `y` (mean over batch·channels·grid), gradients seeded with
+    /// `loss_scale` (the dynamic loss-scaling hook — the returned loss is
+    /// *unscaled*). Per-sample contributions are computed in `S` with f64
+    /// weight-gradient accumulation and reduced in sample order, so loss
+    /// and gradients are bit-identical at every thread count.
+    pub fn train_batch(
+        &self,
+        x: &Tensor,
+        y: &Tensor,
+        loss_scale: f32,
+        ex: &Executor,
+    ) -> (f64, Vec<Tensor>) {
+        let sp = &self.spec;
+        let hw = sp.h * sp.w;
+        let b = x.shape()[0];
+        assert!(b >= 1, "empty batch");
+        assert_eq!(x.shape(), [b, sp.in_channels, sp.h, sp.w].as_slice(), "input shape");
+        assert_eq!(y.shape(), [b, sp.out_channels, sp.h, sp.w].as_slice(), "target shape");
+        let in_slab = sp.in_channels * hw;
+        let out_slab = sp.out_channels * hw;
+        let n_params = self.offsets.last().map(|r| r.end).unwrap_or(0);
+        let stride = 1 + n_params;
+        let n_total = (b * out_slab) as f64;
+        let scale = loss_scale as f64;
+        let xd = x.data();
+        let yd = y.data();
+        // One chunk per sample: [loss, d/dparam...] in f64. Samples are
+        // processed in blocks of at most MAX_GRAD_BLOCK so transient
+        // memory is bounded by block·(1 + n_params) f64s however large
+        // the batch is; blocks run in order and each block's chunks are
+        // reduced in sample order, so the final sums are the plain
+        // sequential sample-order reduction — bit-identical at every
+        // thread count and block boundary.
+        let block = b.min(MAX_GRAD_BLOCK);
+        let mut acc = vec![0.0f64; block * stride];
+        let mut loss = 0.0f64;
+        let mut g = vec![0.0f64; n_params];
+        let mut start = 0usize;
+        while start < b {
+            let end = (start + block).min(b);
+            let acc_slice = &mut acc[..(end - start) * stride];
+            for v in acc_slice.iter_mut() {
+                *v = 0.0;
+            }
+            ex.for_each_chunk_with(
+                acc_slice,
+                stride,
+                || self.scratch(),
+                |k, chunk, ws| {
+                    let s = start + k;
+                    self.forward_sample_into(&xd[s * in_slab..(s + 1) * in_slab], ws);
+                    let ys = &yd[s * out_slab..(s + 1) * out_slab];
+                    let mut loss = 0.0f64;
+                    for (e, (&t, gseed)) in ys.iter().zip(ws.g_out.iter_mut()).enumerate() {
+                        let d = ws.pred[e].to_f64() - t as f64;
+                        loss += d * d;
+                        *gseed = S::from_f64(2.0 * d * scale / n_total);
+                    }
+                    chunk[0] = loss;
+                    self.backward_sample_into(ws, &mut chunk[1..]);
+                },
+            );
+            // Deterministic reduction in sample order.
+            for k in 0..end - start {
+                let chunk = &acc_slice[k * stride..(k + 1) * stride];
+                loss += chunk[0];
+                for (gj, &cj) in g.iter_mut().zip(&chunk[1..]) {
+                    *gj += cj;
+                }
+            }
+            start = end;
+        }
+        loss /= n_total;
+        let grads = self
+            .param_shapes
+            .iter()
+            .zip(&self.offsets)
+            .map(|(shape, r)| {
+                let data: Vec<f32> = g[r.clone()].iter().map(|&v| v as f32).collect();
+                Tensor::from_vec(shape.clone(), data)
+            })
+            .collect();
+        (loss, grads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn tiny_spec() -> FnoSpec {
+        FnoSpec { in_channels: 2, out_channels: 1, width: 3, k_max: 2, n_layers: 2, h: 8, w: 8 }
+    }
+
+    fn rand_tensor(shape: &[usize], seed: u64, sigma: f64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape.to_vec(), rng.normal_vec(n, sigma))
+    }
+
+    #[test]
+    fn param_specs_layout() {
+        let sp = tiny_spec();
+        let specs = sp.param_specs();
+        assert_eq!(specs.len(), 4 + 3 * sp.n_layers);
+        assert_eq!(specs[0].shape, vec![3, 2]); // lift_w
+        assert_eq!(specs[2].shape, vec![3, 3, 4, 4, 2]); // l0_spec_w
+        assert_eq!(specs.last().unwrap().shape, vec![1]); // proj_b
+        let n: usize = specs.iter().map(|p| p.shape.iter().product::<usize>()).sum();
+        assert_eq!(n, sp.n_params());
+        // Biases zero-init, weights not.
+        assert_eq!(specs[1].std, 0.0);
+        assert!(specs[0].std > 0.0);
+    }
+
+    #[test]
+    fn init_params_deterministic_and_shaped() {
+        let sp = tiny_spec();
+        let a = sp.init_params(9);
+        let b = sp.init_params(9);
+        let c = sp.init_params(10);
+        assert_eq!(a.len(), sp.param_specs().len());
+        for ((pa, pb), spec) in a.iter().zip(&b).zip(sp.param_specs()) {
+            assert_eq!(pa.shape(), spec.shape.as_slice());
+            assert_eq!(pa, pb, "same seed must reproduce");
+        }
+        assert_ne!(a[0], c[0], "different seeds must differ");
+        assert!(a[1].data().iter().all(|&v| v == 0.0), "biases start at zero");
+    }
+
+    #[test]
+    fn gelu_matches_finite_difference() {
+        assert_eq!(gelu_f64(0.0), 0.0);
+        assert!((gelu_f64(10.0) - 10.0).abs() < 1e-6, "gelu(x) -> x for large x");
+        assert!(gelu_f64(-10.0).abs() < 1e-6, "gelu(x) -> 0 for very negative x");
+        for &x in &[-3.0, -1.0, -0.1, 0.0, 0.3, 1.7, 4.0] {
+            let eps = 1e-6;
+            let num = (gelu_f64(x + eps) - gelu_f64(x - eps)) / (2.0 * eps);
+            let ana = gelu_prime_f64(x);
+            assert!((num - ana).abs() < 1e-6, "x={x}: {num} vs {ana}");
+        }
+    }
+
+    #[test]
+    fn forward_parallel_matches_serial_bitwise() {
+        let sp = tiny_spec();
+        let params = sp.init_params(5);
+        let refs: Vec<&Tensor> = params.iter().collect();
+        let mut model = Fno2d::<f64>::new(sp.clone());
+        model.set_params(&refs);
+        let x = rand_tensor(&[3, sp.in_channels, sp.h, sp.w], 6, 1.0);
+        let want = model.forward(&x, &Executor::serial());
+        for threads in [2usize, 8] {
+            let got = model.forward(&x, &Executor::new(threads));
+            assert_eq!(got, want, "threads={threads}");
+        }
+        assert_eq!(want.shape(), &[3, 1, 8, 8]);
+        assert!(!want.has_nan());
+    }
+
+    #[test]
+    fn train_batch_returns_finite_nonzero_grads() {
+        let sp = tiny_spec();
+        let params = sp.init_params(7);
+        let refs: Vec<&Tensor> = params.iter().collect();
+        let mut model = Fno2d::<f32>::new(sp.clone());
+        model.set_params(&refs);
+        let x = rand_tensor(&[2, sp.in_channels, sp.h, sp.w], 8, 1.0);
+        let y = rand_tensor(&[2, sp.out_channels, sp.h, sp.w], 9, 1.0);
+        let (loss, grads) = model.train_batch(&x, &y, 1.0, &Executor::serial());
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(grads.len(), params.len());
+        for (g, p) in grads.iter().zip(&params) {
+            assert_eq!(g.shape(), p.shape());
+            assert!(!g.has_nan());
+        }
+        assert!(grads.iter().any(|g| g.abs_max() > 0.0));
+        // Loss scaling scales gradients linearly (the AMP contract).
+        let (loss2, grads2) = model.train_batch(&x, &y, 256.0, &Executor::serial());
+        assert!((loss2 - loss).abs() < 1e-9 * loss.abs(), "loss is reported unscaled");
+        let (g1, g2) = (grads[0].abs_max() as f64, grads2[0].abs_max() as f64);
+        assert!((g2 / g1 - 256.0).abs() / 256.0 < 1e-3, "{g1} {g2}");
+    }
+}

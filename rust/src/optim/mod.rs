@@ -49,6 +49,13 @@ impl Adam {
         self
     }
 
+    /// Update the learning rate mid-run (the coordinator's per-epoch
+    /// decay hook). Moment estimates and the step counter are kept — only
+    /// future steps see the new rate.
+    pub fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+
     /// Global L2 norm of a gradient set.
     pub fn grad_norm(grads: &[Tensor]) -> f64 {
         grads
@@ -246,6 +253,19 @@ mod tests {
         assert!(gnorm > 1.0);
         let v_val = adam.v[0][0];
         assert!(v_val < 1.0, "v should reflect clipped grad, got {v_val}");
+    }
+
+    #[test]
+    fn set_lr_applies_to_future_steps_only() {
+        let mut params = vec![Tensor::zeros(&[1])];
+        let mut adam = Adam::new(0.1, &params);
+        let g = vec![Tensor::full(&[1], 1.0)];
+        assert!(adam.step(&mut params, &g, 1.0));
+        let after_first = params[0].data()[0];
+        adam.set_lr(0.0);
+        assert!(adam.step(&mut params, &g, 1.0));
+        assert_eq!(params[0].data()[0], after_first, "zero lr must freeze weights");
+        assert_eq!(adam.steps_taken(), 2, "moment state keeps advancing");
     }
 
     #[test]

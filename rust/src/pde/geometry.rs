@@ -74,7 +74,13 @@ pub fn generate_sample(kind: BodyKind, n: usize, rng: &mut Rng) -> GeometrySampl
 
 /// Superellipsoid car body centered at (0.5, 0.5, 0.35): solves for the
 /// surface along a random ray; cabin adds a smooth bump on top.
-fn car_surface_point(len: f64, wid: f64, hgt: f64, cabin: f64, rng: &mut Rng) -> ([f64; 3], [f64; 3]) {
+fn car_surface_point(
+    len: f64,
+    wid: f64,
+    hgt: f64,
+    cabin: f64,
+    rng: &mut Rng,
+) -> ([f64; 3], [f64; 3]) {
     // Random direction (uniform on sphere).
     let (dx, dy) = (rng.normal(), rng.normal());
     let dz = rng.normal();
@@ -122,7 +128,13 @@ fn car_surface_point(len: f64, wid: f64, hgt: f64, cabin: f64, rng: &mut Rng) ->
 }
 
 /// Ahmed body: axis-aligned box with a slanted rear-top face.
-fn ahmed_surface_point(len: f64, wid: f64, hgt: f64, slant: f64, rng: &mut Rng) -> ([f64; 3], [f64; 3]) {
+fn ahmed_surface_point(
+    len: f64,
+    wid: f64,
+    hgt: f64,
+    slant: f64,
+    rng: &mut Rng,
+) -> ([f64; 3], [f64; 3]) {
     // Choose a face weighted by its area, then a uniform point on it.
     // Faces: front (x-), back (x+ lower), slant (rear top), top, bottom,
     // two sides.

@@ -1,6 +1,9 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//! Execution engines behind the [`Backend`] trait: the PJRT runtime for
+//! AOT HLO-text artifacts, and the manifest-free CPU [`NativeEngine`]
+//! that trains through the fused spectral block.
 //!
-//! This is the only place Python's output touches the Rust system. The
+//! The PJRT half is the only place Python's output touches the Rust
+//! system. The
 //! [`Manifest`] (artifacts/manifest.json, written by `python -m
 //! compile.aot`) declares every artifact's parameter list and extra
 //! inputs; [`Engine`] compiles artifacts on demand (with an in-process
@@ -24,12 +27,67 @@
 //! cached across steps/epochs.
 
 mod manifest;
+mod native;
 
 pub use manifest::{ArtifactEntry, Manifest, ParamSpec};
+pub use native::{NativeEngine, NativeExecutable, NATIVE_PRECISIONS};
 
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
+
+/// A runnable artifact, whatever engine produced it: the slice of the
+/// executable surface the training coordinator needs.
+pub trait ExecLike {
+    fn entry(&self) -> &ArtifactEntry;
+    /// Run with `params ++ extra_inputs` in manifest order; returns the
+    /// flattened output tuple as host tensors.
+    fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// An engine the coordinator can train through — implemented by the PJRT
+/// [`Engine`] (stub or real) and the CPU [`NativeEngine`], so
+/// `coordinator::train_grid` is generic over where the forward/backward
+/// actually executes.
+pub trait Backend {
+    type Exe: ExecLike;
+    /// Compile/instantiate (or fetch from cache) an artifact by name.
+    fn load(&mut self, name: &str) -> Result<std::rc::Rc<Self::Exe>>;
+    fn manifest(&self) -> &Manifest;
+    /// Initialize fp32 master weights from the entry's parameter specs.
+    fn init_params(&self, entry: &ArtifactEntry, seed: u64) -> Vec<Tensor>;
+    fn platform(&self) -> String;
+}
+
+impl ExecLike for Executable {
+    fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+
+    fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        Executable::run(self, inputs)
+    }
+}
+
+impl Backend for Engine {
+    type Exe = Executable;
+
+    fn load(&mut self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        Engine::load(self, name)
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn init_params(&self, entry: &ArtifactEntry, seed: u64) -> Vec<Tensor> {
+        Engine::init_params(self, entry, seed)
+    }
+
+    fn platform(&self) -> String {
+        Engine::platform(self)
+    }
+}
 
 #[cfg(feature = "pjrt")]
 use anyhow::{anyhow, bail};
@@ -232,9 +290,16 @@ fn load_manifest(artifacts_dir: &Path) -> Result<Manifest> {
 }
 
 fn init_params_impl(entry: &ArtifactEntry, seed: u64) -> Vec<Tensor> {
+    init_params_from_specs(&entry.params, seed)
+}
+
+/// Seeded Gaussian initialization over a parameter-spec list (biases —
+/// std 0 — zero-init). The single init recipe shared by the PJRT engine,
+/// the native engine and `model::FnoSpec::init_params`, so every path
+/// produces bit-identical master weights for the same seed.
+pub(crate) fn init_params_from_specs(specs: &[ParamSpec], seed: u64) -> Vec<Tensor> {
     let mut rng = crate::rng::Rng::new(seed);
-    entry
-        .params
+    specs
         .iter()
         .map(|p| {
             if p.std == 0.0 {

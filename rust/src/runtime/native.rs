@@ -1,0 +1,413 @@
+//! The native CPU engine: the same `Engine` surface as the PJRT runtime,
+//! backed by [`crate::model::Fno2d`] on the fused spectral-conv engine
+//! instead of AOT HLO artifacts.
+//!
+//! Where the PJRT engine compiles manifest artifacts, [`NativeEngine`]
+//! *synthesizes* its manifest: one grads + one fwd "artifact" per native
+//! precision (`f64`, `f32`, `tf32`, `bf16`, `f16`), all sharing the same
+//! fp32 parameter list. The precision schedule's artifact swaps therefore
+//! map to [`crate::fp::Scalar`] swaps, with the fp32 master weights
+//! carried untouched across phases — the coordinator passes them in by
+//! reference each step and only the optimizer ever writes them
+//! (`tests/native_train.rs` pins this bit-exactly).
+//!
+//! Executable calling convention matches the PJRT artifacts, so the
+//! coordinator drives both engines through the same [`super::Backend`]
+//! trait: grads graphs take `params ++ [x, y, loss_scale]` and return
+//! `(loss, grads...)`; fwd graphs take `params ++ [x]` and return the
+//! prediction.
+
+use super::{ArtifactEntry, Backend, ExecLike, Manifest};
+use crate::fp::{Bf16, Precision, Tf32, F16};
+use crate::model::{Fno2d, FnoSpec};
+use crate::parallel::Executor;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Precision tokens the native engine offers, in schedule-friendly order
+/// (widest first).
+pub const NATIVE_PRECISIONS: [&str; 5] = ["f64", "f32", "tf32", "bf16", "f16"];
+
+fn precision_enum(tok: &str) -> Precision {
+    match tok {
+        "bf16" => Precision::Bf16,
+        "tf32" => Precision::Tf32,
+        "f16" => Precision::Mixed,
+        _ => Precision::Full,
+    }
+}
+
+/// A native "artifact": one [`Fno2d`] at a fixed compute precision. The
+/// model is rebuilt from the fp32 master weights on every call, so the
+/// executable itself is stateless between steps (like a compiled graph).
+pub struct NativeExecutable {
+    pub entry: ArtifactEntry,
+    model: RefCell<ModelAny>,
+    /// Flattened bits of the last-installed master weights, so repeat
+    /// calls with unchanged params (every eval loop) skip the f32→S
+    /// conversion and the per-layer `w_mio` transpose.
+    cached_params: RefCell<Vec<f32>>,
+}
+
+enum ModelAny {
+    F64(Fno2d<f64>),
+    F32(Fno2d<f32>),
+    Tf32(Fno2d<Tf32>),
+    Bf16(Fno2d<Bf16>),
+    F16(Fno2d<F16>),
+}
+
+macro_rules! each_model {
+    ($any:expr, $m:ident => $body:expr) => {
+        match $any {
+            ModelAny::F64($m) => $body,
+            ModelAny::F32($m) => $body,
+            ModelAny::Tf32($m) => $body,
+            ModelAny::Bf16($m) => $body,
+            ModelAny::F16($m) => $body,
+        }
+    };
+}
+
+impl ModelAny {
+    fn build(tok: &str, spec: &FnoSpec) -> Result<ModelAny> {
+        Ok(match tok {
+            "f64" => ModelAny::F64(Fno2d::new(spec.clone())),
+            "f32" => ModelAny::F32(Fno2d::new(spec.clone())),
+            "tf32" => ModelAny::Tf32(Fno2d::new(spec.clone())),
+            "bf16" => ModelAny::Bf16(Fno2d::new(spec.clone())),
+            "f16" => ModelAny::F16(Fno2d::new(spec.clone())),
+            other => bail!("unknown native precision {other:?}"),
+        })
+    }
+
+    fn set_params(&mut self, params: &[&Tensor]) {
+        each_model!(self, m => m.set_params(params))
+    }
+
+    fn forward(&self, x: &Tensor, ex: &Executor) -> Tensor {
+        each_model!(self, m => m.forward(x, ex))
+    }
+
+    fn train_batch(&self, x: &Tensor, y: &Tensor, scale: f32, ex: &Executor) -> (f64, Vec<Tensor>) {
+        each_model!(self, m => m.train_batch(x, y, scale, ex))
+    }
+}
+
+impl NativeExecutable {
+    /// Run with `params ++ extra_inputs` in manifest order, mirroring the
+    /// PJRT [`super::Executable::run`] contract.
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let np = self.entry.params.len();
+        let want = np + self.entry.extra_inputs.len();
+        if inputs.len() != want {
+            bail!(
+                "{}: expected {} inputs ({} params + {} extra), got {}",
+                self.entry.name,
+                want,
+                np,
+                self.entry.extra_inputs.len(),
+                inputs.len()
+            );
+        }
+        self.refresh_params(&inputs[..np]);
+        let model = self.model.borrow();
+        let ex = Executor::current();
+        match self.entry.graph.as_str() {
+            "grads" => {
+                let (x, y, scale_t) = (inputs[np], inputs[np + 1], inputs[np + 2]);
+                let scale = scale_t.data()[0];
+                let (loss, grads) = model.train_batch(x, y, scale, &ex);
+                let mut out = vec![Tensor::from_vec(vec![], vec![loss as f32])];
+                out.extend(grads);
+                Ok(out)
+            }
+            "fwd" => Ok(vec![model.forward(inputs[np], &ex)]),
+            g => bail!("{}: unsupported native graph {g:?}", self.entry.name),
+        }
+    }
+
+    /// Install master weights into the model unless they are bitwise
+    /// identical to the previous call's — the optimizer changes them
+    /// between training steps, but eval loops pass the same tensors for
+    /// every test batch.
+    fn refresh_params(&self, params: &[&Tensor]) {
+        let mut cached = self.cached_params.borrow_mut();
+        let total: usize = params.iter().map(|t| t.len()).sum();
+        let unchanged = cached.len() == total && {
+            let mut off = 0usize;
+            let mut same = true;
+            'scan: for t in params {
+                for (a, b) in cached[off..off + t.len()].iter().zip(t.data()) {
+                    if a.to_bits() != b.to_bits() {
+                        same = false;
+                        break 'scan;
+                    }
+                }
+                off += t.len();
+            }
+            same
+        };
+        if unchanged {
+            return;
+        }
+        self.model.borrow_mut().set_params(params);
+        cached.clear();
+        for t in params {
+            cached.extend_from_slice(t.data());
+        }
+    }
+}
+
+impl ExecLike for NativeExecutable {
+    fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+
+    fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        NativeExecutable::run(self, inputs)
+    }
+}
+
+/// The native CPU engine: synthesized manifest + per-precision model
+/// cache, manifest-free on disk.
+pub struct NativeEngine {
+    pub manifest: Manifest,
+    fno: FnoSpec,
+    dataset: String,
+    cache: HashMap<String, Rc<NativeExecutable>>,
+}
+
+impl NativeEngine {
+    /// Build an engine for one dataset/architecture pair. `dataset` is
+    /// the dataset token (`darcy`, `ns`, `swe`); `batch` is the training
+    /// batch size recorded in every synthesized entry.
+    pub fn new(dataset: &str, fno: FnoSpec, batch: usize) -> NativeEngine {
+        assert!(batch >= 1, "need a positive batch size");
+        let params = fno.param_specs();
+        let mut artifacts = Vec::new();
+        for prec in NATIVE_PRECISIONS {
+            for graph in ["grads", "fwd"] {
+                let mut extra =
+                    vec![("x".to_string(), vec![batch, fno.in_channels, fno.h, fno.w])];
+                if graph == "grads" {
+                    extra.push(("y".to_string(), vec![batch, fno.out_channels, fno.h, fno.w]));
+                    extra.push(("loss_scale".to_string(), vec![]));
+                }
+                let mut config = std::collections::BTreeMap::new();
+                config.insert("height".to_string(), fno.h as f64);
+                config.insert("width_grid".to_string(), fno.w as f64);
+                config.insert("width".to_string(), fno.width as f64);
+                config.insert("modes".to_string(), fno.k_max as f64);
+                config.insert("layers".to_string(), fno.n_layers as f64);
+                artifacts.push(ArtifactEntry {
+                    name: native_name(dataset, fno.h, prec, graph),
+                    file: "<native>".to_string(),
+                    model: "fno".to_string(),
+                    dataset: dataset.to_string(),
+                    graph: graph.to_string(),
+                    precision: precision_enum(prec),
+                    stabilizer: "none".to_string(),
+                    loss: "mse".to_string(),
+                    batch,
+                    params: params.clone(),
+                    extra_inputs: extra,
+                    config,
+                });
+            }
+        }
+        NativeEngine {
+            manifest: Manifest { artifacts },
+            fno,
+            dataset: dataset.to_string(),
+            cache: HashMap::new(),
+        }
+    }
+
+    /// The synthesized artifact name for a precision token and graph.
+    pub fn artifact(&self, precision: &str, graph: &str) -> String {
+        native_name(&self.dataset, self.fno.h, precision, graph)
+    }
+
+    pub fn fno_spec(&self) -> &FnoSpec {
+        &self.fno
+    }
+
+    pub fn platform(&self) -> String {
+        format!(
+            "native CPU (fused spectral engine, {} worker threads)",
+            crate::parallel::num_threads()
+        )
+    }
+
+    /// Instantiate (or fetch from cache) a precision variant by name.
+    pub fn load(&mut self, name: &str) -> Result<Rc<NativeExecutable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in the native manifest"))?
+            .clone();
+        let tok = NATIVE_PRECISIONS
+            .iter()
+            .copied()
+            .find(|p| name.contains(&format!("_native-{p}_")))
+            .ok_or_else(|| anyhow!("{name:?} has no native precision token"))?;
+        let exe = Rc::new(NativeExecutable {
+            entry,
+            model: RefCell::new(ModelAny::build(tok, &self.fno)?),
+            cached_params: RefCell::new(Vec::new()),
+        });
+        self.cache.insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Initialize fp32 master weights for an artifact — identical to the
+    /// PJRT engine's recipe (and to [`FnoSpec::init_params`], since the
+    /// entries carry [`FnoSpec::param_specs`]).
+    pub fn init_params(&self, entry: &ArtifactEntry, seed: u64) -> Vec<Tensor> {
+        super::init_params_impl(entry, seed)
+    }
+}
+
+fn native_name(dataset: &str, res: usize, precision: &str, graph: &str) -> String {
+    format!("fno_{dataset}_r{res}_native-{precision}_{graph}")
+}
+
+impl Backend for NativeEngine {
+    type Exe = NativeExecutable;
+
+    fn load(&mut self, name: &str) -> Result<Rc<NativeExecutable>> {
+        NativeEngine::load(self, name)
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn init_params(&self, entry: &ArtifactEntry, seed: u64) -> Vec<Tensor> {
+        NativeEngine::init_params(self, entry, seed)
+    }
+
+    fn platform(&self) -> String {
+        NativeEngine::platform(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> FnoSpec {
+        FnoSpec { in_channels: 1, out_channels: 1, width: 4, k_max: 2, n_layers: 2, h: 8, w: 8 }
+    }
+
+    fn engine() -> NativeEngine {
+        NativeEngine::new("darcy", spec(), 2)
+    }
+
+    #[test]
+    fn manifest_covers_all_precisions_and_graphs() {
+        let eng = engine();
+        assert_eq!(eng.manifest.artifacts.len(), 2 * NATIVE_PRECISIONS.len());
+        for prec in NATIVE_PRECISIONS {
+            for graph in ["grads", "fwd"] {
+                let name = eng.artifact(prec, graph);
+                let e = eng.manifest.find(&name).unwrap_or_else(|| panic!("missing {name}"));
+                assert_eq!(e.graph, graph);
+                assert_eq!(e.resolution(), Some((8, 8)));
+                assert_eq!(e.batch, 2);
+            }
+        }
+        // Grads graphs end with (y, loss_scale), like the PJRT manifest.
+        for e in eng.manifest.artifacts.iter().filter(|a| a.graph == "grads") {
+            let last = e.extra_inputs.last().unwrap();
+            assert_eq!(last.0, "loss_scale");
+            assert!(last.1.is_empty());
+        }
+    }
+
+    #[test]
+    fn init_params_matches_fno_spec_recipe() {
+        let mut eng = engine();
+        let name = eng.artifact("f32", "grads");
+        let exe = eng.load(&name).unwrap();
+        let a = eng.init_params(&exe.entry, 42);
+        let b = spec().init_params(42);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y, "engine and model init must agree bit-for-bit");
+        }
+    }
+
+    #[test]
+    fn grads_executable_returns_loss_and_grads() {
+        let mut eng = engine();
+        let exe = eng.load(&eng.artifact("f32", "grads")).unwrap();
+        let params = eng.init_params(&exe.entry, 1);
+        let x = Tensor::from_fn(&[2, 1, 8, 8], |i| ((i[2] + i[3]) as f32 / 16.0).sin());
+        let y = Tensor::from_fn(&[2, 1, 8, 8], |i| (i[2] as f32 / 8.0).cos());
+        let scale = Tensor::from_vec(vec![], vec![1.0f32]);
+        let mut inputs: Vec<&Tensor> = params.iter().collect();
+        inputs.push(&x);
+        inputs.push(&y);
+        inputs.push(&scale);
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out.len(), 1 + params.len());
+        assert!(out[0].len() == 1 && out[0].data()[0].is_finite());
+        for (g, p) in out[1..].iter().zip(&params) {
+            assert_eq!(g.shape(), p.shape());
+        }
+    }
+
+    #[test]
+    fn fwd_executable_predicts() {
+        let mut eng = engine();
+        let exe = eng.load(&eng.artifact("bf16", "fwd")).unwrap();
+        let params = eng.init_params(&exe.entry, 3);
+        let x = Tensor::from_fn(&[2, 1, 8, 8], |i| (i[3] as f32 / 8.0).sin());
+        let mut inputs: Vec<&Tensor> = params.iter().collect();
+        inputs.push(&x);
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[2, 1, 8, 8]);
+        assert!(!out[0].has_nan());
+    }
+
+    #[test]
+    fn load_rejects_unknown_names_and_wrong_arity() {
+        let mut eng = engine();
+        assert!(eng.load("fno_darcy_r8_native-f128_grads").is_err());
+        let exe = eng.load(&eng.artifact("f32", "fwd")).unwrap();
+        let params = eng.init_params(&exe.entry, 0);
+        let inputs: Vec<&Tensor> = params.iter().collect(); // missing x
+        let err = exe.run(&inputs).unwrap_err();
+        assert!(format!("{err}").contains("expected"), "{err}");
+    }
+
+    #[test]
+    fn running_an_executable_never_mutates_master_params() {
+        // The heart of the precision-swap story: executables only *read*
+        // the fp32 master weights.
+        let mut eng = engine();
+        let exe16 = eng.load(&eng.artifact("bf16", "grads")).unwrap();
+        let params = eng.init_params(&exe16.entry, 5);
+        let snapshot = params.clone();
+        let x = Tensor::from_fn(&[2, 1, 8, 8], |i| (i[2] as f32 / 8.0).sin());
+        let y = Tensor::from_fn(&[2, 1, 8, 8], |i| (i[3] as f32 / 8.0).cos());
+        let scale = Tensor::from_vec(vec![], vec![1024.0f32]);
+        let mut inputs: Vec<&Tensor> = params.iter().collect();
+        inputs.push(&x);
+        inputs.push(&y);
+        inputs.push(&scale);
+        exe16.run(&inputs).unwrap();
+        let exe32 = eng.load(&eng.artifact("f32", "grads")).unwrap();
+        exe32.run(&inputs).unwrap();
+        assert_eq!(params, snapshot, "master weights must carry bit-exactly across swaps");
+    }
+}

@@ -27,7 +27,7 @@
 //! precision and thread count (up to the sign of exact zeros — see
 //! [`crate::fft::trunc`]), enforced by `tests/spectral_parity.rs`.
 
-use crate::contract::contract_modes;
+use crate::contract::{contract_modes, contract_modes_adjoint};
 use crate::fft::plan::{plan_for, Plan};
 use crate::fft::trunc::{
     embed_modes, fft2_kept, ifft2_kept, kept_indices, truncate_modes, SpectralScratch,
@@ -64,6 +64,20 @@ pub struct ConvScratch<S: Scalar> {
     tmp_mo: Vec<Cplx<S>>,
     /// Truncated output spectrum, (co, n_modes).
     spec_out: Vec<Cplx<S>>,
+    /// Adjoint-contraction intermediate, (n_modes, ci) — backward only.
+    tmp_mi: Vec<Cplx<S>>,
+    /// Input-spectrum gradient, (ci, n_modes) — backward only.
+    gspec_in: Vec<Cplx<S>>,
+}
+
+impl<S: Scalar> ConvScratch<S> {
+    /// The truncated input spectrum (ci, n_modes) left behind by the last
+    /// [`SpectralConv2d::forward_sample`] through this arena — the
+    /// activation stash a training tape copies out for the backward pass
+    /// ([`SpectralConv2d::backward_sample`] consumes it as `spec_in`).
+    pub fn spec_in(&self) -> &[Cplx<S>] {
+        &self.spec_in
+    }
 }
 
 /// A fused 2-D spectral convolution layer: `ci` input channels, `co`
@@ -179,7 +193,8 @@ impl<S: Scalar> SpectralConv2d<S> {
         &self.w_ioxy
     }
 
-    /// Fresh per-worker scratch arena sized for this layer.
+    /// Fresh per-worker scratch arena sized for this layer (forward and
+    /// backward passes).
     pub fn scratch(&self) -> ConvScratch<S> {
         let n_modes = self.n_modes();
         ConvScratch {
@@ -187,7 +202,36 @@ impl<S: Scalar> SpectralConv2d<S> {
             spec_in: vec![Cplx::zero(); self.ci * n_modes],
             tmp_mo: vec![Cplx::zero(); n_modes * self.co],
             spec_out: vec![Cplx::zero(); self.co * n_modes],
+            tmp_mi: vec![Cplx::zero(); n_modes * self.ci],
+            gspec_in: vec![Cplx::zero(); self.ci * n_modes],
         }
+    }
+
+    /// Replace the layer weights in place ((ci, co, 2k, 2k) layout),
+    /// refreshing the mode-major copy the fused kernel consumes. This is
+    /// how the native training engine pushes each optimizer step's fp32
+    /// master weights into the layer without rebuilding the cached FFT
+    /// plans.
+    pub fn set_weights(&mut self, w_ioxy: Vec<Cplx<S>>) {
+        let n_modes = self.n_modes();
+        assert_eq!(
+            w_ioxy.len(),
+            self.ci * self.co * n_modes,
+            "weights must be (ci={}, co={}, 2k={}, 2k={})",
+            self.ci,
+            self.co,
+            self.kept_rows.len(),
+            self.kept_cols.len()
+        );
+        for i in 0..self.ci {
+            for o in 0..self.co {
+                for m in 0..n_modes {
+                    self.w_mio[(m * self.ci + i) * self.co + o] =
+                        w_ioxy[(i * self.co + o) * n_modes + m];
+                }
+            }
+        }
+        self.w_ioxy = w_ioxy;
     }
 
     /// Fused forward pass over a (batch, ci, h, w) buffer, one work item
@@ -259,6 +303,98 @@ impl<S: Scalar> SpectralConv2d<S> {
         }
     }
 
+    /// Backward pass through the fused block for one sample — the
+    /// hand-derived adjoint of [`SpectralConv2d::forward_sample`], run on
+    /// the same arena and the same planned kernels.
+    ///
+    /// The layer is linear, so the adjoint is the reversed pipeline with
+    /// each stage conjugate-transposed: forward-transform the upstream
+    /// gradient (`iFFT`'s adjoint is `(1/hw)·FFT` on the kept block),
+    /// apply the conjugate-transposed mode contraction
+    /// ([`contract_modes_adjoint`]), and inverse-transform back to the
+    /// grid (`FFT`'s adjoint is `hw·iFFT`) — the `1/hw` and `hw` factors
+    /// cancel along the input-gradient path, so `gx` is exactly
+    /// `ifft2_kept(Σ_o t·conj(w))` with `t = fft2_kept(gy)`.
+    ///
+    /// * `gy` — upstream gradient w.r.t. the layer output, (co, h, w);
+    /// * `spec_in` — the forward pass's truncated input spectrum
+    ///   (ci, n_modes), stashed via [`ConvScratch::spec_in`];
+    /// * `gx` — overwritten with the gradient w.r.t. the input, (ci, h, w);
+    /// * `gw` — **accumulated** (+=) gradient w.r.t. the weights,
+    ///   (ci, co, n_modes) complex stored as interleaved re/im f64 pairs:
+    ///   `dL/dw[i,o,m] = (1/hw)·t[o,m]·conj(spec_in[i,m])`, summed in f64
+    ///   so per-sample contributions reduce deterministically at any
+    ///   thread count.
+    pub fn backward_sample(
+        &self,
+        gy: &[Cplx<S>],
+        spec_in: &[Cplx<S>],
+        gx: &mut [Cplx<S>],
+        gw: &mut [f64],
+        scratch: &mut ConvScratch<S>,
+    ) {
+        let hw = self.h * self.w;
+        let n_modes = self.n_modes();
+        assert_eq!(gy.len(), self.co * hw, "gy must be (co, h, w)");
+        assert_eq!(spec_in.len(), self.ci * n_modes, "spec_in must be (ci, n_modes)");
+        assert_eq!(gx.len(), self.ci * hw, "gx must be (ci, h, w)");
+        assert_eq!(gw.len(), 2 * self.ci * self.co * n_modes, "gw must be (ci, co, n_modes, 2)");
+        // Adjoint of the truncated inverse pass: kept-mode forward FFT of
+        // the upstream gradient, per output channel (the 1/hw factor is
+        // applied where each path needs it below).
+        for o in 0..self.co {
+            fft2_kept(
+                &gy[o * hw..(o + 1) * hw],
+                self.h,
+                self.w,
+                &self.kept_rows,
+                &self.kept_cols,
+                &self.row_fwd,
+                &self.col_fwd,
+                &mut scratch.spec_out[o * n_modes..(o + 1) * n_modes],
+                &mut scratch.fft,
+            );
+        }
+        // Weight gradient, accumulated in f64.
+        let inv_hw = 1.0 / hw as f64;
+        for i in 0..self.ci {
+            for o in 0..self.co {
+                for m in 0..n_modes {
+                    let (tr, ti) = scratch.spec_out[o * n_modes + m].to_f64();
+                    let (xr, xi) = spec_in[i * n_modes + m].to_f64();
+                    let idx = 2 * ((i * self.co + o) * n_modes + m);
+                    gw[idx] += (tr * xr + ti * xi) * inv_hw;
+                    gw[idx + 1] += (ti * xr - tr * xi) * inv_hw;
+                }
+            }
+        }
+        // Input gradient: conjugate-transposed contraction, then the
+        // adjoint of the truncated forward pass (hw·iFFT; the hw cancels
+        // the 1/hw of the first stage exactly).
+        contract_modes_adjoint(
+            &scratch.spec_out,
+            &self.w_mio,
+            self.ci,
+            self.co,
+            n_modes,
+            &mut scratch.tmp_mi,
+            &mut scratch.gspec_in,
+        );
+        for i in 0..self.ci {
+            ifft2_kept(
+                &scratch.gspec_in[i * n_modes..(i + 1) * n_modes],
+                self.h,
+                self.w,
+                &self.kept_rows,
+                &self.kept_cols,
+                &self.row_inv,
+                &self.col_inv,
+                &mut gx[i * hw..(i + 1) * hw],
+                &mut scratch.fft,
+            );
+        }
+    }
+
     /// The serial composed parity oracle: per channel ad-hoc full-grid
     /// [`fft2`], mode truncation by gather, the serial mode contraction,
     /// zero-embedding, and ad-hoc full-grid [`ifft2`] — fresh
@@ -288,7 +424,15 @@ impl<S: Scalar> SpectralConv2d<S> {
             }
             let mut tmp = vec![Cplx::<S>::zero(); n_modes * self.co];
             let mut spec_out = vec![Cplx::<S>::zero(); self.co * n_modes];
-            contract_modes(&spec_in, &self.w_mio, self.ci, self.co, n_modes, &mut tmp, &mut spec_out);
+            contract_modes(
+                &spec_in,
+                &self.w_mio,
+                self.ci,
+                self.co,
+                n_modes,
+                &mut tmp,
+                &mut spec_out,
+            );
             for o in 0..self.co {
                 let mut g = embed_modes(
                     &spec_out[o * n_modes..(o + 1) * n_modes],
@@ -395,7 +539,8 @@ mod tests {
         let mut scratch = layer.scratch();
         for b in 0..2 {
             let mut one = vec![Cplx::zero(); co * h * w];
-            layer.forward_sample(&input[b * ci * h * w..(b + 1) * ci * h * w], &mut one, &mut scratch);
+            let sample = &input[b * ci * h * w..(b + 1) * ci * h * w];
+            layer.forward_sample(sample, &mut one, &mut scratch);
             assert!(exact(&one, &batch[b * co * h * w..(b + 1) * co * h * w]));
         }
     }
@@ -420,6 +565,47 @@ mod tests {
         for (a, b) in y.iter().zip(&x) {
             assert!(a.sub(*b).abs() < 1e-10, "band-limited field should pass through");
         }
+    }
+
+    #[test]
+    fn backward_sample_is_adjoint_of_forward() {
+        // <forward(x), gy>_R == <x, gx>_R — the defining property of the
+        // hand-derived backward pass, exact up to f64 roundoff.
+        let (ci, co, h, w, k) = (2usize, 3usize, 12usize, 8usize, 2usize);
+        let layer = SpectralConv2d::<f64>::random(ci, co, h, w, k, 31);
+        let x = random_field::<f64>(ci * h * w, 32);
+        let gy = random_field::<f64>(co * h * w, 33);
+        let mut scratch = layer.scratch();
+        let mut y = vec![Cplx::<f64>::zero(); co * h * w];
+        layer.forward_sample(&x, &mut y, &mut scratch);
+        let spec_in = scratch.spec_in().to_vec();
+        let mut gx = vec![Cplx::<f64>::zero(); ci * h * w];
+        let mut gw = vec![0.0f64; 2 * ci * co * layer.n_modes()];
+        layer.backward_sample(&gy, &spec_in, &mut gx, &mut gw, &mut scratch);
+        let dot = |a: &[Cplx<f64>], b: &[Cplx<f64>]| -> f64 {
+            a.iter().zip(b).map(|(p, q)| p.re * q.re + p.im * q.im).sum()
+        };
+        let lhs = dot(&y, &gy);
+        let rhs = dot(&x, &gx);
+        assert!((lhs - rhs).abs() < 1e-9 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+        // Weight gradients accumulated something finite and nonzero.
+        assert!(gw.iter().all(|g| g.is_finite()));
+        assert!(gw.iter().any(|&g| g != 0.0));
+    }
+
+    #[test]
+    fn set_weights_matches_fresh_construction() {
+        let (ci, co, h, w, k) = (2usize, 2usize, 8usize, 8usize, 2usize);
+        let a = SpectralConv2d::<f64>::random(ci, co, h, w, k, 51);
+        let b = SpectralConv2d::<f64>::random(ci, co, h, w, k, 52);
+        let mut c = SpectralConv2d::<f64>::random(ci, co, h, w, k, 53);
+        c.set_weights(b.weight().to_vec());
+        let input = random_field::<f64>(ci * h * w, 54);
+        let got = c.forward(&input, 1, &Executor::serial());
+        let want = b.forward(&input, 1, &Executor::serial());
+        assert!(exact(&got, &want), "set_weights must equal fresh layer");
+        let other = a.forward(&input, 1, &Executor::serial());
+        assert!(!exact(&got, &other), "distinct weights must differ");
     }
 
     #[test]

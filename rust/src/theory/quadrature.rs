@@ -94,7 +94,9 @@ impl LatticeFn for ProductFn {
         x.iter().product()
     }
     fn lipschitz(&self) -> f64 {
-        (1.0f64).max(1.0) // each partial derivative bounded by 1; L2 norm ≤ √d — report √d at call sites via sup of d... keep 1 per-coordinate; use √d bound below.
+        // Each partial derivative is bounded by 1 (per-coordinate bound);
+        // call sites apply the √d factor where the L2 norm is needed.
+        (1.0f64).max(1.0)
     }
     fn sup(&self) -> f64 {
         1.0

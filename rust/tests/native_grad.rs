@@ -1,0 +1,158 @@
+//! Gradient correctness for the native CPU training engine (ISSUE 4).
+//!
+//! Two pillars:
+//!
+//! 1. **Central-difference oracle at f64** — the hand-derived backward
+//!    pass through lifting → [fused spectral conv + pointwise mix +
+//!    GELU]×N → projection must match `(L(p+ε) − L(p−ε)) / 2ε` for every
+//!    parameter family (spectral re/im pairs, mix/lift/proj weights and
+//!    biases).
+//! 2. **Thread parity** — per-sample gradient contributions are reduced
+//!    in sample order with f64 accumulation, so loss and gradients are
+//!    bit-identical at threads {1, 8} for every precision. Re-run under
+//!    `PALLAS_THREADS=1` by scripts/ci.sh to rule out scheduling noise
+//!    (the executors here are explicit, the data path is not).
+
+use mpno::fp::{Bf16, Scalar};
+use mpno::model::{Fno2d, FnoSpec};
+use mpno::parallel::Executor;
+use mpno::rng::Rng;
+use mpno::tensor::Tensor;
+
+fn tiny_spec() -> FnoSpec {
+    FnoSpec { in_channels: 2, out_channels: 1, width: 3, k_max: 2, n_layers: 2, h: 8, w: 8 }
+}
+
+fn rand_tensor(shape: &[usize], seed: u64, sigma: f64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape.to_vec(), rng.normal_vec(n, sigma))
+}
+
+/// Random params with *nonzero* biases so every gradient family is
+/// exercised away from special points.
+fn rand_params(spec: &FnoSpec, seed: u64) -> Vec<Tensor> {
+    spec.param_specs()
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let sigma = if p.std > 0.0 { p.std } else { 0.05 };
+            rand_tensor(&p.shape, seed.wrapping_add(i as u64), sigma)
+        })
+        .collect()
+}
+
+fn batch_xy(spec: &FnoSpec, b: usize, seed: u64) -> (Tensor, Tensor) {
+    (
+        rand_tensor(&[b, spec.in_channels, spec.h, spec.w], seed, 1.0),
+        rand_tensor(&[b, spec.out_channels, spec.h, spec.w], seed + 1, 1.0),
+    )
+}
+
+fn loss_at(spec: &FnoSpec, params: &[Tensor], x: &Tensor, y: &Tensor) -> f64 {
+    let refs: Vec<&Tensor> = params.iter().collect();
+    let mut model = Fno2d::<f64>::new(spec.clone());
+    model.set_params(&refs);
+    model.train_batch(x, y, 1.0, &Executor::serial()).0
+}
+
+#[test]
+fn backward_matches_central_differences_at_f64() {
+    let spec = tiny_spec();
+    let mut params = rand_params(&spec, 100);
+    let (x, y) = batch_xy(&spec, 2, 200);
+    let refs: Vec<&Tensor> = params.iter().collect();
+    let mut model = Fno2d::<f64>::new(spec.clone());
+    model.set_params(&refs);
+    let (loss, grads) = model.train_batch(&x, &y, 1.0, &Executor::serial());
+    assert!(loss.is_finite() && loss > 0.0);
+
+    let eps = 1e-4f32;
+    let mut checked = 0usize;
+    for ti in 0..params.len() {
+        let n = params[ti].len();
+        // Sample ~20 coordinates per tensor, always including endpoints.
+        let step = (n / 20).max(1);
+        for j in (0..n).step_by(step) {
+            let old = params[ti].data()[j];
+            let hp = old + eps;
+            let hm = old - eps;
+            params[ti].data_mut()[j] = hp;
+            let lp = loss_at(&spec, &params, &x, &y);
+            params[ti].data_mut()[j] = hm;
+            let lm = loss_at(&spec, &params, &x, &y);
+            params[ti].data_mut()[j] = old;
+            // Effective step from the actually-stored f32 values.
+            let denom = hp as f64 - hm as f64;
+            let num = (lp - lm) / denom;
+            let ana = grads[ti].data()[j] as f64;
+            let tol = 1e-6 + 5e-4 * num.abs().max(ana.abs());
+            assert!(
+                (num - ana).abs() <= tol,
+                "tensor {ti} coord {j}: numeric {num} vs analytic {ana} (tol {tol})"
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked >= 60, "oracle must cover a real sample of coordinates, got {checked}");
+}
+
+#[test]
+fn zero_upstream_means_zero_grads() {
+    // With y == prediction, the MSE gradient seed is exactly zero.
+    let spec = tiny_spec();
+    let params = rand_params(&spec, 7);
+    let refs: Vec<&Tensor> = params.iter().collect();
+    let mut model = Fno2d::<f64>::new(spec.clone());
+    model.set_params(&refs);
+    let (x, _) = batch_xy(&spec, 2, 8);
+    let y = model.forward(&x, &Executor::serial());
+    let (loss, grads) = model.train_batch(&x, &y, 1.0, &Executor::serial());
+    // `forward` rounds predictions to f32, so the residual is f32
+    // rounding noise (~1e-8 per element), not exactly zero.
+    assert!(loss.abs() < 1e-12, "loss at the fixed point must vanish, got {loss}");
+    for g in &grads {
+        assert!(g.abs_max() < 1e-4, "gradients at the fixed point must vanish");
+    }
+}
+
+fn grads_at_threads<S: Scalar>(threads: usize, scale: f32) -> (f64, Vec<Tensor>) {
+    let spec = tiny_spec();
+    let params = rand_params(&spec, 300);
+    let refs: Vec<&Tensor> = params.iter().collect();
+    let mut model = Fno2d::<S>::new(spec.clone());
+    model.set_params(&refs);
+    let (x, y) = batch_xy(&spec, 4, 400);
+    model.train_batch(&x, &y, scale, &Executor::new(threads))
+}
+
+fn assert_thread_parity<S: Scalar>(scale: f32) {
+    let (loss1, g1) = grads_at_threads::<S>(1, scale);
+    for threads in [2usize, 8] {
+        let (lossn, gn) = grads_at_threads::<S>(threads, scale);
+        assert_eq!(
+            loss1.to_bits(),
+            lossn.to_bits(),
+            "{}: loss must be bit-identical at {threads} threads",
+            S::name()
+        );
+        for (a, b) in g1.iter().zip(&gn) {
+            assert_eq!(a, b, "{}: grads must be bit-identical at {threads} threads", S::name());
+        }
+    }
+}
+
+#[test]
+fn gradient_parity_across_threads_f64() {
+    assert_thread_parity::<f64>(1.0);
+}
+
+#[test]
+fn gradient_parity_across_threads_f32() {
+    assert_thread_parity::<f32>(1.0);
+}
+
+#[test]
+fn gradient_parity_across_threads_bf16_with_loss_scaling() {
+    assert_thread_parity::<Bf16>(1024.0);
+}

@@ -1,0 +1,217 @@
+//! End-to-end native CPU training (ISSUE 4): full epochs through
+//! `coordinator::train_grid` on `runtime::NativeEngine` — the first path
+//! where the precision schedule, loss scaler and Adam loop execute real
+//! steps in the default build (the PJRT engine is a stub without the
+//! `pjrt` feature).
+
+use mpno::coordinator::{train_grid, Checkpoint, PrecisionSchedule, TrainConfig};
+use mpno::data::darcy_smoke_sets;
+use mpno::model::FnoSpec;
+use mpno::optim::Adam;
+use mpno::runtime::NativeEngine;
+use mpno::tensor::Tensor;
+
+fn darcy_engine(res: usize, batch: usize) -> NativeEngine {
+    let fno = FnoSpec {
+        in_channels: 1,
+        out_channels: 1,
+        width: 6,
+        k_max: 3,
+        n_layers: 2,
+        h: res,
+        w: res,
+    };
+    NativeEngine::new("darcy", fno, batch)
+}
+
+fn smoke_cfg(engine: &NativeEngine, prec: &str, epochs: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::new(&engine.artifact(prec, "grads"));
+    cfg.epochs = epochs;
+    cfg.lr = 5e-3;
+    cfg.seed = 1;
+    cfg
+}
+
+#[test]
+fn native_training_reduces_loss_f32() {
+    let (train, test) = darcy_smoke_sets(16, 16, 4, 7).unwrap();
+    let mut engine = darcy_engine(16, 4);
+    let cfg = smoke_cfg(&engine, "f32", 4);
+    let report = train_grid(&mut engine, &train, &test, &cfg).unwrap();
+    assert!(!report.diverged);
+    let first = report.epochs.first().unwrap().train_loss;
+    let last = report.epochs.last().unwrap().train_loss;
+    assert!(last < first, "f32 loss should drop: {first} -> {last}");
+    assert!(report.final_test_l2().is_finite());
+    assert!(report.final_test_h1().is_finite());
+}
+
+#[test]
+fn native_training_reduces_loss_bf16_with_loss_scaling() {
+    let (train, test) = darcy_smoke_sets(16, 16, 4, 7).unwrap();
+    let mut engine = darcy_engine(16, 4);
+    let mut cfg = smoke_cfg(&engine, "bf16", 4);
+    cfg.loss_scaling = true;
+    let report = train_grid(&mut engine, &train, &test, &cfg).unwrap();
+    assert!(!report.diverged, "bf16 with loss scaling must not diverge");
+    let first = report.epochs.first().unwrap().train_loss;
+    let last = report.epochs.last().unwrap().train_loss;
+    assert!(last < first, "bf16 loss should drop: {first} -> {last}");
+}
+
+#[test]
+fn precision_schedule_swaps_native_variants() {
+    let (train, test) = darcy_smoke_sets(16, 16, 4, 9).unwrap();
+    let mut engine = darcy_engine(16, 4);
+    let mut cfg = smoke_cfg(&engine, "bf16", 4);
+    cfg.loss_scaling = true;
+    cfg.schedule = PrecisionSchedule::paper_default(
+        &engine.artifact("bf16", "grads"),
+        &engine.artifact("tf32", "grads"),
+        &engine.artifact("f32", "grads"),
+    );
+    let report = train_grid(&mut engine, &train, &test, &cfg).unwrap();
+    assert!(!report.diverged);
+    let used: Vec<&str> = report.epochs.iter().map(|e| e.artifact.as_str()).collect();
+    assert!(used[0].contains("native-bf16"), "{used:?}");
+    assert!(used[1].contains("native-tf32"), "{used:?}");
+    assert!(used[2].contains("native-tf32"), "{used:?}");
+    assert!(used[3].contains("native-f32"), "{used:?}");
+}
+
+#[test]
+fn master_weights_carry_bit_exactly_across_precision_swaps() {
+    // The schedule's artifact swap is a Scalar swap: the fp32 master
+    // weights are only ever written by the optimizer, never round-tripped
+    // through the low-precision model. Simulate the swap by hand and pin
+    // the bits.
+    let mut engine = darcy_engine(8, 2);
+    let exe_bf16 = engine.load(&engine.artifact("bf16", "grads")).unwrap();
+    let exe_f32 = engine.load(&engine.artifact("f32", "grads")).unwrap();
+    let mut params = engine.init_params(&exe_bf16.entry, 3);
+    let mut adam = Adam::new(1e-3, &params);
+    let x = Tensor::from_fn(&[2, 1, 8, 8], |i| ((i[2] * i[3]) as f32 / 17.0).sin());
+    let y = Tensor::from_fn(&[2, 1, 8, 8], |i| ((i[2] + i[3]) as f32 / 5.0).cos());
+    let scale = Tensor::from_vec(vec![], vec![1024.0f32]);
+
+    // Phase 1: one bf16 step mutates the master weights via Adam only.
+    let mut inputs: Vec<&Tensor> = params.iter().collect();
+    inputs.push(&x);
+    inputs.push(&y);
+    inputs.push(&scale);
+    let out = exe_bf16.run(&inputs).unwrap();
+    drop(inputs);
+    assert!(adam.step(&mut params, &out[1..], 1.0 / 1024.0));
+    let master_after_step = params.clone();
+
+    // Phase swap: running the f32 variant with the same master weights
+    // must not perturb them — bit-for-bit.
+    let mut inputs: Vec<&Tensor> = params.iter().collect();
+    inputs.push(&x);
+    inputs.push(&y);
+    inputs.push(&scale);
+    exe_f32.run(&inputs).unwrap();
+    drop(inputs);
+    assert_eq!(params, master_after_step, "swap must carry fp32 master weights bit-exactly");
+
+    // And the swapped-in variant trains from exactly that state.
+    let mut inputs: Vec<&Tensor> = params.iter().collect();
+    inputs.push(&x);
+    inputs.push(&y);
+    inputs.push(&scale);
+    let out2 = exe_f32.run(&inputs).unwrap();
+    drop(inputs);
+    assert!(adam.step(&mut params, &out2[1..], 1.0 / 1024.0));
+    assert_ne!(params, master_after_step, "optimizer, and only the optimizer, moves them");
+}
+
+#[test]
+fn checkpoint_roundtrip_mid_schedule() {
+    let ck_path = std::env::temp_dir().join("mpno_native_mid_schedule.ck");
+    std::fs::remove_file(&ck_path).ok();
+    let (train, test) = darcy_smoke_sets(12, 16, 4, 11).unwrap();
+    let schedule = |engine: &NativeEngine| {
+        PrecisionSchedule::paper_default(
+            &engine.artifact("bf16", "grads"),
+            &engine.artifact("tf32", "grads"),
+            &engine.artifact("f32", "grads"),
+        )
+    };
+
+    // Stage 1: run the first half (2 of 4 epochs' worth) with the same
+    // 4-epoch schedule geometry, checkpointing every epoch. The final
+    // checkpoint lands mid-schedule, inside the tf32 phase.
+    let mut engine = darcy_engine(16, 4);
+    let mut cfg = smoke_cfg(&engine, "bf16", 2);
+    cfg.loss_scaling = true;
+    cfg.schedule = schedule(&engine);
+    cfg.checkpoint_path = Some(ck_path.clone());
+    let report_a = train_grid(&mut engine, &train, &test, &cfg).unwrap();
+    assert!(!report_a.diverged);
+
+    let ck = Checkpoint::load(&ck_path).unwrap();
+    assert_eq!(ck.epoch, 1, "checkpoint saved after the last completed epoch");
+    assert!(ck.loss_scale.is_some(), "scaler state rides along");
+    let entry = engine
+        .manifest
+        .find(&engine.artifact("bf16", "grads"))
+        .unwrap()
+        .clone();
+    let restored = ck.params_for(&entry).unwrap();
+    assert_eq!(restored, report_a.params, "round-trip preserves master weights bit-exactly");
+
+    // Stage 2: resume the same checkpoint into the full 4-epoch run; it
+    // continues at epoch 2 (tf32 phase) and finishes in the f32 phase.
+    let mut engine2 = darcy_engine(16, 4);
+    let mut cfg2 = smoke_cfg(&engine2, "bf16", 4);
+    cfg2.loss_scaling = true;
+    cfg2.schedule = schedule(&engine2);
+    cfg2.checkpoint_path = Some(ck_path.clone());
+    let report_b = train_grid(&mut engine2, &train, &test, &cfg2).unwrap();
+    assert_eq!(report_b.epochs.len(), 2, "resume skips the completed epochs");
+    assert_eq!(report_b.epochs[0].epoch, 2);
+    assert!(
+        report_b.epochs[0].artifact.contains("native-tf32"),
+        "{:?}",
+        report_b.epochs[0].artifact
+    );
+    assert!(
+        report_b.epochs[1].artifact.contains("native-f32"),
+        "{:?}",
+        report_b.epochs[1].artifact
+    );
+    let ck2 = Checkpoint::load(&ck_path).unwrap();
+    assert_eq!(ck2.epoch, 3);
+    std::fs::remove_file(&ck_path).ok();
+}
+
+#[test]
+fn native_cli_train_smoke() {
+    // The `mpno train --native` path end to end, tiny config.
+    let argv: Vec<String> = [
+        "train",
+        "--native",
+        "--dataset",
+        "darcy",
+        "--res",
+        "8",
+        "--n",
+        "8",
+        "--batch-size",
+        "2",
+        "--width",
+        "4",
+        "--modes",
+        "2",
+        "--layers",
+        "1",
+        "--epochs",
+        "1",
+        "--lr",
+        "1e-3",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    mpno::cli::run_argv(&argv).unwrap();
+}

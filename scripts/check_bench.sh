@@ -1,0 +1,76 @@
+#!/usr/bin/env bash
+# Perf regression gate on BENCH_spectral.json (repo root): in every
+# *recorded* section, the fused spectral path must not be slower than the
+# composed full-FFT baseline for the same shape.
+#
+# Sections suffixed `_smoke` or `_quick` hold 1-iteration CI smoke rows /
+# quick-shape rows (see bench::bench_json_section) and are skipped — they
+# are execution proofs, not measurements. A missing file or a file with
+# only smoke/quick sections passes with a note: CI produces smoke rows on
+# every run and uploads the JSON as an artifact; measurement-grade rows
+# appear once `cargo bench --bench bench_fft` / `mpno bench-par --json`
+# run without MPNO_BENCH_SMOKE.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BENCH_JSON="${1:-BENCH_spectral.json}"
+
+if [ ! -f "$BENCH_JSON" ]; then
+  echo "check_bench: $BENCH_JSON not present yet (no recorded rows to gate); OK"
+  exit 0
+fi
+
+python3 - "$BENCH_JSON" <<'EOF'
+import json
+import sys
+
+path = sys.argv[1]
+with open(path) as f:
+    doc = json.load(f)
+
+if not isinstance(doc, dict):
+    sys.exit(f"check_bench: {path} is not a JSON object")
+
+failures = []
+checked = 0
+for section, rows in sorted(doc.items()):
+    if section.endswith("_smoke") or section.endswith("_quick"):
+        continue
+    if not isinstance(rows, list):
+        continue
+    # Rows are tagged "<shape> composed" / "<shape> fused" (see
+    # SpectralBenchReport::json_rows). Compare every fused row against
+    # the composed baseline of the same shape within the section.
+    composed = {}
+    for row in rows:
+        case = row.get("case", "")
+        if case.endswith(" composed"):
+            composed[case[: -len(" composed")]] = row
+    for row in rows:
+        case = row.get("case", "")
+        if not case.endswith(" fused"):
+            continue
+        shape = case[: -len(" fused")]
+        base = composed.get(shape)
+        if base is None:
+            continue
+        checked += 1
+        fused_s, comp_s = row["mean_s"], base["mean_s"]
+        tag = f"{section}: {shape} (threads={row.get('threads')})"
+        if fused_s > comp_s:
+            failures.append(
+                f"{tag}: fused {fused_s:.6f}s > composed {comp_s:.6f}s"
+            )
+        else:
+            print(f"check_bench: OK {tag}: fused {fused_s:.6f}s <= composed {comp_s:.6f}s")
+
+if failures:
+    print("check_bench: FUSED PATH SLOWER THAN COMPOSED BASELINE:", file=sys.stderr)
+    for f_ in failures:
+        print(f"  {f_}", file=sys.stderr)
+    sys.exit(1)
+if checked == 0:
+    print("check_bench: no recorded (non-smoke, non-quick) composed/fused pairs yet; OK")
+else:
+    print(f"check_bench: {checked} recorded fused rows beat their composed baselines")
+EOF
