@@ -143,10 +143,18 @@ fn main() {
         println!("{}", report.composed);
         println!("{}", report.fused_serial);
         println!("{}", report.fused_parallel);
+        println!("{}", report.half_serial);
+        println!("{}", report.half_parallel);
         println!(
             "  -> fused speedup: {:.2}x serial, {:.2}x at {} threads",
             speedup(&report.composed, &report.fused_serial),
             speedup(&report.composed, &report.fused_parallel),
+            report.threads
+        );
+        println!(
+            "  -> half-spectrum vs fused: {:.2}x serial, {:.2}x at {} threads",
+            speedup(&report.fused_serial, &report.half_serial),
+            speedup(&report.fused_parallel, &report.half_parallel),
             report.threads
         );
         let path = bench_json_path();

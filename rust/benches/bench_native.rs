@@ -1,8 +1,11 @@
 //! Native training-step benchmarks: forward + hand-derived backward
-//! through the fused spectral engine, serial vs parallel, at f32 and
-//! bf16 compute. Rows land in `BENCH_spectral.json` under the
-//! `bench_native` section (`_smoke` suffixed under MPNO_BENCH_SMOKE=1,
-//! so CI runs never clobber recorded numbers).
+//! through the fused spectral engine (now the Hermitian half-spectrum
+//! path), serial vs parallel, at f32 and bf16 compute, plus a
+//! full-vs-half spectral-layer forward pair at the same shape so the
+//! `bench_native` section carries rows for the half-spectrum regression
+//! gate in `scripts/check_bench.sh`. Rows land in `BENCH_spectral.json`
+//! under the `bench_native` section (`_smoke` suffixed under
+//! MPNO_BENCH_SMOKE=1, so CI runs never clobber recorded numbers).
 //! Run: `cargo bench --bench bench_native`.
 
 use mpno::bench::{
@@ -13,6 +16,7 @@ use mpno::jsonlite::Json;
 use mpno::model::{Fno2d, FnoSpec};
 use mpno::parallel::Executor;
 use mpno::rng::Rng;
+use mpno::spectral::{random_field, random_real_field, HalfSpectralConv2d, SpectralConv2d};
 use mpno::tensor::Tensor;
 
 fn rand_tensor(shape: &[usize], seed: u64) -> Tensor {
@@ -58,6 +62,42 @@ fn bench_precision<S: Scalar>(
     rows.push(parallel.to_json_tagged(&shape, par.threads()));
 }
 
+/// One spectral-layer forward at the training shape, full-spectrum
+/// fused engine vs the Hermitian half-spectrum engine. Row tags end in
+/// " fused" / " half fused" at matching shape+threads so
+/// `scripts/check_bench.sh` gates the half path against the full one.
+fn bench_spectral_pair(
+    batch: usize,
+    res: usize,
+    width: usize,
+    k_max: usize,
+    budget_s: f64,
+    par: &Executor,
+    rows: &mut Vec<Json>,
+) {
+    let layer = SpectralConv2d::<f32>::random(width, width, res, res, k_max, 23);
+    let half_layer = HalfSpectralConv2d::<f32>::random(width, width, res, res, k_max, 23);
+    let input = random_field::<f32>(batch * width * res * res, 24);
+    let real_input = random_real_field::<f32>(batch * width * res * res, 24);
+    let shape = format!("native spectral f32 b{batch} {res}x{res} w{width} k{k_max}");
+    for (threads, ex) in [(1usize, Executor::serial()), (par.threads(), *par)] {
+        let tag = if threads == 1 { "serial".to_string() } else { format!("{threads}t") };
+        let fused = bench_auto(&format!("{shape} fused {tag}"), budget_s, || {
+            let out = layer.forward(&input, batch, &ex);
+            std::hint::black_box(out.len());
+        });
+        println!("{fused}");
+        let half = bench_auto(&format!("{shape} half fused {tag}"), budget_s, || {
+            let out = half_layer.forward(&real_input, batch, &ex);
+            std::hint::black_box(out.len());
+        });
+        println!("{half}");
+        println!("  -> half-spectrum vs fused ({tag}): {:.2}x", speedup(&fused, &half));
+        rows.push(fused.to_json_tagged(&format!("{shape} fused"), threads));
+        rows.push(half.to_json_tagged(&format!("{shape} half fused"), threads));
+    }
+}
+
 fn main() {
     let quick = smoke_mode();
     let (batch, res, width, k_max, n_layers) =
@@ -80,6 +120,7 @@ fn main() {
     let mut rows: Vec<Json> = Vec::new();
     bench_precision::<f32>(&spec, batch, 0.5, &par, &mut rows);
     bench_precision::<Bf16>(&spec, batch, 0.5, &par, &mut rows);
+    bench_spectral_pair(batch, res, width, k_max, 0.4, &par, &mut rows);
     let path = bench_json_path();
     let section = bench_json_section("bench_native", false);
     match update_bench_json(&path, &section, rows) {

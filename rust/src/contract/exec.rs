@@ -113,6 +113,136 @@ pub fn contract_modes_adjoint<S: Scalar>(
     }
 }
 
+/// [`contract_modes`] over split re/im (structure-of-arrays) operands —
+/// the contraction of the Hermitian half-spectrum engine
+/// ([`crate::spectral::half`]). Each complex multiply-accumulate is
+/// replayed in exactly [`Cplx::mul`]'s operation order
+/// (`ac−bd`, `ad+bc`) with component-wise accumulation, so for equal
+/// inputs the result is bit-identical to the array-of-structs kernel at
+/// every precision (asserted by `contract_modes_soa_matches_aos`
+/// below); the layout change only alters how the same scalars are
+/// streamed. Layouts mirror the AoS kernel: `x` (ci, n_modes),
+/// `w` (n_modes, ci, co) mode-major, `tmp` (n_modes, co),
+/// `out` (co, n_modes).
+#[allow(clippy::too_many_arguments)]
+pub fn contract_modes_soa<S: Scalar>(
+    x_re: &[S],
+    x_im: &[S],
+    w_re: &[S],
+    w_im: &[S],
+    ci: usize,
+    co: usize,
+    n_modes: usize,
+    tmp_re: &mut [S],
+    tmp_im: &mut [S],
+    out_re: &mut [S],
+    out_im: &mut [S],
+) {
+    assert_eq!(x_re.len(), ci * n_modes, "x must be (ci, n_modes)");
+    assert_eq!(x_im.len(), ci * n_modes, "x must be (ci, n_modes)");
+    assert_eq!(w_re.len(), n_modes * ci * co, "w must be (n_modes, ci, co)");
+    assert_eq!(w_im.len(), n_modes * ci * co, "w must be (n_modes, ci, co)");
+    assert_eq!(tmp_re.len(), n_modes * co, "tmp must be (n_modes, co)");
+    assert_eq!(tmp_im.len(), n_modes * co, "tmp must be (n_modes, co)");
+    assert_eq!(out_re.len(), co * n_modes, "out must be (co, n_modes)");
+    assert_eq!(out_im.len(), co * n_modes, "out must be (co, n_modes)");
+    for v in tmp_re.iter_mut() {
+        *v = S::zero();
+    }
+    for v in tmp_im.iter_mut() {
+        *v = S::zero();
+    }
+    for m in 0..n_modes {
+        let (orow_re, orow_im) =
+            (&mut tmp_re[m * co..(m + 1) * co], &mut tmp_im[m * co..(m + 1) * co]);
+        for ic in 0..ci {
+            let ar = x_re[ic * n_modes + m];
+            let ai = x_im[ic * n_modes + m];
+            let base = (m * ci + ic) * co;
+            let brow_re = &w_re[base..base + co];
+            let brow_im = &w_im[base..base + co];
+            for o in 0..co {
+                let br = brow_re[o];
+                let bi = brow_im[o];
+                let ac = ar.mul(br);
+                let bd = ai.mul(bi);
+                let ad = ar.mul(bi);
+                let bc = ai.mul(br);
+                orow_re[o] = orow_re[o].add(ac.sub(bd));
+                orow_im[o] = orow_im[o].add(ad.add(bc));
+            }
+        }
+    }
+    // Output permutation (m, o) -> (o, m): pure data movement, exact.
+    for o in 0..co {
+        for m in 0..n_modes {
+            out_re[o * n_modes + m] = tmp_re[m * co + o];
+            out_im[o * n_modes + m] = tmp_im[m * co + o];
+        }
+    }
+}
+
+/// Adjoint of [`contract_modes_soa`] with respect to its input:
+/// `out[i, m] = Σ_o g[o, m] · conj(w[m, i, o])` over split re/im
+/// slices, replaying [`contract_modes_adjoint`]'s `gv.mul(wv.conj())`
+/// op for op (the conjugate enters as a negated `w_im` component), with
+/// the same ascending-`o` accumulation from zeroed scratch. Bit-parity
+/// with the AoS adjoint is asserted alongside the forward kernel's.
+#[allow(clippy::too_many_arguments)]
+pub fn contract_modes_soa_adjoint<S: Scalar>(
+    g_re: &[S],
+    g_im: &[S],
+    w_re: &[S],
+    w_im: &[S],
+    ci: usize,
+    co: usize,
+    n_modes: usize,
+    tmp_re: &mut [S],
+    tmp_im: &mut [S],
+    out_re: &mut [S],
+    out_im: &mut [S],
+) {
+    assert_eq!(g_re.len(), co * n_modes, "g must be (co, n_modes)");
+    assert_eq!(g_im.len(), co * n_modes, "g must be (co, n_modes)");
+    assert_eq!(w_re.len(), n_modes * ci * co, "w must be (n_modes, ci, co)");
+    assert_eq!(w_im.len(), n_modes * ci * co, "w must be (n_modes, ci, co)");
+    assert_eq!(tmp_re.len(), n_modes * ci, "tmp must be (n_modes, ci)");
+    assert_eq!(tmp_im.len(), n_modes * ci, "tmp must be (n_modes, ci)");
+    assert_eq!(out_re.len(), ci * n_modes, "out must be (ci, n_modes)");
+    assert_eq!(out_im.len(), ci * n_modes, "out must be (ci, n_modes)");
+    for v in tmp_re.iter_mut() {
+        *v = S::zero();
+    }
+    for v in tmp_im.iter_mut() {
+        *v = S::zero();
+    }
+    for m in 0..n_modes {
+        let (irow_re, irow_im) =
+            (&mut tmp_re[m * ci..(m + 1) * ci], &mut tmp_im[m * ci..(m + 1) * ci]);
+        for o in 0..co {
+            let gr = g_re[o * n_modes + m];
+            let gi = g_im[o * n_modes + m];
+            for i in 0..ci {
+                let wr = w_re[(m * ci + i) * co + o];
+                let nwi = w_im[(m * ci + i) * co + o].neg();
+                let ac = gr.mul(wr);
+                let bd = gi.mul(nwi);
+                let ad = gr.mul(nwi);
+                let bc = gi.mul(wr);
+                irow_re[i] = irow_re[i].add(ac.sub(bd));
+                irow_im[i] = irow_im[i].add(ad.add(bc));
+            }
+        }
+    }
+    // Output permutation (m, i) -> (i, m): pure data movement, exact.
+    for i in 0..ci {
+        for m in 0..n_modes {
+            out_re[i * n_modes + m] = tmp_re[m * ci + i];
+            out_im[i * n_modes + m] = tmp_im[m * ci + i];
+        }
+    }
+}
+
 /// View-as-real strategy (Table 8 options).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ViewAsReal {
@@ -478,6 +608,67 @@ mod tests {
         let lhs = dot(&y, &g);
         let rhs = dot(&x, &gx);
         assert!((lhs - rhs).abs() < 1e-10 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    fn soa_vs_aos_case<S: Scalar>() {
+        // Identical scalars through both layouts: AoS (Cplx) and SoA
+        // (split re/im) kernels must agree bit for bit at every
+        // precision, forward and adjoint.
+        let (ci, co, n_modes) = (3usize, 4usize, 6usize);
+        let mut rng = Rng::new(77);
+        let mut cvec = |n: usize| -> Vec<Cplx<S>> {
+            (0..n)
+                .map(|_| {
+                    let (r, i) = rng.cnormal();
+                    Cplx::from_f64(r, i)
+                })
+                .collect()
+        };
+        let split = |v: &[Cplx<S>]| -> (Vec<S>, Vec<S>) {
+            (v.iter().map(|z| z.re).collect(), v.iter().map(|z| z.im).collect())
+        };
+        let x = cvec(ci * n_modes);
+        let w = cvec(n_modes * ci * co);
+        let g = cvec(co * n_modes);
+        let (xr, xi) = split(&x);
+        let (wr, wi) = split(&w);
+        let (gr, gi) = split(&g);
+
+        let mut tmp_mo = vec![Cplx::<S>::zero(); n_modes * co];
+        let mut y = vec![Cplx::<S>::zero(); co * n_modes];
+        contract_modes(&x, &w, ci, co, n_modes, &mut tmp_mo, &mut y);
+        let mut tr = vec![S::zero(); n_modes * co];
+        let mut ti = vec![S::zero(); n_modes * co];
+        let mut yr = vec![S::zero(); co * n_modes];
+        let mut yi = vec![S::zero(); co * n_modes];
+        contract_modes_soa(&xr, &xi, &wr, &wi, ci, co, n_modes, &mut tr, &mut ti, &mut yr, &mut yi);
+        for (m, z) in y.iter().enumerate() {
+            assert_eq!(yr[m].to_f64(), z.re.to_f64(), "fwd re mode {m}");
+            assert_eq!(yi[m].to_f64(), z.im.to_f64(), "fwd im mode {m}");
+        }
+
+        let mut tmp_mi = vec![Cplx::<S>::zero(); n_modes * ci];
+        let mut gx = vec![Cplx::<S>::zero(); ci * n_modes];
+        contract_modes_adjoint(&g, &w, ci, co, n_modes, &mut tmp_mi, &mut gx);
+        let mut ar = vec![S::zero(); n_modes * ci];
+        let mut ai = vec![S::zero(); n_modes * ci];
+        let mut gxr = vec![S::zero(); ci * n_modes];
+        let mut gxi = vec![S::zero(); ci * n_modes];
+        contract_modes_soa_adjoint(
+            &gr, &gi, &wr, &wi, ci, co, n_modes, &mut ar, &mut ai, &mut gxr, &mut gxi,
+        );
+        for (m, z) in gx.iter().enumerate() {
+            assert_eq!(gxr[m].to_f64(), z.re.to_f64(), "adj re mode {m}");
+            assert_eq!(gxi[m].to_f64(), z.im.to_f64(), "adj im mode {m}");
+        }
+    }
+
+    #[test]
+    fn contract_modes_soa_matches_aos_bitwise() {
+        soa_vs_aos_case::<f64>();
+        soa_vs_aos_case::<f32>();
+        soa_vs_aos_case::<crate::fp::Bf16>();
+        soa_vs_aos_case::<crate::fp::F16>();
     }
 
     #[test]

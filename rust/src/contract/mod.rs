@@ -21,7 +21,7 @@ pub mod path;
 
 pub use exec::{
     contract, contract_complex, contract_complex_with, contract_modes, contract_modes_adjoint,
-    contract_with, ViewAsReal,
+    contract_modes_soa, contract_modes_soa_adjoint, contract_with, ViewAsReal,
 };
 pub use expr::EinsumExpr;
 pub use path::{plan, CostModel, PathCache, PathStrategy, PlannedPath};

@@ -266,6 +266,20 @@ pub fn parbench(ctx: &Ctx) -> Result<()> {
         crate::bench::fmt_secs(report.fused_parallel.mean_s),
         format!("{:.2}x", speedup(&report.composed, &report.fused_parallel)),
     ]);
+    // Hermitian half-spectrum engine vs the full-spectrum fused path —
+    // the ISSUE 6 acceptance measurement (gated by scripts/check_bench.sh).
+    t.row(&[
+        format!("{} fused->half serial", report.shape),
+        crate::bench::fmt_secs(report.fused_serial.mean_s),
+        crate::bench::fmt_secs(report.half_serial.mean_s),
+        format!("{:.2}x", speedup(&report.fused_serial, &report.half_serial)),
+    ]);
+    t.row(&[
+        format!("{} fused->half {}t", report.shape, report.threads),
+        crate::bench::fmt_secs(report.fused_parallel.mean_s),
+        crate::bench::fmt_secs(report.half_parallel.mean_s),
+        format!("{:.2}x", speedup(&report.fused_parallel, &report.half_parallel)),
+    ]);
     json_rows.extend(report.json_rows());
 
     if ctx.json {

@@ -1,0 +1,621 @@
+//! Hermitian half-spectrum passes for **real** input fields.
+//!
+//! Every field the FNO ingests is real-valued, so its spectrum is
+//! conjugate-symmetric: `F[r, w−c] = conj(F[(h−r) mod h, c])`. The full
+//! kept-mode block of [`super::trunc`] therefore stores (and contracts)
+//! twice the information actually present. The passes here adopt the
+//! rfft2/irfft2 convention of real-FFT libraries — exploit the symmetry
+//! along the **last** axis only — and keep:
+//!
+//! * **rows**: the `2·k_max` kept frequencies of [`super::trunc::kept_indices`]
+//!   (the axis-0 transform is complex, no symmetry is exploited there);
+//! * **columns**: the `k_max + 1` stored columns `0..=k_max`. Column 0 is
+//!   the DC bin and always self-conjugate; column `k_max` is the Nyquist
+//!   bin (self-conjugate) exactly when `2·k_max == w`, otherwise it is a
+//!   genuine positive frequency whose mirror `w − k_max` is implied. The
+//!   negative columns `w − k_max .. w` of the full block are never stored:
+//!   they are the conjugates of stored columns `1..=k_max` row by row.
+//!
+//! Storage is a structure-of-arrays [`HalfSpectrum`] (split `re`/`im`
+//! slices) so the mode contraction streams two flat real arrays instead
+//! of interleaved pairs. Mode count per channel drops from `4·k_max²` to
+//! `2·k_max·(k_max+1)` — about half for the paper's `k_max = 16`.
+//!
+//! # Transform definitions and parity
+//!
+//! [`rfft2_kept`] is the forward rfft2 restricted to the stored block:
+//! a full complex row pass over the real-ified input (identical
+//! arithmetic to complexifying and running the ad-hoc `fft2` row pass),
+//! then column transforms of only the `k_max+1` stored columns. It is
+//! bit-identical to `gather(fft2(complexify(x)))` on the stored cells —
+//! the same "skip only discarded work" argument as [`super::trunc`].
+//!
+//! [`irfft2_kept`] is irfft2 restricted to the kept rows: inverse
+//! column transforms of the stored columns (kept rows scattered into
+//! zeroed lines), then per row a Hermitian extension to full width
+//! (`row[w−j] = conj(row[j])`, skipping the self-conjugate DC and
+//! Nyquist bins) followed by an inverse row transform, keeping the real
+//! part. Note the pass order is columns-then-rows — the opposite of the
+//! complex `ifft2` — because the extension must happen after the axis-0
+//! inverse; the serial composed oracle in [`crate::spectral`] is built
+//! from the same ad-hoc 1-D kernels in the same order, so fused and
+//! composed agree bit-for-bit at every precision (the planned kernels
+//! are bit-identical to the ad-hoc ones, see [`super::plan`]).
+//!
+//! The `*_with` variants fan the independent 1-D transforms of each pass
+//! over an [`Executor`] (within-sample row/column fan-out for wide grids
+//! when `batch ≪ threads`), bit-identical to the serial passes.
+
+use super::plan::Plan;
+use super::trunc::{grow, SpectralScratch};
+use crate::fp::{Cplx, Scalar};
+use crate::parallel::Executor;
+
+/// Stored columns of the half-spectrum: `0..=k_max`.
+pub fn half_cols(k_max: usize) -> usize {
+    k_max + 1
+}
+
+/// Weight-gradient factor for stored column `j` on an axis of length
+/// `w`: self-conjugate bins (DC, and Nyquist when `2·j == w`) appear
+/// once in the implied full spectrum, every other stored column stands
+/// for itself *and* its conjugate mirror — the "doubled-weight"
+/// correction that keeps gradients exact on the halved mode set.
+pub fn col_weight_factor(j: usize, w: usize) -> f64 {
+    if j == 0 || 2 * j == w {
+        1.0
+    } else {
+        2.0
+    }
+}
+
+/// Structure-of-arrays half-spectrum: `channels` stacked row-major
+/// (kept_rows × stored_cols) blocks with split `re`/`im` storage.
+#[derive(Debug, Clone)]
+pub struct HalfSpectrum<S: Scalar> {
+    channels: usize,
+    kr: usize,
+    kc: usize,
+    re: Vec<S>,
+    im: Vec<S>,
+}
+
+impl<S: Scalar> Default for HalfSpectrum<S> {
+    /// Empty (0-channel) placeholder a layer's `ensure_scratch` replaces
+    /// on first use. A manual impl: deriving would demand `S: Default`,
+    /// which the emulated formats deliberately do not provide.
+    fn default() -> Self {
+        HalfSpectrum { channels: 0, kr: 0, kc: 0, re: Vec::new(), im: Vec::new() }
+    }
+}
+
+impl<S: Scalar> HalfSpectrum<S> {
+    /// Zeroed spectrum for `channels` blocks of (kr kept rows × kc
+    /// stored columns).
+    pub fn zeros(channels: usize, kr: usize, kc: usize) -> Self {
+        let n = channels * kr * kc;
+        HalfSpectrum { channels, kr, kc, re: vec![S::zero(); n], im: vec![S::zero(); n] }
+    }
+
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    /// Stored modes per channel (kept_rows · stored_cols).
+    pub fn n_modes(&self) -> usize {
+        self.kr * self.kc
+    }
+
+    pub fn re(&self) -> &[S] {
+        &self.re
+    }
+
+    pub fn im(&self) -> &[S] {
+        &self.im
+    }
+
+    /// Split mutable views of the full re/im planes.
+    pub fn parts_mut(&mut self) -> (&mut [S], &mut [S]) {
+        (&mut self.re, &mut self.im)
+    }
+
+    /// One channel's (re, im) block.
+    pub fn channel(&self, c: usize) -> (&[S], &[S]) {
+        let n = self.n_modes();
+        (&self.re[c * n..(c + 1) * n], &self.im[c * n..(c + 1) * n])
+    }
+
+    /// One channel's mutable (re, im) block.
+    pub fn channel_mut(&mut self, c: usize) -> (&mut [S], &mut [S]) {
+        let n = self.n_modes();
+        (&mut self.re[c * n..(c + 1) * n], &mut self.im[c * n..(c + 1) * n])
+    }
+
+    /// Overwrite from another spectrum of identical shape (the
+    /// activation-stash copy of the training tape).
+    pub fn copy_from(&mut self, other: &HalfSpectrum<S>) {
+        assert_eq!(self.re.len(), other.re.len(), "shape mismatch");
+        self.re.copy_from_slice(&other.re);
+        self.im.copy_from_slice(&other.im);
+    }
+}
+
+/// Forward rfft2 of a real row-major (h, w) field onto the stored
+/// half-block: full complex row pass, then column transforms of only
+/// the `k_max+1` stored columns, gathered at `kept_rows` into the SoA
+/// output (`out_re`/`out_im`, row-major kept_rows × (k_max+1)).
+pub fn rfft2_kept<S: Scalar>(
+    src: &[S],
+    h: usize,
+    w: usize,
+    kept_rows: &[usize],
+    k_max: usize,
+    row_plan: &Plan<S>,
+    col_plan: &Plan<S>,
+    out_re: &mut [S],
+    out_im: &mut [S],
+    scratch: &mut SpectralScratch<S>,
+) {
+    let kc = half_cols(k_max);
+    assert_eq!(src.len(), h * w);
+    assert!(2 * k_max <= w, "2*k_max={} exceeds axis length {w}", 2 * k_max);
+    assert_eq!(row_plan.len(), w, "row plan length");
+    assert_eq!(col_plan.len(), h, "col plan length");
+    assert!(!row_plan.is_inverse() && !col_plan.is_inverse(), "need forward plans");
+    let kr = kept_rows.len();
+    assert_eq!(out_re.len(), kr * kc);
+    assert_eq!(out_im.len(), kr * kc);
+    let SpectralScratch { rows, line, blue, .. } = scratch;
+    // Row pass in full over the real-ified input: identical arithmetic
+    // to complexify + fft2's row pass.
+    grow(rows, h * w);
+    for (z, &v) in rows[..h * w].iter_mut().zip(src) {
+        *z = Cplx::new(v, S::zero());
+    }
+    for r in 0..h {
+        row_plan.apply(&mut rows[r * w..(r + 1) * w], blue);
+    }
+    // Column pass on the stored columns only.
+    grow(line, h);
+    for j in 0..kc {
+        for r in 0..h {
+            line[r] = rows[r * w + j];
+        }
+        col_plan.apply(&mut line[..h], blue);
+        for (i, &r) in kept_rows.iter().enumerate() {
+            let z = line[r];
+            out_re[i * kc + j] = z.re;
+            out_im[i * kc + j] = z.im;
+        }
+    }
+}
+
+/// [`rfft2_kept`] with the row and column passes fanned over `ex` —
+/// bit-identical to the serial pass (see [`super::trunc::fft2_kept_with`]).
+pub fn rfft2_kept_with<S: Scalar>(
+    src: &[S],
+    h: usize,
+    w: usize,
+    kept_rows: &[usize],
+    k_max: usize,
+    row_plan: &Plan<S>,
+    col_plan: &Plan<S>,
+    out_re: &mut [S],
+    out_im: &mut [S],
+    scratch: &mut SpectralScratch<S>,
+    ex: &Executor,
+) {
+    let kc = half_cols(k_max);
+    assert_eq!(src.len(), h * w);
+    assert!(2 * k_max <= w, "2*k_max={} exceeds axis length {w}", 2 * k_max);
+    assert_eq!(row_plan.len(), w, "row plan length");
+    assert_eq!(col_plan.len(), h, "col plan length");
+    assert!(!row_plan.is_inverse() && !col_plan.is_inverse(), "need forward plans");
+    let kr = kept_rows.len();
+    assert_eq!(out_re.len(), kr * kc);
+    assert_eq!(out_im.len(), kr * kc);
+    let SpectralScratch { rows, cols, .. } = scratch;
+    grow(rows, h * w);
+    ex.for_each_chunk_with(&mut rows[..h * w], w, Vec::new, |r, row, blue| {
+        for (z, &v) in row.iter_mut().zip(&src[r * w..(r + 1) * w]) {
+            *z = Cplx::new(v, S::zero());
+        }
+        row_plan.apply(row, blue);
+    });
+    grow(cols, kc * h);
+    {
+        let rows_ro: &[Cplx<S>] = rows;
+        ex.for_each_chunk_with(&mut cols[..kc * h], h, Vec::new, |j, col, blue| {
+            for (r, v) in col.iter_mut().enumerate() {
+                *v = rows_ro[r * w + j];
+            }
+            col_plan.apply(col, blue);
+        });
+    }
+    for (i, &r) in kept_rows.iter().enumerate() {
+        for j in 0..kc {
+            let z = cols[j * h + r];
+            out_re[i * kc + j] = z.re;
+            out_im[i * kc + j] = z.im;
+        }
+    }
+}
+
+/// Inverse of [`rfft2_kept`] back to a real (h, w) grid: inverse column
+/// transforms of the stored columns (kept rows scattered into zeroed
+/// lines), then per full-grid row the Hermitian extension
+/// `row[w−j] = conj(row[j])` (skipping self-conjugate DC/Nyquist bins)
+/// and an inverse row transform, keeping the real part.
+pub fn irfft2_kept<S: Scalar>(
+    spec_re: &[S],
+    spec_im: &[S],
+    h: usize,
+    w: usize,
+    kept_rows: &[usize],
+    k_max: usize,
+    row_inv: &Plan<S>,
+    col_inv: &Plan<S>,
+    out: &mut [S],
+    scratch: &mut SpectralScratch<S>,
+) {
+    let kc = half_cols(k_max);
+    let kr = kept_rows.len();
+    assert_eq!(spec_re.len(), kr * kc);
+    assert_eq!(spec_im.len(), kr * kc);
+    assert_eq!(out.len(), h * w);
+    assert!(2 * k_max <= w, "2*k_max={} exceeds axis length {w}", 2 * k_max);
+    assert_eq!(row_inv.len(), w, "row plan length");
+    assert_eq!(col_inv.len(), h, "col plan length");
+    assert!(row_inv.is_inverse() && col_inv.is_inverse(), "need inverse plans");
+    let SpectralScratch { cols, line, blue, .. } = scratch;
+    // Axis-0 inverse on the stored columns only: all other columns of
+    // the implied half spectrum are derived, not independent.
+    grow(cols, kc * h);
+    for j in 0..kc {
+        let col = &mut cols[j * h..(j + 1) * h];
+        for v in col.iter_mut() {
+            *v = Cplx::zero();
+        }
+        for (i, &r) in kept_rows.iter().enumerate() {
+            col[r] = Cplx::new(spec_re[i * kc + j], spec_im[i * kc + j]);
+        }
+        col_inv.apply(col, blue);
+    }
+    // Axis-1 inverse over every output row, Hermitian-extended to full
+    // width. `w − j > k_max` excludes exactly the self-conjugate Nyquist
+    // column (j = k_max with 2·k_max == w); DC is excluded by j ≥ 1.
+    grow(line, w);
+    for r in 0..h {
+        let row = &mut line[..w];
+        for v in row.iter_mut() {
+            *v = Cplx::zero();
+        }
+        for j in 0..kc {
+            row[j] = cols[j * h + r];
+        }
+        for j in 1..kc {
+            let m = w - j;
+            if m > k_max {
+                row[m] = cols[j * h + r].conj();
+            }
+        }
+        row_inv.apply(row, blue);
+        for (c, z) in row.iter().enumerate() {
+            out[r * w + c] = z.re;
+        }
+    }
+}
+
+/// [`irfft2_kept`] with the column and row passes fanned over `ex` —
+/// bit-identical to the serial pass.
+pub fn irfft2_kept_with<S: Scalar>(
+    spec_re: &[S],
+    spec_im: &[S],
+    h: usize,
+    w: usize,
+    kept_rows: &[usize],
+    k_max: usize,
+    row_inv: &Plan<S>,
+    col_inv: &Plan<S>,
+    out: &mut [S],
+    scratch: &mut SpectralScratch<S>,
+    ex: &Executor,
+) {
+    let kc = half_cols(k_max);
+    let kr = kept_rows.len();
+    assert_eq!(spec_re.len(), kr * kc);
+    assert_eq!(spec_im.len(), kr * kc);
+    assert_eq!(out.len(), h * w);
+    assert!(2 * k_max <= w, "2*k_max={} exceeds axis length {w}", 2 * k_max);
+    assert_eq!(row_inv.len(), w, "row plan length");
+    assert_eq!(col_inv.len(), h, "col plan length");
+    assert!(row_inv.is_inverse() && col_inv.is_inverse(), "need inverse plans");
+    let SpectralScratch { cols, .. } = scratch;
+    grow(cols, kc * h);
+    ex.for_each_chunk_with(&mut cols[..kc * h], h, Vec::new, |j, col, blue| {
+        for v in col.iter_mut() {
+            *v = Cplx::zero();
+        }
+        for (i, &r) in kept_rows.iter().enumerate() {
+            col[r] = Cplx::new(spec_re[i * kc + j], spec_im[i * kc + j]);
+        }
+        col_inv.apply(col, blue);
+    });
+    let cols_ro: &[Cplx<S>] = cols;
+    ex.for_each_chunk_with(
+        out,
+        w,
+        || (vec![Cplx::<S>::zero(); w], Vec::new()),
+        |r, chunk, (row, blue)| {
+            for v in row.iter_mut() {
+                *v = Cplx::zero();
+            }
+            for j in 0..kc {
+                row[j] = cols_ro[j * h + r];
+            }
+            for j in 1..kc {
+                let m = w - j;
+                if m > k_max {
+                    row[m] = cols_ro[j * h + r].conj();
+                }
+            }
+            row_inv.apply(row, blue);
+            for (d, z) in chunk.iter_mut().zip(row.iter()) {
+                *d = z.re;
+            }
+        },
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::trunc::kept_indices;
+    use crate::fft::{fft2, ifft, plan_for};
+    use crate::rng::Rng;
+
+    fn real_signal(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn half_signal(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| rng.cnormal())
+            .unzip()
+    }
+
+    /// Serial composed forward oracle: complexify, ad-hoc full `fft2`,
+    /// gather kept rows × stored columns.
+    fn rfft2_oracle(src: &[f64], h: usize, w: usize, k: usize) -> (Vec<f64>, Vec<f64>) {
+        let mut full: Vec<Cplx<f64>> =
+            src.iter().map(|&v| Cplx::new(v, 0.0)).collect();
+        fft2(&mut full, h, w);
+        let kept = kept_indices(h, k);
+        let kc = half_cols(k);
+        let mut re = Vec::with_capacity(kept.len() * kc);
+        let mut im = Vec::with_capacity(kept.len() * kc);
+        for &r in &kept {
+            for j in 0..kc {
+                let z = full[r * w + j];
+                re.push(z.re);
+                im.push(z.im);
+            }
+        }
+        (re, im)
+    }
+
+    /// Serial composed inverse oracle from ad-hoc 1-D kernels in the
+    /// fused pass's order: stored-column inverse transforms, then
+    /// Hermitian-extended row inverse transforms, real part.
+    fn irfft2_oracle(
+        sre: &[f64],
+        sim: &[f64],
+        h: usize,
+        w: usize,
+        k: usize,
+    ) -> Vec<f64> {
+        let kept = kept_indices(h, k);
+        let kc = half_cols(k);
+        let mut cols = vec![Cplx::<f64>::zero(); kc * h];
+        for j in 0..kc {
+            let mut line = vec![Cplx::<f64>::zero(); h];
+            for (i, &r) in kept.iter().enumerate() {
+                line[r] = Cplx::new(sre[i * kc + j], sim[i * kc + j]);
+            }
+            ifft(&mut line);
+            cols[j * h..(j + 1) * h].copy_from_slice(&line);
+        }
+        let mut out = vec![0.0f64; h * w];
+        for r in 0..h {
+            let mut row = vec![Cplx::<f64>::zero(); w];
+            for j in 0..kc {
+                row[j] = cols[j * h + r];
+            }
+            for j in 1..kc {
+                let m = w - j;
+                if m > k {
+                    row[m] = cols[j * h + r].conj();
+                }
+            }
+            ifft(&mut row);
+            for c in 0..w {
+                out[r * w + c] = row[c].re;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn rfft2_matches_full_fft2_gather_bitwise() {
+        // Radix-2, Bluestein, and the 2·k_max == axis boundary.
+        for (h, w, k) in [(8usize, 8usize, 4usize), (16, 8, 3), (9, 15, 4), (12, 20, 5)] {
+            let x = real_signal(h * w, 3 + (h * w) as u64);
+            let (want_re, want_im) = rfft2_oracle(&x, h, w, k);
+            let kept = kept_indices(h, k);
+            let kc = half_cols(k);
+            let mut got_re = vec![0.0f64; kept.len() * kc];
+            let mut got_im = vec![0.0f64; kept.len() * kc];
+            let mut scratch = SpectralScratch::new();
+            rfft2_kept(
+                &x,
+                h,
+                w,
+                &kept,
+                k,
+                &plan_for::<f64>(w, false),
+                &plan_for::<f64>(h, false),
+                &mut got_re,
+                &mut got_im,
+                &mut scratch,
+            );
+            assert_eq!(got_re, want_re, "re h={h} w={w} k={k}");
+            assert_eq!(got_im, want_im, "im h={h} w={w} k={k}");
+        }
+    }
+
+    #[test]
+    fn irfft2_matches_composed_1d_oracle_bitwise() {
+        for (h, w, k) in [(8usize, 8usize, 4usize), (16, 8, 3), (9, 15, 4), (12, 20, 5)] {
+            let kept = kept_indices(h, k);
+            let kc = half_cols(k);
+            let (sre, sim) = half_signal(kept.len() * kc, 11 + (h + w) as u64);
+            let want = irfft2_oracle(&sre, &sim, h, w, k);
+            let mut got = vec![0.0f64; h * w];
+            let mut scratch = SpectralScratch::new();
+            irfft2_kept(
+                &sre,
+                &sim,
+                h,
+                w,
+                &kept,
+                k,
+                &plan_for::<f64>(w, true),
+                &plan_for::<f64>(h, true),
+                &mut got,
+                &mut scratch,
+            );
+            assert_eq!(got, want, "h={h} w={w} k={k}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_recovers_band_limited_real_fields() {
+        // A real field supported on the kept band survives fwd+inv; the
+        // (8, 8, 4) case puts live content in the self-conjugate Nyquist
+        // column and the kept-row boundary (2·k == h == w).
+        for (h, w, k) in [(16usize, 16usize, 3usize), (8, 8, 4), (12, 20, 4)] {
+            let x: Vec<f64> = (0..h * w)
+                .map(|i| {
+                    let (r, c) = (i / w, i % w);
+                    let tau = std::f64::consts::TAU;
+                    (tau * (2.0 * r as f64 / h as f64)).cos()
+                        + (tau * (c as f64 / w as f64)).sin()
+                        + if 2 * k == w {
+                            // Nyquist-mode content: alternating ±1 along w.
+                            0.5 * (tau * (k as f64 * c as f64 / w as f64)).cos()
+                        } else {
+                            0.0
+                        }
+                })
+                .collect();
+            let kept = kept_indices(h, k);
+            let kc = half_cols(k);
+            let mut re = vec![0.0f64; kept.len() * kc];
+            let mut im = vec![0.0f64; kept.len() * kc];
+            let mut scratch = SpectralScratch::new();
+            rfft2_kept(
+                &x,
+                h,
+                w,
+                &kept,
+                k,
+                &plan_for::<f64>(w, false),
+                &plan_for::<f64>(h, false),
+                &mut re,
+                &mut im,
+                &mut scratch,
+            );
+            let mut back = vec![0.0f64; h * w];
+            irfft2_kept(
+                &re,
+                &im,
+                h,
+                w,
+                &kept,
+                k,
+                &plan_for::<f64>(w, true),
+                &plan_for::<f64>(h, true),
+                &mut back,
+                &mut scratch,
+            );
+            for (a, b) in back.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-10, "h={h} w={w} k={k}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_half_passes_match_serial_bitwise() {
+        let (h, w, k) = (32usize, 40usize, 5usize);
+        let kept = kept_indices(h, k);
+        let kc = half_cols(k);
+        let x = real_signal(h * w, 21);
+        let (sre, sim) = half_signal(kept.len() * kc, 22);
+        let rp = plan_for::<f64>(w, false);
+        let cp = plan_for::<f64>(h, false);
+        let rpi = plan_for::<f64>(w, true);
+        let cpi = plan_for::<f64>(h, true);
+        let mut scratch = SpectralScratch::new();
+        let mut want_re = vec![0.0f64; kept.len() * kc];
+        let mut want_im = vec![0.0f64; kept.len() * kc];
+        rfft2_kept(&x, h, w, &kept, k, &rp, &cp, &mut want_re, &mut want_im, &mut scratch);
+        let mut want_inv = vec![0.0f64; h * w];
+        irfft2_kept(&sre, &sim, h, w, &kept, k, &rpi, &cpi, &mut want_inv, &mut scratch);
+        for threads in [1usize, 2, 8] {
+            let ex = Executor::new(threads);
+            let mut gre = vec![0.0f64; want_re.len()];
+            let mut gim = vec![0.0f64; want_im.len()];
+            rfft2_kept_with(&x, h, w, &kept, k, &rp, &cp, &mut gre, &mut gim, &mut scratch, &ex);
+            assert_eq!(gre, want_re, "fwd re threads={threads}");
+            assert_eq!(gim, want_im, "fwd im threads={threads}");
+            let mut ginv = vec![0.0f64; h * w];
+            irfft2_kept_with(
+                &sre, &sim, h, w, &kept, k, &rpi, &cpi, &mut ginv, &mut scratch, &ex,
+            );
+            assert_eq!(ginv, want_inv, "inv threads={threads}");
+        }
+    }
+
+    #[test]
+    fn col_weight_factor_self_conjugate_bins() {
+        // DC always single; Nyquist single exactly at 2·j == w; every
+        // other stored column implies its conjugate mirror.
+        assert_eq!(col_weight_factor(0, 16), 1.0);
+        assert_eq!(col_weight_factor(3, 16), 2.0);
+        assert_eq!(col_weight_factor(8, 16), 1.0); // Nyquist of w=16
+        assert_eq!(col_weight_factor(4, 16), 2.0);
+        assert_eq!(col_weight_factor(4, 9), 2.0); // odd axis: no Nyquist
+    }
+
+    #[test]
+    fn half_spectrum_layout_and_channels() {
+        let mut s = HalfSpectrum::<f64>::zeros(2, 4, 3);
+        assert_eq!(s.channels(), 2);
+        assert_eq!(s.n_modes(), 12);
+        {
+            let (re, im) = s.channel_mut(1);
+            re[0] = 5.0;
+            im[11] = -1.0;
+        }
+        assert_eq!(s.re()[12], 5.0);
+        assert_eq!(s.im()[23], -1.0);
+        let (r0, i0) = s.channel(0);
+        assert!(r0.iter().all(|&v| v == 0.0) && i0.iter().all(|&v| v == 0.0));
+        let mut t = HalfSpectrum::<f64>::zeros(2, 4, 3);
+        t.copy_from(&s);
+        assert_eq!(t.re(), s.re());
+        assert_eq!(t.im(), s.im());
+    }
+}

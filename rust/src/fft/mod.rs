@@ -30,13 +30,18 @@
 //! wasted work). The fused spectral layer built on both lives in
 //! [`crate::spectral`].
 
+pub mod half;
 pub mod plan;
 pub mod trunc;
 
+pub use half::{
+    col_weight_factor, half_cols, irfft2_kept, irfft2_kept_with, rfft2_kept, rfft2_kept_with,
+    HalfSpectrum,
+};
 pub use plan::{plan_for, Plan};
 pub use trunc::{
-    embed_modes, fft2_kept, fft2_trunc, ifft2_kept, ifft2_trunc, kept_indices, truncate_modes,
-    SpectralScratch,
+    embed_modes, fft2_kept, fft2_kept_with, fft2_trunc, ifft2_kept, ifft2_kept_with, ifft2_trunc,
+    kept_indices, truncate_modes, SpectralScratch,
 };
 
 use crate::fp::{Cplx, Scalar};

@@ -33,6 +33,7 @@
 
 use super::plan::Plan;
 use crate::fp::{Cplx, Scalar};
+use crate::parallel::Executor;
 
 /// FFT-order indices of the `2·k_max` kept frequencies on an axis of
 /// length `n`: the positive block `[0, k_max)` then the negative block
@@ -49,16 +50,22 @@ pub fn kept_indices(n: usize, k_max: usize) -> Vec<usize> {
 #[derive(Debug)]
 pub struct SpectralScratch<S: Scalar> {
     /// Row-pass intermediate (forward: `h·w`; inverse: `kept_rows·w`).
-    rows: Vec<Cplx<S>>,
+    /// Crate-visible so the sibling half-spectrum passes ([`super::half`])
+    /// and the parallel pass drivers share one arena.
+    pub(crate) rows: Vec<Cplx<S>>,
     /// One gathered column / scattered line (`max(h, w)`).
-    line: Vec<Cplx<S>>,
+    pub(crate) line: Vec<Cplx<S>>,
     /// Bluestein convolution scratch for the 1-D plans.
-    blue: Vec<Cplx<S>>,
+    pub(crate) blue: Vec<Cplx<S>>,
+    /// Column-pass staging for the parallel (within-sample fan-out)
+    /// variants: column transforms land in contiguous per-column chunks
+    /// here instead of the single reused `line`.
+    pub(crate) cols: Vec<Cplx<S>>,
 }
 
 impl<S: Scalar> SpectralScratch<S> {
     pub fn new() -> Self {
-        SpectralScratch { rows: Vec::new(), line: Vec::new(), blue: Vec::new() }
+        SpectralScratch { rows: Vec::new(), line: Vec::new(), blue: Vec::new(), cols: Vec::new() }
     }
 }
 
@@ -68,7 +75,7 @@ impl<S: Scalar> Default for SpectralScratch<S> {
     }
 }
 
-fn grow<S: Scalar>(buf: &mut Vec<Cplx<S>>, len: usize) {
+pub(crate) fn grow<S: Scalar>(buf: &mut Vec<Cplx<S>>, len: usize) {
     if buf.len() < len {
         buf.resize(len, Cplx::zero());
     }
@@ -96,7 +103,7 @@ pub fn fft2_kept<S: Scalar>(
     assert!(!row_plan.is_inverse() && !col_plan.is_inverse(), "need forward plans");
     let (kr, kc) = (kept_rows.len(), kept_cols.len());
     assert_eq!(out.len(), kr * kc);
-    let SpectralScratch { rows, line, blue } = scratch;
+    let SpectralScratch { rows, line, blue, .. } = scratch;
     // Row pass in full: every kept coefficient mixes all w input columns.
     grow(rows, h * w);
     rows[..h * w].copy_from_slice(src);
@@ -137,7 +144,7 @@ pub fn ifft2_kept<S: Scalar>(
     assert_eq!(row_plan.len(), w, "row plan length");
     assert_eq!(col_plan.len(), h, "col plan length");
     assert!(row_plan.is_inverse() && col_plan.is_inverse(), "need inverse plans");
-    let SpectralScratch { rows, line, blue } = scratch;
+    let SpectralScratch { rows, line, blue, .. } = scratch;
     // Row pass on the kept rows only: all other rows of the embedded
     // spectrum are zero and inverse-transform to exact zeros.
     grow(rows, kr * w);
@@ -166,6 +173,136 @@ pub fn ifft2_kept<S: Scalar>(
             out[r * w + c] = line[r];
         }
     }
+}
+
+/// [`fft2_kept`] with the row and column passes fanned over `ex` —
+/// the within-sample fan-out that saturates cores on wide grids when
+/// `batch ≪ threads` (one sample cannot feed every worker at sample
+/// granularity, but its `h` row transforms and `kept_cols` column
+/// transforms are all independent).
+///
+/// Each 1-D transform runs the same planned kernel on the same values as
+/// the serial pass (columns are gathered into contiguous per-column
+/// staging chunks instead of the reused `line`, pure data movement), so
+/// the result is bit-identical to [`fft2_kept`] at every precision and
+/// thread count. Bluestein scratch is per-worker via
+/// [`Executor::for_each_chunk_with`].
+pub fn fft2_kept_with<S: Scalar>(
+    src: &[Cplx<S>],
+    h: usize,
+    w: usize,
+    kept_rows: &[usize],
+    kept_cols: &[usize],
+    row_plan: &Plan<S>,
+    col_plan: &Plan<S>,
+    out: &mut [Cplx<S>],
+    scratch: &mut SpectralScratch<S>,
+    ex: &Executor,
+) {
+    assert_eq!(src.len(), h * w);
+    assert_eq!(row_plan.len(), w, "row plan length");
+    assert_eq!(col_plan.len(), h, "col plan length");
+    assert!(!row_plan.is_inverse() && !col_plan.is_inverse(), "need forward plans");
+    let (kr, kc) = (kept_rows.len(), kept_cols.len());
+    assert_eq!(out.len(), kr * kc);
+    let SpectralScratch { rows, cols, .. } = scratch;
+    // Row pass in full, one work item per row.
+    grow(rows, h * w);
+    rows[..h * w].copy_from_slice(src);
+    ex.for_each_chunk_with(
+        &mut rows[..h * w],
+        w,
+        Vec::new,
+        |_, row, blue| row_plan.apply(row, blue),
+    );
+    // Column pass on the kept columns, one work item per kept column,
+    // each gathered into its own contiguous staging chunk.
+    grow(cols, kc * h);
+    {
+        let rows_ro: &[Cplx<S>] = rows;
+        ex.for_each_chunk_with(
+            &mut cols[..kc * h],
+            h,
+            Vec::new,
+            |j, col, blue| {
+                let c = kept_cols[j];
+                for (r, v) in col.iter_mut().enumerate() {
+                    *v = rows_ro[r * w + c];
+                }
+                col_plan.apply(col, blue);
+            },
+        );
+    }
+    for (i, &r) in kept_rows.iter().enumerate() {
+        for j in 0..kc {
+            out[i * kc + j] = cols[j * h + r];
+        }
+    }
+}
+
+/// [`ifft2_kept`] with the row and column passes fanned over `ex` (see
+/// [`fft2_kept_with`]): bit-identical to the serial pass, columns staged
+/// contiguously and transposed back at the end.
+pub fn ifft2_kept_with<S: Scalar>(
+    spec: &[Cplx<S>],
+    h: usize,
+    w: usize,
+    kept_rows: &[usize],
+    kept_cols: &[usize],
+    row_plan: &Plan<S>,
+    col_plan: &Plan<S>,
+    out: &mut [Cplx<S>],
+    scratch: &mut SpectralScratch<S>,
+    ex: &Executor,
+) {
+    let (kr, kc) = (kept_rows.len(), kept_cols.len());
+    assert_eq!(spec.len(), kr * kc);
+    assert_eq!(out.len(), h * w);
+    assert_eq!(row_plan.len(), w, "row plan length");
+    assert_eq!(col_plan.len(), h, "col plan length");
+    assert!(row_plan.is_inverse() && col_plan.is_inverse(), "need inverse plans");
+    let SpectralScratch { rows, cols, .. } = scratch;
+    // Row pass on the kept rows only, one work item per kept row.
+    grow(rows, kr * w);
+    ex.for_each_chunk_with(
+        &mut rows[..kr * w],
+        w,
+        Vec::new,
+        |i, row, blue| {
+            for v in row.iter_mut() {
+                *v = Cplx::zero();
+            }
+            for (j, &c) in kept_cols.iter().enumerate() {
+                row[c] = spec[i * kc + j];
+            }
+            row_plan.apply(row, blue);
+        },
+    );
+    // Column pass over all w columns, one work item per column.
+    grow(cols, w * h);
+    {
+        let rows_ro: &[Cplx<S>] = rows;
+        ex.for_each_chunk_with(
+            &mut cols[..w * h],
+            h,
+            Vec::new,
+            |c, col, blue| {
+                for v in col.iter_mut() {
+                    *v = Cplx::zero();
+                }
+                for (i, &r) in kept_rows.iter().enumerate() {
+                    col[r] = rows_ro[i * w + c];
+                }
+                col_plan.apply(col, blue);
+            },
+        );
+    }
+    let cols_ro: &[Cplx<S>] = cols;
+    ex.for_each_chunk(out, w, |r, row| {
+        for (c, v) in row.iter_mut().enumerate() {
+            *v = cols_ro[c * h + r];
+        }
+    });
 }
 
 /// Gather the (kept_rows × kept_cols) block out of a full (h, w)
@@ -258,6 +395,96 @@ mod tests {
     fn kept_indices_layout() {
         assert_eq!(kept_indices(8, 2), vec![0, 1, 6, 7]);
         assert_eq!(kept_indices(6, 3), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn kept_indices_boundary_is_identity_permutation() {
+        // 2·k_max == n keeps every frequency, in natural FFT order: the
+        // positive block [0, k) runs straight into the negative block
+        // [n−k, n) = [k, n).
+        for n in [2usize, 4, 6, 8, 10, 16] {
+            let got = kept_indices(n, n / 2);
+            let want: Vec<usize> = (0..n).collect();
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn truncate_embed_roundtrip_exact() {
+        // embed ∘ truncate puts every kept coefficient back untouched and
+        // leaves exact zeros everywhere else — including odd (Bluestein)
+        // axis lengths and the 2·k_max == n boundary.
+        for (h, w, k) in [(9usize, 15usize, 4usize), (10, 9, 4), (7, 7, 3), (8, 10, 4)] {
+            let kept_r = kept_indices(h, k);
+            let kept_c = kept_indices(w, k);
+            let spec = signal(kept_r.len() * kept_c.len(), 7 + (h * w) as u64);
+            let full = embed_modes(&spec, h, w, &kept_r, &kept_c);
+            let back = truncate_modes(&full, h, w, &kept_r, &kept_c);
+            assert!(exact(&back, &spec), "h={h} w={w} k={k}");
+            let mut kept_cells = 0usize;
+            for r in 0..h {
+                for c in 0..w {
+                    let kept = kept_r.contains(&r) && kept_c.contains(&c);
+                    if kept {
+                        kept_cells += 1;
+                    } else {
+                        assert_eq!(full[r * w + c].to_f64(), (0.0, 0.0), "h={h} w={w} ({r},{c})");
+                    }
+                }
+            }
+            assert_eq!(kept_cells, spec.len());
+        }
+    }
+
+    #[test]
+    fn kept_passes_handle_odd_axes() {
+        // Odd axis lengths exercise the Bluestein plans end-to-end
+        // through both truncated passes.
+        for (h, w, k) in [(9usize, 15usize, 4usize), (7, 9, 3)] {
+            let x = signal(h * w, 31 + (h + w) as u64);
+            let mut full = x.clone();
+            fft2(&mut full, h, w);
+            let want = truncate_modes(&full, h, w, &kept_indices(h, k), &kept_indices(w, k));
+            let got = fft2_trunc(&x, h, w, k);
+            assert!(exact(&got, &want), "fwd h={h} w={w} k={k}");
+            let spec = signal(4 * k * k, 37 + (h + w) as u64);
+            let mut winv = embed_modes(&spec, h, w, &kept_indices(h, k), &kept_indices(w, k));
+            ifft2(&mut winv, h, w);
+            let ginv = ifft2_trunc(&spec, h, w, k);
+            assert!(exact(&ginv, &winv), "inv h={h} w={w} k={k}");
+        }
+    }
+
+    #[test]
+    fn parallel_kept_passes_match_serial_bitwise() {
+        use crate::parallel::Executor;
+        // Wide enough that the within-sample fan-out genuinely spawns
+        // workers (h·w ≥ the executor's minimum parallel grain).
+        let (h, w, k) = (32usize, 40usize, 5usize);
+        let kept_r = kept_indices(h, k);
+        let kept_c = kept_indices(w, k);
+        let rp = crate::fft::plan_for::<f64>(w, false);
+        let cp = crate::fft::plan_for::<f64>(h, false);
+        let rpi = crate::fft::plan_for::<f64>(w, true);
+        let cpi = crate::fft::plan_for::<f64>(h, true);
+        let x = signal(h * w, 41);
+        let spec = signal(kept_r.len() * kept_c.len(), 42);
+        let mut scratch = SpectralScratch::new();
+        let mut want_f = vec![Cplx::zero(); kept_r.len() * kept_c.len()];
+        fft2_kept(&x, h, w, &kept_r, &kept_c, &rp, &cp, &mut want_f, &mut scratch);
+        let mut want_i = vec![Cplx::zero(); h * w];
+        ifft2_kept(&spec, h, w, &kept_r, &kept_c, &rpi, &cpi, &mut want_i, &mut scratch);
+        for threads in [1usize, 2, 8] {
+            let ex = Executor::new(threads);
+            let mut got_f = vec![Cplx::zero(); want_f.len()];
+            fft2_kept_with(&x, h, w, &kept_r, &kept_c, &rp, &cp, &mut got_f, &mut scratch, &ex);
+            assert!(exact(&got_f, &want_f), "fwd threads={threads}");
+            let mut got_i = vec![Cplx::zero(); h * w];
+            ifft2_kept_with(
+                &spec, h, w, &kept_r, &kept_c, &rpi, &cpi, &mut got_i, &mut scratch, &ex,
+            );
+            assert!(exact(&got_i, &want_i), "inv threads={threads}");
+        }
     }
 
     #[test]

@@ -7,23 +7,29 @@
 //! fp32 master weights live outside the model and are pushed in per step
 //! via [`Fno2d::set_params`].
 //!
-//! The forward pass rides the fused spectral engine
-//! ([`crate::spectral::SpectralConv2d`]) — one [`Executor`] work item per
-//! sample, per-worker [`ConvScratch`] arenas, planned truncated FFTs. The
-//! backward pass is hand-derived: the spectral block is linear, so its
-//! adjoint is the reversed pipeline on the same arenas
-//! ([`SpectralConv2d::backward_sample`]: kept-mode FFT of the upstream
-//! gradient → conjugate-transposed mode contraction → kept-mode iFFT);
-//! GELU and the pointwise maps backpropagate elementwise. Per-sample
-//! gradient contributions are accumulated in f64 and reduced in sample
-//! order, so gradients are **bit-identical at every thread count**
-//! (enforced by `tests/native_grad.rs`, alongside a central-difference
-//! oracle at f64).
+//! The forward pass rides the fused Hermitian half-spectrum engine
+//! ([`crate::spectral::HalfSpectralConv2d`]): activations stay real end
+//! to end, each spectral block transforms only the non-redundant
+//! `2·k_max × (k_max+1)` stored modes of its real input, and the
+//! contraction streams split re/im structure-of-arrays slices — one
+//! [`Executor`] work item per sample, per-worker [`HalfConvScratch`]
+//! arenas, planned truncated FFTs. The backward pass is hand-derived:
+//! the spectral block is linear, so its adjoint is the reversed
+//! pipeline on the same arenas
+//! ([`HalfSpectralConv2d::backward_sample`]: stored-block rfft2 of the
+//! upstream gradient with the conjugate-pair doubling → conjugate-
+//! transposed mode contraction → kept-mode iFFT, real part); GELU and
+//! the pointwise maps backpropagate elementwise. Per-sample gradient
+//! contributions are accumulated in f64 and reduced in sample order, so
+//! gradients are **bit-identical at every thread count** (enforced by
+//! `tests/native_grad.rs`, alongside a central-difference oracle at
+//! f64).
 
+use crate::fft::HalfSpectrum;
 use crate::fp::{Cplx, Scalar};
 use crate::parallel::Executor;
 use crate::runtime::ParamSpec;
-use crate::spectral::{ConvScratch, SpectralConv2d};
+use crate::spectral::{HalfConvScratch, HalfSpectralConv2d};
 use crate::tensor::Tensor;
 use std::ops::Range;
 
@@ -64,9 +70,13 @@ impl FnoSpec {
             ParamSpec { name: "lift_b".to_string(), shape: vec![w], std: 0.0 },
         ];
         for l in 0..self.n_layers {
+            // Half-spectrum weights: 2·k_max kept rows × (k_max+1)
+            // stored columns — the conjugate mirror columns carried by
+            // the old (k2 × k2) full-spectrum layout are implied by the
+            // real-input Hermitian symmetry, not parameterized.
             v.push(ParamSpec {
                 name: format!("l{l}_spec_w"),
-                shape: vec![w, w, k2, k2, 2],
+                shape: vec![w, w, k2, self.k_max + 1, 2],
                 std: 1.0 / (w * w) as f64,
             });
             v.push(ParamSpec {
@@ -136,18 +146,20 @@ fn gelu_prime_f64(x: f64) -> f64 {
 /// independent of which worker processes which sample.
 #[derive(Debug)]
 struct Scratch<S: Scalar> {
-    conv: ConvScratch<S>,
+    conv: HalfConvScratch<S>,
     /// Input sample in `S`, (cin, h·w).
     x_s: Vec<S>,
     /// Block inputs: acts[0] is the lifted field, acts[l+1] = gelu(z_l).
     acts: Vec<Vec<S>>,
     /// Pre-activations per block (for the GELU backward).
     zs: Vec<Vec<S>>,
-    /// Truncated input spectra per block (for the spectral backward).
-    specs: Vec<Vec<Cplx<S>>>,
-    /// Complex staging grids for the spectral conv, (width, h·w).
-    cgrid_a: Vec<Cplx<S>>,
-    cgrid_b: Vec<Cplx<S>>,
+    /// Stored half-spectra of each block's input (for the spectral
+    /// backward).
+    specs: Vec<HalfSpectrum<S>>,
+    /// Spectral-conv output, real (width, h·w).
+    conv_out: Vec<S>,
+    /// Spectral-conv input gradient, real (width, h·w) — backward only.
+    conv_gx: Vec<S>,
     /// Model output, (cout, h·w).
     pred: Vec<S>,
     /// Loss gradient seed w.r.t. `pred`.
@@ -165,7 +177,7 @@ pub struct Fno2d<S: Scalar> {
     spec: FnoSpec,
     lift_w: Vec<S>,
     lift_b: Vec<S>,
-    convs: Vec<SpectralConv2d<S>>,
+    convs: Vec<HalfSpectralConv2d<S>>,
     mix_w: Vec<Vec<S>>,
     mix_b: Vec<Vec<S>>,
     proj_w: Vec<S>,
@@ -265,10 +277,10 @@ impl<S: Scalar> Fno2d<S> {
         assert!(spec.in_channels >= 1 && spec.out_channels >= 1, "need channels");
         assert!(spec.width >= 1, "need a hidden width");
         assert!(spec.n_layers >= 1, "need at least one FNO block");
-        let n_modes = 4 * spec.k_max * spec.k_max;
-        let convs: Vec<SpectralConv2d<S>> = (0..spec.n_layers)
+        let n_modes = 2 * spec.k_max * (spec.k_max + 1);
+        let convs: Vec<HalfSpectralConv2d<S>> = (0..spec.n_layers)
             .map(|_| {
-                SpectralConv2d::new(
+                HalfSpectralConv2d::new(
                     spec.width,
                     spec.width,
                     spec.h,
@@ -313,7 +325,7 @@ impl<S: Scalar> Fno2d<S> {
         assert_eq!(params.len(), 4 + 3 * ll, "params must match FnoSpec::param_specs()");
         to_s(&mut self.lift_w, params[0].data());
         to_s(&mut self.lift_b, params[1].data());
-        let n_modes = 4 * self.spec.k_max * self.spec.k_max;
+        let n_modes = 2 * self.spec.k_max * (self.spec.k_max + 1);
         for l in 0..ll {
             let wdat = params[2 + 3 * l].data();
             assert_eq!(wdat.len(), 2 * self.spec.width * self.spec.width * n_modes);
@@ -331,15 +343,15 @@ impl<S: Scalar> Fno2d<S> {
     fn scratch(&self) -> Scratch<S> {
         let sp = &self.spec;
         let hw = sp.h * sp.w;
-        let n_modes = 4 * sp.k_max * sp.k_max;
+        let (kr, kc) = (2 * sp.k_max, sp.k_max + 1);
         Scratch {
             conv: self.convs[0].scratch(),
             x_s: vec![S::zero(); sp.in_channels * hw],
             acts: (0..=sp.n_layers).map(|_| vec![S::zero(); sp.width * hw]).collect(),
             zs: (0..sp.n_layers).map(|_| vec![S::zero(); sp.width * hw]).collect(),
-            specs: (0..sp.n_layers).map(|_| vec![Cplx::zero(); sp.width * n_modes]).collect(),
-            cgrid_a: vec![Cplx::zero(); sp.width * hw],
-            cgrid_b: vec![Cplx::zero(); sp.width * hw],
+            specs: (0..sp.n_layers).map(|_| HalfSpectrum::zeros(sp.width, kr, kc)).collect(),
+            conv_out: vec![S::zero(); sp.width * hw],
+            conv_gx: vec![S::zero(); sp.width * hw],
             pred: vec![S::zero(); sp.out_channels * hw],
             g_out: vec![S::zero(); sp.out_channels * hw],
             g_a: vec![S::zero(); sp.width * hw],
@@ -365,11 +377,8 @@ impl<S: Scalar> Fno2d<S> {
             let (head, tail) = ws.acts.split_at_mut(l + 1);
             let a_in: &[S] = &head[l];
             let a_out: &mut [S] = &mut tail[0];
-            for (c, &a) in ws.cgrid_a.iter_mut().zip(a_in.iter()) {
-                *c = Cplx::new(a, S::zero());
-            }
-            self.convs[l].forward_sample(&ws.cgrid_a, &mut ws.cgrid_b, &mut ws.conv);
-            ws.specs[l].copy_from_slice(ws.conv.spec_in());
+            self.convs[l].forward_sample(a_in, &mut ws.conv_out, &mut ws.conv);
+            ws.specs[l].copy_from(ws.conv.spec_in());
             let mw = &self.mix_w[l];
             let mb = &self.mix_b[l];
             for o in 0..sp.width {
@@ -378,7 +387,7 @@ impl<S: Scalar> Fno2d<S> {
                     for i in 0..sp.width {
                         acc = acc.add(mw[o * sp.width + i].mul(a_in[i * hw + p]));
                     }
-                    let zv = acc.add(ws.cgrid_b[o * hw + p].re);
+                    let zv = acc.add(ws.conv_out[o * hw + p]);
                     ws.zs[l][o * hw + p] = zv;
                     a_out[o * hw + p] = gelu(zv);
                 }
@@ -440,19 +449,16 @@ impl<S: Scalar> Fno2d<S> {
                 self.offsets[4 + 3 * l].start,
             );
             pointwise_backward_input(&self.mix_w[l], &ws.g_b, sp.width, sp.width, hw, &mut ws.g_a);
-            for (c, &g) in ws.cgrid_a.iter_mut().zip(ws.g_b.iter()) {
-                *c = Cplx::new(g, S::zero());
-            }
             let r = self.offsets[2 + 3 * l].clone();
             self.convs[l].backward_sample(
-                &ws.cgrid_a,
+                &ws.g_b,
                 &ws.specs[l],
-                &mut ws.cgrid_b,
+                &mut ws.conv_gx,
                 &mut grads[r],
                 &mut ws.conv,
             );
-            for (ga, gx) in ws.g_a.iter_mut().zip(ws.cgrid_b.iter()) {
-                *ga = ga.add(gx.re);
+            for (ga, &gx) in ws.g_a.iter_mut().zip(ws.conv_gx.iter()) {
+                *ga = ga.add(gx);
             }
         }
         pointwise_grads(
@@ -601,7 +607,7 @@ mod tests {
         let specs = sp.param_specs();
         assert_eq!(specs.len(), 4 + 3 * sp.n_layers);
         assert_eq!(specs[0].shape, vec![3, 2]); // lift_w
-        assert_eq!(specs[2].shape, vec![3, 3, 4, 4, 2]); // l0_spec_w
+        assert_eq!(specs[2].shape, vec![3, 3, 4, 3, 2]); // l0_spec_w (half-spectrum)
         assert_eq!(specs.last().unwrap().shape, vec![1]); // proj_b
         let n: usize = specs.iter().map(|p| p.shape.iter().product::<usize>()).sum();
         assert_eq!(n, sp.n_params());

@@ -1,0 +1,856 @@
+//! Hermitian half-spectrum spectral convolution — the real-input fast
+//! path of the fused FNO block (ROADMAP item 3).
+//!
+//! Every field the operator ingests is real, so the full-spectrum layer
+//! in [`super`] carries a conjugate-redundant copy of every kept mode:
+//! its `(2k)²` weight block double-counts the information a real input
+//! actually has. [`HalfSpectralConv2d`] keeps the rfft2 half instead —
+//! `2·k_max` kept rows × `k_max+1` stored columns per channel pair,
+//! `2k(k+1)` modes instead of `4k²` (half-ish storage, and the column
+//! FFT passes shrink to match: the forward transforms `k+1` columns
+//! instead of `2k`, the inverse runs `k+1` column transforms instead of
+//! `2k` row transforms of the embed-everything path). The contraction
+//! runs on split re/im structure-of-arrays slices
+//! ([`contract_modes_soa`]) so the hot loop streams flat real arrays.
+//!
+//! **Backward with the doubled-weight correction.** The adjoint of
+//! [`crate::fft::half::irfft2_kept`] applied to a *real* upstream
+//! gradient `gy` is `factor ⊙ (1/hw)·rfft2_kept(gy)`: the spectrum of a
+//! real field is itself Hermitian, so the mirror cell the half layout
+//! drops contributes exactly the conjugate term — doubling every stored
+//! column except the self-conjugate DC/Nyquist bins
+//! ([`crate::fft::half::col_weight_factor`]). The weight gradient uses
+//! the factor-scaled spectrum with the same `(1/hw)·t·conj(spec_in)`
+//! f64 accumulation as the full engine; the input gradient is the
+//! unscaled-by-`hw` truncated inverse of the conjugate-transposed
+//! contraction, reusing [`crate::fft::trunc::ifft2_kept`] on the stored
+//! block (the adjoint of a real-input forward transform needs no
+//! Hermitian extension — gather's adjoint is zero-scatter).
+//!
+//! **Parity.** [`HalfSpectralConv2d::forward_composed`] is the serial
+//! composed oracle: ad-hoc full `fft2` + stored-cell gather, the AoS
+//! contraction (bit-identical to the SoA kernel, see
+//! [`crate::contract`]), and the ad-hoc 1-D inverse in the fused pass's
+//! columns-then-rows order with the same Hermitian extension. The fused
+//! path matches it bit for bit at every precision and thread count,
+//! including the within-sample row/column fan-out taken when
+//! `batch < threads` (`tests/half_spectral_parity.rs`).
+
+use crate::contract::{contract_modes, contract_modes_soa, contract_modes_soa_adjoint};
+use crate::fft::half::{col_weight_factor, half_cols, irfft2_kept_with, rfft2_kept_with};
+use crate::fft::plan::{plan_for, Plan};
+use crate::fft::trunc::{ifft2_kept, kept_indices, SpectralScratch};
+use crate::fft::{fft2, ifft, irfft2_kept, rfft2_kept, HalfSpectrum};
+use crate::fp::{Cplx, Scalar};
+use crate::parallel::Executor;
+use crate::rng::Rng;
+use std::sync::Arc;
+
+/// Per-worker scratch arena for the fused half-spectrum passes. Same
+/// discipline as [`super::ConvScratch`]: every buffer is overwritten
+/// (never accumulated into) per sample, so results are independent of
+/// worker assignment. Starts empty via [`Default`] and is sized on
+/// first use by the layer (`ensure_scratch`), so one arena can follow a
+/// worker across layers.
+#[derive(Debug)]
+pub struct HalfConvScratch<S: Scalar> {
+    fft: SpectralScratch<S>,
+    /// Stored input spectrum, (ci, n_modes) SoA — the activation stash.
+    spec_in: HalfSpectrum<S>,
+    /// Contraction intermediate, (n_modes, co) split re/im.
+    tmp_mo_re: Vec<S>,
+    tmp_mo_im: Vec<S>,
+    /// Stored output spectrum, (co, n_modes) SoA.
+    spec_out: HalfSpectrum<S>,
+    /// Adjoint-contraction intermediate, (n_modes, ci) — backward only.
+    tmp_mi_re: Vec<S>,
+    tmp_mi_im: Vec<S>,
+    /// Input-spectrum gradient, (ci, n_modes) SoA — backward only.
+    gspec_in: HalfSpectrum<S>,
+    /// One channel of `gspec_in` staged AoS for the truncated inverse —
+    /// backward only.
+    gspec_aos: Vec<Cplx<S>>,
+    /// Complex (h, w) grid the truncated inverse writes — backward only.
+    cgrid: Vec<Cplx<S>>,
+}
+
+impl<S: Scalar> Default for HalfConvScratch<S> {
+    /// Empty arena; a layer's `ensure_scratch` sizes it on first use.
+    /// Manual impl — deriving would demand `S: Default`, which the
+    /// emulated formats deliberately do not provide.
+    fn default() -> Self {
+        HalfConvScratch {
+            fft: SpectralScratch::default(),
+            spec_in: HalfSpectrum::default(),
+            tmp_mo_re: Vec::new(),
+            tmp_mo_im: Vec::new(),
+            spec_out: HalfSpectrum::default(),
+            tmp_mi_re: Vec::new(),
+            tmp_mi_im: Vec::new(),
+            gspec_in: HalfSpectrum::default(),
+            gspec_aos: Vec::new(),
+            cgrid: Vec::new(),
+        }
+    }
+}
+
+impl<S: Scalar> HalfConvScratch<S> {
+    /// The stored input spectrum left behind by the last
+    /// [`HalfSpectralConv2d::forward_sample`] through this arena — the
+    /// activation stash [`HalfSpectralConv2d::backward_sample`] consumes
+    /// as `spec_in`.
+    pub fn spec_in(&self) -> &HalfSpectrum<S> {
+        &self.spec_in
+    }
+}
+
+/// A fused 2-D spectral convolution over the Hermitian half-spectrum of
+/// a **real** input: `ci` real input channels → `co` real output
+/// channels on an (h, w) grid, keeping `k_max` positive and negative
+/// row frequencies and the `k_max+1` stored (non-redundant) columns.
+/// Weights are complex, laid out (ci, co, 2·k_max, k_max+1) over the
+/// stored block in ([`kept_indices`] rows × ascending columns) order.
+#[derive(Debug)]
+pub struct HalfSpectralConv2d<S: Scalar> {
+    ci: usize,
+    co: usize,
+    h: usize,
+    w: usize,
+    k_max: usize,
+    kept_rows: Vec<usize>,
+    /// The stored columns `0..=k_max` as explicit indices — the
+    /// `kept_cols` the backward pass hands [`ifft2_kept`].
+    stored_cols: Vec<usize>,
+    /// Weights in the natural (ci, co, 2k, k+1) layout (oracle + I/O).
+    w_ioxy: Vec<Cplx<S>>,
+    /// Mode-major (n_modes, ci, co) structure-of-arrays copy consumed by
+    /// the fused SoA kernels, materialized once per weight update.
+    w_re: Vec<S>,
+    w_im: Vec<S>,
+    /// Per stored column: the conjugate-pair doubling factor (1 for the
+    /// self-conjugate DC/Nyquist bins, 2 otherwise), rounded once into S
+    /// (exact — both values are representable in every format).
+    factors: Vec<S>,
+    row_fwd: Arc<Plan<S>>,
+    col_fwd: Arc<Plan<S>>,
+    row_inv: Arc<Plan<S>>,
+    col_inv: Arc<Plan<S>>,
+}
+
+impl<S: Scalar> HalfSpectralConv2d<S> {
+    /// Build a layer from explicit weights in (ci, co, 2k, k+1) layout.
+    pub fn new(
+        ci: usize,
+        co: usize,
+        h: usize,
+        w: usize,
+        k_max: usize,
+        w_ioxy: Vec<Cplx<S>>,
+    ) -> Self {
+        assert!(ci >= 1 && co >= 1, "need at least one channel each way");
+        assert!(2 * k_max <= w, "2*k_max={} exceeds width {w}", 2 * k_max);
+        let kept_rows = kept_indices(h, k_max);
+        let stored_cols: Vec<usize> = (0..half_cols(k_max)).collect();
+        let n_modes = kept_rows.len() * stored_cols.len();
+        assert_eq!(
+            w_ioxy.len(),
+            ci * co * n_modes,
+            "weights must be (ci={ci}, co={co}, 2k={}, k+1={})",
+            kept_rows.len(),
+            stored_cols.len()
+        );
+        let factors = stored_cols.iter().map(|&j| S::from_f64(col_weight_factor(j, w))).collect();
+        let mut layer = HalfSpectralConv2d {
+            ci,
+            co,
+            h,
+            w,
+            k_max,
+            kept_rows,
+            stored_cols,
+            w_ioxy: Vec::new(),
+            w_re: vec![S::zero(); n_modes * ci * co],
+            w_im: vec![S::zero(); n_modes * ci * co],
+            factors,
+            row_fwd: plan_for(w, false),
+            col_fwd: plan_for(h, false),
+            row_inv: plan_for(w, true),
+            col_inv: plan_for(h, true),
+        };
+        layer.set_weights(w_ioxy);
+        layer
+    }
+
+    /// FNO-style random initialization: complex normal scaled by
+    /// 1/(ci·co), deterministic in `seed`.
+    pub fn random(ci: usize, co: usize, h: usize, w: usize, k_max: usize, seed: u64) -> Self {
+        let n_modes = 2 * k_max * half_cols(k_max);
+        let scale = 1.0 / (ci as f64 * co as f64);
+        let mut rng = Rng::new(seed);
+        let weights: Vec<Cplx<S>> = (0..ci * co * n_modes)
+            .map(|_| {
+                let (re, im) = rng.cnormal();
+                Cplx::from_f64(re * scale, im * scale)
+            })
+            .collect();
+        HalfSpectralConv2d::new(ci, co, h, w, k_max, weights)
+    }
+
+    pub fn in_channels(&self) -> usize {
+        self.ci
+    }
+
+    pub fn out_channels(&self) -> usize {
+        self.co
+    }
+
+    pub fn grid(&self) -> (usize, usize) {
+        (self.h, self.w)
+    }
+
+    pub fn k_max(&self) -> usize {
+        self.k_max
+    }
+
+    /// Stored modes per sample-channel: `2·k_max·(k_max+1)`.
+    pub fn n_modes(&self) -> usize {
+        self.kept_rows.len() * self.stored_cols.len()
+    }
+
+    /// Weights in (ci, co, 2k, k+1) layout.
+    pub fn weight(&self) -> &[Cplx<S>] {
+        &self.w_ioxy
+    }
+
+    /// Fresh per-worker scratch arena sized for this layer.
+    pub fn scratch(&self) -> HalfConvScratch<S> {
+        let mut s = HalfConvScratch::default();
+        self.ensure_scratch(&mut s);
+        s
+    }
+
+    /// Size (or re-size) an arena for this layer. Called at the top of
+    /// every per-sample pass so a [`Default`]-constructed arena works;
+    /// a correctly-sized arena passes through untouched.
+    fn ensure_scratch(&self, s: &mut HalfConvScratch<S>) {
+        let n = self.n_modes();
+        let (kr, kc) = (self.kept_rows.len(), self.stored_cols.len());
+        if s.spec_in.channels() != self.ci || s.spec_in.n_modes() != n {
+            s.spec_in = HalfSpectrum::zeros(self.ci, kr, kc);
+            s.gspec_in = HalfSpectrum::zeros(self.ci, kr, kc);
+        }
+        if s.spec_out.channels() != self.co || s.spec_out.n_modes() != n {
+            s.spec_out = HalfSpectrum::zeros(self.co, kr, kc);
+        }
+        s.tmp_mo_re.resize(n * self.co, S::zero());
+        s.tmp_mo_im.resize(n * self.co, S::zero());
+        s.tmp_mi_re.resize(n * self.ci, S::zero());
+        s.tmp_mi_im.resize(n * self.ci, S::zero());
+        s.gspec_aos.resize(n, Cplx::zero());
+        s.cgrid.resize(self.h * self.w, Cplx::zero());
+    }
+
+    /// Replace the layer weights in place ((ci, co, 2k, k+1) layout),
+    /// refreshing the mode-major SoA copy the fused kernels consume —
+    /// the per-optimizer-step entry point of the native training engine.
+    pub fn set_weights(&mut self, w_ioxy: Vec<Cplx<S>>) {
+        let n_modes = self.n_modes();
+        assert_eq!(
+            w_ioxy.len(),
+            self.ci * self.co * n_modes,
+            "weights must be (ci={}, co={}, 2k={}, k+1={})",
+            self.ci,
+            self.co,
+            self.kept_rows.len(),
+            self.stored_cols.len()
+        );
+        for i in 0..self.ci {
+            for o in 0..self.co {
+                for m in 0..n_modes {
+                    let z = w_ioxy[(i * self.co + o) * n_modes + m];
+                    self.w_re[(m * self.ci + i) * self.co + o] = z.re;
+                    self.w_im[(m * self.ci + i) * self.co + o] = z.im;
+                }
+            }
+        }
+        self.w_ioxy = w_ioxy;
+    }
+
+    /// Fused forward pass over a real (batch, ci, h, w) buffer,
+    /// returning real (batch, co, h, w). One work item per sample when
+    /// the batch can fill the executor; when `batch < threads` (wide
+    /// grids, small batches) samples run in order with the row/column
+    /// transforms of each pass fanned out instead — bit-identical
+    /// either way.
+    pub fn forward(&self, input: &[S], batch: usize, ex: &Executor) -> Vec<S> {
+        let slab_in = self.ci * self.h * self.w;
+        let slab_out = self.co * self.h * self.w;
+        assert_eq!(input.len(), batch * slab_in, "input must be (batch, ci, h, w)");
+        let mut out = vec![S::zero(); batch * slab_out];
+        if ex.threads() > 1 && batch < ex.threads() {
+            let mut scratch = self.scratch();
+            for b in 0..batch {
+                self.forward_sample_with(
+                    &input[b * slab_in..(b + 1) * slab_in],
+                    &mut out[b * slab_out..(b + 1) * slab_out],
+                    &mut scratch,
+                    ex,
+                );
+            }
+        } else {
+            ex.for_each_chunk_with(
+                &mut out,
+                slab_out,
+                || self.scratch(),
+                |b, sample_out, scratch| {
+                    self.forward_sample(
+                        &input[b * slab_in..(b + 1) * slab_in],
+                        sample_out,
+                        scratch,
+                    );
+                },
+            );
+        }
+        out
+    }
+
+    /// One real sample through the fused half pipeline: stored-block
+    /// rfft2 per input channel → SoA mode contraction → Hermitian
+    /// inverse per output channel, all through the caller's arena.
+    pub fn forward_sample(&self, x: &[S], out: &mut [S], scratch: &mut HalfConvScratch<S>) {
+        self.ensure_scratch(scratch);
+        let hw = self.h * self.w;
+        let n_modes = self.n_modes();
+        assert_eq!(x.len(), self.ci * hw, "sample must be (ci, h, w)");
+        assert_eq!(out.len(), self.co * hw, "output must be (co, h, w)");
+        for i in 0..self.ci {
+            let (re, im) = scratch.spec_in.channel_mut(i);
+            rfft2_kept(
+                &x[i * hw..(i + 1) * hw],
+                self.h,
+                self.w,
+                &self.kept_rows,
+                self.k_max,
+                &self.row_fwd,
+                &self.col_fwd,
+                re,
+                im,
+                &mut scratch.fft,
+            );
+        }
+        {
+            let HalfConvScratch { spec_in, tmp_mo_re, tmp_mo_im, spec_out, .. } = scratch;
+            let (so_re, so_im) = spec_out.parts_mut();
+            contract_modes_soa(
+                spec_in.re(),
+                spec_in.im(),
+                &self.w_re,
+                &self.w_im,
+                self.ci,
+                self.co,
+                n_modes,
+                tmp_mo_re,
+                tmp_mo_im,
+                so_re,
+                so_im,
+            );
+        }
+        for o in 0..self.co {
+            let (re, im) = scratch.spec_out.channel(o);
+            irfft2_kept(
+                re,
+                im,
+                self.h,
+                self.w,
+                &self.kept_rows,
+                self.k_max,
+                &self.row_inv,
+                &self.col_inv,
+                &mut out[o * hw..(o + 1) * hw],
+                &mut scratch.fft,
+            );
+        }
+    }
+
+    /// [`HalfSpectralConv2d::forward_sample`] with every FFT pass's
+    /// row/column transforms fanned over `ex` — the within-sample path
+    /// [`HalfSpectralConv2d::forward`] takes when `batch < threads`.
+    /// Bit-identical to the serial sample pass.
+    pub fn forward_sample_with(
+        &self,
+        x: &[S],
+        out: &mut [S],
+        scratch: &mut HalfConvScratch<S>,
+        ex: &Executor,
+    ) {
+        self.ensure_scratch(scratch);
+        let hw = self.h * self.w;
+        let n_modes = self.n_modes();
+        assert_eq!(x.len(), self.ci * hw, "sample must be (ci, h, w)");
+        assert_eq!(out.len(), self.co * hw, "output must be (co, h, w)");
+        for i in 0..self.ci {
+            let (re, im) = scratch.spec_in.channel_mut(i);
+            rfft2_kept_with(
+                &x[i * hw..(i + 1) * hw],
+                self.h,
+                self.w,
+                &self.kept_rows,
+                self.k_max,
+                &self.row_fwd,
+                &self.col_fwd,
+                re,
+                im,
+                &mut scratch.fft,
+                ex,
+            );
+        }
+        {
+            let HalfConvScratch { spec_in, tmp_mo_re, tmp_mo_im, spec_out, .. } = scratch;
+            let (so_re, so_im) = spec_out.parts_mut();
+            contract_modes_soa(
+                spec_in.re(),
+                spec_in.im(),
+                &self.w_re,
+                &self.w_im,
+                self.ci,
+                self.co,
+                n_modes,
+                tmp_mo_re,
+                tmp_mo_im,
+                so_re,
+                so_im,
+            );
+        }
+        for o in 0..self.co {
+            let (re, im) = scratch.spec_out.channel(o);
+            irfft2_kept_with(
+                re,
+                im,
+                self.h,
+                self.w,
+                &self.kept_rows,
+                self.k_max,
+                &self.row_inv,
+                &self.col_inv,
+                &mut out[o * hw..(o + 1) * hw],
+                &mut scratch.fft,
+                ex,
+            );
+        }
+    }
+
+    /// Backward pass through the fused half block for one sample — the
+    /// hand-derived adjoint of [`HalfSpectralConv2d::forward_sample`].
+    ///
+    /// The adjoint of the Hermitian inverse applied to the *real*
+    /// upstream gradient is `factor ⊙ (1/hw)·rfft2_kept(gy)` — the
+    /// spectrum of a real field is itself Hermitian, so the dropped
+    /// mirror of every non-self-conjugate stored column contributes
+    /// exactly one more copy (the doubled-weight correction). The
+    /// `1/hw` and the `hw` of the forward-transform adjoint cancel
+    /// along the input-gradient path, exactly as in the full engine.
+    ///
+    /// * `gy` — upstream gradient w.r.t. the layer output, real (co, h, w);
+    /// * `spec_in` — the forward pass's stored input spectrum
+    ///   ((ci, n_modes) SoA), stashed via [`HalfConvScratch::spec_in`];
+    /// * `gx` — overwritten with the input gradient, real (ci, h, w);
+    /// * `gw` — **accumulated** (+=) weight gradient, (ci, co, n_modes)
+    ///   complex stored as interleaved re/im f64 pairs:
+    ///   `dL/dw[i,o,m] = (1/hw)·factor_m·t[o,m]·conj(spec_in[i,m])`,
+    ///   summed in f64 for deterministic reduction at any thread count.
+    pub fn backward_sample(
+        &self,
+        gy: &[S],
+        spec_in: &HalfSpectrum<S>,
+        gx: &mut [S],
+        gw: &mut [f64],
+        scratch: &mut HalfConvScratch<S>,
+    ) {
+        self.ensure_scratch(scratch);
+        let hw = self.h * self.w;
+        let n_modes = self.n_modes();
+        let kc = self.stored_cols.len();
+        assert_eq!(gy.len(), self.co * hw, "gy must be (co, h, w)");
+        assert_eq!(spec_in.re().len(), self.ci * n_modes, "spec_in must be (ci, n_modes)");
+        assert_eq!(gx.len(), self.ci * hw, "gx must be (ci, h, w)");
+        assert_eq!(gw.len(), 2 * self.ci * self.co * n_modes, "gw must be (ci, co, n_modes, 2)");
+        // Adjoint of the Hermitian inverse: stored-block forward rfft2
+        // of the upstream gradient, then the conjugate-pair doubling per
+        // stored column (exact: the factors are 1 and 2).
+        for o in 0..self.co {
+            let (re, im) = scratch.spec_out.channel_mut(o);
+            rfft2_kept(
+                &gy[o * hw..(o + 1) * hw],
+                self.h,
+                self.w,
+                &self.kept_rows,
+                self.k_max,
+                &self.row_fwd,
+                &self.col_fwd,
+                re,
+                im,
+                &mut scratch.fft,
+            );
+            for (m, (r, i)) in re.iter_mut().zip(im.iter_mut()).enumerate() {
+                let f = self.factors[m % kc];
+                *r = r.mul(f);
+                *i = i.mul(f);
+            }
+        }
+        // Weight gradient, accumulated in f64.
+        let inv_hw = 1.0 / hw as f64;
+        for i in 0..self.ci {
+            let (xre, xim) = spec_in.channel(i);
+            for o in 0..self.co {
+                let (tre, tim) = scratch.spec_out.channel(o);
+                for m in 0..n_modes {
+                    let (tr, ti) = (tre[m].to_f64(), tim[m].to_f64());
+                    let (xr, xi) = (xre[m].to_f64(), xim[m].to_f64());
+                    let idx = 2 * ((i * self.co + o) * n_modes + m);
+                    gw[idx] += (tr * xr + ti * xi) * inv_hw;
+                    gw[idx + 1] += (ti * xr - tr * xi) * inv_hw;
+                }
+            }
+        }
+        // Input gradient: conjugate-transposed contraction, then the
+        // adjoint of the stored-block forward transform — a zero-scatter
+        // truncated inverse with *no* Hermitian extension (`hw·iFFT`,
+        // with the hw cancelling the 1/hw of the first stage exactly),
+        // keeping the real part.
+        {
+            let HalfConvScratch { spec_out, tmp_mi_re, tmp_mi_im, gspec_in, .. } = scratch;
+            let (gi_re, gi_im) = gspec_in.parts_mut();
+            contract_modes_soa_adjoint(
+                spec_out.re(),
+                spec_out.im(),
+                &self.w_re,
+                &self.w_im,
+                self.ci,
+                self.co,
+                n_modes,
+                tmp_mi_re,
+                tmp_mi_im,
+                gi_re,
+                gi_im,
+            );
+        }
+        for i in 0..self.ci {
+            let (re, im) = scratch.gspec_in.channel(i);
+            for (z, (&r, &i2)) in scratch.gspec_aos.iter_mut().zip(re.iter().zip(im)) {
+                *z = Cplx::new(r, i2);
+            }
+            ifft2_kept(
+                &scratch.gspec_aos,
+                self.h,
+                self.w,
+                &self.kept_rows,
+                &self.stored_cols,
+                &self.row_inv,
+                &self.col_inv,
+                &mut scratch.cgrid,
+                &mut scratch.fft,
+            );
+            for (d, z) in gx[i * hw..(i + 1) * hw].iter_mut().zip(&scratch.cgrid) {
+                *d = z.re;
+            }
+        }
+    }
+
+    /// The serial composed parity oracle: per channel the complexified
+    /// ad-hoc full-grid [`fft2`] with a stored-cell gather, the AoS mode
+    /// contraction (bit-identical to the SoA kernel), and the ad-hoc
+    /// 1-D inverse in the fused pass's columns-then-rows order with the
+    /// same per-row Hermitian extension — fresh allocations per pass, no
+    /// executor, no planned kernels. The fused path must match this bit
+    /// for bit; the half rows of `BENCH_spectral.json` are *not*
+    /// measured against it (they race the full-spectrum fused engine).
+    pub fn forward_composed(&self, input: &[S], batch: usize) -> Vec<S> {
+        let hw = self.h * self.w;
+        let slab_in = self.ci * hw;
+        let slab_out = self.co * hw;
+        let n_modes = self.n_modes();
+        let kc = self.stored_cols.len();
+        assert_eq!(input.len(), batch * slab_in, "input must be (batch, ci, h, w)");
+        // Mode-major AoS weight copy for the oracle contraction.
+        let mut w_mio = vec![Cplx::<S>::zero(); n_modes * self.ci * self.co];
+        for i in 0..self.ci {
+            for o in 0..self.co {
+                for m in 0..n_modes {
+                    w_mio[(m * self.ci + i) * self.co + o] =
+                        self.w_ioxy[(i * self.co + o) * n_modes + m];
+                }
+            }
+        }
+        let mut out = vec![S::zero(); batch * slab_out];
+        for b in 0..batch {
+            let xs = &input[b * slab_in..(b + 1) * slab_in];
+            let mut spec_in: Vec<Cplx<S>> = Vec::with_capacity(self.ci * n_modes);
+            for i in 0..self.ci {
+                let mut g: Vec<Cplx<S>> =
+                    xs[i * hw..(i + 1) * hw].iter().map(|&v| Cplx::new(v, S::zero())).collect();
+                fft2(&mut g, self.h, self.w);
+                for &r in &self.kept_rows {
+                    for &c in &self.stored_cols {
+                        spec_in.push(g[r * self.w + c]);
+                    }
+                }
+            }
+            let mut tmp = vec![Cplx::<S>::zero(); n_modes * self.co];
+            let mut spec_out = vec![Cplx::<S>::zero(); self.co * n_modes];
+            contract_modes(
+                &spec_in,
+                &w_mio,
+                self.ci,
+                self.co,
+                n_modes,
+                &mut tmp,
+                &mut spec_out,
+            );
+            for o in 0..self.co {
+                let so = &spec_out[o * n_modes..(o + 1) * n_modes];
+                // Stored-column inverse transforms.
+                let mut cols = vec![Cplx::<S>::zero(); kc * self.h];
+                for j in 0..kc {
+                    let mut line = vec![Cplx::<S>::zero(); self.h];
+                    for (i, &r) in self.kept_rows.iter().enumerate() {
+                        line[r] = so[i * kc + j];
+                    }
+                    ifft(&mut line);
+                    cols[j * self.h..(j + 1) * self.h].copy_from_slice(&line);
+                }
+                // Hermitian-extended row inverse transforms, real part.
+                for r in 0..self.h {
+                    let mut row = vec![Cplx::<S>::zero(); self.w];
+                    for j in 0..kc {
+                        row[j] = cols[j * self.h + r];
+                    }
+                    for j in 1..kc {
+                        let m = self.w - j;
+                        if m > self.k_max {
+                            row[m] = cols[j * self.h + r].conj();
+                        }
+                    }
+                    ifft(&mut row);
+                    let dst = &mut out[b * slab_out + o * hw + r * self.w..];
+                    for (d, z) in dst[..self.w].iter_mut().zip(&row) {
+                        *d = z.re;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Deterministic real test/bench field of `n` scalars.
+pub fn random_real_field<S: Scalar>(n: usize, seed: u64) -> Vec<S> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| S::from_f64(rng.normal())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::ifft2;
+    use crate::fp::Bf16;
+
+    fn exact<S: Scalar>(a: &[S], b: &[S]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_f64() == y.to_f64())
+    }
+
+    fn fused_vs_composed_case<S: Scalar>() {
+        let (b, ci, co, h, w, k) = (3usize, 2usize, 4usize, 16usize, 8usize, 2usize);
+        let layer = HalfSpectralConv2d::<S>::random(ci, co, h, w, k, 61);
+        let input = random_real_field::<S>(b * ci * h * w, 62);
+        let want = layer.forward_composed(&input, b);
+        for threads in [1usize, 2, 8] {
+            let got = layer.forward(&input, b, &Executor::new(threads));
+            assert!(exact(&got, &want), "{} threads={threads}", S::name());
+        }
+    }
+
+    #[test]
+    fn fused_matches_composed_all_thread_counts_f64() {
+        fused_vs_composed_case::<f64>();
+    }
+
+    #[test]
+    fn fused_matches_composed_all_thread_counts_low_precision() {
+        // Identical arithmetic either way, so parity is exact below f64
+        // too, not merely within tolerance.
+        fused_vs_composed_case::<f32>();
+        fused_vs_composed_case::<Bf16>();
+    }
+
+    #[test]
+    fn nyquist_boundary_case_matches_composed() {
+        // 2·k_max == w == h: the stored Nyquist column is self-conjugate
+        // and the kept rows are the whole axis.
+        let (b, ci, co, h, w, k) = (2usize, 2usize, 2usize, 8usize, 8usize, 4usize);
+        let layer = HalfSpectralConv2d::<f64>::random(ci, co, h, w, k, 63);
+        let input = random_real_field::<f64>(b * ci * h * w, 64);
+        let want = layer.forward_composed(&input, b);
+        for threads in [1usize, 2, 8] {
+            let got = layer.forward(&input, b, &Executor::new(threads));
+            assert!(exact(&got, &want), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn identity_weight_passes_band_limited_real_fields() {
+        // With w[i][o] = δ_io on every stored mode the layer is an ideal
+        // real band-pass: the Hermitian reconstruction must hand a
+        // band-limited real field back unchanged.
+        let (ci, h, w, k) = (1usize, 16usize, 16usize, 3usize);
+        let n_modes = 2 * k * half_cols(k);
+        let weights = vec![Cplx::<f64>::one(); n_modes];
+        let layer = HalfSpectralConv2d::new(ci, ci, h, w, k, weights);
+        let x: Vec<f64> = (0..h * w)
+            .map(|i| {
+                let (r, c) = (i / w, i % w);
+                (std::f64::consts::TAU * (2.0 * r as f64 / h as f64)).cos()
+                    + (std::f64::consts::TAU * (c as f64 / w as f64)).sin()
+            })
+            .collect();
+        let y = layer.forward(&x, 1, &Executor::serial());
+        for (a, b) in y.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-10, "band-limited field should pass through");
+        }
+    }
+
+    #[test]
+    fn backward_sample_is_adjoint_of_forward() {
+        // <forward(x), gy>_R == <x, gx>_R over real grids. The factor-2
+        // substitution for the dropped mirror columns is exact only in
+        // exact arithmetic, so the tolerance is the same loose f64 bound
+        // the full engine's adjoint test uses.
+        let (ci, co, h, w, k) = (2usize, 3usize, 12usize, 8usize, 2usize);
+        let layer = HalfSpectralConv2d::<f64>::random(ci, co, h, w, k, 71);
+        let x = random_real_field::<f64>(ci * h * w, 72);
+        let gy = random_real_field::<f64>(co * h * w, 73);
+        let mut scratch = layer.scratch();
+        let mut y = vec![0.0f64; co * h * w];
+        layer.forward_sample(&x, &mut y, &mut scratch);
+        let spec_in = scratch.spec_in().clone();
+        let mut gx = vec![0.0f64; ci * h * w];
+        let mut gw = vec![0.0f64; 2 * ci * co * layer.n_modes()];
+        layer.backward_sample(&gy, &spec_in, &mut gx, &mut gw, &mut scratch);
+        let dot = |a: &[f64], b: &[f64]| -> f64 { a.iter().zip(b).map(|(p, q)| p * q).sum() };
+        let lhs = dot(&y, &gy);
+        let rhs = dot(&x, &gx);
+        assert!((lhs - rhs).abs() < 1e-9 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+        assert!(gw.iter().all(|g| g.is_finite()));
+        assert!(gw.iter().any(|&g| g != 0.0));
+    }
+
+    #[test]
+    fn backward_matches_composed_oracle_bitwise() {
+        // Composed backward: gather(fft2(gy)) → factor scale → AoS
+        // adjoint contraction → embed + ad-hoc ifft2, real part; plus
+        // the direct gw formula. The fused backward must match bit for
+        // bit (the trunc inverse is bit-identical to embed + ifft2).
+        let (ci, co, h, w, k) = (2usize, 2usize, 12usize, 8usize, 2usize);
+        let layer = HalfSpectralConv2d::<f64>::random(ci, co, h, w, k, 81);
+        let x = random_real_field::<f64>(ci * h * w, 82);
+        let gy = random_real_field::<f64>(co * h * w, 83);
+        let n = layer.n_modes();
+        let kc = half_cols(k);
+        let hw = h * w;
+        let mut scratch = layer.scratch();
+        let mut y = vec![0.0f64; co * hw];
+        layer.forward_sample(&x, &mut y, &mut scratch);
+        let spec_in = scratch.spec_in().clone();
+        let mut gx = vec![0.0f64; ci * hw];
+        let mut gw = vec![0.0f64; 2 * ci * co * n];
+        layer.backward_sample(&gy, &spec_in, &mut gx, &mut gw, &mut scratch);
+
+        // Oracle t[o] = factor ⊙ gather(fft2(gy[o])).
+        let kept = kept_indices(h, k);
+        let mut t = vec![Cplx::<f64>::zero(); co * n];
+        for o in 0..co {
+            let mut g: Vec<Cplx<f64>> =
+                gy[o * hw..(o + 1) * hw].iter().map(|&v| Cplx::new(v, 0.0)).collect();
+            fft2(&mut g, h, w);
+            for (i, &r) in kept.iter().enumerate() {
+                for j in 0..kc {
+                    let f = col_weight_factor(j, w);
+                    t[o * n + i * kc + j] = g[r * w + j].scale(f);
+                }
+            }
+        }
+        // Oracle gw.
+        let mut gw_want = vec![0.0f64; 2 * ci * co * n];
+        let inv_hw = 1.0 / hw as f64;
+        for i in 0..ci {
+            let (xre, xim) = spec_in.channel(i);
+            for o in 0..co {
+                for m in 0..n {
+                    let (tr, ti) = (t[o * n + m].re, t[o * n + m].im);
+                    let (xr, xi) = (xre[m], xim[m]);
+                    let idx = 2 * ((i * co + o) * n + m);
+                    gw_want[idx] += (tr * xr + ti * xi) * inv_hw;
+                    gw_want[idx + 1] += (ti * xr - tr * xi) * inv_hw;
+                }
+            }
+        }
+        assert_eq!(gw, gw_want, "weight gradient must match the composed oracle bitwise");
+        // Oracle gx via AoS adjoint contraction + embed + ad-hoc ifft2.
+        let mut w_mio = vec![Cplx::<f64>::zero(); n * ci * co];
+        for i in 0..ci {
+            for o in 0..co {
+                for m in 0..n {
+                    w_mio[(m * ci + i) * co + o] = layer.weight()[(i * co + o) * n + m];
+                }
+            }
+        }
+        let mut tmp_mi = vec![Cplx::<f64>::zero(); n * ci];
+        let mut gspec = vec![Cplx::<f64>::zero(); ci * n];
+        crate::contract::contract_modes_adjoint(&t, &w_mio, ci, co, n, &mut tmp_mi, &mut gspec);
+        for i in 0..ci {
+            let mut full = vec![Cplx::<f64>::zero(); hw];
+            for (ir, &r) in kept.iter().enumerate() {
+                for j in 0..kc {
+                    full[r * w + j] = gspec[i * n + ir * kc + j];
+                }
+            }
+            ifft2(&mut full, h, w);
+            for (c, z) in full.iter().enumerate() {
+                assert_eq!(
+                    gx[i * hw + c].to_bits(),
+                    z.re.to_bits(),
+                    "gx channel {i} cell {c} must match the composed oracle bitwise"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn set_weights_matches_fresh_construction() {
+        let (ci, co, h, w, k) = (2usize, 2usize, 8usize, 8usize, 2usize);
+        let a = HalfSpectralConv2d::<f64>::random(ci, co, h, w, k, 91);
+        let b = HalfSpectralConv2d::<f64>::random(ci, co, h, w, k, 92);
+        let mut c = HalfSpectralConv2d::<f64>::random(ci, co, h, w, k, 93);
+        c.set_weights(b.weight().to_vec());
+        let input = random_real_field::<f64>(ci * h * w, 94);
+        let got = c.forward(&input, 1, &Executor::serial());
+        let want = b.forward(&input, 1, &Executor::serial());
+        assert!(exact(&got, &want), "set_weights must equal fresh layer");
+        let other = a.forward(&input, 1, &Executor::serial());
+        assert!(!exact(&got, &other), "distinct weights must differ");
+    }
+
+    #[test]
+    fn default_scratch_is_sized_on_first_use() {
+        let (ci, co, h, w, k) = (2usize, 3usize, 8usize, 8usize, 2usize);
+        let layer = HalfSpectralConv2d::<f64>::random(ci, co, h, w, k, 95);
+        let input = random_real_field::<f64>(ci * h * w, 96);
+        let mut fresh = HalfConvScratch::default();
+        let mut sized = layer.scratch();
+        let mut a = vec![0.0f64; co * h * w];
+        let mut b = vec![0.0f64; co * h * w];
+        layer.forward_sample(&input, &mut a, &mut fresh);
+        layer.forward_sample(&input, &mut b, &mut sized);
+        assert!(exact(&a, &b), "Default arena must behave like a pre-sized one");
+    }
+}
+

@@ -30,13 +30,18 @@
 use crate::contract::{contract_modes, contract_modes_adjoint};
 use crate::fft::plan::{plan_for, Plan};
 use crate::fft::trunc::{
-    embed_modes, fft2_kept, ifft2_kept, kept_indices, truncate_modes, SpectralScratch,
+    embed_modes, fft2_kept, fft2_kept_with, ifft2_kept, ifft2_kept_with, kept_indices,
+    truncate_modes, SpectralScratch,
 };
 use crate::fft::{fft2, ifft2};
 use crate::fp::{Cplx, Scalar};
 use crate::parallel::Executor;
 use crate::rng::Rng;
 use std::sync::Arc;
+
+pub mod half;
+
+pub use half::{random_real_field, HalfConvScratch, HalfSpectralConv2d};
 
 /// Benchmark shape for the paper's NS spectral layer — (batch, grid
 /// side, channel width, k_max): 8 × 128² × 64 channels keeping 16 modes
@@ -77,6 +82,22 @@ impl<S: Scalar> ConvScratch<S> {
     /// ([`SpectralConv2d::backward_sample`] consumes it as `spec_in`).
     pub fn spec_in(&self) -> &[Cplx<S>] {
         &self.spec_in
+    }
+}
+
+/// An empty arena, sized on first use by whichever layer runs a sample
+/// through it (`SpectralConv2d` re-sizes at the top of every per-sample
+/// pass).
+impl<S: Scalar> Default for ConvScratch<S> {
+    fn default() -> Self {
+        ConvScratch {
+            fft: SpectralScratch::default(),
+            spec_in: Vec::new(),
+            tmp_mo: Vec::new(),
+            spec_out: Vec::new(),
+            tmp_mi: Vec::new(),
+            gspec_in: Vec::new(),
+        }
     }
 }
 
@@ -196,15 +217,21 @@ impl<S: Scalar> SpectralConv2d<S> {
     /// Fresh per-worker scratch arena sized for this layer (forward and
     /// backward passes).
     pub fn scratch(&self) -> ConvScratch<S> {
+        let mut s = ConvScratch::default();
+        self.ensure_scratch(&mut s);
+        s
+    }
+
+    /// Size (or re-size) an arena for this layer. Called at the top of
+    /// every per-sample pass so a [`Default`]-constructed arena works; a
+    /// correctly-sized arena passes through untouched.
+    fn ensure_scratch(&self, s: &mut ConvScratch<S>) {
         let n_modes = self.n_modes();
-        ConvScratch {
-            fft: SpectralScratch::new(),
-            spec_in: vec![Cplx::zero(); self.ci * n_modes],
-            tmp_mo: vec![Cplx::zero(); n_modes * self.co],
-            spec_out: vec![Cplx::zero(); self.co * n_modes],
-            tmp_mi: vec![Cplx::zero(); n_modes * self.ci],
-            gspec_in: vec![Cplx::zero(); self.ci * n_modes],
-        }
+        s.spec_in.resize(self.ci * n_modes, Cplx::zero());
+        s.tmp_mo.resize(n_modes * self.co, Cplx::zero());
+        s.spec_out.resize(self.co * n_modes, Cplx::zero());
+        s.tmp_mi.resize(n_modes * self.ci, Cplx::zero());
+        s.gspec_in.resize(self.ci * n_modes, Cplx::zero());
     }
 
     /// Replace the layer weights in place ((ci, co, 2k, 2k) layout),
@@ -236,20 +263,39 @@ impl<S: Scalar> SpectralConv2d<S> {
 
     /// Fused forward pass over a (batch, ci, h, w) buffer, one work item
     /// per sample fanned over `ex`, each worker reusing one
-    /// [`ConvScratch`] arena. Returns (batch, co, h, w).
+    /// [`ConvScratch`] arena. When `batch < threads` (wide grids, small
+    /// batches) samples instead run in order with each pass's row/column
+    /// transforms fanned out ([`fft2_kept_with`]) — bit-identical to the
+    /// per-sample fan-out. Returns (batch, co, h, w).
     pub fn forward(&self, input: &[Cplx<S>], batch: usize, ex: &Executor) -> Vec<Cplx<S>> {
         let slab_in = self.ci * self.h * self.w;
         let slab_out = self.co * self.h * self.w;
         assert_eq!(input.len(), batch * slab_in, "input must be (batch, ci, h, w)");
         let mut out = vec![Cplx::<S>::zero(); batch * slab_out];
-        ex.for_each_chunk_with(
-            &mut out,
-            slab_out,
-            || self.scratch(),
-            |b, sample_out, scratch| {
-                self.forward_sample(&input[b * slab_in..(b + 1) * slab_in], sample_out, scratch);
-            },
-        );
+        if ex.threads() > 1 && batch < ex.threads() {
+            let mut scratch = self.scratch();
+            for b in 0..batch {
+                self.forward_sample_with(
+                    &input[b * slab_in..(b + 1) * slab_in],
+                    &mut out[b * slab_out..(b + 1) * slab_out],
+                    &mut scratch,
+                    ex,
+                );
+            }
+        } else {
+            ex.for_each_chunk_with(
+                &mut out,
+                slab_out,
+                || self.scratch(),
+                |b, sample_out, scratch| {
+                    self.forward_sample(
+                        &input[b * slab_in..(b + 1) * slab_in],
+                        sample_out,
+                        scratch,
+                    );
+                },
+            );
+        }
         out
     }
 
@@ -262,6 +308,7 @@ impl<S: Scalar> SpectralConv2d<S> {
         out: &mut [Cplx<S>],
         scratch: &mut ConvScratch<S>,
     ) {
+        self.ensure_scratch(scratch);
         let hw = self.h * self.w;
         let n_modes = self.n_modes();
         assert_eq!(x.len(), self.ci * hw, "sample must be (ci, h, w)");
@@ -303,6 +350,63 @@ impl<S: Scalar> SpectralConv2d<S> {
         }
     }
 
+    /// [`SpectralConv2d::forward_sample`] with every FFT pass's
+    /// row/column transforms fanned over `ex` — the within-sample path
+    /// [`SpectralConv2d::forward`] takes when `batch < threads`, so one
+    /// sample on a wide grid can still saturate the cores. Bit-identical
+    /// to the serial sample pass ([`fft2_kept_with`] /
+    /// [`ifft2_kept_with`] run the same arithmetic per transform).
+    pub fn forward_sample_with(
+        &self,
+        x: &[Cplx<S>],
+        out: &mut [Cplx<S>],
+        scratch: &mut ConvScratch<S>,
+        ex: &Executor,
+    ) {
+        self.ensure_scratch(scratch);
+        let hw = self.h * self.w;
+        let n_modes = self.n_modes();
+        assert_eq!(x.len(), self.ci * hw, "sample must be (ci, h, w)");
+        assert_eq!(out.len(), self.co * hw, "output must be (co, h, w)");
+        for i in 0..self.ci {
+            fft2_kept_with(
+                &x[i * hw..(i + 1) * hw],
+                self.h,
+                self.w,
+                &self.kept_rows,
+                &self.kept_cols,
+                &self.row_fwd,
+                &self.col_fwd,
+                &mut scratch.spec_in[i * n_modes..(i + 1) * n_modes],
+                &mut scratch.fft,
+                ex,
+            );
+        }
+        contract_modes(
+            &scratch.spec_in,
+            &self.w_mio,
+            self.ci,
+            self.co,
+            n_modes,
+            &mut scratch.tmp_mo,
+            &mut scratch.spec_out,
+        );
+        for o in 0..self.co {
+            ifft2_kept_with(
+                &scratch.spec_out[o * n_modes..(o + 1) * n_modes],
+                self.h,
+                self.w,
+                &self.kept_rows,
+                &self.kept_cols,
+                &self.row_inv,
+                &self.col_inv,
+                &mut out[o * hw..(o + 1) * hw],
+                &mut scratch.fft,
+                ex,
+            );
+        }
+    }
+
     /// Backward pass through the fused block for one sample — the
     /// hand-derived adjoint of [`SpectralConv2d::forward_sample`], run on
     /// the same arena and the same planned kernels.
@@ -333,6 +437,7 @@ impl<S: Scalar> SpectralConv2d<S> {
         gw: &mut [f64],
         scratch: &mut ConvScratch<S>,
     ) {
+        self.ensure_scratch(scratch);
         let hw = self.h * self.w;
         let n_modes = self.n_modes();
         assert_eq!(gy.len(), self.co * hw, "gy must be (co, h, w)");
@@ -469,26 +574,36 @@ pub fn random_field<S: Scalar>(n: usize, seed: u64) -> Vec<Cplx<S>> {
 pub struct SpectralBenchReport {
     /// Human-readable shape tag, e.g. `spectral b8 128x128 w64 k16`.
     pub shape: String,
-    /// Worker threads the parallel leg ran with.
+    /// Worker threads the parallel legs ran with.
     pub threads: usize,
     pub composed: crate::bench::BenchStats,
     pub fused_serial: crate::bench::BenchStats,
     pub fused_parallel: crate::bench::BenchStats,
+    /// The Hermitian half-spectrum engine ([`HalfSpectralConv2d`]) at
+    /// the same shape — the rows `scripts/check_bench.sh` gates against
+    /// the full-spectrum fused counterparts above.
+    pub half_serial: crate::bench::BenchStats,
+    pub half_parallel: crate::bench::BenchStats,
 }
 
 impl SpectralBenchReport {
-    /// The three tagged rows every `BENCH_spectral.json` section holds.
+    /// The five tagged rows every `BENCH_spectral.json` section holds.
     pub fn json_rows(&self) -> Vec<crate::jsonlite::Json> {
         vec![
             self.composed.to_json_tagged(&format!("{} composed", self.shape), 1),
             self.fused_serial.to_json_tagged(&format!("{} fused", self.shape), 1),
             self.fused_parallel.to_json_tagged(&format!("{} fused", self.shape), self.threads),
+            self.half_serial.to_json_tagged(&format!("{} half fused", self.shape), 1),
+            self.half_parallel.to_json_tagged(&format!("{} half fused", self.shape), self.threads),
         ]
     }
 }
 
-/// Run the composed serial / fused serial / fused parallel bench triple
-/// at the [`ns_paper_case`] shape for `quick`.
+/// Run the composed serial / fused serial / fused parallel / half
+/// serial / half parallel bench set at the [`ns_paper_case`] shape for
+/// `quick`. The half legs run [`HalfSpectralConv2d`] on the real part
+/// of the same field: fewer column transforms and the halved SoA
+/// contraction racing the full-spectrum fused engine.
 pub fn bench_ns_case(quick: bool, budget_s: f64, seed: u64, par: &Executor) -> SpectralBenchReport {
     use crate::bench::bench_auto;
     let (sb, hw, width, k_max) = ns_paper_case(quick);
@@ -507,7 +622,26 @@ pub fn bench_ns_case(quick: bool, budget_s: f64, seed: u64, par: &Executor) -> S
         let out = layer.forward(&input, sb, par);
         std::hint::black_box(out.len());
     });
-    SpectralBenchReport { shape, threads: par.threads(), composed, fused_serial, fused_parallel }
+    let half_layer = HalfSpectralConv2d::<f64>::random(width, width, hw, hw, k_max, seed);
+    let real_input: Vec<f64> = input.iter().map(|z| z.re).collect();
+    let half_serial = bench_auto(&format!("{shape} half fused serial"), budget_s, || {
+        let out = half_layer.forward(&real_input, sb, &Executor::serial());
+        std::hint::black_box(out.len());
+    });
+    let half_parallel =
+        bench_auto(&format!("{shape} half fused {}t", par.threads()), budget_s, || {
+            let out = half_layer.forward(&real_input, sb, par);
+            std::hint::black_box(out.len());
+        });
+    SpectralBenchReport {
+        shape,
+        threads: par.threads(),
+        composed,
+        fused_serial,
+        fused_parallel,
+        half_serial,
+        half_parallel,
+    }
 }
 
 #[cfg(test)]

@@ -164,39 +164,57 @@ mod tests {
         assert_eq!(&up.data()[1024..], single.data());
     }
 
+    /// The pre-plan implementation: full `fft2`, mode copy, full
+    /// `ifft2` — the bitwise comparator for the truncated-pass port.
+    fn full_grid(t: &Tensor, h2: usize, w2: usize) -> Tensor {
+        use crate::fft::{fft2, ifft2};
+        let (h, w) = (t.shape()[0], t.shape()[1]);
+        let mut spec: Vec<Cplx<f64>> =
+            t.data().iter().map(|&x| Cplx::from_f64(x as f64, 0.0)).collect();
+        fft2(&mut spec, h, w);
+        let mut out = vec![Cplx::<f64>::zero(); h2 * w2];
+        let keep_h = h.min(h2);
+        let keep_w = w.min(w2);
+        for ky in 0..keep_h {
+            let fy = signed_freq(ky, keep_h, h);
+            let (sy, dy) = (fy_to_row(fy, h), fy_to_row(fy, h2));
+            for kx in 0..keep_w {
+                let fx = signed_freq(kx, keep_w, w);
+                let (sx, dx) = (fy_to_row(fx, w), fy_to_row(fx, w2));
+                out[dy * w2 + dx] = spec[sy * w + sx];
+            }
+        }
+        ifft2(&mut out, h2, w2);
+        let scale = (h2 * w2) as f64 / (h * w) as f64;
+        Tensor::from_vec(
+            vec![h2, w2],
+            out.iter().map(|z| (z.re * scale) as f32).collect(),
+        )
+    }
+
     #[test]
     fn truncated_pipeline_matches_full_grid_pipeline() {
-        // The pre-plan implementation: full fft2, mode copy, full ifft2.
-        // The truncated-pass port must reproduce it bitwise on arbitrary
-        // (non-band-limited) fields.
-        use crate::fft::{fft2, ifft2};
-        let full_grid = |t: &Tensor, h2: usize, w2: usize| -> Tensor {
-            let (h, w) = (t.shape()[0], t.shape()[1]);
-            let mut spec: Vec<Cplx<f64>> =
-                t.data().iter().map(|&x| Cplx::from_f64(x as f64, 0.0)).collect();
-            fft2(&mut spec, h, w);
-            let mut out = vec![Cplx::<f64>::zero(); h2 * w2];
-            let keep_h = h.min(h2);
-            let keep_w = w.min(w2);
-            for ky in 0..keep_h {
-                let fy = signed_freq(ky, keep_h, h);
-                let (sy, dy) = (fy_to_row(fy, h), fy_to_row(fy, h2));
-                for kx in 0..keep_w {
-                    let fx = signed_freq(kx, keep_w, w);
-                    let (sx, dx) = (fy_to_row(fx, w), fy_to_row(fx, w2));
-                    out[dy * w2 + dx] = spec[sy * w + sx];
-                }
-            }
-            ifft2(&mut out, h2, w2);
-            let scale = (h2 * w2) as f64 / (h * w) as f64;
-            Tensor::from_vec(
-                vec![h2, w2],
-                out.iter().map(|z| (z.re * scale) as f32).collect(),
-            )
-        };
+        // The truncated-pass port must reproduce the full-grid pipeline
+        // bitwise on arbitrary (non-band-limited) fields.
         let mut rng = crate::rng::Rng::new(314);
         let t = Tensor::from_fn(&[12, 20], |_| rng.normal() as f32);
         for (h2, w2) in [(24usize, 40usize), (6, 10), (16, 12), (12, 24)] {
+            let want = full_grid(&t, h2, w2);
+            let got = resample2d(&t, h2, w2);
+            assert_eq!(got.data(), want.data(), "{h2}x{w2}");
+        }
+    }
+
+    #[test]
+    fn odd_grids_match_full_grid_pipeline() {
+        // Odd axis lengths put the "keep/2" split of signed_freq off the
+        // Nyquist bin (there is no self-conjugate column), and every FFT
+        // runs through Bluestein. The truncated-pass port must still be
+        // bitwise identical to the full-grid pipeline, up- and
+        // down-sampling, odd->odd and odd<->even.
+        let mut rng = crate::rng::Rng::new(217);
+        let t = Tensor::from_fn(&[9, 15], |_| rng.normal() as f32);
+        for (h2, w2) in [(27usize, 45usize), (5, 9), (9, 30), (16, 15)] {
             let want = full_grid(&t, h2, w2);
             let got = resample2d(&t, h2, w2);
             assert_eq!(got.data(), want.data(), "{h2}x{w2}");

@@ -1,0 +1,176 @@
+//! Parity tests for the Hermitian half-spectrum spectral engine
+//! (ISSUE 6): the fused real-input path — `rfft2_kept` → SoA mode
+//! contraction → `irfft2_kept` — must be bit-identical to the serial
+//! composed oracle (complexify → ad-hoc `fft2` → stored-cell gather →
+//! AoS contraction → Hermitian-extended ad-hoc inverse) at every
+//! [`Scalar`] precision and thread count {1, 2, 8}, and the
+//! hand-derived backward must be the exact adjoint of the forward.
+//!
+//! "Bit-identical" is asserted as exact `to_f64` equality per
+//! component. Re-run under `PALLAS_THREADS=1` / `PALLAS_THREADS=8`
+//! (scripts/ci.sh) to rule out scheduling noise and to force the
+//! within-sample row/column fan-out respectively.
+
+use mpno::fp::{Bf16, Cplx, Scalar, F16};
+use mpno::parallel::Executor;
+use mpno::spectral::{random_real_field, HalfSpectralConv2d};
+use mpno::testing::{forall, Gen};
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+/// Exact equality through f64 (±0 compare equal, anything else must
+/// match bitwise).
+fn exact<S: Scalar>(a: &[S], b: &[S]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_f64() == y.to_f64())
+}
+
+// ---- fused half-spectrum conv vs serial composed oracle --------------------
+
+fn half_case<S: Scalar>(
+    b: usize,
+    ci: usize,
+    co: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    seed: u64,
+) -> bool {
+    let layer = HalfSpectralConv2d::<S>::random(ci, co, h, w, k, seed);
+    let input = random_real_field::<S>(b * ci * h * w, seed + 1);
+    let want = layer.forward_composed(&input, b);
+    THREAD_COUNTS.iter().all(|&t| {
+        let got = layer.forward(&input, b, &Executor::new(t));
+        exact(&got, &want)
+    })
+}
+
+#[test]
+fn prop_half_conv_matches_composed_all_precisions_and_threads() {
+    forall(
+        601,
+        8,
+        |g: &mut Gen| {
+            // Radix-2 and Bluestein axes; 2k <= min(h, w) (the half
+            // layout needs the column Nyquist bound on w and the full
+            // kept-row set on h).
+            let b = g.usize_in(1, 4);
+            let ci = g.usize_in(1, 3);
+            let co = g.usize_in(1, 3);
+            let h = [8usize, 12, 16][g.usize_in(0, 2)];
+            let w = [8usize, 16][g.usize_in(0, 1)];
+            let k = g.usize_in(1, 4);
+            (b, ci, co, h, w, k, g.usize_in(0, 1_000_000) as u64)
+        },
+        |&(b, ci, co, h, w, k, seed)| {
+            half_case::<f64>(b, ci, co, h, w, k, seed)
+                && half_case::<f32>(b, ci, co, h, w, k, seed)
+                && half_case::<Bf16>(b, ci, co, h, w, k, seed)
+                && half_case::<F16>(b, ci, co, h, w, k, seed)
+        },
+    );
+}
+
+/// The self-conjugate column boundary: 2k == w puts the stored Nyquist
+/// column j == k on the mirror axis (no Hermitian extension for it),
+/// and 2k == h keeps every row. Both boundaries at once.
+#[test]
+fn half_conv_nyquist_boundary_matches_composed() {
+    let (b, ci, co, h, w, k) = (2usize, 2usize, 3usize, 8usize, 8usize, 4usize);
+    assert!(half_case::<f64>(b, ci, co, h, w, k, 71));
+    assert!(half_case::<f32>(b, ci, co, h, w, k, 71));
+    assert!(half_case::<Bf16>(b, ci, co, h, w, k, 71));
+    assert!(half_case::<F16>(b, ci, co, h, w, k, 71));
+}
+
+/// batch << threads forces the within-sample row/column fan-out
+/// (Executor::for_each_chunk_with inside one transform); it must be
+/// bit-identical to the all-serial path on a grid large enough to
+/// clear the parallel grain.
+#[test]
+fn half_conv_within_sample_fanout_matches_serial() {
+    let (b, ci, co, h, w, k) = (2usize, 2usize, 2usize, 32usize, 40usize, 5usize);
+    let layer = HalfSpectralConv2d::<f64>::random(ci, co, h, w, k, 81);
+    let input = random_real_field::<f64>(b * ci * h * w, 82);
+    let want = layer.forward(&input, b, &Executor::serial());
+    for threads in [4usize, 8] {
+        let got = layer.forward(&input, b, &Executor::new(threads));
+        assert!(exact(&got, &want), "within-sample fan-out diverged at {threads} threads");
+    }
+}
+
+// ---- backward: exact adjoint + exact weight linearization ------------------
+
+/// The conv is linear in x, so <A x, gy> == <x, A^T gy> exactly in
+/// exact arithmetic; at f64 the doubled-weight substitution in the
+/// backward leaves ~1e-16 relative noise.
+#[test]
+fn half_backward_is_adjoint_of_forward_f64() {
+    let (ci, co, h, w, k) = (2usize, 3usize, 12usize, 8usize, 2usize);
+    let layer = HalfSpectralConv2d::<f64>::random(ci, co, h, w, k, 91);
+    let x = random_real_field::<f64>(ci * h * w, 92);
+    let gy = random_real_field::<f64>(co * h * w, 93);
+    let mut scratch = layer.scratch();
+    let mut y = vec![0.0f64; co * h * w];
+    layer.forward_sample(&x, &mut y, &mut scratch);
+    let spec_in = scratch.spec_in().clone();
+    let mut gx = vec![0.0f64; ci * h * w];
+    let mut gw = vec![0.0f64; 2 * ci * co * layer.n_modes()];
+    layer.backward_sample(&gy, &spec_in, &mut gx, &mut gw, &mut scratch);
+    let lhs: f64 = y.iter().zip(&gy).map(|(a, b)| a * b).sum();
+    let rhs: f64 = x.iter().zip(&gx).map(|(a, b)| a * b).sum();
+    let scale = lhs.abs().max(rhs.abs()).max(1e-30);
+    assert!(
+        ((lhs - rhs) / scale).abs() < 1e-9,
+        "adjoint identity violated: <Ax,gy>={lhs} vs <x,A^T gy>={rhs}"
+    );
+}
+
+/// The conv is linear in the weights too, so the f64 weight gradient
+/// must satisfy the exact directional identity
+/// `sum_k gw[k]·dw[k] == <A_{w+dw} x - A_w x, gy>` — checked against a
+/// fresh layer rebuilt with perturbed weights.
+#[test]
+fn half_weight_gradient_matches_directional_derivative_f64() {
+    let (ci, co, h, w, k) = (2usize, 2usize, 8usize, 8usize, 2usize);
+    let mut layer = HalfSpectralConv2d::<f64>::random(ci, co, h, w, k, 101);
+    let x = random_real_field::<f64>(ci * h * w, 102);
+    let gy = random_real_field::<f64>(co * h * w, 103);
+    let mut scratch = layer.scratch();
+    let mut y0 = vec![0.0f64; co * h * w];
+    layer.forward_sample(&x, &mut y0, &mut scratch);
+    let spec_in = scratch.spec_in().clone();
+    let mut gx = vec![0.0f64; ci * h * w];
+    let mut gw = vec![0.0f64; 2 * ci * co * layer.n_modes()];
+    layer.backward_sample(&gy, &spec_in, &mut gx, &mut gw, &mut scratch);
+
+    let dw = random_real_field::<f64>(2 * ci * co * layer.n_modes(), 104);
+    let base = layer.weight().to_vec();
+    let perturbed: Vec<Cplx<f64>> = base
+        .iter()
+        .enumerate()
+        .map(|(i, z)| Cplx::new(z.re + dw[2 * i], z.im + dw[2 * i + 1]))
+        .collect();
+    layer.set_weights(perturbed);
+    let mut y1 = vec![0.0f64; co * h * w];
+    layer.forward_sample(&x, &mut y1, &mut scratch);
+
+    let lhs: f64 = gw.iter().zip(&dw).map(|(a, b)| a * b).sum();
+    let rhs: f64 = y1.iter().zip(&y0).zip(&gy).map(|((a, b), g)| (a - b) * g).sum();
+    let scale = lhs.abs().max(rhs.abs()).max(1e-30);
+    assert!(
+        ((lhs - rhs) / scale).abs() < 1e-9,
+        "weight gradient off: <gw,dw>={lhs} vs directional={rhs}"
+    );
+}
+
+/// Repeat calls across thread counts cannot change a single bit.
+#[test]
+fn half_conv_repeat_calls_are_deterministic() {
+    let layer = HalfSpectralConv2d::<f32>::random(2, 2, 12, 20, 3, 111);
+    let input = random_real_field::<f32>(3 * 2 * 12 * 20, 112);
+    let first = layer.forward(&input, 3, &Executor::new(8));
+    for _ in 0..3 {
+        let again = layer.forward(&input, 3, &Executor::new(8));
+        assert!(exact(&again, &first));
+    }
+}

@@ -1,15 +1,18 @@
 #!/usr/bin/env bash
 # Perf regression gate on BENCH_spectral.json (repo root): in every
-# *recorded* section, the fused spectral path must not be slower than the
-# composed full-FFT baseline for the same shape.
+# *recorded* section,
+#   1. the fused spectral path must not be slower than the composed
+#      full-FFT baseline for the same shape, and
+#   2. the Hermitian half-spectrum fused path must not be slower than
+#      the full-spectrum fused path at the same shape AND thread count.
 #
 # Sections suffixed `_smoke` or `_quick` hold 1-iteration CI smoke rows /
 # quick-shape rows (see bench::bench_json_section) and are skipped — they
 # are execution proofs, not measurements. A missing file or a file with
 # only smoke/quick sections passes with a note: CI produces smoke rows on
 # every run and uploads the JSON as an artifact; measurement-grade rows
-# appear once `cargo bench --bench bench_fft` / `mpno bench-par --json`
-# run without MPNO_BENCH_SMOKE.
+# appear once `cargo bench --bench bench_fft` / `cargo bench --bench
+# bench_native` / `mpno bench-par --json` run without MPNO_BENCH_SMOKE.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -38,39 +41,65 @@ for section, rows in sorted(doc.items()):
         continue
     if not isinstance(rows, list):
         continue
-    # Rows are tagged "<shape> composed" / "<shape> fused" (see
-    # SpectralBenchReport::json_rows). Compare every fused row against
-    # the composed baseline of the same shape within the section.
+    # Rows are tagged "<shape> composed" / "<shape> fused" /
+    # "<shape> half fused" (see SpectralBenchReport::json_rows and
+    # bench_native's bench_spectral_pair). Note " half fused" also ends
+    # in " fused", so classify half rows first.
     composed = {}
+    fused = {}
     for row in rows:
         case = row.get("case", "")
         if case.endswith(" composed"):
             composed[case[: -len(" composed")]] = row
+        elif case.endswith(" fused") and not case.endswith(" half fused"):
+            fused[(case[: -len(" fused")], row.get("threads"))] = row
     for row in rows:
         case = row.get("case", "")
-        if not case.endswith(" fused"):
-            continue
-        shape = case[: -len(" fused")]
-        base = composed.get(shape)
-        if base is None:
-            continue
-        checked += 1
-        fused_s, comp_s = row["mean_s"], base["mean_s"]
-        tag = f"{section}: {shape} (threads={row.get('threads')})"
-        if fused_s > comp_s:
-            failures.append(
-                f"{tag}: fused {fused_s:.6f}s > composed {comp_s:.6f}s"
-            )
-        else:
-            print(f"check_bench: OK {tag}: fused {fused_s:.6f}s <= composed {comp_s:.6f}s")
+        if case.endswith(" half fused"):
+            # Gate 2: half-spectrum vs full-spectrum fused, same shape
+            # and thread count.
+            shape = case[: -len(" half fused")]
+            base = fused.get((shape, row.get("threads")))
+            if base is None:
+                continue
+            checked += 1
+            half_s, full_s = row["mean_s"], base["mean_s"]
+            tag = f"{section}: {shape} (threads={row.get('threads')})"
+            if half_s > full_s:
+                failures.append(
+                    f"{tag}: half fused {half_s:.6f}s > fused {full_s:.6f}s"
+                )
+            else:
+                print(
+                    f"check_bench: OK {tag}: half fused {half_s:.6f}s"
+                    f" <= fused {full_s:.6f}s"
+                )
+        elif case.endswith(" fused"):
+            # Gate 1: fused vs composed full-FFT baseline, same shape.
+            shape = case[: -len(" fused")]
+            base = composed.get(shape)
+            if base is None:
+                continue
+            checked += 1
+            fused_s, comp_s = row["mean_s"], base["mean_s"]
+            tag = f"{section}: {shape} (threads={row.get('threads')})"
+            if fused_s > comp_s:
+                failures.append(
+                    f"{tag}: fused {fused_s:.6f}s > composed {comp_s:.6f}s"
+                )
+            else:
+                print(
+                    f"check_bench: OK {tag}: fused {fused_s:.6f}s"
+                    f" <= composed {comp_s:.6f}s"
+                )
 
 if failures:
-    print("check_bench: FUSED PATH SLOWER THAN COMPOSED BASELINE:", file=sys.stderr)
+    print("check_bench: SPECTRAL PATH SLOWER THAN ITS BASELINE:", file=sys.stderr)
     for f_ in failures:
         print(f"  {f_}", file=sys.stderr)
     sys.exit(1)
 if checked == 0:
-    print("check_bench: no recorded (non-smoke, non-quick) composed/fused pairs yet; OK")
+    print("check_bench: no recorded (non-smoke, non-quick) baseline pairs yet; OK")
 else:
-    print(f"check_bench: {checked} recorded fused rows beat their composed baselines")
+    print(f"check_bench: {checked} recorded rows beat their baselines")
 EOF

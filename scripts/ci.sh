@@ -17,12 +17,25 @@ cargo test -q
 echo "== deterministic single-threaded parity re-run (PALLAS_THREADS=1) =="
 PALLAS_THREADS=1 cargo test -q --test parallel_parity
 PALLAS_THREADS=1 cargo test -q --test spectral_parity
+PALLAS_THREADS=1 cargo test -q --test half_spectral_parity
 PALLAS_THREADS=1 cargo test -q --test native_grad
+
+# Same suites pinned to eight workers: with batch sizes below the worker
+# count the engines switch to within-sample row/column fan-out, so this
+# leg exercises the oversubscribed partitioning that PALLAS_THREADS=1
+# (and small default runners) never reach.
+echo "== oversubscribed parity re-run (PALLAS_THREADS=8) =="
+PALLAS_THREADS=8 cargo test -q --test parallel_parity
+PALLAS_THREADS=8 cargo test -q --test spectral_parity
+PALLAS_THREADS=8 cargo test -q --test half_spectral_parity
+PALLAS_THREADS=8 cargo test -q --test native_grad
 
 # End-to-end native training smoke: two full epochs through the fused
 # spectral engine (forward + hand-derived backward + Adam + loss scaler)
 # on a tiny generated Darcy set; --expect-improve makes the binary exit
-# nonzero unless the final epoch's train loss beats the first's.
+# nonzero unless the final epoch's train loss beats the first's. The
+# third run uses a non-power-of-two grid so the half-spectrum rfft path
+# trains through the Bluestein kernels too.
 echo "== native training smoke (mpno train --native, 2 epochs) =="
 cargo run --release -- train --native --dataset darcy --res 16 --n 12 \
   --batch-size 2 --width 6 --modes 3 --layers 2 --epochs 2 --lr 5e-3 \
@@ -30,6 +43,9 @@ cargo run --release -- train --native --dataset darcy --res 16 --n 12 \
 cargo run --release -- train --native --dataset darcy --res 16 --n 12 \
   --batch-size 2 --width 6 --modes 3 --layers 2 --epochs 2 --lr 5e-3 \
   --seed 1 --precision bf16 --expect-improve
+cargo run --release -- train --native --dataset darcy --res 20 --n 12 \
+  --batch-size 2 --width 6 --modes 3 --layers 2 --epochs 2 --lr 5e-3 \
+  --seed 1 --expect-improve
 
 # Bench smoke: MPNO_BENCH_SMOKE=1 collapses bench_auto to 1 warmup +
 # 1 iteration per case (see rust/src/bench/mod.rs), so every bench and
@@ -47,5 +63,7 @@ MPNO_BENCH_SMOKE=1 cargo bench --bench bench_native
 MPNO_BENCH_SMOKE=1 cargo run --release -- bench-par --quick --json
 
 # Regression gate on the recorded (non-smoke) spectral bench rows: the
-# fused path must never be slower than the composed baseline.
+# fused path must never be slower than the composed baseline, and the
+# Hermitian half-spectrum path must never be slower than the
+# full-spectrum fused path at the same shape and thread count.
 ./scripts/check_bench.sh
