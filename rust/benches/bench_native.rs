@@ -6,6 +6,8 @@
 //! gate in `scripts/check_bench.sh`. Rows land in `BENCH_spectral.json`
 //! under the `bench_native` section (`_smoke` suffixed under
 //! MPNO_BENCH_SMOKE=1, so CI runs never clobber recorded numbers).
+//! A second `serve` section carries batched-vs-unbatched serving rows
+//! (f32/bf16/f16 × batch {1, 4, 16}) for the serve batching gate.
 //! Run: `cargo bench --bench bench_native`.
 
 use mpno::bench::{
@@ -98,6 +100,57 @@ fn bench_spectral_pair(
     }
 }
 
+/// Serve-path rows: one-at-a-time vs coalesced batched serving of the
+/// same requests at equal shape/threads, at f32/bf16/f16 × batch
+/// {1, 4, 16}. Row tags end in " unbatched" / " batched" so
+/// `scripts/check_bench.sh` gates batched throughput >= unbatched at
+/// matching shape+threads (the b1 pair is identical work and exempt).
+fn bench_serve(
+    res: usize,
+    width: usize,
+    k_max: usize,
+    budget_s: f64,
+    par: &Executor,
+    rows: &mut Vec<Json>,
+) {
+    use mpno::serve::{ServeConfig, ServeEngine, ServeRequest};
+    let spec =
+        FnoSpec { in_channels: 1, out_channels: 1, width, k_max, n_layers: 2, h: res, w: res };
+    let params = spec.init_params(33);
+    for prec in ["f32", "bf16", "f16"] {
+        let cfg =
+            ServeConfig { precision: prec.to_string(), max_batch: 16, ..ServeConfig::default() };
+        let mut engine = ServeEngine::new("bench", spec.clone(), params.clone(), &cfg).unwrap();
+        for batch in [1usize, 4, 16] {
+            let reqs: Vec<ServeRequest> = (0..batch)
+                .map(|i| ServeRequest::new(i as u64, rand_tensor(&[1, res, res], 40 + i as u64)))
+                .collect();
+            // Build the model variant outside the timed region.
+            engine.infer_one(&reqs[0], par).unwrap();
+            let shape = format!("serve {prec} {res}x{res} w{width} k{k_max} b{batch}");
+            let unbatched = bench_auto(&format!("{shape} unbatched"), budget_s, || {
+                for r in &reqs {
+                    let reply = engine.infer_one(r, par).unwrap();
+                    std::hint::black_box(reply.output.data().len());
+                }
+            });
+            println!("{unbatched}");
+            let batched = bench_auto(&format!("{shape} batched"), budget_s, || {
+                for reply in engine.serve_batch(&reqs, par) {
+                    std::hint::black_box(reply.unwrap().output.data().len());
+                }
+            });
+            println!("{batched}");
+            println!(
+                "  -> serve batching speedup (b{batch}): {:.2}x",
+                speedup(&unbatched, &batched)
+            );
+            rows.push(unbatched.to_json_tagged(&format!("{shape} unbatched"), par.threads()));
+            rows.push(batched.to_json_tagged(&format!("{shape} batched"), par.threads()));
+        }
+    }
+}
+
 fn main() {
     let quick = smoke_mode();
     let (batch, res, width, k_max, n_layers) =
@@ -125,6 +178,15 @@ fn main() {
     let section = bench_json_section("bench_native", false);
     match update_bench_json(&path, &section, rows) {
         Ok(()) => println!("  [saved {} ({section})]", path.display()),
+        Err(e) => eprintln!("  !! could not write {}: {e:#}", path.display()),
+    }
+
+    println!("-- serve path: batched vs one-at-a-time ({} threads) --", par.threads());
+    let mut serve_rows: Vec<Json> = Vec::new();
+    bench_serve(res, width, k_max, 0.3, &par, &mut serve_rows);
+    let serve_section = bench_json_section("serve", false);
+    match update_bench_json(&path, &serve_section, serve_rows) {
+        Ok(()) => println!("  [saved {} ({serve_section})]", path.display()),
         Err(e) => eprintln!("  !! could not write {}: {e:#}", path.display()),
     }
 }

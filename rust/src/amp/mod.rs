@@ -3,6 +3,14 @@
 //! Fig. 10's subject, plus the autocast policy table the memory model and
 //! DESIGN.md document.
 
+/// Upper bound on [`GradScaler::history`]. Once the buffer fills, every
+/// other retained point is dropped and the recording stride doubles, so
+/// a long-lived process (a serve loop, a week-long run) holds a bounded,
+/// run-spanning downsample of the scale curve instead of leaking one
+/// entry per step. The Fig. 10 plot needs the curve's shape, not every
+/// step, and runs shorter than this record verbatim.
+pub const MAX_SCALER_HISTORY: usize = 4096;
+
 /// Dynamic loss scaler: multiply the loss by `scale` before backward;
 /// on non-finite gradients skip the step and halve the scale; after
 /// `growth_interval` consecutive good steps, double it.
@@ -13,8 +21,13 @@ pub struct GradScaler {
     pub backoff_factor: f64,
     pub growth_interval: u64,
     good_steps: u64,
-    /// Telemetry for the Fig. 10 plot: (step, scale) after each update.
+    /// Telemetry for the Fig. 10 plot: (step, scale) snapshots, at most
+    /// [`MAX_SCALER_HISTORY`] of them (every `history_stride()`-th step
+    /// once a run outgrows the buffer).
     pub history: Vec<(u64, f64)>,
+    /// Record every `hist_stride`-th step; starts at 1 (every step) and
+    /// doubles whenever the history hits its cap.
+    hist_stride: u64,
     step: u64,
     pub enabled: bool,
 }
@@ -34,6 +47,7 @@ impl GradScaler {
             growth_interval: 200,
             good_steps: 0,
             history: vec![],
+            hist_stride: 1,
             step: 0,
             enabled: true,
         }
@@ -84,7 +98,26 @@ impl GradScaler {
             self.scale = (self.scale * self.backoff_factor).max(1e-10);
             self.good_steps = 0;
         }
-        self.history.push((self.step, self.scale));
+        if self.step % self.hist_stride == 0 {
+            if self.history.len() >= MAX_SCALER_HISTORY {
+                // Halve to every-other retained point and record half as
+                // often from here on: the buffer always spans the whole
+                // run at a bounded size.
+                let mut keep = false;
+                self.history.retain(|_| {
+                    keep = !keep;
+                    keep
+                });
+                self.hist_stride *= 2;
+            }
+            self.history.push((self.step, self.scale));
+        }
+    }
+
+    /// Current history recording stride: 1 until the run outgrows
+    /// [`MAX_SCALER_HISTORY`], doubling at each downsample after that.
+    pub fn history_stride(&self) -> u64 {
+        self.hist_stride
     }
 
     /// Fig. 10's diagnostic: the scale has collapsed to uselessness
@@ -168,6 +201,38 @@ mod tests {
         // History recorded for plotting.
         assert_eq!(s.history.len(), 60);
         assert!(s.history.windows(2).all(|w| w[1].1 <= w[0].1));
+    }
+
+    #[test]
+    fn history_stays_bounded_over_long_runs() {
+        // A long-lived serve/train process must not leak one history
+        // entry per step; the cap downsamples while still spanning the
+        // whole run (head and tail both covered, steps increasing).
+        let mut s = GradScaler::new(1024.0);
+        s.growth_interval = 50;
+        let total = 3 * MAX_SCALER_HISTORY as u64;
+        for i in 0..total {
+            s.update(i % 97 != 0); // sprinkle overflow steps in
+        }
+        assert!(s.history.len() <= MAX_SCALER_HISTORY, "len={}", s.history.len());
+        assert!(
+            s.history.len() >= MAX_SCALER_HISTORY / 2,
+            "cap keeps a dense downsample, len={}",
+            s.history.len()
+        );
+        assert!(s.history.windows(2).all(|w| w[1].0 > w[0].0), "steps strictly increase");
+        let stride = s.history_stride();
+        assert!(stride >= 2, "a 3x-overlong run must have downsampled");
+        assert!(s.history.first().unwrap().0 <= stride, "run start stays covered");
+        assert!(total - s.history.last().unwrap().0 < 2 * stride, "run tail stays covered");
+        // Short runs are untouched: stride stays 1, every step recorded
+        // (collapse_under_persistent_overflow relies on this too).
+        let mut short = GradScaler::new(1024.0);
+        for _ in 0..100 {
+            short.update(true);
+        }
+        assert_eq!(short.history.len(), 100);
+        assert_eq!(short.history_stride(), 1);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! mpno gen-data --dataset darcy --res 32 --n 48 [--seed S]
 //! mpno train --artifact NAME [--epochs N] [--lr X] [--schedule paper]
 //! mpno train --native [--precision P] [--schedule paper] [...]
+//! mpno serve --checkpoint PATH [--precision P] [--max-batch N] [--bench]
 //! mpno exp <id|all> [--quick] [--json]  regenerate a paper table/figure
 //! mpno bench-par [--quick] [--json] serial vs parallel kernel throughput
 //!                                   (--json -> BENCH_spectral.json)
@@ -21,14 +22,23 @@ use crate::experiments::{self, Ctx};
 use crate::fp;
 use crate::model::FnoSpec;
 use crate::runtime::{Engine, NativeEngine, NATIVE_PRECISIONS};
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::path::PathBuf;
 
-/// Minimal flag parser: positional args + `--key value` + `--flag`.
+/// Minimal flag parser: positional args + `--key value` + `--key=value`
+/// + `--flag`.
 pub struct Args {
     pub positional: Vec<String>,
     flags: std::collections::HashMap<String, String>,
 }
+
+/// Flags that never take a value. Without this list, `--flag token`
+/// would swallow `token` as the flag's value (`mpno train
+/// --expect-improve darcy` used to eat the positional). Value-taking
+/// flags (`--lr-decay 0.9`, `--seed 3`, ...) keep the `--key value`
+/// form; both kinds also accept the explicit `--key=value` spelling.
+const BOOLEAN_FLAGS: [&str; 6] =
+    ["native", "quick", "json", "expect-improve", "loss-scaling", "bench"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Args {
@@ -38,7 +48,13 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                    i += 1;
+                } else if !BOOLEAN_FLAGS.contains(&key)
+                    && i + 1 < argv.len()
+                    && !argv[i + 1].starts_with("--")
+                {
                     flags.insert(key.to_string(), argv[i + 1].clone());
                     i += 2;
                 } else {
@@ -103,6 +119,7 @@ pub fn run_argv(argv: &[String]) -> Result<()> {
         "gen-data" => cmd_gen_data(&args),
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
         "exp" => cmd_exp(&args),
         "bench-par" => cmd_bench_par(&args),
         "dump-fp-vectors" => cmd_dump_fp_vectors(),
@@ -133,6 +150,14 @@ USAGE:
              fp32 master weights carry across phases
   mpno eval --checkpoint PATH [--artifact FWD_NAME]
              evaluate a saved model, incl. zero-shot at other resolutions
+  mpno serve --checkpoint PATH [--precision f64|f32|tf32|bf16|f16]
+             [--max-batch N] [--max-wait-ms X] [--model-cache N]
+             batched inference server over a trained checkpoint; reads
+             one request per stdin line:
+               INPUT.mpno [out=PATH] [precision=TOK] [grid=HxW]
+             (grid= serves zero-shot at another resolution);
+             --bench instead self-checks batched-vs-serial parity on
+             generated samples and reports throughput
   mpno exp <id|all> [--quick] [--json]   ids: {}
   mpno bench-par [--quick] [--json]      serial vs parallel kernel
                                   throughput incl. the fused spectral
@@ -410,6 +435,264 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `mpno serve`: batched inference over a trained checkpoint. The
+/// artifact name inside the checkpoint pins dataset and training grid;
+/// `--precision` picks the serve-time compute width (the paper's §5
+/// deployment story: precision per request class, as long as its error
+/// stays under the model's approximation error).
+fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::coordinator::Checkpoint;
+    use crate::serve::{ServeConfig, ServeEngine};
+    let ck_path = args.flag("checkpoint").context("--checkpoint required")?;
+    let ck = Checkpoint::load(&PathBuf::from(ck_path))?;
+    let mut cfg = ServeConfig::default();
+    if let Some(p) = args.flag("precision") {
+        cfg.precision = p.to_string();
+    }
+    cfg.max_batch = args.get_usize("max-batch", cfg.max_batch);
+    cfg.max_wait = std::time::Duration::from_micros(
+        (args.get_f64("max-wait-ms", 2.0).max(0.0) * 1000.0) as u64,
+    );
+    cfg.model_cache = args.get_usize("model-cache", cfg.model_cache);
+    let engine = ServeEngine::from_checkpoint(&ck, &cfg)?;
+    let sp = engine.spec();
+    println!(
+        "serving {} (epoch {}): {}x{} training grid, {} compute, max batch {}, \
+         {} worker threads",
+        engine.artifact(),
+        ck.epoch,
+        sp.h,
+        sp.w,
+        engine.default_precision(),
+        cfg.max_batch,
+        crate::parallel::num_threads(),
+    );
+    if args.has("bench") {
+        serve_bench(engine, &cfg, args)
+    } else {
+        serve_stdin(engine, &cfg)
+    }
+}
+
+/// `mpno serve --bench`: one-shot self-check + throughput probe. Serves
+/// generated samples one at a time and batched, requires the two to be
+/// bit-identical and finite (plus one super-resolution request), and
+/// reports both throughputs.
+fn serve_bench(
+    mut engine: crate::serve::ServeEngine,
+    cfg: &crate::serve::ServeConfig,
+    args: &Args,
+) -> Result<()> {
+    use crate::serve::ServeRequest;
+    use crate::tensor::Tensor;
+    let kind = engine
+        .dataset()
+        .context("checkpoint artifact does not name a known grid dataset")?;
+    let sp = engine.spec().clone();
+    let n = args.get_usize("n", 16).max(1);
+    let gspec =
+        GenSpec { kind, n_samples: n, resolution: sp.h, seed: args.get_u64("data-seed", 99) };
+    let data = crate::data::load_or_generate(&gspec, &repo_root().join("datasets"))?;
+    ensure!(
+        data.resolution() == (sp.h, sp.w),
+        "generated data is {:?}, model wants {:?}",
+        data.resolution(),
+        (sp.h, sp.w)
+    );
+    let slab = sp.in_channels * sp.h * sp.w;
+    let xd = data.inputs.data();
+    let reqs: Vec<ServeRequest> = (0..data.len().min(n))
+        .map(|i| {
+            ServeRequest::new(
+                i as u64,
+                Tensor::from_vec(
+                    vec![sp.in_channels, sp.h, sp.w],
+                    xd[i * slab..(i + 1) * slab].to_vec(),
+                ),
+            )
+        })
+        .collect();
+    let ex = crate::parallel::Executor::current();
+
+    let t0 = std::time::Instant::now();
+    let mut serial = Vec::with_capacity(reqs.len());
+    for r in &reqs {
+        serial.push(engine.infer_one(r, &ex)?);
+    }
+    let t_serial = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let mut batched = Vec::with_capacity(reqs.len());
+    for chunk in reqs.chunks(cfg.max_batch) {
+        for r in engine.serve_batch(chunk, &ex) {
+            batched.push(r?);
+        }
+    }
+    let t_batch = t0.elapsed().as_secs_f64();
+    for (s, b) in serial.iter().zip(&batched) {
+        ensure!(s.output == b.output, "batched reply {} diverges from serial serving", s.id);
+        ensure!(
+            b.output.data().iter().all(|v| v.is_finite()),
+            "non-finite output in reply {}",
+            b.id
+        );
+    }
+    let mut sr = reqs[0].clone();
+    sr.out_grid = Some((2 * sp.h, 2 * sp.w));
+    let sr_reply = engine.infer_one(&sr, &ex)?;
+    ensure!(
+        sr_reply.output.data().iter().all(|v| v.is_finite()),
+        "super-resolution output not finite"
+    );
+
+    let st = engine.stats();
+    let n_served = reqs.len() as f64;
+    println!(
+        "serial   {:>8.1} samp/s ({} requests one at a time)",
+        n_served / t_serial,
+        reqs.len()
+    );
+    println!(
+        "batched  {:>8.1} samp/s (batches of up to {}, speedup {:.2}x)",
+        n_served / t_batch,
+        cfg.max_batch,
+        t_serial / t_batch
+    );
+    println!("parity OK: batched == serial bitwise; super-res {}x{} finite", 2 * sp.h, 2 * sp.w);
+    println!(
+        "stats: {} requests, {} batches (max {}), cache {} hit / {} miss / {} evict, \
+         {} resampled",
+        st.requests,
+        st.batches,
+        st.max_batch_seen,
+        st.cache_hits,
+        st.cache_misses,
+        st.cache_evictions,
+        st.resampled
+    );
+    Ok(())
+}
+
+/// A submitted-but-unanswered stdin request: (id, output path, reply rx).
+type PendingReply = (
+    u64,
+    Option<PathBuf>,
+    std::sync::mpsc::Receiver<Result<crate::serve::ServeReply, String>>,
+);
+
+/// Piped/interactive mode: one request per stdin line —
+/// `INPUT.mpno [out=PATH] [precision=TOK] [grid=HxW]` — submitted to the
+/// adaptive batcher; replies are written/printed as they complete, in
+/// submission order.
+fn serve_stdin(engine: crate::serve::ServeEngine, cfg: &crate::serve::ServeConfig) -> Result<()> {
+    use crate::serve::Server;
+    use std::io::BufRead;
+    let server = Server::start(engine, cfg.max_batch, cfg.max_wait);
+    let mut queue: std::collections::VecDeque<PendingReply> = Default::default();
+    let mut next_id = 0u64;
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match parse_serve_line(line, next_id) {
+            Ok((req, out)) => {
+                queue.push_back((req.id, out, server.submit(req)));
+                next_id += 1;
+            }
+            Err(e) => eprintln!("request error: {e:#}"),
+        }
+        drain_replies(&mut queue, false)?;
+    }
+    drain_replies(&mut queue, true)?;
+    let st = server.shutdown().stats();
+    println!(
+        "served {} requests in {} batches (max {}), {} resampled",
+        st.requests, st.batches, st.max_batch_seen, st.resampled
+    );
+    Ok(())
+}
+
+fn parse_serve_line(line: &str, id: u64) -> Result<(crate::serve::ServeRequest, Option<PathBuf>)> {
+    let mut parts = line.split_whitespace();
+    let input_path = parts.next().context("empty request line")?;
+    let recs = crate::ser::load_tensors(&PathBuf::from(input_path))?;
+    let (_, t) = recs.into_iter().next().context("input file holds no tensors")?;
+    let input = match t.ndim() {
+        // A bare (h, w) field is a single-channel sample.
+        2 => {
+            let (h, w) = (t.shape()[0], t.shape()[1]);
+            t.reshape(&[1, h, w])
+        }
+        3 => t,
+        _ => bail!("input must be (h, w) or (cin, h, w), got {:?}", t.shape()),
+    };
+    let mut req = crate::serve::ServeRequest::new(id, input);
+    let mut out = None;
+    for p in parts {
+        if let Some(v) = p.strip_prefix("out=") {
+            out = Some(PathBuf::from(v));
+        } else if let Some(v) = p.strip_prefix("precision=") {
+            req.precision = Some(v.to_string());
+        } else if let Some(v) = p.strip_prefix("grid=") {
+            let (h, w) =
+                v.split_once('x').with_context(|| format!("grid must be HxW, got {v:?}"))?;
+            req.out_grid = Some((
+                h.parse().ok().with_context(|| format!("bad grid height {h:?}"))?,
+                w.parse().ok().with_context(|| format!("bad grid width {w:?}"))?,
+            ));
+        } else {
+            bail!("unknown request option {p:?}");
+        }
+    }
+    Ok((req, out))
+}
+
+/// Pop completed replies off the front of the queue; with `block` wait
+/// for every remaining one (EOF drain).
+fn drain_replies(queue: &mut std::collections::VecDeque<PendingReply>, block: bool) -> Result<()> {
+    while let Some((id, out, rx)) = queue.pop_front() {
+        let res = if block {
+            rx.recv().unwrap_or_else(|_| Err("serve worker exited".to_string()))
+        } else {
+            match rx.try_recv() {
+                Ok(r) => r,
+                Err(std::sync::mpsc::TryRecvError::Empty) => {
+                    queue.push_front((id, out, rx));
+                    return Ok(());
+                }
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    Err("serve worker exited".to_string())
+                }
+            }
+        };
+        match res {
+            Ok(reply) => match &out {
+                Some(p) => {
+                    crate::ser::save_tensors(p, &[("y", &reply.output)])?;
+                    println!(
+                        "request {id}: {}x{} {} (batch {}) -> {}",
+                        reply.grid.0,
+                        reply.grid.1,
+                        reply.precision,
+                        reply.batch_size,
+                        p.display()
+                    );
+                }
+                None => println!(
+                    "request {id}: output {:?} {} (batch {})",
+                    reply.output.shape(),
+                    reply.precision,
+                    reply.batch_size
+                ),
+            },
+            Err(e) => eprintln!("request {id} failed: {e}"),
+        }
+    }
+    Ok(())
+}
+
 fn cmd_exp(args: &Args) -> Result<()> {
     let id = args
         .positional
@@ -501,6 +784,57 @@ mod tests {
         assert!(a.has("quick"));
         assert_eq!(a.get_u64("seed", 0), 3);
         assert_eq!(a.get_usize("missing", 9), 9);
+    }
+
+    #[test]
+    fn boolean_flags_do_not_swallow_positionals() {
+        // The historical bug: `train --expect-improve darcy` treated
+        // "darcy" as the flag's value, losing the positional.
+        let argv: Vec<String> = ["--expect-improve", "darcy", "--native", "16", "--json"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv);
+        assert_eq!(a.positional, vec!["darcy", "16"]);
+        assert!(a.has("expect-improve") && a.has("native") && a.has("json"));
+        assert_eq!(a.flag("expect-improve"), Some("true"));
+    }
+
+    #[test]
+    fn value_flags_still_take_the_next_token() {
+        let argv: Vec<String> = ["--lr-decay", "0.9", "--seed", "4", "--lr", "-0.5", "pos"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv);
+        assert_eq!(a.get_f64("lr-decay", 1.0), 0.9);
+        assert_eq!(a.get_u64("seed", 0), 4);
+        // Values starting with a single '-' (negative numbers) survive.
+        assert_eq!(a.get_f64("lr", 0.0), -0.5);
+        assert_eq!(a.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn key_equals_value_form() {
+        let argv: Vec<String> =
+            ["--seed=3", "--dataset=darcy", "--quick", "fig7", "--lr=2e-3"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let a = Args::parse(&argv);
+        assert_eq!(a.get_u64("seed", 0), 3);
+        assert_eq!(a.flag("dataset"), Some("darcy"));
+        assert_eq!(a.get_f64("lr", 0.0), 2e-3);
+        assert!(a.has("quick"));
+        assert_eq!(a.positional, vec!["fig7"]);
+    }
+
+    #[test]
+    fn boolean_flag_at_end_of_argv() {
+        let argv: Vec<String> = ["run", "--native"].iter().map(|s| s.to_string()).collect();
+        let a = Args::parse(&argv);
+        assert!(a.has("native"));
+        assert_eq!(a.positional, vec!["run"]);
     }
 
     #[test]

@@ -45,17 +45,32 @@ impl Checkpoint {
 
     /// Save to disk. Metadata rides along as tiny tensors so the format
     /// stays a plain named-tensor file.
+    ///
+    /// `epoch` and `loss_scale` are 64-bit values; an f32 record
+    /// truncates non-power-of-two scales and epochs past 2^24. They are
+    /// therefore written twice: the legacy f32 records (`__epoch`,
+    /// `__loss_scale`), which old readers still understand, and lossless
+    /// `__epoch64`/`__loss_scale64` records holding the 64-bit pattern in
+    /// two f32 *bit carriers* (see [`bits_to_words`]). [`Checkpoint::load`]
+    /// prefers the 64-bit records when present.
     pub fn save(&self, path: &Path) -> Result<()> {
         let meta = Tensor::from_vec(vec![1], vec![self.epoch as f32]);
+        let epoch64 = Tensor::from_vec(vec![2], bits_to_words(self.epoch as u64));
         let name_bytes: Vec<f32> = self.artifact.bytes().map(|b| b as f32).collect();
         let name_t = Tensor::from_vec(vec![name_bytes.len()], name_bytes);
         let scale_t = self
             .loss_scale
             .map(|s| Tensor::from_vec(vec![1], vec![s as f32]));
+        let scale64_t = self
+            .loss_scale
+            .map(|s| Tensor::from_vec(vec![2], bits_to_words(s.to_bits())));
         let mut recs: Vec<(&str, &Tensor)> =
-            vec![("__epoch", &meta), ("__artifact", &name_t)];
+            vec![("__epoch", &meta), ("__epoch64", &epoch64), ("__artifact", &name_t)];
         if let Some(t) = &scale_t {
             recs.push(("__loss_scale", t));
+        }
+        if let Some(t) = &scale64_t {
+            recs.push(("__loss_scale64", t));
         }
         for (n, t) in &self.params {
             recs.push((n.as_str(), t));
@@ -66,24 +81,30 @@ impl Checkpoint {
     pub fn load(path: &Path) -> Result<Checkpoint> {
         let recs = crate::ser::load_tensors(path)?;
         let mut epoch = None;
+        let mut epoch64 = None;
         let mut artifact = None;
         let mut loss_scale = None;
+        let mut loss_scale64 = None;
         let mut params = vec![];
         for (name, t) in recs {
             match name.as_str() {
                 "__epoch" => epoch = Some(t.data()[0] as usize),
+                "__epoch64" => epoch64 = words_to_bits(&t).map(|b| b as usize),
                 "__artifact" => {
                     let bytes: Vec<u8> = t.data().iter().map(|&f| f as u8).collect();
                     artifact = Some(String::from_utf8(bytes).context("artifact name")?);
                 }
                 "__loss_scale" => loss_scale = Some(t.data()[0] as f64),
+                "__loss_scale64" => loss_scale64 = words_to_bits(&t).map(f64::from_bits),
                 _ => params.push((name, t)),
             }
         }
         Ok(Checkpoint {
             artifact: artifact.context("missing __artifact record")?,
-            epoch: epoch.context("missing __epoch record")?,
-            loss_scale,
+            // The 64-bit records are exact; fall back to the legacy f32
+            // ones so checkpoints written before they existed still load.
+            epoch: epoch64.or(epoch).context("missing __epoch record")?,
+            loss_scale: loss_scale64.or(loss_scale),
             params,
         })
     }
@@ -122,6 +143,23 @@ impl Checkpoint {
             })
             .collect()
     }
+}
+
+/// Pack a 64-bit pattern into two f32 *bit carriers* (high word first).
+/// The [`crate::ser`] format round-trips f32 bit patterns exactly
+/// (`to_le_bytes`/`from_le_bytes`, no arithmetic), so the words survive
+/// save/load verbatim even when they happen to encode a NaN.
+fn bits_to_words(bits: u64) -> Vec<f32> {
+    vec![f32::from_bits((bits >> 32) as u32), f32::from_bits(bits as u32)]
+}
+
+/// Inverse of [`bits_to_words`]; `None` if the record isn't two words.
+fn words_to_bits(t: &Tensor) -> Option<u64> {
+    let d = t.data();
+    if d.len() != 2 {
+        return None;
+    }
+    Some(((d[0].to_bits() as u64) << 32) | d[1].to_bits() as u64)
 }
 
 #[cfg(test)]
@@ -167,6 +205,42 @@ mod tests {
         assert_eq!(back.loss_scale, None);
         let restored = back.params_for(&entry).unwrap();
         assert_eq!(restored, params);
+
+        // 64-bit metadata survives losslessly: a loss scale that is not
+        // f32-representable and an epoch past f32's 2^24 integer range.
+        let scale = 1234.5678_f64;
+        assert_ne!(scale as f32 as f64, scale, "test needs a non-f32 scale");
+        let big_epoch = (1usize << 40) + 12345;
+        let ck2 = Checkpoint::from_params(&entry, big_epoch, &params).with_loss_scale(scale);
+        ck2.save(&path).unwrap();
+        let back2 = Checkpoint::load(&path).unwrap();
+        assert_eq!(back2.epoch, big_epoch);
+        assert_eq!(back2.loss_scale, Some(scale));
+        assert_eq!(back2.params.len(), 2, "meta records must not leak into params");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn loads_legacy_checkpoints_without_64bit_records() {
+        // Files written before __epoch64/__loss_scale64 existed carry only
+        // the f32 records; load must still accept them.
+        let name: Vec<f32> = "fake_mixed_grads".bytes().map(|b| b as f32).collect();
+        let recs: Vec<(&str, Tensor)> = vec![
+            ("__epoch", Tensor::from_vec(vec![1], vec![9.0])),
+            ("__artifact", Tensor::from_vec(vec![name.len()], name)),
+            ("__loss_scale", Tensor::from_vec(vec![1], vec![2048.0])),
+            ("w", Tensor::full(&[3], 0.25)),
+        ];
+        let dir = std::env::temp_dir().join("mpno_ckpt_legacy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.mpno");
+        let refs: Vec<(&str, &Tensor)> = recs.iter().map(|(n, t)| (*n, t)).collect();
+        crate::ser::save_tensors(&path, &refs).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.epoch, 9);
+        assert_eq!(back.artifact, "fake_mixed_grads");
+        assert_eq!(back.loss_scale, Some(2048.0));
+        assert_eq!(back.params, vec![("w".to_string(), Tensor::full(&[3], 0.25))]);
         std::fs::remove_file(&path).ok();
     }
 

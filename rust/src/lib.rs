@@ -24,8 +24,9 @@
 //!    fp32 master weights ([`optim`]), AMP semantics + dynamic loss scaling
 //!    ([`amp`]), numerical stabilizers ([`stability`]), the analytic GPU
 //!    memory model ([`memmodel`]), operator-learning metrics ([`metrics`]),
-//!    datasets ([`data`]) and the training coordinator with precision
-//!    scheduling ([`coordinator`]).
+//!    datasets ([`data`]), the training coordinator with precision
+//!    scheduling ([`coordinator`]) and the batched inference serving
+//!    runtime over trained checkpoints ([`serve`]).
 //! 3. **Harness** — CLI ([`cli`]) and the per-paper-table/figure experiment
 //!    drivers ([`experiments`]).
 //!
@@ -54,6 +55,7 @@ pub mod pde;
 pub mod rng;
 pub mod runtime;
 pub mod ser;
+pub mod serve;
 pub mod spectral;
 pub mod stability;
 pub mod tensor;

@@ -169,6 +169,60 @@ struct Scratch<S: Scalar> {
     g_b: Vec<S>,
 }
 
+/// A reusable bank of forward arenas for one model shape. A serve loop
+/// calling [`Fno2d::forward_pooled`] hands workers arenas from here and
+/// gets them back when the batch finishes, so repeated requests at the
+/// same (arch, grid, precision) stop paying the per-call allocation.
+///
+/// Every arena buffer is overwritten before it is read (see [`Scratch`]),
+/// so pooling cannot change results: `forward_pooled` stays bit-identical
+/// to [`Fno2d::forward`]. The pool is shape-blind — use one pool per
+/// model, never across models of different specs.
+#[derive(Debug)]
+pub struct ScratchPool<S: Scalar> {
+    free: std::sync::Mutex<Vec<Scratch<S>>>,
+}
+
+impl<S: Scalar> ScratchPool<S> {
+    pub fn new() -> ScratchPool<S> {
+        ScratchPool { free: std::sync::Mutex::new(Vec::new()) }
+    }
+
+    /// Arenas currently parked in the pool (telemetry; grows to the peak
+    /// worker count of the busiest batch seen).
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+impl<S: Scalar> Default for ScratchPool<S> {
+    fn default() -> Self {
+        ScratchPool::new()
+    }
+}
+
+/// Checks an arena out of a [`ScratchPool`] for one worker's lifetime and
+/// returns it on drop — including on panic unwind, so a poisoned batch
+/// does not leak arenas.
+struct PoolGuard<'p, S: Scalar> {
+    pool: &'p ScratchPool<S>,
+    ws: Option<Scratch<S>>,
+}
+
+impl<S: Scalar> PoolGuard<'_, S> {
+    fn get(&mut self) -> &mut Scratch<S> {
+        self.ws.as_mut().expect("arena present until drop")
+    }
+}
+
+impl<S: Scalar> Drop for PoolGuard<'_, S> {
+    fn drop(&mut self) {
+        if let Some(ws) = self.ws.take() {
+            self.pool.free.lock().unwrap().push(ws);
+        }
+    }
+}
+
 /// The native 2-D FNO. Weights live inside in `S` precision; training
 /// drivers keep fp32 master copies outside and push them in with
 /// [`Fno2d::set_params`] before each step (the AMP master-weight recipe).
@@ -477,6 +531,14 @@ impl<S: Scalar> Fno2d<S> {
     /// (batch, cout, h, w). One work item per sample over `ex`, per-worker
     /// arenas, results independent of the thread count.
     pub fn forward(&self, x: &Tensor, ex: &Executor) -> Tensor {
+        self.forward_pooled(x, ex, &ScratchPool::new())
+    }
+
+    /// [`Fno2d::forward`] drawing worker arenas from `pool` instead of
+    /// allocating fresh ones — the serve hot path. Bit-identical to
+    /// `forward` (arenas are overwrite-only); `pool` must belong to this
+    /// model (one pool per model shape).
+    pub fn forward_pooled(&self, x: &Tensor, ex: &Executor, pool: &ScratchPool<S>) -> Tensor {
         let sp = &self.spec;
         let hw = sp.h * sp.w;
         let b = x.shape()[0];
@@ -488,8 +550,12 @@ impl<S: Scalar> Fno2d<S> {
         ex.for_each_chunk_with(
             &mut out,
             out_slab,
-            || self.scratch(),
-            |s, chunk, ws| {
+            || PoolGuard {
+                pool,
+                ws: Some(pool.free.lock().unwrap().pop().unwrap_or_else(|| self.scratch())),
+            },
+            |s, chunk, guard| {
+                let ws = guard.get();
                 self.forward_sample_into(&xd[s * in_slab..(s + 1) * in_slab], ws);
                 for (d, v) in chunk.iter_mut().zip(&ws.pred) {
                     *d = v.to_f64() as f32;
@@ -659,6 +725,26 @@ mod tests {
         }
         assert_eq!(want.shape(), &[3, 1, 8, 8]);
         assert!(!want.has_nan());
+    }
+
+    #[test]
+    fn forward_pooled_matches_forward_and_recycles_arenas() {
+        let sp = tiny_spec();
+        let params = sp.init_params(11);
+        let refs: Vec<&Tensor> = params.iter().collect();
+        let mut model = Fno2d::<f32>::new(sp.clone());
+        model.set_params(&refs);
+        let x = rand_tensor(&[4, sp.in_channels, sp.h, sp.w], 12, 1.0);
+        let pool = ScratchPool::new();
+        for threads in [1usize, 2, 8] {
+            let ex = Executor::new(threads);
+            let want = model.forward(&x, &ex);
+            // Twice through the same pool: the second call reuses arenas
+            // the first parked, and both must match the fresh-arena path.
+            assert_eq!(model.forward_pooled(&x, &ex, &pool), want, "threads={threads}");
+            assert_eq!(model.forward_pooled(&x, &ex, &pool), want, "threads={threads} reuse");
+        }
+        assert!(pool.idle() > 0, "arenas return to the pool after a batch");
     }
 
     #[test]

@@ -1,0 +1,112 @@
+//! Adaptive request batching: a background worker drains a queue,
+//! coalescing up to `max_batch` concurrent requests — or whatever has
+//! arrived when a `max_wait` deadline expires, whichever comes first —
+//! into one [`ServeEngine::serve_batch`] call. Throughput comes from the
+//! coalescing; correctness is untouched because `serve_batch` is
+//! bit-identical to serving each request alone (the parity contract in
+//! `tests/serve_parity.rs`), so batch boundaries — which depend on
+//! arrival timing — can never change a reply.
+
+use super::{ServeEngine, ServeReply, ServeRequest};
+use crate::parallel::Executor;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A queued request plus the channel its reply goes back on. Errors
+/// cross the thread boundary pre-rendered (the error type holds its
+/// chain as strings anyway).
+struct Envelope {
+    req: ServeRequest,
+    reply: mpsc::Sender<Result<ServeReply, String>>,
+}
+
+/// Handle to a running batching server. Dropping it (or calling
+/// [`Server::shutdown`]) closes the queue; the worker drains what's left
+/// and exits.
+pub struct Server {
+    tx: Option<mpsc::Sender<Envelope>>,
+    worker: Option<JoinHandle<ServeEngine>>,
+}
+
+impl Server {
+    /// Spawn the batching worker. It sizes its [`Executor`] from the
+    /// environment (`PALLAS_THREADS`), like every other entry point.
+    pub fn start(engine: ServeEngine, max_batch: usize, max_wait: Duration) -> Server {
+        assert!(max_batch >= 1, "a batch holds at least one request");
+        let (tx, rx) = mpsc::channel();
+        let worker = std::thread::spawn(move || run_loop(engine, rx, max_batch, max_wait));
+        Server { tx: Some(tx), worker: Some(worker) }
+    }
+
+    /// Enqueue a request; the returned channel yields its reply once a
+    /// batch carries it through the engine.
+    pub fn submit(&self, req: ServeRequest) -> mpsc::Receiver<Result<ServeReply, String>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("server still running")
+            .send(Envelope { req, reply: reply_tx })
+            .expect("batching worker alive while the handle exists");
+        reply_rx
+    }
+
+    /// Submit and block for the reply — the one-shot convenience.
+    pub fn call(&self, req: ServeRequest) -> Result<ServeReply, String> {
+        self.submit(req).recv().unwrap_or_else(|_| Err("serve worker exited".to_string()))
+    }
+
+    /// Close the queue, wait for in-flight batches, and hand the engine
+    /// (with its caches and telemetry) back.
+    pub fn shutdown(mut self) -> ServeEngine {
+        drop(self.tx.take());
+        self.worker
+            .take()
+            .expect("shutdown runs once")
+            .join()
+            .expect("serve worker panicked")
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn run_loop(
+    mut engine: ServeEngine,
+    rx: mpsc::Receiver<Envelope>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> ServeEngine {
+    let ex = Executor::current();
+    // Block for the batch's first request; once one is in hand, keep
+    // topping up until the batch is full or its deadline passes.
+    while let Ok(first) = rx.recv() {
+        let mut pending = vec![first];
+        let deadline = Instant::now() + max_wait;
+        while pending.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(env) => pending.push(env),
+                // Timeout → dispatch the partial batch; disconnect →
+                // dispatch, then the outer recv ends the loop.
+                Err(_) => break,
+            }
+        }
+        let (reqs, repliers): (Vec<_>, Vec<_>) =
+            pending.into_iter().map(|e| (e.req, e.reply)).unzip();
+        for (res, tx) in engine.serve_batch(&reqs, &ex).into_iter().zip(repliers) {
+            // A caller that dropped its receiver forfeits the reply.
+            let _ = tx.send(res.map_err(|e| format!("{e:#}")));
+        }
+    }
+    engine
+}

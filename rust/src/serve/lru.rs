@@ -1,0 +1,148 @@
+//! A small LRU cache for serve-time state (loaded model variants with
+//! their FFT plans and scratch pools). Capacities are tiny — a handful
+//! of (arch, grid, precision) combinations — so the store is a plain
+//! `Vec` ordered oldest→newest: O(cap) touch beats hashing at this size
+//! and keeps the eviction order trivially auditable.
+
+/// Hit/miss/eviction counters, surfaced through `mpno serve` telemetry.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub len: usize,
+}
+
+/// Least-recently-used cache over `(K, V)` pairs. `entries` is kept in
+/// recency order: index 0 is the eviction candidate, the last entry is
+/// the most recently used.
+#[derive(Debug)]
+pub struct LruCache<K: PartialEq + Clone, V> {
+    cap: usize,
+    entries: Vec<(K, V)>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl<K: PartialEq + Clone, V> LruCache<K, V> {
+    pub fn new(cap: usize) -> LruCache<K, V> {
+        assert!(cap >= 1, "an LRU cache needs room for at least one entry");
+        LruCache { cap, entries: Vec::new(), hits: 0, misses: 0, evictions: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Move `k`'s entry to the most-recent slot; `false` if absent.
+    fn touch(&mut self, k: &K) -> bool {
+        match self.entries.iter().position(|(ek, _)| ek == k) {
+            Some(i) => {
+                let e = self.entries.remove(i);
+                self.entries.push(e);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn insert_new(&mut self, k: K, v: V) {
+        if self.entries.len() >= self.cap {
+            self.entries.remove(0);
+            self.evictions += 1;
+        }
+        self.entries.push((k, v));
+    }
+
+    /// Look up `k`, marking it most recently used.
+    pub fn get(&mut self, k: &K) -> Option<&mut V> {
+        if self.touch(k) {
+            self.hits += 1;
+            Some(&mut self.entries.last_mut().expect("touched entry").1)
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    /// Look up `k`, building (and possibly evicting) on a miss. The
+    /// single-call shape sidesteps the get-then-insert borrow dance and
+    /// keeps the hit/miss counters honest.
+    pub fn get_or_try_insert_with<E>(
+        &mut self,
+        k: &K,
+        build: impl FnOnce() -> Result<V, E>,
+    ) -> Result<&mut V, E> {
+        if self.touch(k) {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            let v = build()?;
+            self.insert_new(k.clone(), v);
+        }
+        Ok(&mut self.entries.last_mut().expect("entry just touched or inserted").1)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            len: self.entries.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: LruCache<u32, &str> = LruCache::new(2);
+        c.get_or_try_insert_with::<()>(&1, || Ok("a")).unwrap();
+        c.get_or_try_insert_with::<()>(&2, || Ok("b")).unwrap();
+        assert_eq!(c.get(&1), Some(&mut "a")); // 1 now most recent
+        c.get_or_try_insert_with::<()>(&3, || Ok("c")).unwrap(); // evicts 2
+        assert_eq!(c.get(&2), None);
+        assert_eq!(c.get(&1), Some(&mut "a"));
+        assert_eq!(c.get(&3), Some(&mut "c"));
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.evictions, st.len), (3, 4, 1, 2));
+    }
+
+    #[test]
+    fn hit_does_not_rebuild() {
+        let mut c: LruCache<u32, u32> = LruCache::new(1);
+        c.get_or_try_insert_with::<()>(&7, || Ok(70)).unwrap();
+        let v = c
+            .get_or_try_insert_with::<()>(&7, || panic!("hit must not rebuild"))
+            .unwrap();
+        assert_eq!(*v, 70);
+    }
+
+    #[test]
+    fn failed_build_leaves_cache_unchanged() {
+        let mut c: LruCache<u32, u32> = LruCache::new(1);
+        c.get_or_try_insert_with::<()>(&1, || Ok(10)).unwrap();
+        let r: Result<&mut u32, &str> = c.get_or_try_insert_with(&2, || Err("boom"));
+        assert_eq!(r.unwrap_err(), "boom");
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&1), Some(&mut 10), "failed insert must not evict");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one entry")]
+    fn zero_capacity_rejected() {
+        let _ = LruCache::<u32, u32>::new(0);
+    }
+}

@@ -1,0 +1,609 @@
+//! Batched inference serving over trained checkpoints — the deployment
+//! half of the paper's story: the memory/throughput wins (§5, up to 58%
+//! faster at little accuracy cost) are realized at *serve* time by
+//! running a trained operator at a reduced precision whose error stays
+//! below the model's discretization/approximation error.
+//!
+//! [`ServeEngine`] owns the fp32 master weights from a
+//! [`Checkpoint`] and materializes [`Fno2d`] *variants* on demand, one
+//! per `(precision, grid)` a request asks for, behind an
+//! [`LruCache`] so repeated shapes amortize model construction, FFT
+//! planning and scratch arenas ([`ScratchPool`]). Because FNO weights
+//! are grid-independent, a request at a grid other than the training
+//! resolution is served zero-shot: the input is spectrally resampled
+//! ([`resample2d`]) onto the requested grid and a variant at that grid
+//! runs it — the discretization-convergence property the paper inherits
+//! from Kovachki–Lanthaler–Mishra's FNO bounds.
+//!
+//! Determinism contract (house style): a batched [`ServeEngine::serve_batch`]
+//! is bit-identical to serving each request alone, at every precision ×
+//! thread count — batching only coalesces work, it never reorders or
+//! re-associates arithmetic. `tests/serve_parity.rs` enforces this
+//! against the serial per-sample [`Fno2d::forward`] oracle.
+//!
+//! [`batch::Server`] adds the queueing layer: adaptive batching that
+//! coalesces concurrent requests up to `max_batch` or a `max_wait`
+//! deadline, whichever comes first.
+
+pub mod batch;
+pub mod lru;
+
+pub use batch::Server;
+pub use lru::{CacheStats, LruCache};
+
+use crate::coordinator::Checkpoint;
+use crate::data::DatasetKind;
+use crate::fp::{Bf16, Scalar, Tf32, F16};
+use crate::model::{Fno2d, FnoSpec, ScratchPool};
+use crate::parallel::Executor;
+use crate::runtime::NATIVE_PRECISIONS;
+use crate::tensor::resample::resample2d;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::time::Duration;
+
+/// Serve-time knobs (CLI flags map 1:1 onto these).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Default compute precision for requests that don't pick their own
+    /// (a [`NATIVE_PRECISIONS`] token).
+    pub precision: String,
+    /// Coalesce at most this many queued requests into one forward.
+    pub max_batch: usize,
+    /// How long the batcher waits for more requests before dispatching a
+    /// partial batch.
+    pub max_wait: Duration,
+    /// LRU capacity for loaded model variants (per (precision, grid)).
+    pub model_cache: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            precision: "f32".to_string(),
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            model_cache: 8,
+        }
+    }
+}
+
+/// One inference request: a single sample (cin, h, w).
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    /// Caller-chosen correlation id, echoed in the reply.
+    pub id: u64,
+    pub input: Tensor,
+    /// Override the engine's default precision for this request.
+    pub precision: Option<String>,
+    /// Run at this grid instead of the input's own (zero-shot
+    /// super-resolution: the input is spectrally resampled first).
+    pub out_grid: Option<(usize, usize)>,
+}
+
+impl ServeRequest {
+    pub fn new(id: u64, input: Tensor) -> ServeRequest {
+        ServeRequest { id, input, precision: None, out_grid: None }
+    }
+}
+
+/// One inference result: the predicted field (cout, h, w) plus the
+/// execution facts a client needs to interpret it.
+#[derive(Debug, Clone)]
+pub struct ServeReply {
+    pub id: u64,
+    pub output: Tensor,
+    /// How many requests shared the forward pass that produced this.
+    pub batch_size: usize,
+    pub precision: String,
+    pub grid: (usize, usize),
+}
+
+/// Cache key for a loaded model variant: weights are shared, everything
+/// shape- or precision-dependent (FFT plans, scratch, rounded weights)
+/// hangs off one of these.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ModelKey {
+    pub precision: String,
+    pub h: usize,
+    pub w: usize,
+}
+
+/// A model instantiated at one concrete `Scalar` plus its arena pool.
+struct Variant<S: Scalar> {
+    model: Fno2d<S>,
+    pool: ScratchPool<S>,
+}
+
+impl<S: Scalar> Variant<S> {
+    fn build(spec: &FnoSpec, params: &[Tensor]) -> Variant<S> {
+        let mut model = Fno2d::new(spec.clone());
+        let refs: Vec<&Tensor> = params.iter().collect();
+        model.set_params(&refs);
+        Variant { model, pool: ScratchPool::new() }
+    }
+
+    fn forward(&self, x: &Tensor, ex: &Executor) -> Tensor {
+        self.model.forward_pooled(x, ex, &self.pool)
+    }
+}
+
+/// Precision-erased variant — the serve twin of `runtime::native`'s
+/// `ModelAny`, carrying the pooled-arena forward instead of the training
+/// graphs.
+enum AnyFno {
+    F64(Variant<f64>),
+    F32(Variant<f32>),
+    Tf32(Variant<Tf32>),
+    Bf16(Variant<Bf16>),
+    F16(Variant<F16>),
+}
+
+macro_rules! each_variant {
+    ($any:expr, $v:ident => $body:expr) => {
+        match $any {
+            AnyFno::F64($v) => $body,
+            AnyFno::F32($v) => $body,
+            AnyFno::Tf32($v) => $body,
+            AnyFno::Bf16($v) => $body,
+            AnyFno::F16($v) => $body,
+        }
+    };
+}
+
+impl AnyFno {
+    fn build(tok: &str, spec: &FnoSpec, params: &[Tensor]) -> Result<AnyFno> {
+        Ok(match tok {
+            "f64" => AnyFno::F64(Variant::build(spec, params)),
+            "f32" => AnyFno::F32(Variant::build(spec, params)),
+            "tf32" => AnyFno::Tf32(Variant::build(spec, params)),
+            "bf16" => AnyFno::Bf16(Variant::build(spec, params)),
+            "f16" => AnyFno::F16(Variant::build(spec, params)),
+            other => bail!(
+                "unknown precision {other:?} (expected one of {})",
+                NATIVE_PRECISIONS.join("|")
+            ),
+        })
+    }
+
+    fn forward(&self, x: &Tensor, ex: &Executor) -> Tensor {
+        each_variant!(self, v => v.forward(x, ex))
+    }
+}
+
+/// Serve-loop telemetry.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub max_batch_seen: usize,
+    /// Requests whose input was spectrally resampled onto another grid.
+    pub resampled: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+}
+
+/// The serving runtime: fp32 master weights + an LRU of instantiated
+/// precision/grid variants. See the module docs for the batching and
+/// determinism contracts.
+pub struct ServeEngine {
+    artifact: String,
+    dataset: Option<DatasetKind>,
+    /// Architecture at the *training* grid; variants override `h`/`w`.
+    base: FnoSpec,
+    /// fp32 master weights in [`FnoSpec::param_specs`] order.
+    params: Vec<Tensor>,
+    default_precision: String,
+    models: LruCache<ModelKey, AnyFno>,
+    requests: u64,
+    batches: u64,
+    max_batch_seen: usize,
+    resampled: u64,
+}
+
+impl ServeEngine {
+    /// Build from an explicit architecture + canonical-order params (the
+    /// test/bench entry point; [`ServeEngine::from_checkpoint`] is the
+    /// production one).
+    pub fn new(
+        artifact: &str,
+        base: FnoSpec,
+        params: Vec<Tensor>,
+        cfg: &ServeConfig,
+    ) -> Result<ServeEngine> {
+        if !NATIVE_PRECISIONS.contains(&cfg.precision.as_str()) {
+            bail!(
+                "unknown --precision {:?} (expected one of {})",
+                cfg.precision,
+                NATIVE_PRECISIONS.join("|")
+            );
+        }
+        if cfg.max_batch < 1 {
+            bail!("--max-batch must be at least 1");
+        }
+        let specs = base.param_specs();
+        if params.len() != specs.len() {
+            bail!("expected {} param tensors, got {}", specs.len(), params.len());
+        }
+        for (t, s) in params.iter().zip(&specs) {
+            if t.shape() != s.shape.as_slice() {
+                bail!(
+                    "param {:?}: checkpoint shape {:?} vs architecture {:?}",
+                    s.name,
+                    t.shape(),
+                    s.shape
+                );
+            }
+        }
+        if 2 * base.k_max > base.h.min(base.w) {
+            bail!("architecture keeps more modes than its own grid carries");
+        }
+        Ok(ServeEngine {
+            artifact: artifact.to_string(),
+            dataset: None,
+            base,
+            params,
+            default_precision: cfg.precision.clone(),
+            models: LruCache::new(cfg.model_cache.max(1)),
+            requests: 0,
+            batches: 0,
+            max_batch_seen: 0,
+            resampled: 0,
+        })
+    }
+
+    /// Load a trained checkpoint: the artifact name pins dataset + grid
+    /// (`fno_{dataset}_r{res}_native-{precision}_{graph}`), the param
+    /// shapes pin the architecture, and the stored tensors become the
+    /// shared fp32 master weights.
+    pub fn from_checkpoint(ck: &Checkpoint, cfg: &ServeConfig) -> Result<ServeEngine> {
+        let (kind, res) = parse_native_artifact(&ck.artifact).with_context(|| {
+            format!("cannot infer dataset/grid from artifact {:?}", ck.artifact)
+        })?;
+        let w = if kind == DatasetKind::SphericalSwe { 2 * res } else { res };
+        let spec = spec_from_params(&ck.params, res, w)
+            .with_context(|| format!("checkpoint {:?}", ck.artifact))?;
+        if spec.in_channels != kind.in_channels() || spec.out_channels != kind.out_channels() {
+            bail!(
+                "channel mismatch: params say {}->{}, dataset {} expects {}->{}",
+                spec.in_channels,
+                spec.out_channels,
+                kind.token(),
+                kind.in_channels(),
+                kind.out_channels()
+            );
+        }
+        // Canonical param order (the checkpoint stores name/tensor pairs
+        // in unspecified order).
+        let params: Vec<Tensor> = spec
+            .param_specs()
+            .iter()
+            .map(|ps| {
+                let (_, t) = ck
+                    .params
+                    .iter()
+                    .find(|(n, _)| n == &ps.name)
+                    .with_context(|| format!("checkpoint missing tensor {:?}", ps.name))?;
+                Ok(t.clone())
+            })
+            .collect::<Result<_>>()?;
+        let mut eng = ServeEngine::new(&ck.artifact, spec, params, cfg)?;
+        eng.dataset = Some(kind);
+        Ok(eng)
+    }
+
+    pub fn spec(&self) -> &FnoSpec {
+        &self.base
+    }
+
+    pub fn dataset(&self) -> Option<DatasetKind> {
+        self.dataset
+    }
+
+    pub fn artifact(&self) -> &str {
+        &self.artifact
+    }
+
+    pub fn default_precision(&self) -> &str {
+        &self.default_precision
+    }
+
+    /// Which variant serves `req` — and the request-level validation.
+    fn request_key(&self, req: &ServeRequest) -> Result<ModelKey> {
+        let shape = req.input.shape();
+        if shape.len() != 3 || shape[0] != self.base.in_channels {
+            bail!(
+                "request {}: input must be ({}, h, w), got {:?}",
+                req.id,
+                self.base.in_channels,
+                shape
+            );
+        }
+        let (gh, gw) = req.out_grid.unwrap_or((shape[1], shape[2]));
+        if 2 * self.base.k_max > gh.min(gw) {
+            bail!(
+                "request {}: grid {}x{} too coarse for k_max {} (need 2*k_max <= both sides)",
+                req.id,
+                gh,
+                gw,
+                self.base.k_max
+            );
+        }
+        let precision =
+            req.precision.as_deref().unwrap_or(&self.default_precision).to_string();
+        if !NATIVE_PRECISIONS.contains(&precision.as_str()) {
+            bail!(
+                "request {}: unknown precision {:?} (expected one of {})",
+                req.id,
+                precision,
+                NATIVE_PRECISIONS.join("|")
+            );
+        }
+        Ok(ModelKey { precision, h: gh, w: gw })
+    }
+
+    /// Serve a coalesced batch. Requests are grouped by (precision, grid);
+    /// each group runs as one [`Fno2d::forward_pooled`] call. Replies come
+    /// back in request order; a bad request fails its own slot without
+    /// poisoning the batch.
+    pub fn serve_batch(
+        &mut self,
+        reqs: &[ServeRequest],
+        ex: &Executor,
+    ) -> Vec<Result<ServeReply>> {
+        self.requests += reqs.len() as u64;
+        let mut out: Vec<Option<Result<ServeReply>>> = (0..reqs.len()).map(|_| None).collect();
+        // Group in first-seen key order, preserving request order inside
+        // each group.
+        let mut groups: Vec<(ModelKey, Vec<usize>)> = Vec::new();
+        for (i, req) in reqs.iter().enumerate() {
+            match self.request_key(req) {
+                Ok(key) => match groups.iter_mut().find(|(k, _)| *k == key) {
+                    Some((_, idx)) => idx.push(i),
+                    None => groups.push((key, vec![i])),
+                },
+                Err(e) => out[i] = Some(Err(e)),
+            }
+        }
+        for (key, idx) in groups {
+            match self.run_group(&key, reqs, &idx, ex) {
+                Ok(replies) => {
+                    for (i, r) in idx.into_iter().zip(replies) {
+                        out[i] = Some(Ok(r));
+                    }
+                }
+                Err(e) => {
+                    // The shim error type isn't Clone; re-render per slot.
+                    let msg = format!("{e:#}");
+                    for i in idx {
+                        out[i] = Some(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+        }
+        out.into_iter().map(|r| r.expect("every slot resolved")).collect()
+    }
+
+    /// Serve one request alone — the unbatched baseline (and the oracle
+    /// batched serving must match bit-for-bit).
+    pub fn infer_one(&mut self, req: &ServeRequest, ex: &Executor) -> Result<ServeReply> {
+        self.serve_batch(std::slice::from_ref(req), ex)
+            .pop()
+            .expect("one request, one reply")
+    }
+
+    fn run_group(
+        &mut self,
+        key: &ModelKey,
+        reqs: &[ServeRequest],
+        idx: &[usize],
+        ex: &Executor,
+    ) -> Result<Vec<ServeReply>> {
+        let (cin, cout) = (self.base.in_channels, self.base.out_channels);
+        let (gh, gw) = (key.h, key.w);
+        let slab = cin * gh * gw;
+        // Stack the group's samples, resampling any whose own grid
+        // differs from the target (zero-shot super-resolution).
+        let mut x = vec![0.0f32; idx.len() * slab];
+        for (s, &i) in idx.iter().enumerate() {
+            let inp = &reqs[i].input;
+            let (ih, iw) = (inp.shape()[1], inp.shape()[2]);
+            let dst = &mut x[s * slab..(s + 1) * slab];
+            if (ih, iw) == (gh, gw) {
+                dst.copy_from_slice(inp.data());
+            } else {
+                self.resampled += 1;
+                for c in 0..cin {
+                    let chan = Tensor::from_vec(
+                        vec![ih, iw],
+                        inp.data()[c * ih * iw..(c + 1) * ih * iw].to_vec(),
+                    );
+                    let up = resample2d(&chan, gh, gw);
+                    dst[c * gh * gw..(c + 1) * gh * gw].copy_from_slice(up.data());
+                }
+            }
+        }
+        let x = Tensor::from_vec(vec![idx.len(), cin, gh, gw], x);
+        let spec = FnoSpec { h: gh, w: gw, ..self.base.clone() };
+        let params = &self.params;
+        let model = self
+            .models
+            .get_or_try_insert_with(key, || AnyFno::build(&key.precision, &spec, params))?;
+        let y = model.forward(&x, ex);
+        self.batches += 1;
+        self.max_batch_seen = self.max_batch_seen.max(idx.len());
+        let out_slab = cout * gh * gw;
+        let yd = y.data();
+        Ok(idx
+            .iter()
+            .enumerate()
+            .map(|(s, &i)| ServeReply {
+                id: reqs[i].id,
+                output: Tensor::from_vec(
+                    vec![cout, gh, gw],
+                    yd[s * out_slab..(s + 1) * out_slab].to_vec(),
+                ),
+                batch_size: idx.len(),
+                precision: key.precision.clone(),
+                grid: (gh, gw),
+            })
+            .collect())
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        let c = self.models.stats();
+        ServeStats {
+            requests: self.requests,
+            batches: self.batches,
+            max_batch_seen: self.max_batch_seen,
+            resampled: self.resampled,
+            cache_hits: c.hits,
+            cache_misses: c.misses,
+            cache_evictions: c.evictions,
+        }
+    }
+}
+
+/// Recover (dataset, training resolution) from a native artifact name,
+/// `fno_{dataset}_r{res}_native-{precision}_{graph}`.
+pub fn parse_native_artifact(name: &str) -> Option<(DatasetKind, usize)> {
+    let parts: Vec<&str> = name.split('_').collect();
+    if parts.len() < 3 || parts[0] != "fno" {
+        return None;
+    }
+    let ri = parts.iter().position(|p| {
+        p.len() > 1 && p.starts_with('r') && p[1..].bytes().all(|b| b.is_ascii_digit())
+    })?;
+    let res: usize = parts[ri][1..].parse().ok()?;
+    let kind = DatasetKind::from_token(&parts[1..ri].join("_"))?;
+    Some((kind, res))
+}
+
+/// Recover the architecture from checkpoint param shapes (FNO weights
+/// are grid-independent; only `h`/`w` need outside knowledge).
+pub fn spec_from_params(params: &[(String, Tensor)], h: usize, w: usize) -> Result<FnoSpec> {
+    let find = |name: &str| {
+        params
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| t)
+            .with_context(|| format!("checkpoint missing tensor {name:?}"))
+    };
+    let lift_w = find("lift_w")?;
+    if lift_w.ndim() != 2 {
+        bail!("lift_w must be (width, cin), got {:?}", lift_w.shape());
+    }
+    let (width, in_channels) = (lift_w.shape()[0], lift_w.shape()[1]);
+    let proj_w = find("proj_w")?;
+    if proj_w.ndim() != 2 || proj_w.shape()[1] != width {
+        bail!("proj_w must be (cout, {width}), got {:?}", proj_w.shape());
+    }
+    let out_channels = proj_w.shape()[0];
+    let spec_w = find("l0_spec_w")?;
+    if spec_w.ndim() != 5 || spec_w.shape()[4] != 2 {
+        bail!("l0_spec_w must be (w, w, 2k, k+1, 2), got {:?}", spec_w.shape());
+    }
+    let k_max = spec_w.shape()[3] - 1;
+    if spec_w.shape()[2] != 2 * k_max {
+        bail!("l0_spec_w kept-mode dims disagree: {:?}", spec_w.shape());
+    }
+    let n_layers = (0..params.len())
+        .take_while(|l| params.iter().any(|(n, _)| n == &format!("l{l}_spec_w")))
+        .count();
+    let spec = FnoSpec { in_channels, out_channels, width, k_max, n_layers, h, w };
+    if params.len() != spec.param_specs().len() {
+        bail!(
+            "checkpoint has {} tensors, a {}-layer FNO expects {}",
+            params.len(),
+            n_layers,
+            spec.param_specs().len()
+        );
+    }
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_native_artifact_names() {
+        assert_eq!(
+            parse_native_artifact("fno_darcy_r16_native-f32_grads"),
+            Some((DatasetKind::DarcyFlow, 16))
+        );
+        assert_eq!(
+            parse_native_artifact("fno_swe_r32_native-bf16_fwd"),
+            Some((DatasetKind::SphericalSwe, 32))
+        );
+        assert_eq!(parse_native_artifact("fno_darcy_res16_native-f32_fwd"), None);
+        assert_eq!(parse_native_artifact("vit_darcy_r16_native-f32_fwd"), None);
+        assert_eq!(parse_native_artifact("fno_mystery_r16_native-f32_fwd"), None);
+    }
+
+    #[test]
+    fn spec_recovers_from_param_shapes() {
+        let spec = FnoSpec {
+            in_channels: 3,
+            out_channels: 3,
+            width: 5,
+            k_max: 2,
+            n_layers: 3,
+            h: 8,
+            w: 16,
+        };
+        let named: Vec<(String, Tensor)> = spec
+            .param_specs()
+            .into_iter()
+            .map(|p| (p.name, Tensor::zeros(&p.shape)))
+            .collect();
+        assert_eq!(spec_from_params(&named, 8, 16).unwrap(), spec);
+        // A truncated checkpoint is rejected, not mis-inferred.
+        let partial = &named[..named.len() - 1];
+        assert!(spec_from_params(partial, 8, 16).is_err());
+    }
+
+    #[test]
+    fn engine_validates_upfront() {
+        let spec = FnoSpec {
+            in_channels: 1,
+            out_channels: 1,
+            width: 3,
+            k_max: 2,
+            n_layers: 1,
+            h: 8,
+            w: 8,
+        };
+        let params = spec.init_params(1);
+        let cfg = ServeConfig::default();
+        assert!(ServeEngine::new("a", spec.clone(), params.clone(), &cfg).is_ok());
+        let bad = ServeConfig { precision: "fp4".into(), ..ServeConfig::default() };
+        assert!(ServeEngine::new("a", spec.clone(), params.clone(), &bad).is_err());
+        assert!(
+            ServeEngine::new("a", spec.clone(), params[1..].to_vec(), &cfg).is_err(),
+            "missing tensors must be caught at load"
+        );
+        let mut eng = ServeEngine::new("a", spec, params, &cfg).unwrap();
+        // Requests are validated per-slot.
+        let bad_shape = ServeRequest::new(1, Tensor::zeros(&[2, 8, 8]));
+        let too_coarse = ServeRequest {
+            out_grid: Some((3, 3)),
+            ..ServeRequest::new(2, Tensor::zeros(&[1, 8, 8]))
+        };
+        let bad_prec = ServeRequest {
+            precision: Some("int8".into()),
+            ..ServeRequest::new(3, Tensor::zeros(&[1, 8, 8]))
+        };
+        let good = ServeRequest::new(4, Tensor::zeros(&[1, 8, 8]));
+        let replies = eng.serve_batch(
+            &[bad_shape, too_coarse, bad_prec, good],
+            &Executor::serial(),
+        );
+        assert!(replies[0].is_err() && replies[1].is_err() && replies[2].is_err());
+        let ok = replies[3].as_ref().unwrap();
+        assert_eq!(ok.id, 4);
+        assert_eq!(ok.batch_size, 1, "only the valid request ran");
+        assert_eq!(eng.stats().requests, 4);
+    }
+}

@@ -1,0 +1,260 @@
+//! Serve-path parity (ISSUE 7): batched serving must be bit-identical
+//! to the serial per-sample `Fno2d::forward` oracle at every precision
+//! × thread count — batching coalesces work, it never changes results.
+//! Also pinned: LRU eviction rebuilds models bit-identically, mixed
+//! batches group without reordering replies, serve-time `resample2d`
+//! super-resolution matches `evaluate_super_resolution`, and the
+//! adaptive batching server matches direct engine calls whatever the
+//! batch boundaries land on.
+//!
+//! Re-run under `PALLAS_THREADS=1` / `PALLAS_THREADS=8` (scripts/ci.sh)
+//! to rule out scheduling noise on both dispatch shapes.
+
+use mpno::coordinator::evaluate_super_resolution;
+use mpno::data::darcy_smoke_sets;
+use mpno::fp::{Bf16, F16};
+use mpno::metrics;
+use mpno::model::{Fno2d, FnoSpec};
+use mpno::parallel::Executor;
+use mpno::rng::Rng;
+use mpno::runtime::NativeEngine;
+use mpno::serve::{ServeConfig, ServeEngine, ServeRequest, Server};
+use mpno::tensor::resample::resample2d;
+use mpno::tensor::Tensor;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+const PRECISIONS: [&str; 4] = ["f64", "f32", "bf16", "f16"];
+
+fn tiny_spec(h: usize, w: usize) -> FnoSpec {
+    FnoSpec { in_channels: 2, out_channels: 1, width: 3, k_max: 2, n_layers: 2, h, w }
+}
+
+fn engine_for(spec: &FnoSpec, params: &[Tensor], precision: &str, cache: usize) -> ServeEngine {
+    let cfg = ServeConfig {
+        precision: precision.to_string(),
+        model_cache: cache,
+        ..ServeConfig::default()
+    };
+    ServeEngine::new("test", spec.clone(), params.to_vec(), &cfg).unwrap()
+}
+
+fn requests(n: usize, spec: &FnoSpec, seed: u64) -> Vec<ServeRequest> {
+    let slab = spec.in_channels * spec.h * spec.w;
+    (0..n)
+        .map(|i| {
+            let mut rng = Rng::new(seed + i as u64);
+            ServeRequest::new(
+                i as u64,
+                Tensor::from_vec(
+                    vec![spec.in_channels, spec.h, spec.w],
+                    rng.normal_vec(slab, 1.0),
+                ),
+            )
+        })
+        .collect()
+}
+
+/// The oracle: a fresh single-purpose model at the same precision and
+/// grid, fed one sample on the serial executor.
+fn oracle_forward(precision: &str, spec: &FnoSpec, params: &[Tensor], x: &Tensor) -> Tensor {
+    let refs: Vec<&Tensor> = params.iter().collect();
+    let b1 = x.reshape(&[1, spec.in_channels, spec.h, spec.w]);
+    let ex = Executor::serial();
+    let y = match precision {
+        "f64" => {
+            let mut m = Fno2d::<f64>::new(spec.clone());
+            m.set_params(&refs);
+            m.forward(&b1, &ex)
+        }
+        "f32" => {
+            let mut m = Fno2d::<f32>::new(spec.clone());
+            m.set_params(&refs);
+            m.forward(&b1, &ex)
+        }
+        "bf16" => {
+            let mut m = Fno2d::<Bf16>::new(spec.clone());
+            m.set_params(&refs);
+            m.forward(&b1, &ex)
+        }
+        "f16" => {
+            let mut m = Fno2d::<F16>::new(spec.clone());
+            m.set_params(&refs);
+            m.forward(&b1, &ex)
+        }
+        other => panic!("no oracle for precision {other:?}"),
+    };
+    y.reshape(&[spec.out_channels, spec.h, spec.w])
+}
+
+#[test]
+fn batched_serve_matches_per_sample_serial_oracle() {
+    let spec = tiny_spec(8, 8);
+    let params = spec.init_params(3);
+    let reqs = requests(5, &spec, 100);
+    for prec in PRECISIONS {
+        let oracle: Vec<Tensor> =
+            reqs.iter().map(|r| oracle_forward(prec, &spec, &params, &r.input)).collect();
+        for threads in THREAD_COUNTS {
+            let mut eng = engine_for(&spec, &params, prec, 4);
+            let replies = eng.serve_batch(&reqs, &Executor::new(threads));
+            for ((reply, want), req) in replies.iter().zip(&oracle).zip(&reqs) {
+                let reply = reply.as_ref().unwrap();
+                assert_eq!(reply.id, req.id);
+                assert_eq!(
+                    &reply.output, want,
+                    "prec={prec} threads={threads} id={}",
+                    req.id
+                );
+                assert_eq!(reply.batch_size, reqs.len());
+                assert_eq!(reply.precision, prec);
+            }
+        }
+    }
+}
+
+#[test]
+fn lru_eviction_recreates_bit_identical_models() {
+    let spec = tiny_spec(8, 8);
+    let params = spec.init_params(4);
+    // Capacity 1: any second shape evicts the first.
+    let mut eng = engine_for(&spec, &params, "f32", 1);
+    let ex = Executor::serial();
+    let r8 = requests(1, &spec, 7).remove(0);
+    let first = eng.infer_one(&r8, &ex).unwrap();
+    let again = eng.infer_one(&r8, &ex).unwrap();
+    assert_eq!(again.output, first.output, "cache hit must not change results");
+    let mut r12 = r8.clone();
+    r12.out_grid = Some((12, 12));
+    let up = eng.infer_one(&r12, &ex).unwrap();
+    assert_eq!(up.grid, (12, 12));
+    let rebuilt = eng.infer_one(&r8, &ex).unwrap();
+    assert_eq!(rebuilt.output, first.output, "evicted model must rebuild bit-identically");
+    let st = eng.stats();
+    assert_eq!(
+        (st.cache_hits, st.cache_misses, st.cache_evictions),
+        (1, 3, 2),
+        "miss, hit, miss+evict, miss+evict"
+    );
+    assert_eq!(st.requests, 4);
+    assert_eq!(st.resampled, 1, "only the 12x12 request resampled");
+}
+
+#[test]
+fn mixed_batches_group_and_preserve_order() {
+    let spec = tiny_spec(8, 8);
+    let params = spec.init_params(5);
+    let mut reqs = requests(4, &spec, 50);
+    reqs[1].precision = Some("bf16".to_string());
+    reqs[3].out_grid = Some((16, 16));
+    reqs.push(ServeRequest::new(99, Tensor::zeros(&[1, 8, 8]))); // wrong cin
+    let mut eng = engine_for(&spec, &params, "f32", 8);
+    let ex = Executor::new(2);
+    let replies = eng.serve_batch(&reqs, &ex);
+    assert_eq!(replies.len(), 5);
+    assert!(replies[4].is_err(), "a malformed request fails its slot, not the batch");
+    for (req, reply) in reqs[..4].iter().zip(&replies[..4]) {
+        assert_eq!(reply.as_ref().unwrap().id, req.id, "reply order follows request order");
+    }
+    assert_eq!(
+        replies[0].as_ref().unwrap().batch_size,
+        2,
+        "requests 0 and 2 share the (f32, 8x8) group"
+    );
+    assert_eq!(replies[1].as_ref().unwrap().precision, "bf16");
+    assert_eq!(replies[3].as_ref().unwrap().grid, (16, 16));
+    // Grouping is invisible in the outputs: each reply equals serving
+    // that request alone on a fresh engine.
+    for (req, reply) in reqs[..4].iter().zip(&replies[..4]) {
+        let mut solo = engine_for(&spec, &params, "f32", 8);
+        let alone = solo.infer_one(req, &ex).unwrap();
+        assert_eq!(alone.output, reply.as_ref().unwrap().output, "id={}", req.id);
+    }
+}
+
+#[test]
+fn serve_super_resolution_matches_evaluate_super_resolution() {
+    // The established zero-shot eval: trained-at-16 params run through a
+    // 32x32 fwd artifact against a high-res test set.
+    let (_, hires) = darcy_smoke_sets(12, 32, 8, 41).unwrap();
+    let spec16 =
+        FnoSpec { in_channels: 1, out_channels: 1, width: 4, k_max: 3, n_layers: 2, h: 16, w: 16 };
+    let params = spec16.init_params(13);
+    let spec32 = FnoSpec { h: 32, w: 32, ..spec16.clone() };
+    let batch = 4usize;
+    let mut nat = NativeEngine::new("darcy", spec32.clone(), batch);
+    let fwd = nat.artifact("f32", "fwd");
+    let (want_l2, want_h1) = evaluate_super_resolution(&mut nat, &params, &fwd, &hires).unwrap();
+
+    // The serve path at out_grid 32x32, replicating the eval loop's
+    // batching and metric averaging, must land on the same numbers.
+    let mut eng = engine_for(&spec16, &params, "f32", 4);
+    let ex = Executor::new(2);
+    let slab = 32 * 32; // cin = 1
+    let xd = hires.inputs.data();
+    let (mut l2, mut h1, mut batches) = (0.0f64, 0.0f64, 0usize);
+    let mut i = 0;
+    while i + batch <= hires.len().min(4 * batch) {
+        let idx: Vec<usize> = (i..i + batch).collect();
+        let (_, y) = hires.gather(&idx);
+        let reqs: Vec<ServeRequest> = idx
+            .iter()
+            .map(|&s| {
+                let mut r = ServeRequest::new(
+                    s as u64,
+                    Tensor::from_vec(vec![1, 32, 32], xd[s * slab..(s + 1) * slab].to_vec()),
+                );
+                r.out_grid = Some((32, 32));
+                r
+            })
+            .collect();
+        let mut pred = Vec::with_capacity(batch * slab);
+        for reply in eng.serve_batch(&reqs, &ex) {
+            pred.extend_from_slice(reply.unwrap().output.data());
+        }
+        let pred = Tensor::from_vec(vec![batch, 1, 32, 32], pred);
+        l2 += metrics::relative_l2(&pred, &y);
+        h1 += metrics::relative_h1(&pred, &y);
+        batches += 1;
+        i += batch;
+    }
+    assert!(batches > 0);
+    assert_eq!(l2 / batches as f64, want_l2, "serve zero-shot L2 == evaluate_super_resolution");
+    assert_eq!(h1 / batches as f64, want_h1, "serve zero-shot H1 == evaluate_super_resolution");
+
+    // The resample leg: a coarse 16x16 request served at 32x32 equals
+    // the oracle fed the spectrally-resampled input directly.
+    let hi_field = Tensor::from_vec(vec![32, 32], xd[..slab].to_vec());
+    let lo = resample2d(&hi_field, 16, 16);
+    let mut req = ServeRequest::new(1000, lo.reshape(&[1, 16, 16]));
+    req.out_grid = Some((32, 32));
+    let got = eng.infer_one(&req, &ex).unwrap();
+    assert!(eng.stats().resampled >= 1, "the coarse request must have been resampled");
+    let up = resample2d(&lo, 32, 32).reshape(&[1, 32, 32]);
+    let want = oracle_forward("f32", &spec32, &params, &up);
+    assert_eq!(got.output, want, "serve-time resample2d matches the manual pipeline");
+}
+
+#[test]
+fn batching_server_replies_match_direct_serving() {
+    let spec = tiny_spec(8, 8);
+    let params = spec.init_params(21);
+    let reqs = requests(10, &spec, 77);
+    let mut direct = engine_for(&spec, &params, "f32", 4);
+    let ex = Executor::serial();
+    let oracle: Vec<Tensor> =
+        reqs.iter().map(|r| direct.infer_one(r, &ex).unwrap().output).collect();
+    let server = Server::start(
+        engine_for(&spec, &params, "f32", 4),
+        4,
+        std::time::Duration::from_millis(20),
+    );
+    let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone())).collect();
+    for (rx, want) in rxs.into_iter().zip(&oracle) {
+        let reply = rx.recv().expect("worker alive").expect("request valid");
+        assert_eq!(&reply.output, want, "batch boundaries must never change a reply");
+        assert!(reply.batch_size >= 1 && reply.batch_size <= 4);
+    }
+    let st = server.shutdown().stats();
+    assert_eq!(st.requests, 10);
+    assert!(st.batches >= 3, "10 requests at max_batch 4 need at least 3 batches");
+}

@@ -4,7 +4,14 @@
 #   1. the fused spectral path must not be slower than the composed
 #      full-FFT baseline for the same shape, and
 #   2. the Hermitian half-spectrum fused path must not be slower than
-#      the full-spectrum fused path at the same shape AND thread count.
+#      the full-spectrum fused path at the same shape AND thread count,
+#      and
+#   3. batched serving must not be slower than serving the same requests
+#      one at a time at the same shape AND thread count (the `serve`
+#      section from bench_native; each pair times the same request set,
+#      so mean_s is directly comparable). Batch-1 pairs ("... b1") do
+#      identical work and are exempt — they exist to show the batching
+#      overhead is flat, not to gate on noise.
 #
 # Sections suffixed `_smoke` or `_quick` hold 1-iteration CI smoke rows /
 # quick-shape rows (see bench::bench_json_section) and are skipped — they
@@ -47,12 +54,15 @@ for section, rows in sorted(doc.items()):
     # in " fused", so classify half rows first.
     composed = {}
     fused = {}
+    unbatched = {}
     for row in rows:
         case = row.get("case", "")
         if case.endswith(" composed"):
             composed[case[: -len(" composed")]] = row
         elif case.endswith(" fused") and not case.endswith(" half fused"):
             fused[(case[: -len(" fused")], row.get("threads"))] = row
+        elif case.endswith(" unbatched"):
+            unbatched[(case[: -len(" unbatched")], row.get("threads"))] = row
     for row in rows:
         case = row.get("case", "")
         if case.endswith(" half fused"):
@@ -92,9 +102,32 @@ for section, rows in sorted(doc.items()):
                     f"check_bench: OK {tag}: fused {fused_s:.6f}s"
                     f" <= composed {comp_s:.6f}s"
                 )
+        elif case.endswith(" batched"):
+            # Gate 3: batched serving vs one-at-a-time, same shape and
+            # thread count. ("... unbatched" does not end in " batched" —
+            # the char before "batched" is 'n' — so classification is
+            # unambiguous.) Batch-1 pairs are identical work: skip.
+            shape = case[: -len(" batched")]
+            if shape.endswith(" b1"):
+                continue
+            base = unbatched.get((shape, row.get("threads")))
+            if base is None:
+                continue
+            checked += 1
+            bat_s, unb_s = row["mean_s"], base["mean_s"]
+            tag = f"{section}: {shape} (threads={row.get('threads')})"
+            if bat_s > unb_s:
+                failures.append(
+                    f"{tag}: batched {bat_s:.6f}s > unbatched {unb_s:.6f}s"
+                )
+            else:
+                print(
+                    f"check_bench: OK {tag}: batched {bat_s:.6f}s"
+                    f" <= unbatched {unb_s:.6f}s"
+                )
 
 if failures:
-    print("check_bench: SPECTRAL PATH SLOWER THAN ITS BASELINE:", file=sys.stderr)
+    print("check_bench: A GATED PATH IS SLOWER THAN ITS BASELINE:", file=sys.stderr)
     for f_ in failures:
         print(f"  {f_}", file=sys.stderr)
     sys.exit(1)

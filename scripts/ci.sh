@@ -19,6 +19,7 @@ PALLAS_THREADS=1 cargo test -q --test parallel_parity
 PALLAS_THREADS=1 cargo test -q --test spectral_parity
 PALLAS_THREADS=1 cargo test -q --test half_spectral_parity
 PALLAS_THREADS=1 cargo test -q --test native_grad
+PALLAS_THREADS=1 cargo test -q --test serve_parity
 
 # Same suites pinned to eight workers: with batch sizes below the worker
 # count the engines switch to within-sample row/column fan-out, so this
@@ -29,6 +30,7 @@ PALLAS_THREADS=8 cargo test -q --test parallel_parity
 PALLAS_THREADS=8 cargo test -q --test spectral_parity
 PALLAS_THREADS=8 cargo test -q --test half_spectral_parity
 PALLAS_THREADS=8 cargo test -q --test native_grad
+PALLAS_THREADS=8 cargo test -q --test serve_parity
 
 # End-to-end native training smoke: two full epochs through the fused
 # spectral engine (forward + hand-derived backward + Adam + loss scaler)
@@ -47,6 +49,23 @@ cargo run --release -- train --native --dataset darcy --res 20 --n 12 \
   --batch-size 2 --width 6 --modes 3 --layers 2 --epochs 2 --lr 5e-3 \
   --seed 1 --expect-improve
 
+# Serving smoke: train a tiny native model into a real checkpoint, then
+# run `mpno serve --bench` over it — the self-check mode that asserts
+# the batched replies are bitwise identical to one-at-a-time serving and
+# that the 2x zero-shot super-resolution probe stays finite. Re-run
+# pinned to one worker (and at bf16) so the serial dispatch shape and a
+# low-precision variant both execute end to end from the CLI.
+echo "== serving smoke (mpno serve --bench over a trained checkpoint) =="
+SERVE_CK="$(mktemp -t mpno_serve_ck.XXXXXX)"
+cargo run --release -- train --native --dataset darcy --res 16 --n 12 \
+  --batch-size 2 --width 6 --modes 3 --layers 2 --epochs 2 --lr 5e-3 \
+  --seed 1 --checkpoint "$SERVE_CK"
+cargo run --release -- serve --checkpoint "$SERVE_CK" --bench --n 8 \
+  --max-batch 4
+PALLAS_THREADS=1 cargo run --release -- serve --checkpoint "$SERVE_CK" \
+  --bench --n 8 --max-batch 4 --precision bf16
+rm -f "$SERVE_CK"
+
 # Bench smoke: MPNO_BENCH_SMOKE=1 collapses bench_auto to 1 warmup +
 # 1 iteration per case (see rust/src/bench/mod.rs), so every bench and
 # experiment driver is compiled AND executed on each CI pass without
@@ -62,8 +81,9 @@ MPNO_BENCH_SMOKE=1 cargo bench --bench bench_runtime
 MPNO_BENCH_SMOKE=1 cargo bench --bench bench_native
 MPNO_BENCH_SMOKE=1 cargo run --release -- bench-par --quick --json
 
-# Regression gate on the recorded (non-smoke) spectral bench rows: the
-# fused path must never be slower than the composed baseline, and the
-# Hermitian half-spectrum path must never be slower than the
-# full-spectrum fused path at the same shape and thread count.
+# Regression gate on the recorded (non-smoke) bench rows: the fused
+# path must never be slower than the composed baseline, the Hermitian
+# half-spectrum path must never be slower than the full-spectrum fused
+# path at the same shape and thread count, and batched serving must
+# never be slower than serving the same requests one at a time.
 ./scripts/check_bench.sh
