@@ -1,14 +1,21 @@
 //! Contraction-engine micro-benchmarks (Tables 8/9/10 machinery):
 //! planner strategies, path caching, view-as-real execution options and
-//! serial-vs-parallel einsum execution.
+//! serial-vs-parallel einsum execution, plus paired lane-vs-reference
+//! rows for the SoA mode-contraction kernels (f64/f32/bf16/f16) written
+//! to the `bench_contract` section of `BENCH_spectral.json` for the
+//! lane gate in `scripts/check_bench.sh`.
 //! Run: `cargo bench --bench bench_contract` (threads via PALLAS_THREADS)
 
-use mpno::bench::{bench_auto, speedup, Table};
+use mpno::bench::{
+    bench_auto, bench_json_path, bench_json_section, bench_soa_lane_pair, smoke_mode, speedup,
+    update_bench_json, Table,
+};
 use mpno::contract::{
     contract_complex, contract_complex_with, plan, EinsumExpr, PathCache, PathStrategy,
     ViewAsReal,
 };
-use mpno::fp::Cplx;
+use mpno::fp::{Bf16, Cplx, F16};
+use mpno::jsonlite::Json;
 use mpno::parallel::Executor;
 use mpno::rng::Rng;
 use mpno::tensor::CTensor;
@@ -114,6 +121,22 @@ fn main() {
             format!("{:.2}x", speedup(&serial, &parallel)),
             String::new(),
         ]);
+    }
+
+    // Paired lane-vs-reference SoA kernel rows (the lane gate of
+    // scripts/check_bench.sh), at an FNO-ish shape per precision.
+    println!("\n-- SoA lane kernels vs scalar reference (threads=1) --");
+    let (ci, co, k_max) = if smoke_mode() { (4usize, 4usize, 2usize) } else { (16, 16, 8) };
+    let mut rows: Vec<Json> = Vec::new();
+    bench_soa_lane_pair::<f64>("soa", ci, co, k_max, 0.3, &mut rows);
+    bench_soa_lane_pair::<f32>("soa", ci, co, k_max, 0.3, &mut rows);
+    bench_soa_lane_pair::<Bf16>("soa", ci, co, k_max, 0.3, &mut rows);
+    bench_soa_lane_pair::<F16>("soa", ci, co, k_max, 0.3, &mut rows);
+    let path = bench_json_path();
+    let section = bench_json_section("bench_contract", false);
+    match update_bench_json(&path, &section, rows) {
+        Ok(()) => println!("  [saved {} ({section})]", path.display()),
+        Err(e) => eprintln!("  !! could not write {}: {e:#}", path.display()),
     }
     t.print();
 }

@@ -11,9 +11,10 @@
 //! Run: `cargo bench --bench bench_native`.
 
 use mpno::bench::{
-    bench_auto, bench_json_path, bench_json_section, smoke_mode, speedup, update_bench_json,
+    bench_auto, bench_json_path, bench_json_section, bench_soa_lane_pair, smoke_mode, speedup,
+    update_bench_json,
 };
-use mpno::fp::{Bf16, Scalar};
+use mpno::fp::{Bf16, F16, Scalar};
 use mpno::jsonlite::Json;
 use mpno::model::{Fno2d, FnoSpec};
 use mpno::parallel::Executor;
@@ -174,6 +175,13 @@ fn main() {
     bench_precision::<f32>(&spec, batch, 0.5, &par, &mut rows);
     bench_precision::<Bf16>(&spec, batch, 0.5, &par, &mut rows);
     bench_spectral_pair(batch, res, width, k_max, 0.4, &par, &mut rows);
+    // Paired lane-vs-reference contraction rows at the model shape
+    // (ci = co = width), at the low precisions the schedule runs —
+    // the lane gate of scripts/check_bench.sh reads these too.
+    println!("-- SoA lane kernels vs scalar reference at the model shape (threads=1) --");
+    bench_soa_lane_pair::<f32>("native contract", width, width, k_max, 0.2, &mut rows);
+    bench_soa_lane_pair::<Bf16>("native contract", width, width, k_max, 0.2, &mut rows);
+    bench_soa_lane_pair::<F16>("native contract", width, width, k_max, 0.2, &mut rows);
     let path = bench_json_path();
     let section = bench_json_section("bench_native", false);
     match update_bench_json(&path, &section, rows) {

@@ -165,6 +165,127 @@ pub fn update_bench_json(path: &Path, section: &str, entries: Vec<Json>) -> anyh
     Ok(())
 }
 
+/// Paired lane-vs-reference rows for the SoA mode-contraction kernels
+/// at one (ci, co, k_max) shape and precision: four rows (forward and
+/// adjoint × reference and lane), tagged `threads = 1` since the
+/// kernels run per sample inside a single worker. Case tags end in
+/// `" reference"` / `" lane"` at matching shape+precision so gate 4 of
+/// `scripts/check_bench.sh` can pair them; `tag` prefixes the case so
+/// different bench binaries' sections never collide on a pair key.
+pub fn bench_soa_lane_pair<S: crate::fp::Scalar>(
+    tag: &str,
+    ci: usize,
+    co: usize,
+    k_max: usize,
+    budget_s: f64,
+    rows: &mut Vec<Json>,
+) {
+    use crate::contract::{
+        contract_modes_soa, contract_modes_soa_adjoint, contract_modes_soa_adjoint_lanes,
+        contract_modes_soa_lanes, LaneScratch,
+    };
+    let n_modes = 2 * k_max * (k_max + 1);
+    let field = |n: usize, seed: u64| -> Vec<S> {
+        let mut rng = crate::rng::Rng::new(seed);
+        (0..n).map(|_| S::from_f64(rng.normal())).collect()
+    };
+    let x_re = field(ci * n_modes, 3);
+    let x_im = field(ci * n_modes, 4);
+    let w_re = field(n_modes * ci * co, 5);
+    let w_im = field(n_modes * ci * co, 6);
+    let g_re = field(co * n_modes, 7);
+    let g_im = field(co * n_modes, 8);
+    let mut tmp_mo_re = vec![S::zero(); n_modes * co];
+    let mut tmp_mo_im = vec![S::zero(); n_modes * co];
+    let mut tmp_mi_re = vec![S::zero(); n_modes * ci];
+    let mut tmp_mi_im = vec![S::zero(); n_modes * ci];
+    let mut out_re = vec![S::zero(); co * n_modes];
+    let mut out_im = vec![S::zero(); co * n_modes];
+    let mut gx_re = vec![S::zero(); ci * n_modes];
+    let mut gx_im = vec![S::zero(); ci * n_modes];
+    let mut scratch = LaneScratch::default();
+
+    let shape = format!("{tag} fwd {} ci{ci} co{co} m{n_modes}", S::name());
+    let reference = bench_auto(&format!("{shape} reference"), budget_s, || {
+        contract_modes_soa(
+            &x_re,
+            &x_im,
+            &w_re,
+            &w_im,
+            ci,
+            co,
+            n_modes,
+            &mut tmp_mo_re,
+            &mut tmp_mo_im,
+            &mut out_re,
+            &mut out_im,
+        );
+        std::hint::black_box(out_re[0]);
+    });
+    println!("{reference}");
+    let lane = bench_auto(&format!("{shape} lane"), budget_s, || {
+        contract_modes_soa_lanes(
+            &x_re,
+            &x_im,
+            &w_re,
+            &w_im,
+            ci,
+            co,
+            n_modes,
+            &mut tmp_mo_re,
+            &mut tmp_mo_im,
+            &mut out_re,
+            &mut out_im,
+            &mut scratch,
+        );
+        std::hint::black_box(out_re[0]);
+    });
+    println!("{lane}");
+    println!("  -> lane vs reference (fwd): {:.2}x", speedup(&reference, &lane));
+    rows.push(reference.to_json_tagged(&format!("{shape} reference"), 1));
+    rows.push(lane.to_json_tagged(&format!("{shape} lane"), 1));
+
+    let shape = format!("{tag} adj {} ci{ci} co{co} m{n_modes}", S::name());
+    let reference = bench_auto(&format!("{shape} reference"), budget_s, || {
+        contract_modes_soa_adjoint(
+            &g_re,
+            &g_im,
+            &w_re,
+            &w_im,
+            ci,
+            co,
+            n_modes,
+            &mut tmp_mi_re,
+            &mut tmp_mi_im,
+            &mut gx_re,
+            &mut gx_im,
+        );
+        std::hint::black_box(gx_re[0]);
+    });
+    println!("{reference}");
+    let lane = bench_auto(&format!("{shape} lane"), budget_s, || {
+        contract_modes_soa_adjoint_lanes(
+            &g_re,
+            &g_im,
+            &w_re,
+            &w_im,
+            ci,
+            co,
+            n_modes,
+            &mut tmp_mi_re,
+            &mut tmp_mi_im,
+            &mut gx_re,
+            &mut gx_im,
+            &mut scratch,
+        );
+        std::hint::black_box(gx_re[0]);
+    });
+    println!("{lane}");
+    println!("  -> lane vs reference (adj): {:.2}x", speedup(&reference, &lane));
+    rows.push(reference.to_json_tagged(&format!("{shape} reference"), 1));
+    rows.push(lane.to_json_tagged(&format!("{shape} lane"), 1));
+}
+
 /// Format seconds human-readably.
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-6 {

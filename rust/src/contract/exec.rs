@@ -13,6 +13,7 @@
 
 use super::expr::EinsumExpr;
 use super::path::{PlannedPath, PathStrategy};
+use crate::fp::lanes::vfill;
 use crate::fp::{Cplx, Scalar};
 use crate::parallel::Executor;
 use crate::tensor::{for_each_index, CTensor, NdArray, Tensor};
@@ -50,9 +51,7 @@ pub fn contract_modes<S: Scalar>(
     assert_eq!(w_mio.len(), n_modes * ci * co, "w must be (n_modes, ci, co)");
     assert_eq!(tmp_mo.len(), n_modes * co, "tmp must be (n_modes, co)");
     assert_eq!(out.len(), co * n_modes, "out must be (co, n_modes)");
-    for v in tmp_mo.iter_mut() {
-        *v = Cplx::zero();
-    }
+    vfill(tmp_mo, Cplx::zero());
     for m in 0..n_modes {
         let orow = &mut tmp_mo[m * co..(m + 1) * co];
         for ic in 0..ci {
@@ -92,9 +91,7 @@ pub fn contract_modes_adjoint<S: Scalar>(
     assert_eq!(w_mio.len(), n_modes * ci * co, "w must be (n_modes, ci, co)");
     assert_eq!(tmp_mi.len(), n_modes * ci, "tmp must be (n_modes, ci)");
     assert_eq!(out.len(), ci * n_modes, "out must be (ci, n_modes)");
-    for v in tmp_mi.iter_mut() {
-        *v = Cplx::zero();
-    }
+    vfill(tmp_mi, Cplx::zero());
     for m in 0..n_modes {
         let irow = &mut tmp_mi[m * ci..(m + 1) * ci];
         for o in 0..co {
@@ -146,12 +143,8 @@ pub fn contract_modes_soa<S: Scalar>(
     assert_eq!(tmp_im.len(), n_modes * co, "tmp must be (n_modes, co)");
     assert_eq!(out_re.len(), co * n_modes, "out must be (co, n_modes)");
     assert_eq!(out_im.len(), co * n_modes, "out must be (co, n_modes)");
-    for v in tmp_re.iter_mut() {
-        *v = S::zero();
-    }
-    for v in tmp_im.iter_mut() {
-        *v = S::zero();
-    }
+    vfill(tmp_re, S::zero());
+    vfill(tmp_im, S::zero());
     for m in 0..n_modes {
         let (orow_re, orow_im) =
             (&mut tmp_re[m * co..(m + 1) * co], &mut tmp_im[m * co..(m + 1) * co]);
@@ -210,12 +203,8 @@ pub fn contract_modes_soa_adjoint<S: Scalar>(
     assert_eq!(tmp_im.len(), n_modes * ci, "tmp must be (n_modes, ci)");
     assert_eq!(out_re.len(), ci * n_modes, "out must be (ci, n_modes)");
     assert_eq!(out_im.len(), ci * n_modes, "out must be (ci, n_modes)");
-    for v in tmp_re.iter_mut() {
-        *v = S::zero();
-    }
-    for v in tmp_im.iter_mut() {
-        *v = S::zero();
-    }
+    vfill(tmp_re, S::zero());
+    vfill(tmp_im, S::zero());
     for m in 0..n_modes {
         let (irow_re, irow_im) =
             (&mut tmp_re[m * ci..(m + 1) * ci], &mut tmp_im[m * ci..(m + 1) * ci]);

@@ -1,0 +1,556 @@
+//! Lane-kernel rewrites of the SoA mode contraction
+//! ([`super::exec::contract_modes_soa`] and its adjoint) on top of the
+//! [`crate::fp::lanes`] primitives.
+//!
+//! Both kernels keep the reference kernels' accumulation order exactly —
+//! forward: ascending `ic` per `(m, o)`; adjoint: ascending `o` per
+//! `(m, i)` — so every output element sees the *same op sequence* as the
+//! reference and the results are bit-identical at every [`Scalar`]
+//! precision (`tests/lane_parity.rs` sweeps shapes, precisions and
+//! thread counts; the unit tests below sweep ragged shapes). What
+//! changes is only *how* the same scalars are streamed:
+//!
+//! * **Native formats** (`f64`, `f32`): the forward kernel register-tiles
+//!   [`LANE`]-wide `o` blocks (held across the whole `ic` loop) in
+//!   `MTILE`×`LANE` `m`×`o` blocks; the adjoint tiles `i` the same way
+//!   across the `o` loop. Scalar tails cover ragged `co`/`ci`/`n_modes`.
+//! * **Emulated formats** ([`Scalar::lanes_via_f32`]): every scalar op
+//!   is "exact-widen → f32 op → round", so the per-op conversions are
+//!   hoisted into f32 conversion planes converted once per call
+//!   (the adjoint converts the weight **transposed** so its hot loops
+//!   stay stride-1), with [`Scalar::round_f32`] applied after every op.
+//!   The f32 intermediates are bit-equal to the scalar path's widened
+//!   images, so narrowing the final plane reproduces the reference
+//!   bits (see the module docs of [`crate::fp::lanes`]).
+//!
+//! **Scratch contract:** on the emulated-format path the `tmp_re` /
+//! `tmp_im` slices are *left untouched* — accumulation happens in the
+//! f32 planes of [`LaneScratch`] instead. Callers must treat `tmp` as
+//! opaque scratch (both in-tree callers do); parity is defined on
+//! `out_re` / `out_im` only.
+
+use crate::fp::lanes::{grow_plane, to_f32_plane, vcmadd_plane, LANE};
+use crate::fp::Scalar;
+
+/// `m`-block height of the forward kernel's register tile: two
+/// independent accumulator sets double the in-flight dependency chains
+/// without touching per-element order.
+const MTILE: usize = 2;
+
+/// Reusable f32 conversion-plane arena for the lane contraction kernels
+/// (only touched on the [`Scalar::lanes_via_f32`] path). Buffers grow
+/// monotonically and are reused across calls, so a batch loop converts
+/// without allocating.
+#[derive(Debug, Default)]
+pub struct LaneScratch {
+    /// Weight real plane — forward layout `(n_modes, ci, co)`; the
+    /// adjoint stores the transposed `(n_modes, co, ci)` image instead.
+    pub wr: Vec<f32>,
+    /// Weight imaginary plane (the adjoint stores it *negated*: the
+    /// conjugate enters the kernel as `-w_im`, and negation is an exact
+    /// sign flip that commutes with the exact widening).
+    pub wi: Vec<f32>,
+    /// Accumulator plane, real part — `(n_modes, co)` forward,
+    /// `(n_modes, ci)` adjoint.
+    pub tr: Vec<f32>,
+    /// Accumulator plane, imaginary part.
+    pub ti: Vec<f32>,
+}
+
+/// Lane-kernel twin of [`super::exec::contract_modes_soa`]: identical
+/// signature, layouts and asserts, plus the [`LaneScratch`] arena.
+/// Bit-identical output at every precision; `tmp_re`/`tmp_im` are left
+/// untouched on the emulated-format path (see the module docs).
+#[allow(clippy::too_many_arguments)]
+pub fn contract_modes_soa_lanes<S: Scalar>(
+    x_re: &[S],
+    x_im: &[S],
+    w_re: &[S],
+    w_im: &[S],
+    ci: usize,
+    co: usize,
+    n_modes: usize,
+    tmp_re: &mut [S],
+    tmp_im: &mut [S],
+    out_re: &mut [S],
+    out_im: &mut [S],
+    scratch: &mut LaneScratch,
+) {
+    assert_eq!(x_re.len(), ci * n_modes, "x must be (ci, n_modes)");
+    assert_eq!(x_im.len(), ci * n_modes, "x must be (ci, n_modes)");
+    assert_eq!(w_re.len(), n_modes * ci * co, "w must be (n_modes, ci, co)");
+    assert_eq!(w_im.len(), n_modes * ci * co, "w must be (n_modes, ci, co)");
+    assert_eq!(tmp_re.len(), n_modes * co, "tmp must be (n_modes, co)");
+    assert_eq!(tmp_im.len(), n_modes * co, "tmp must be (n_modes, co)");
+    assert_eq!(out_re.len(), co * n_modes, "out must be (co, n_modes)");
+    assert_eq!(out_im.len(), co * n_modes, "out must be (co, n_modes)");
+    if S::lanes_via_f32() {
+        fwd_planes::<S>(x_re, x_im, w_re, w_im, ci, co, n_modes, out_re, out_im, scratch);
+        return;
+    }
+    // Generic register-tiled path. Every (m, o) accumulator starts from
+    // S::zero() and adds in ascending ic — the reference sequence — so
+    // no zero-fill pass is needed: each tmp element is stored once.
+    let mut m0 = 0;
+    while m0 + MTILE <= n_modes {
+        fwd_pair_generic(x_re, x_im, w_re, w_im, ci, co, n_modes, m0, tmp_re, tmp_im);
+        m0 += MTILE;
+    }
+    for m in m0..n_modes {
+        let orow_re = &mut tmp_re[m * co..(m + 1) * co];
+        let orow_im = &mut tmp_im[m * co..(m + 1) * co];
+        fwd_row_generic(x_re, x_im, w_re, w_im, ci, co, n_modes, m, orow_re, orow_im);
+    }
+    // Output permutation (m, o) -> (o, m): pure data movement, exact.
+    for o in 0..co {
+        for m in 0..n_modes {
+            out_re[o * n_modes + m] = tmp_re[m * co + o];
+            out_im[o * n_modes + m] = tmp_im[m * co + o];
+        }
+    }
+}
+
+/// One `m` row of the generic forward kernel: [`LANE`]-wide `o` tiles
+/// of register accumulators held across the full ascending-`ic` loop,
+/// then a scalar `o` tail.
+#[allow(clippy::too_many_arguments)]
+fn fwd_row_generic<S: Scalar>(
+    x_re: &[S],
+    x_im: &[S],
+    w_re: &[S],
+    w_im: &[S],
+    ci: usize,
+    co: usize,
+    n_modes: usize,
+    m: usize,
+    orow_re: &mut [S],
+    orow_im: &mut [S],
+) {
+    let mut o0 = 0;
+    while o0 + LANE <= co {
+        let mut acc_re = [S::zero(); LANE];
+        let mut acc_im = [S::zero(); LANE];
+        for ic in 0..ci {
+            let ar = x_re[ic * n_modes + m];
+            let ai = x_im[ic * n_modes + m];
+            let base = (m * ci + ic) * co + o0;
+            let br: &[S; LANE] = (&w_re[base..base + LANE]).try_into().unwrap();
+            let bi: &[S; LANE] = (&w_im[base..base + LANE]).try_into().unwrap();
+            for k in 0..LANE {
+                let ac = ar.mul(br[k]);
+                let bd = ai.mul(bi[k]);
+                let ad = ar.mul(bi[k]);
+                let bc = ai.mul(br[k]);
+                acc_re[k] = acc_re[k].add(ac.sub(bd));
+                acc_im[k] = acc_im[k].add(ad.add(bc));
+            }
+        }
+        orow_re[o0..o0 + LANE].copy_from_slice(&acc_re);
+        orow_im[o0..o0 + LANE].copy_from_slice(&acc_im);
+        o0 += LANE;
+    }
+    for o in o0..co {
+        let mut are = S::zero();
+        let mut aim = S::zero();
+        for ic in 0..ci {
+            let ar = x_re[ic * n_modes + m];
+            let ai = x_im[ic * n_modes + m];
+            let base = (m * ci + ic) * co + o;
+            let br = w_re[base];
+            let bi = w_im[base];
+            let ac = ar.mul(br);
+            let bd = ai.mul(bi);
+            let ad = ar.mul(bi);
+            let bc = ai.mul(br);
+            are = are.add(ac.sub(bd));
+            aim = aim.add(ad.add(bc));
+        }
+        orow_re[o] = are;
+        orow_im[o] = aim;
+    }
+}
+
+/// An `MTILE`×[`LANE`] `m`×`o` register block of the generic forward
+/// kernel: each `m` keeps its own accumulator pair, both advanced in
+/// the same ascending-`ic` sweep, so the per-`(m, o)` op sequence is
+/// unchanged while two dependency chains are in flight.
+#[allow(clippy::too_many_arguments)]
+fn fwd_pair_generic<S: Scalar>(
+    x_re: &[S],
+    x_im: &[S],
+    w_re: &[S],
+    w_im: &[S],
+    ci: usize,
+    co: usize,
+    n_modes: usize,
+    m0: usize,
+    tmp_re: &mut [S],
+    tmp_im: &mut [S],
+) {
+    let mut o0 = 0;
+    while o0 + LANE <= co {
+        let mut acc_re = [[S::zero(); LANE]; MTILE];
+        let mut acc_im = [[S::zero(); LANE]; MTILE];
+        for ic in 0..ci {
+            for t in 0..MTILE {
+                let m = m0 + t;
+                let ar = x_re[ic * n_modes + m];
+                let ai = x_im[ic * n_modes + m];
+                let base = (m * ci + ic) * co + o0;
+                let br: &[S; LANE] = (&w_re[base..base + LANE]).try_into().unwrap();
+                let bi: &[S; LANE] = (&w_im[base..base + LANE]).try_into().unwrap();
+                for k in 0..LANE {
+                    let ac = ar.mul(br[k]);
+                    let bd = ai.mul(bi[k]);
+                    let ad = ar.mul(bi[k]);
+                    let bc = ai.mul(br[k]);
+                    acc_re[t][k] = acc_re[t][k].add(ac.sub(bd));
+                    acc_im[t][k] = acc_im[t][k].add(ad.add(bc));
+                }
+            }
+        }
+        for t in 0..MTILE {
+            let m = m0 + t;
+            tmp_re[m * co + o0..m * co + o0 + LANE].copy_from_slice(&acc_re[t]);
+            tmp_im[m * co + o0..m * co + o0 + LANE].copy_from_slice(&acc_im[t]);
+        }
+        o0 += LANE;
+    }
+    for o in o0..co {
+        for t in 0..MTILE {
+            let m = m0 + t;
+            let mut are = S::zero();
+            let mut aim = S::zero();
+            for ic in 0..ci {
+                let ar = x_re[ic * n_modes + m];
+                let ai = x_im[ic * n_modes + m];
+                let base = (m * ci + ic) * co + o;
+                let br = w_re[base];
+                let bi = w_im[base];
+                let ac = ar.mul(br);
+                let bd = ai.mul(bi);
+                let ad = ar.mul(bi);
+                let bc = ai.mul(br);
+                are = are.add(ac.sub(bd));
+                aim = aim.add(ad.add(bc));
+            }
+            tmp_re[m * co + o] = are;
+            tmp_im[m * co + o] = aim;
+        }
+    }
+}
+
+/// Forward conversion-plane path: weight planes converted once per
+/// call, `o` register tiles of f32 accumulators with per-op
+/// [`Scalar::round_f32`], narrowed during the output permutation.
+#[allow(clippy::too_many_arguments)]
+fn fwd_planes<S: Scalar>(
+    x_re: &[S],
+    x_im: &[S],
+    w_re: &[S],
+    w_im: &[S],
+    ci: usize,
+    co: usize,
+    n_modes: usize,
+    out_re: &mut [S],
+    out_im: &mut [S],
+    scratch: &mut LaneScratch,
+) {
+    let LaneScratch { wr, wi, tr, ti } = scratch;
+    let wr = grow_plane(wr, w_re.len());
+    let wi = grow_plane(wi, w_im.len());
+    to_f32_plane(w_re, wr);
+    to_f32_plane(w_im, wi);
+    let tr = grow_plane(tr, n_modes * co);
+    let ti = grow_plane(ti, n_modes * co);
+    for m in 0..n_modes {
+        let mut o0 = 0;
+        while o0 + LANE <= co {
+            let mut acc_re = [0.0f32; LANE];
+            let mut acc_im = [0.0f32; LANE];
+            for ic in 0..ci {
+                let ar = x_re[ic * n_modes + m].to_f32_lane();
+                let ai = x_im[ic * n_modes + m].to_f32_lane();
+                let base = (m * ci + ic) * co + o0;
+                let br: &[f32; LANE] = (&wr[base..base + LANE]).try_into().unwrap();
+                let bi: &[f32; LANE] = (&wi[base..base + LANE]).try_into().unwrap();
+                for k in 0..LANE {
+                    let ac = S::round_f32(ar * br[k]);
+                    let bd = S::round_f32(ai * bi[k]);
+                    let ad = S::round_f32(ar * bi[k]);
+                    let bc = S::round_f32(ai * br[k]);
+                    acc_re[k] = S::round_f32(acc_re[k] + S::round_f32(ac - bd));
+                    acc_im[k] = S::round_f32(acc_im[k] + S::round_f32(ad + bc));
+                }
+            }
+            tr[m * co + o0..m * co + o0 + LANE].copy_from_slice(&acc_re);
+            ti[m * co + o0..m * co + o0 + LANE].copy_from_slice(&acc_im);
+            o0 += LANE;
+        }
+        for o in o0..co {
+            let mut are = 0.0f32;
+            let mut aim = 0.0f32;
+            for ic in 0..ci {
+                let ar = x_re[ic * n_modes + m].to_f32_lane();
+                let ai = x_im[ic * n_modes + m].to_f32_lane();
+                let base = (m * ci + ic) * co + o;
+                let br = wr[base];
+                let bi = wi[base];
+                let ac = S::round_f32(ar * br);
+                let bd = S::round_f32(ai * bi);
+                let ad = S::round_f32(ar * bi);
+                let bc = S::round_f32(ai * br);
+                are = S::round_f32(are + S::round_f32(ac - bd));
+                aim = S::round_f32(aim + S::round_f32(ad + bc));
+            }
+            tr[m * co + o] = are;
+            ti[m * co + o] = aim;
+        }
+    }
+    // Narrowing permutation (m, o) -> (o, m): each plane value is a
+    // round_f32 image, so from_f32_lane narrows it round-trip-stably.
+    for o in 0..co {
+        for m in 0..n_modes {
+            out_re[o * n_modes + m] = S::from_f32_lane(tr[m * co + o]);
+            out_im[o * n_modes + m] = S::from_f32_lane(ti[m * co + o]);
+        }
+    }
+}
+
+/// Lane-kernel twin of [`super::exec::contract_modes_soa_adjoint`]:
+/// identical signature, layouts, asserts and ascending-`o` accumulation
+/// order, plus the [`LaneScratch`] arena. `tmp_re`/`tmp_im` are left
+/// untouched on the emulated-format path (see the module docs).
+#[allow(clippy::too_many_arguments)]
+pub fn contract_modes_soa_adjoint_lanes<S: Scalar>(
+    g_re: &[S],
+    g_im: &[S],
+    w_re: &[S],
+    w_im: &[S],
+    ci: usize,
+    co: usize,
+    n_modes: usize,
+    tmp_re: &mut [S],
+    tmp_im: &mut [S],
+    out_re: &mut [S],
+    out_im: &mut [S],
+    scratch: &mut LaneScratch,
+) {
+    assert_eq!(g_re.len(), co * n_modes, "g must be (co, n_modes)");
+    assert_eq!(g_im.len(), co * n_modes, "g must be (co, n_modes)");
+    assert_eq!(w_re.len(), n_modes * ci * co, "w must be (n_modes, ci, co)");
+    assert_eq!(w_im.len(), n_modes * ci * co, "w must be (n_modes, ci, co)");
+    assert_eq!(tmp_re.len(), n_modes * ci, "tmp must be (n_modes, ci)");
+    assert_eq!(tmp_im.len(), n_modes * ci, "tmp must be (n_modes, ci)");
+    assert_eq!(out_re.len(), ci * n_modes, "out must be (ci, n_modes)");
+    assert_eq!(out_im.len(), ci * n_modes, "out must be (ci, n_modes)");
+    if S::lanes_via_f32() {
+        adj_planes::<S>(g_re, g_im, w_re, w_im, ci, co, n_modes, out_re, out_im, scratch);
+        return;
+    }
+    // Generic register-tiled path: LANE-wide i tiles held across the
+    // ascending-o loop, strided weight gathers, scalar i tail.
+    for m in 0..n_modes {
+        let mut i0 = 0;
+        while i0 + LANE <= ci {
+            let mut acc_re = [S::zero(); LANE];
+            let mut acc_im = [S::zero(); LANE];
+            for o in 0..co {
+                let gr = g_re[o * n_modes + m];
+                let gi = g_im[o * n_modes + m];
+                for k in 0..LANE {
+                    let idx = (m * ci + i0 + k) * co + o;
+                    let wr = w_re[idx];
+                    let nwi = w_im[idx].neg();
+                    let ac = gr.mul(wr);
+                    let bd = gi.mul(nwi);
+                    let ad = gr.mul(nwi);
+                    let bc = gi.mul(wr);
+                    acc_re[k] = acc_re[k].add(ac.sub(bd));
+                    acc_im[k] = acc_im[k].add(ad.add(bc));
+                }
+            }
+            tmp_re[m * ci + i0..m * ci + i0 + LANE].copy_from_slice(&acc_re);
+            tmp_im[m * ci + i0..m * ci + i0 + LANE].copy_from_slice(&acc_im);
+            i0 += LANE;
+        }
+        for i in i0..ci {
+            let mut are = S::zero();
+            let mut aim = S::zero();
+            for o in 0..co {
+                let gr = g_re[o * n_modes + m];
+                let gi = g_im[o * n_modes + m];
+                let idx = (m * ci + i) * co + o;
+                let wr = w_re[idx];
+                let nwi = w_im[idx].neg();
+                let ac = gr.mul(wr);
+                let bd = gi.mul(nwi);
+                let ad = gr.mul(nwi);
+                let bc = gi.mul(wr);
+                are = are.add(ac.sub(bd));
+                aim = aim.add(ad.add(bc));
+            }
+            tmp_re[m * ci + i] = are;
+            tmp_im[m * ci + i] = aim;
+        }
+    }
+    // Output permutation (m, i) -> (i, m): pure data movement, exact.
+    for i in 0..ci {
+        for m in 0..n_modes {
+            out_re[i * n_modes + m] = tmp_re[m * ci + i];
+            out_im[i * n_modes + m] = tmp_im[m * ci + i];
+        }
+    }
+}
+
+/// Adjoint conversion-plane path: the weight is converted **transposed**
+/// — `wt[(m·co + o)·ci + i]` holds the widened image of
+/// `w[(m·ci + i)·co + o]`, with the imaginary plane negated (the
+/// conjugate's `-w_im`, an exact sign flip commuting with the exact
+/// widening) — so the hot accumulation runs stride-1 over `i` via
+/// [`vcmadd_plane`] in the reference kernel's exact op order.
+#[allow(clippy::too_many_arguments)]
+fn adj_planes<S: Scalar>(
+    g_re: &[S],
+    g_im: &[S],
+    w_re: &[S],
+    w_im: &[S],
+    ci: usize,
+    co: usize,
+    n_modes: usize,
+    out_re: &mut [S],
+    out_im: &mut [S],
+    scratch: &mut LaneScratch,
+) {
+    let LaneScratch { wr, wi, tr, ti } = scratch;
+    let wtr = grow_plane(wr, w_re.len());
+    let wti = grow_plane(wi, w_im.len());
+    // Read-sequential transpose-convert (scatter-write into the planes).
+    let mut src = 0;
+    for m in 0..n_modes {
+        for i in 0..ci {
+            for o in 0..co {
+                let dst = (m * co + o) * ci + i;
+                wtr[dst] = w_re[src].to_f32_lane();
+                wti[dst] = -w_im[src].to_f32_lane();
+                src += 1;
+            }
+        }
+    }
+    let tr = grow_plane(tr, n_modes * ci);
+    let ti = grow_plane(ti, n_modes * ci);
+    for m in 0..n_modes {
+        let trow_re = &mut tr[m * ci..(m + 1) * ci];
+        let trow_im = &mut ti[m * ci..(m + 1) * ci];
+        trow_re.fill(0.0);
+        trow_im.fill(0.0);
+        for o in 0..co {
+            let gr = g_re[o * n_modes + m].to_f32_lane();
+            let gi = g_im[o * n_modes + m].to_f32_lane();
+            let base = (m * co + o) * ci;
+            let (row_r, row_i) = (&wtr[base..base + ci], &wti[base..base + ci]);
+            vcmadd_plane::<S>(trow_re, trow_im, gr, gi, row_r, row_i);
+        }
+    }
+    // Narrowing permutation (m, i) -> (i, m).
+    for i in 0..ci {
+        for m in 0..n_modes {
+            out_re[i * n_modes + m] = S::from_f32_lane(tr[m * ci + i]);
+            out_im[i * n_modes + m] = S::from_f32_lane(ti[m * ci + i]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::contract::exec::{contract_modes_soa, contract_modes_soa_adjoint};
+    use crate::fp::{Bf16, Tf32, F16};
+    use crate::rng::Rng;
+
+    /// Ragged shapes: co/ci off the LANE grid, n_modes odd (exercising
+    /// the MTILE tail), plus LANE-aligned and degenerate cases.
+    const SHAPES: [(usize, usize, usize); 6] =
+        [(1, 1, 1), (3, 5, 7), (2, 8, 4), (5, 9, 11), (8, 16, 8), (4, 3, 2)];
+
+    fn svec<S: Scalar>(n: usize, seed: u64) -> Vec<S> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| S::from_f64(rng.normal())).collect()
+    }
+
+    fn bits<S: Scalar>(a: &[S]) -> Vec<u64> {
+        a.iter().map(|v| v.to_f64().to_bits()).collect()
+    }
+
+    fn fwd_case<S: Scalar>() {
+        let mut scratch = LaneScratch::default();
+        for &(ci, co, n_modes) in &SHAPES {
+            let xr = svec::<S>(ci * n_modes, 1);
+            let xi = svec::<S>(ci * n_modes, 2);
+            let wr = svec::<S>(n_modes * ci * co, 3);
+            let wi = svec::<S>(n_modes * ci * co, 4);
+            let mut tr = vec![S::zero(); n_modes * co];
+            let mut ti = vec![S::zero(); n_modes * co];
+            let mut yr = vec![S::zero(); co * n_modes];
+            let mut yi = vec![S::zero(); co * n_modes];
+            contract_modes_soa(
+                &xr, &xi, &wr, &wi, ci, co, n_modes, &mut tr, &mut ti, &mut yr, &mut yi,
+            );
+            let mut ltr = vec![S::zero(); n_modes * co];
+            let mut lti = vec![S::zero(); n_modes * co];
+            let mut lr = vec![S::zero(); co * n_modes];
+            let mut li = vec![S::zero(); co * n_modes];
+            contract_modes_soa_lanes(
+                &xr, &xi, &wr, &wi, ci, co, n_modes, &mut ltr, &mut lti, &mut lr, &mut li,
+                &mut scratch,
+            );
+            assert_eq!(bits(&lr), bits(&yr), "{} fwd re {ci}x{co}x{n_modes}", S::name());
+            assert_eq!(bits(&li), bits(&yi), "{} fwd im {ci}x{co}x{n_modes}", S::name());
+        }
+    }
+
+    fn adj_case<S: Scalar>() {
+        let mut scratch = LaneScratch::default();
+        for &(ci, co, n_modes) in &SHAPES {
+            let gr = svec::<S>(co * n_modes, 5);
+            let gi = svec::<S>(co * n_modes, 6);
+            let wr = svec::<S>(n_modes * ci * co, 7);
+            let wi = svec::<S>(n_modes * ci * co, 8);
+            let mut tr = vec![S::zero(); n_modes * ci];
+            let mut ti = vec![S::zero(); n_modes * ci];
+            let mut yr = vec![S::zero(); ci * n_modes];
+            let mut yi = vec![S::zero(); ci * n_modes];
+            contract_modes_soa_adjoint(
+                &gr, &gi, &wr, &wi, ci, co, n_modes, &mut tr, &mut ti, &mut yr, &mut yi,
+            );
+            let mut ltr = vec![S::zero(); n_modes * ci];
+            let mut lti = vec![S::zero(); n_modes * ci];
+            let mut lr = vec![S::zero(); ci * n_modes];
+            let mut li = vec![S::zero(); ci * n_modes];
+            contract_modes_soa_adjoint_lanes(
+                &gr, &gi, &wr, &wi, ci, co, n_modes, &mut ltr, &mut lti, &mut lr, &mut li,
+                &mut scratch,
+            );
+            assert_eq!(bits(&lr), bits(&yr), "{} adj re {ci}x{co}x{n_modes}", S::name());
+            assert_eq!(bits(&li), bits(&yi), "{} adj im {ci}x{co}x{n_modes}", S::name());
+        }
+    }
+
+    #[test]
+    fn forward_matches_reference_bitwise_all_precisions() {
+        fwd_case::<f64>();
+        fwd_case::<f32>();
+        fwd_case::<Bf16>();
+        fwd_case::<F16>();
+        fwd_case::<Tf32>();
+    }
+
+    #[test]
+    fn adjoint_matches_reference_bitwise_all_precisions() {
+        adj_case::<f64>();
+        adj_case::<f32>();
+        adj_case::<Bf16>();
+        adj_case::<F16>();
+        adj_case::<Tf32>();
+    }
+}

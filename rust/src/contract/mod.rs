@@ -13,15 +13,20 @@
 //!   — Table 9 shows path computation costs up to 76% of the contraction
 //!   when recomputed per call;
 //! * an analytic **cost model** (FLOPs + peak intermediate bytes) shared
-//!   with [`crate::memmodel`].
+//!   with [`crate::memmodel`];
+//! * **lane kernels** ([`lanes`]): register-tiled rewrites of the SoA
+//!   mode contraction on the [`crate::fp::lanes`] primitives,
+//!   bit-identical to the [`exec`] reference kernels at every precision.
 
 pub mod exec;
 pub mod expr;
+pub mod lanes;
 pub mod path;
 
 pub use exec::{
     contract, contract_complex, contract_complex_with, contract_modes, contract_modes_adjoint,
     contract_modes_soa, contract_modes_soa_adjoint, contract_with, ViewAsReal,
 };
+pub use lanes::{contract_modes_soa_adjoint_lanes, contract_modes_soa_lanes, LaneScratch};
 pub use expr::EinsumExpr;
 pub use path::{plan, CostModel, PathCache, PathStrategy, PlannedPath};

@@ -48,6 +48,7 @@
 
 use super::plan::Plan;
 use super::trunc::{grow, SpectralScratch};
+use crate::fp::lanes;
 use crate::fp::{Cplx, Scalar};
 use crate::parallel::Executor;
 
@@ -169,9 +170,7 @@ pub fn rfft2_kept<S: Scalar>(
     // Row pass in full over the real-ified input: identical arithmetic
     // to complexify + fft2's row pass.
     grow(rows, h * w);
-    for (z, &v) in rows[..h * w].iter_mut().zip(src) {
-        *z = Cplx::new(v, S::zero());
-    }
+    lanes::complexify(&mut rows[..h * w], src);
     for r in 0..h {
         row_plan.apply(&mut rows[r * w..(r + 1) * w], blue);
     }
@@ -217,9 +216,7 @@ pub fn rfft2_kept_with<S: Scalar>(
     let SpectralScratch { rows, cols, .. } = scratch;
     grow(rows, h * w);
     ex.for_each_chunk_with(&mut rows[..h * w], w, Vec::new, |r, row, blue| {
-        for (z, &v) in row.iter_mut().zip(&src[r * w..(r + 1) * w]) {
-            *z = Cplx::new(v, S::zero());
-        }
+        lanes::complexify(row, &src[r * w..(r + 1) * w]);
         row_plan.apply(row, blue);
     });
     grow(cols, kc * h);
@@ -273,9 +270,7 @@ pub fn irfft2_kept<S: Scalar>(
     grow(cols, kc * h);
     for j in 0..kc {
         let col = &mut cols[j * h..(j + 1) * h];
-        for v in col.iter_mut() {
-            *v = Cplx::zero();
-        }
+        lanes::vfill(col, Cplx::zero());
         for (i, &r) in kept_rows.iter().enumerate() {
             col[r] = Cplx::new(spec_re[i * kc + j], spec_im[i * kc + j]);
         }
@@ -287,9 +282,7 @@ pub fn irfft2_kept<S: Scalar>(
     grow(line, w);
     for r in 0..h {
         let row = &mut line[..w];
-        for v in row.iter_mut() {
-            *v = Cplx::zero();
-        }
+        lanes::vfill(row, Cplx::zero());
         for j in 0..kc {
             row[j] = cols[j * h + r];
         }
@@ -300,9 +293,7 @@ pub fn irfft2_kept<S: Scalar>(
             }
         }
         row_inv.apply(row, blue);
-        for (c, z) in row.iter().enumerate() {
-            out[r * w + c] = z.re;
-        }
+        lanes::real_part(&mut out[r * w..(r + 1) * w], row);
     }
 }
 
@@ -333,9 +324,7 @@ pub fn irfft2_kept_with<S: Scalar>(
     let SpectralScratch { cols, .. } = scratch;
     grow(cols, kc * h);
     ex.for_each_chunk_with(&mut cols[..kc * h], h, Vec::new, |j, col, blue| {
-        for v in col.iter_mut() {
-            *v = Cplx::zero();
-        }
+        lanes::vfill(col, Cplx::zero());
         for (i, &r) in kept_rows.iter().enumerate() {
             col[r] = Cplx::new(spec_re[i * kc + j], spec_im[i * kc + j]);
         }
@@ -347,9 +336,7 @@ pub fn irfft2_kept_with<S: Scalar>(
         w,
         || (vec![Cplx::<S>::zero(); w], Vec::new()),
         |r, chunk, (row, blue)| {
-            for v in row.iter_mut() {
-                *v = Cplx::zero();
-            }
+            lanes::vfill(row, Cplx::zero());
             for j in 0..kc {
                 row[j] = cols_ro[j * h + r];
             }
@@ -360,9 +347,7 @@ pub fn irfft2_kept_with<S: Scalar>(
                 }
             }
             row_inv.apply(row, blue);
-            for (d, z) in chunk.iter_mut().zip(row.iter()) {
-                *d = z.re;
-            }
+            lanes::real_part(chunk, row);
         },
     );
 }

@@ -29,6 +29,7 @@
 //! resampling) hold their plans directly so the cache lock is off the
 //! per-transform path.
 
+use crate::fp::lanes;
 use crate::fp::{Cplx, Scalar};
 use std::any::{Any, TypeId};
 use std::collections::HashMap;
@@ -91,13 +92,10 @@ impl<S: Scalar> RadixTables<S> {
             let half = len / 2;
             let tw = &self.twiddles[half - 1..half - 1 + half];
             for start in (0..n).step_by(len) {
-                for k in 0..half {
-                    let w = tw[k];
-                    let u = x[start + k];
-                    let v = x[start + k + half].mul(w);
-                    x[start + k] = u.add(v);
-                    x[start + k + half] = u.sub(v);
-                }
+                // Stride-1 butterfly row via the lane kernel — the same
+                // u.add(v)/u.sub(v) sequence per k, unrolled.
+                let (lo, hi) = x[start..start + len].split_at_mut(half);
+                lanes::cbutterfly(lo, hi, tw);
             }
             len <<= 1;
         }
@@ -224,28 +222,18 @@ impl<S: Scalar> Plan<S> {
                     scratch.resize(m, Cplx::zero());
                 }
                 let a = &mut scratch[..m];
-                for v in a.iter_mut() {
-                    *v = Cplx::zero();
-                }
-                for j in 0..n {
-                    a[j] = x[j].mul(b.chirp[j]);
-                }
+                lanes::vfill(&mut a[n..], Cplx::zero());
+                lanes::cmul_into(&mut a[..n], x, &b.chirp);
                 b.m_fwd.apply(a);
-                for (av, bv) in a.iter_mut().zip(&b.b_spec) {
-                    *av = av.mul(*bv);
-                }
+                lanes::cmul_assign(a, &b.b_spec);
                 b.m_inv.apply(a);
                 let inv_m = S::from_f64(1.0 / m as f64);
-                for (k, out) in x.iter_mut().enumerate() {
-                    *out = a[k].scale(inv_m).mul(b.chirp[k]);
-                }
+                lanes::cscale_mul_into(x, &a[..n], inv_m, &b.chirp);
             }
         }
         if self.inverse && self.n > 1 {
             let inv = S::from_f64(1.0 / self.n as f64);
-            for z in x.iter_mut() {
-                *z = z.scale(inv);
-            }
+            lanes::cscale_assign(x, inv);
         }
     }
 

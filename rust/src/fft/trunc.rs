@@ -32,6 +32,7 @@
 //! crate, and `tests/spectral_parity.rs` asserts `to_f64` equality.
 
 use super::plan::Plan;
+use crate::fp::lanes;
 use crate::fp::{Cplx, Scalar};
 use crate::parallel::Executor;
 
@@ -150,9 +151,7 @@ pub fn ifft2_kept<S: Scalar>(
     grow(rows, kr * w);
     for i in 0..kr {
         let row = &mut rows[i * w..(i + 1) * w];
-        for v in row.iter_mut() {
-            *v = Cplx::zero();
-        }
+        lanes::vfill(row, Cplx::zero());
         for (j, &c) in kept_cols.iter().enumerate() {
             row[c] = spec[i * kc + j];
         }
@@ -162,9 +161,7 @@ pub fn ifft2_kept<S: Scalar>(
     // zeroed length-h line (the zeros other rows would contribute).
     grow(line, h);
     for c in 0..w {
-        for v in line[..h].iter_mut() {
-            *v = Cplx::zero();
-        }
+        lanes::vfill(&mut line[..h], Cplx::zero());
         for (i, &r) in kept_rows.iter().enumerate() {
             line[r] = rows[i * w + c];
         }
@@ -269,9 +266,7 @@ pub fn ifft2_kept_with<S: Scalar>(
         w,
         Vec::new,
         |i, row, blue| {
-            for v in row.iter_mut() {
-                *v = Cplx::zero();
-            }
+            lanes::vfill(row, Cplx::zero());
             for (j, &c) in kept_cols.iter().enumerate() {
                 row[c] = spec[i * kc + j];
             }
@@ -287,9 +282,7 @@ pub fn ifft2_kept_with<S: Scalar>(
             h,
             Vec::new,
             |c, col, blue| {
-                for v in col.iter_mut() {
-                    *v = Cplx::zero();
-                }
+                lanes::vfill(col, Cplx::zero());
                 for (i, &r) in kept_rows.iter().enumerate() {
                     col[r] = rows_ro[i * w + c];
                 }

@@ -37,6 +37,22 @@ impl Bf16 {
         f32::from_bits((self.0 as u32) << 16)
     }
 
+    /// The f32 image of `Bf16::from_f32(x).to_f32()` for every f32 bit
+    /// pattern — branch-free RNE via the add-trick on the high half
+    /// (`+0x7FFF` plus the kept lsb, then truncate), the hot-path
+    /// rounding of the lane kernels' bf16 conversion planes
+    /// ([`crate::fp::lanes`]). Bit-equivalence with the composition is
+    /// property-tested in `fp::scalar`.
+    pub fn round_f32(x: f32) -> f32 {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // Same quieting as `from_f32`, widened back.
+            return f32::from_bits(((bits >> 16) << 16) | 0x0040_0000);
+        }
+        let r = bits + 0x7FFF + ((bits >> 16) & 1);
+        f32::from_bits((r >> 16) << 16)
+    }
+
     pub fn is_nan(self) -> bool {
         (self.0 & 0x7F80) == 0x7F80 && (self.0 & 0x7F) != 0
     }

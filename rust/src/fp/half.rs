@@ -81,6 +81,37 @@ impl F16 {
         F16(sign)
     }
 
+    /// The f32 image of `F16::from_f32(x).to_f32()` for every f32 bit
+    /// pattern, computed without materializing the u16 — the hot-path
+    /// per-op rounding of the lane kernels' f16 conversion planes
+    /// ([`crate::fp::lanes`]). Bit-equivalence with the composition is
+    /// property-tested in `fp::scalar`.
+    pub fn round_f32(x: f32) -> f32 {
+        let bits = x.to_bits();
+        let sign = bits & 0x8000_0000;
+        let abs = bits & 0x7FFF_FFFF;
+        if abs >= 0x7F80_0000 {
+            // Infinity passes through; any NaN canonicalizes to the
+            // widened image of F16::NAN, keeping the sign.
+            return if abs == 0x7F80_0000 { x } else { f32::from_bits(sign | 0x7FC0_0000) };
+        }
+        if abs >= 0x3880_0000 {
+            // Normal f16 range (|x| >= 2^-14): RNE at the 13 dropped
+            // mantissa bits — the carry may ripple into the exponent,
+            // which stays correct in bit arithmetic — then the 65520
+            // overflow boundary clamps to infinity.
+            let r = (abs + 0xFFF + ((abs >> 13) & 1)) & !0x1FFF;
+            let out = if r >= 0x4780_0000 { 0x7F80_0000 } else { r };
+            return f32::from_bits(sign | out);
+        }
+        // Subnormal range (|x| < 2^-14): RNE onto multiples of 2^-24.
+        // The 2^24 scaling is exact in f32, so round_ties_even
+        // reproduces the bit-level shift-and-round exactly, including
+        // the round-up into the smallest normal.
+        let q = (f32::from_bits(abs) * 16_777_216.0).round_ties_even() * (1.0 / 16_777_216.0);
+        f32::from_bits(sign | q.to_bits())
+    }
+
     /// Exact widening conversion to f32.
     pub fn to_f32(self) -> f32 {
         let h = self.0 as u32;

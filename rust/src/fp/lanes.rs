@@ -1,0 +1,750 @@
+//! Explicit lane kernels: fixed-width slice primitives for the SoA hot
+//! paths (ROADMAP item 3's "explicit SIMD" follow-up to the PR-6 layout
+//! work).
+//!
+//! Every primitive processes [`LANE`]-wide blocks through const-length
+//! array views (`&[S; LANE]` via `try_into`), so the inner `0..LANE`
+//! loops compile to straight-line unrolled code with no bounds checks —
+//! exactly the shape LLVM autovectorizes — followed by a scalar tail for
+//! ragged lengths. **Per-element arithmetic is never reassociated or
+//! reordered**: each primitive documents the exact op sequence it
+//! replays, and the lane kernels built on top
+//! ([`crate::contract::contract_modes_soa_lanes`], the planned-FFT
+//! butterflies, the `model`/`optim` row kernels) are bit-identical to
+//! their scalar reference kernels at every [`Scalar`] precision
+//! (`tests/lane_parity.rs`).
+//!
+//! # Conversion planes for the emulated formats
+//!
+//! The emulated formats (`bf16`, `f16`, `tf32`, `fp8`) implement every
+//! `Scalar` op as "exact-widen to f32 → f32 op → round back"
+//! ([`Scalar::lanes_via_f32`]). For those formats the per-op widening
+//! dominates the hot loops, so the `*_plane` primitives here operate on
+//! **f32 conversion planes**: buffers holding the exact f32 images of the
+//! scalars ([`Scalar::to_f32_lane`]), converted once per row/call, with
+//! [`Scalar::round_f32`] applied after every op. Since the widening is
+//! exact and `round_f32` is the bit-exact image of
+//! `from_f32 ∘ to_f32` (property-tested per format), every intermediate
+//! f32 bit pattern equals the one the scalar kernel produces — including
+//! NaN propagation — so narrowing the final plane back with
+//! [`Scalar::from_f32_lane`] reproduces the scalar result bit for bit.
+//! The rounding *sequence* is unchanged; only the conversion cost is
+//! hoisted and amortized.
+
+use crate::fp::{Cplx, Scalar};
+
+/// Fixed lane width of every unrolled block. Eight f32 lanes fill one
+/// AVX2 register; for f64 the compiler splits the block into two
+/// 4-wide registers — either way the block is branch-free.
+pub const LANE: usize = 8;
+
+/// Broadcast-fill `dst` with `v` — the named primitive the zero-fill
+/// loops of the contraction and FFT scratch arenas route through
+/// (`slice::fill` lowers to `memset`-style code for `Copy` types).
+pub fn vfill<T: Copy>(dst: &mut [T], v: T) {
+    dst.fill(v);
+}
+
+/// Grow-and-borrow an f32 conversion-plane arena: resizes `buf` to at
+/// least `n` (never shrinks) and returns the leading `n` elements.
+pub fn grow_plane(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+    &mut buf[..n]
+}
+
+macro_rules! elementwise {
+    ($(#[$doc:meta])* $name:ident, $op:ident) => {
+        $(#[$doc])*
+        pub fn $name<S: Scalar>(dst: &mut [S], a: &[S], b: &[S]) {
+            assert_eq!(dst.len(), a.len());
+            assert_eq!(dst.len(), b.len());
+            let mut dc = dst.chunks_exact_mut(LANE);
+            let mut ac = a.chunks_exact(LANE);
+            let mut bc = b.chunks_exact(LANE);
+            for ((d, x), y) in (&mut dc).zip(&mut ac).zip(&mut bc) {
+                let d: &mut [S; LANE] = d.try_into().unwrap();
+                let x: &[S; LANE] = x.try_into().unwrap();
+                let y: &[S; LANE] = y.try_into().unwrap();
+                for k in 0..LANE {
+                    d[k] = x[k].$op(y[k]);
+                }
+            }
+            for ((d, x), y) in
+                dc.into_remainder().iter_mut().zip(ac.remainder()).zip(bc.remainder())
+            {
+                *d = x.$op(*y);
+            }
+        }
+    };
+}
+
+elementwise!(
+    /// `dst[i] = a[i].add(b[i])`.
+    vadd,
+    add
+);
+elementwise!(
+    /// `dst[i] = a[i].sub(b[i])`.
+    vsub,
+    sub
+);
+elementwise!(
+    /// `dst[i] = a[i].mul(b[i])`.
+    vmul,
+    mul
+);
+
+/// `dst[i] = dst[i].add(a[i])` — in-place elementwise add with `dst` as
+/// the **left** operand, the order of the fused-block residual/mix adds.
+pub fn vadd_assign<S: Scalar>(dst: &mut [S], a: &[S]) {
+    assert_eq!(dst.len(), a.len());
+    let mut dc = dst.chunks_exact_mut(LANE);
+    let mut ac = a.chunks_exact(LANE);
+    for (d, x) in (&mut dc).zip(&mut ac) {
+        let d: &mut [S; LANE] = d.try_into().unwrap();
+        let x: &[S; LANE] = x.try_into().unwrap();
+        for k in 0..LANE {
+            d[k] = d[k].add(x[k]);
+        }
+    }
+    for (d, x) in dc.into_remainder().iter_mut().zip(ac.remainder()) {
+        *d = d.add(*x);
+    }
+}
+
+/// `dst[i] = dst[i].mul(b[i])` — in-place Hadamard with `dst` as the
+/// **left** operand (the half-spectrum factor-scaling order
+/// `*r = r.mul(f)`).
+pub fn vmul_assign<S: Scalar>(dst: &mut [S], b: &[S]) {
+    assert_eq!(dst.len(), b.len());
+    let mut dc = dst.chunks_exact_mut(LANE);
+    let mut bc = b.chunks_exact(LANE);
+    for (d, y) in (&mut dc).zip(&mut bc) {
+        let d: &mut [S; LANE] = d.try_into().unwrap();
+        let y: &[S; LANE] = y.try_into().unwrap();
+        for k in 0..LANE {
+            d[k] = d[k].mul(y[k]);
+        }
+    }
+    for (d, y) in dc.into_remainder().iter_mut().zip(bc.remainder()) {
+        *d = d.mul(*y);
+    }
+}
+
+/// `dst[i] = a[i].mul(dst[i])` — in-place Hadamard with `dst` as the
+/// **right** operand (the GELU-backward order `gz = ga.mul(prime)`).
+/// Operand order matters bitwise when a NaN is in play, so both
+/// orientations exist rather than one "commutative" helper.
+pub fn vmul_left<S: Scalar>(dst: &mut [S], a: &[S]) {
+    assert_eq!(dst.len(), a.len());
+    let mut dc = dst.chunks_exact_mut(LANE);
+    let mut ac = a.chunks_exact(LANE);
+    for (d, x) in (&mut dc).zip(&mut ac) {
+        let d: &mut [S; LANE] = d.try_into().unwrap();
+        let x: &[S; LANE] = x.try_into().unwrap();
+        for k in 0..LANE {
+            d[k] = x[k].mul(d[k]);
+        }
+    }
+    for (d, x) in dc.into_remainder().iter_mut().zip(ac.remainder()) {
+        *d = x.mul(*d);
+    }
+}
+
+/// `x[i] = x[i].mul(k)` — broadcast scale in place, `x` as the left
+/// operand (the order of the spectral backward's scaling loops).
+pub fn vscale<S: Scalar>(x: &mut [S], k: S) {
+    let mut xc = x.chunks_exact_mut(LANE);
+    for d in &mut xc {
+        let d: &mut [S; LANE] = d.try_into().unwrap();
+        for j in 0..LANE {
+            d[j] = d[j].mul(k);
+        }
+    }
+    for d in xc.into_remainder().iter_mut() {
+        *d = d.mul(k);
+    }
+}
+
+/// `acc[i] = acc[i].add(k.mul(x[i]))` — broadcast multiply-accumulate
+/// in the pointwise-mix op order (coefficient on the left of the `mul`,
+/// accumulator on the left of the `add`).
+pub fn vmadd<S: Scalar>(acc: &mut [S], k: S, x: &[S]) {
+    assert_eq!(acc.len(), x.len());
+    let mut dc = acc.chunks_exact_mut(LANE);
+    let mut xc = x.chunks_exact(LANE);
+    for (d, v) in (&mut dc).zip(&mut xc) {
+        let d: &mut [S; LANE] = d.try_into().unwrap();
+        let v: &[S; LANE] = v.try_into().unwrap();
+        for j in 0..LANE {
+            d[j] = d[j].add(k.mul(v[j]));
+        }
+    }
+    for (d, v) in dc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *d = d.add(k.mul(*v));
+    }
+}
+
+/// Complex multiply-accumulate of the broadcast coefficient `(ar, ai)`
+/// against split-`re`/`im` slices, replaying [`Cplx::mul`]'s exact op
+/// order per element:
+///
+/// ```text
+/// ac = ar·br[i]; bd = ai·bi[i]; ad = ar·bi[i]; bc = ai·br[i];
+/// acc_re[i] += (ac − bd); acc_im[i] += (ad + bc);
+/// ```
+///
+/// — the `ac−bd / ad+bc` kernel of the SoA mode contraction.
+pub fn vcmadd<S: Scalar>(acc_re: &mut [S], acc_im: &mut [S], ar: S, ai: S, br: &[S], bi: &[S]) {
+    let n = acc_re.len();
+    assert!(acc_im.len() == n && br.len() == n && bi.len() == n);
+    let mut rc = acc_re.chunks_exact_mut(LANE);
+    let mut ic = acc_im.chunks_exact_mut(LANE);
+    let mut brc = br.chunks_exact(LANE);
+    let mut bic = bi.chunks_exact(LANE);
+    for (((dr, di), xr), xi) in (&mut rc).zip(&mut ic).zip(&mut brc).zip(&mut bic) {
+        let dr: &mut [S; LANE] = dr.try_into().unwrap();
+        let di: &mut [S; LANE] = di.try_into().unwrap();
+        let xr: &[S; LANE] = xr.try_into().unwrap();
+        let xi: &[S; LANE] = xi.try_into().unwrap();
+        for k in 0..LANE {
+            let ac = ar.mul(xr[k]);
+            let bd = ai.mul(xi[k]);
+            let ad = ar.mul(xi[k]);
+            let bc = ai.mul(xr[k]);
+            dr[k] = dr[k].add(ac.sub(bd));
+            di[k] = di[k].add(ad.add(bc));
+        }
+    }
+    for (((dr, di), xr), xi) in rc
+        .into_remainder()
+        .iter_mut()
+        .zip(ic.into_remainder().iter_mut())
+        .zip(brc.remainder())
+        .zip(bic.remainder())
+    {
+        let ac = ar.mul(*xr);
+        let bd = ai.mul(*xi);
+        let ad = ar.mul(*xi);
+        let bc = ai.mul(*xr);
+        *dr = dr.add(ac.sub(bd));
+        *di = di.add(ad.add(bc));
+    }
+}
+
+// ---------------------------------------------------------------------
+// f32 conversion-plane primitives (emulated formats).
+// ---------------------------------------------------------------------
+
+/// Widen a scalar slice into its exact f32 plane image
+/// ([`Scalar::to_f32_lane`] per element — exact, so order-insensitive).
+pub fn to_f32_plane<S: Scalar>(src: &[S], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = s.to_f32_lane();
+    }
+}
+
+/// Narrow an f32 plane back into scalars ([`Scalar::from_f32_lane`] per
+/// element). When the plane holds [`Scalar::round_f32`] images this is
+/// the exact inverse of the widening (round-trip stability).
+pub fn from_f32_plane<S: Scalar>(src: &[f32], dst: &mut [S]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = S::from_f32_lane(s);
+    }
+}
+
+/// Plane-image [`vmadd`]: `acc[i] = round(acc[i] + round(k·x[i]))` with
+/// `round = S::round_f32` — the exact f32 image of the scalar
+/// `acc.add(k.mul(x))` when `acc`/`k`/`x` hold exact widened images.
+pub fn vmadd_plane<S: Scalar>(acc: &mut [f32], k: f32, x: &[f32]) {
+    assert_eq!(acc.len(), x.len());
+    let mut dc = acc.chunks_exact_mut(LANE);
+    let mut xc = x.chunks_exact(LANE);
+    for (d, v) in (&mut dc).zip(&mut xc) {
+        let d: &mut [f32; LANE] = d.try_into().unwrap();
+        let v: &[f32; LANE] = v.try_into().unwrap();
+        for j in 0..LANE {
+            d[j] = S::round_f32(d[j] + S::round_f32(k * v[j]));
+        }
+    }
+    for (d, v) in dc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *d = S::round_f32(*d + S::round_f32(k * *v));
+    }
+}
+
+/// Plane-image [`vcmadd`]: each of the six ops (`ac`, `bd`, `ad`, `bc`,
+/// the two accumulations and their inner `sub`/`add`) is rounded with
+/// `S::round_f32`, mirroring the scalar kernel's per-op rounding
+/// sequence exactly.
+pub fn vcmadd_plane<S: Scalar>(
+    acc_re: &mut [f32],
+    acc_im: &mut [f32],
+    ar: f32,
+    ai: f32,
+    br: &[f32],
+    bi: &[f32],
+) {
+    let n = acc_re.len();
+    assert!(acc_im.len() == n && br.len() == n && bi.len() == n);
+    let mut rc = acc_re.chunks_exact_mut(LANE);
+    let mut ic = acc_im.chunks_exact_mut(LANE);
+    let mut brc = br.chunks_exact(LANE);
+    let mut bic = bi.chunks_exact(LANE);
+    for (((dr, di), xr), xi) in (&mut rc).zip(&mut ic).zip(&mut brc).zip(&mut bic) {
+        let dr: &mut [f32; LANE] = dr.try_into().unwrap();
+        let di: &mut [f32; LANE] = di.try_into().unwrap();
+        let xr: &[f32; LANE] = xr.try_into().unwrap();
+        let xi: &[f32; LANE] = xi.try_into().unwrap();
+        for k in 0..LANE {
+            let ac = S::round_f32(ar * xr[k]);
+            let bd = S::round_f32(ai * xi[k]);
+            let ad = S::round_f32(ar * xi[k]);
+            let bc = S::round_f32(ai * xr[k]);
+            dr[k] = S::round_f32(dr[k] + S::round_f32(ac - bd));
+            di[k] = S::round_f32(di[k] + S::round_f32(ad + bc));
+        }
+    }
+    for (((dr, di), xr), xi) in rc
+        .into_remainder()
+        .iter_mut()
+        .zip(ic.into_remainder().iter_mut())
+        .zip(brc.remainder())
+        .zip(bic.remainder())
+    {
+        let ac = S::round_f32(ar * *xr);
+        let bd = S::round_f32(ai * *xi);
+        let ad = S::round_f32(ar * *xi);
+        let bc = S::round_f32(ai * *xr);
+        *dr = S::round_f32(*dr + S::round_f32(ac - bd));
+        *di = S::round_f32(*di + S::round_f32(ad + bc));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Complex (AoS) helpers for the planned-FFT stride-1 passes.
+// ---------------------------------------------------------------------
+
+/// One stride-1 butterfly row: for each `k`,
+/// `u = lo[k]; v = hi[k].mul(tw[k]); lo[k] = u.add(v); hi[k] = u.sub(v)`
+/// — the radix-2 stage body of [`crate::fft::plan`], op for op.
+pub fn cbutterfly<S: Scalar>(lo: &mut [Cplx<S>], hi: &mut [Cplx<S>], tw: &[Cplx<S>]) {
+    let n = lo.len();
+    assert!(hi.len() == n && tw.len() == n);
+    let mut lc = lo.chunks_exact_mut(LANE);
+    let mut hc = hi.chunks_exact_mut(LANE);
+    let mut tc = tw.chunks_exact(LANE);
+    for ((l, h), t) in (&mut lc).zip(&mut hc).zip(&mut tc) {
+        let l: &mut [Cplx<S>; LANE] = l.try_into().unwrap();
+        let h: &mut [Cplx<S>; LANE] = h.try_into().unwrap();
+        let t: &[Cplx<S>; LANE] = t.try_into().unwrap();
+        for k in 0..LANE {
+            let u = l[k];
+            let v = h[k].mul(t[k]);
+            l[k] = u.add(v);
+            h[k] = u.sub(v);
+        }
+    }
+    for ((l, h), t) in
+        lc.into_remainder().iter_mut().zip(hc.into_remainder().iter_mut()).zip(tc.remainder())
+    {
+        let u = *l;
+        let v = h.mul(*t);
+        *l = u.add(v);
+        *h = u.sub(v);
+    }
+}
+
+/// `dst[i] = a[i].mul(b[i])` over complex slices (the Bluestein chirp
+/// pre-multiply `a[j] = x[j].mul(chirp[j])`).
+pub fn cmul_into<S: Scalar>(dst: &mut [Cplx<S>], a: &[Cplx<S>], b: &[Cplx<S>]) {
+    let n = dst.len();
+    assert!(a.len() == n && b.len() == n);
+    let mut dc = dst.chunks_exact_mut(LANE);
+    let mut ac = a.chunks_exact(LANE);
+    let mut bc = b.chunks_exact(LANE);
+    for ((d, x), y) in (&mut dc).zip(&mut ac).zip(&mut bc) {
+        let d: &mut [Cplx<S>; LANE] = d.try_into().unwrap();
+        let x: &[Cplx<S>; LANE] = x.try_into().unwrap();
+        let y: &[Cplx<S>; LANE] = y.try_into().unwrap();
+        for k in 0..LANE {
+            d[k] = x[k].mul(y[k]);
+        }
+    }
+    for ((d, x), y) in dc.into_remainder().iter_mut().zip(ac.remainder()).zip(bc.remainder()) {
+        *d = x.mul(*y);
+    }
+}
+
+/// `dst[i] = dst[i].mul(b[i])` over complex slices, `dst` as the left
+/// operand (the Bluestein spectrum pointwise product `av = av.mul(bv)`).
+pub fn cmul_assign<S: Scalar>(dst: &mut [Cplx<S>], b: &[Cplx<S>]) {
+    assert_eq!(dst.len(), b.len());
+    let mut dc = dst.chunks_exact_mut(LANE);
+    let mut bc = b.chunks_exact(LANE);
+    for (d, y) in (&mut dc).zip(&mut bc) {
+        let d: &mut [Cplx<S>; LANE] = d.try_into().unwrap();
+        let y: &[Cplx<S>; LANE] = y.try_into().unwrap();
+        for k in 0..LANE {
+            d[k] = d[k].mul(y[k]);
+        }
+    }
+    for (d, y) in dc.into_remainder().iter_mut().zip(bc.remainder()) {
+        *d = d.mul(*y);
+    }
+}
+
+/// `x[i] = x[i].scale(k)` over complex slices (the inverse-FFT `1/n`
+/// normalization loop).
+pub fn cscale_assign<S: Scalar>(x: &mut [Cplx<S>], k: S) {
+    let mut xc = x.chunks_exact_mut(LANE);
+    for d in &mut xc {
+        let d: &mut [Cplx<S>; LANE] = d.try_into().unwrap();
+        for j in 0..LANE {
+            d[j] = d[j].scale(k);
+        }
+    }
+    for d in xc.into_remainder().iter_mut() {
+        *d = d.scale(k);
+    }
+}
+
+/// `dst[i] = a[i].scale(k).mul(c[i])` (the Bluestein epilogue
+/// `out = a[k].scale(inv_m).mul(chirp[k])`).
+pub fn cscale_mul_into<S: Scalar>(dst: &mut [Cplx<S>], a: &[Cplx<S>], k: S, c: &[Cplx<S>]) {
+    let n = dst.len();
+    assert!(a.len() == n && c.len() == n);
+    let mut dc = dst.chunks_exact_mut(LANE);
+    let mut ac = a.chunks_exact(LANE);
+    let mut cc = c.chunks_exact(LANE);
+    for ((d, x), y) in (&mut dc).zip(&mut ac).zip(&mut cc) {
+        let d: &mut [Cplx<S>; LANE] = d.try_into().unwrap();
+        let x: &[Cplx<S>; LANE] = x.try_into().unwrap();
+        let y: &[Cplx<S>; LANE] = y.try_into().unwrap();
+        for j in 0..LANE {
+            d[j] = x[j].scale(k).mul(y[j]);
+        }
+    }
+    for ((d, x), y) in dc.into_remainder().iter_mut().zip(ac.remainder()).zip(cc.remainder()) {
+        *d = x.scale(k).mul(*y);
+    }
+}
+
+/// `dst[i] = Cplx::new(src[i], S::zero())` — the real-input complexify
+/// pass in front of the row FFTs.
+pub fn complexify<S: Scalar>(dst: &mut [Cplx<S>], src: &[S]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = Cplx::new(s, S::zero());
+    }
+}
+
+/// `dst[i] = src[i].re` — the keep-the-real-part epilogue of the
+/// Hermitian inverse passes.
+pub fn real_part<S: Scalar>(dst: &mut [S], src: &[Cplx<S>]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = s.re;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Optimizer update.
+// ---------------------------------------------------------------------
+
+/// The Adam master-weight update over f32 parameter/gradient/moment
+/// slices, unrolled in [`LANE`] blocks with a scalar tail. Per element,
+/// **exactly** the scalar loop of `optim::Adam::step`:
+///
+/// ```text
+/// gi   = g[i]·gmul + wd·p[i]
+/// m[i] = b1·m[i] + (1 − b1)·gi
+/// v[i] = b2·v[i] + (1 − b2)·gi·gi
+/// p[i] -= lr_t·m[i] / (sqrt(v[i]) + eps)
+/// ```
+#[allow(clippy::too_many_arguments)]
+pub fn adam_update_f32(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    gmul: f32,
+    wd: f32,
+    b1: f32,
+    b2: f32,
+    lr_t: f32,
+    eps: f32,
+) {
+    let n = p.len();
+    assert!(g.len() == n && m.len() == n && v.len() == n);
+    let mut pc = p.chunks_exact_mut(LANE);
+    let mut gc = g.chunks_exact(LANE);
+    let mut mc = m.chunks_exact_mut(LANE);
+    let mut vc = v.chunks_exact_mut(LANE);
+    for (((pp, gg), mm), vv) in (&mut pc).zip(&mut gc).zip(&mut mc).zip(&mut vc) {
+        let pp: &mut [f32; LANE] = pp.try_into().unwrap();
+        let gg: &[f32; LANE] = gg.try_into().unwrap();
+        let mm: &mut [f32; LANE] = mm.try_into().unwrap();
+        let vv: &mut [f32; LANE] = vv.try_into().unwrap();
+        for k in 0..LANE {
+            let gi = gg[k] * gmul + wd * pp[k];
+            mm[k] = b1 * mm[k] + (1.0 - b1) * gi;
+            vv[k] = b2 * vv[k] + (1.0 - b2) * gi * gi;
+            pp[k] -= lr_t * mm[k] / (vv[k].sqrt() + eps);
+        }
+    }
+    for (((pp, gg), mm), vv) in pc
+        .into_remainder()
+        .iter_mut()
+        .zip(gc.remainder())
+        .zip(mc.into_remainder().iter_mut())
+        .zip(vc.into_remainder().iter_mut())
+    {
+        let gi = *gg * gmul + wd * *pp;
+        *mm = b1 * *mm + (1.0 - b1) * gi;
+        *vv = b2 * *vv + (1.0 - b2) * gi * gi;
+        *pp -= lr_t * *mm / (vv.sqrt() + eps);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::{Bf16, Tf32, F16};
+    use crate::rng::Rng;
+
+    fn vals<S: Scalar>(n: usize, seed: u64) -> Vec<S> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| S::from_f64(rng.normal())).collect()
+    }
+
+    fn bits<S: Scalar>(a: &[S]) -> Vec<u64> {
+        a.iter().map(|v| v.to_f64().to_bits()).collect()
+    }
+
+    /// Ragged lengths straddling several lane boundaries.
+    const LENS: [usize; 6] = [1, 7, 8, 9, 24, 37];
+
+    fn elementwise_case<S: Scalar>() {
+        for &n in &LENS {
+            let a = vals::<S>(n, 1);
+            let b = vals::<S>(n, 2);
+            let mut got = vec![S::zero(); n];
+            let mut want = vec![S::zero(); n];
+            vadd(&mut got, &a, &b);
+            for i in 0..n {
+                want[i] = a[i].add(b[i]);
+            }
+            assert_eq!(bits(&got), bits(&want), "vadd {} n={n}", S::name());
+            vsub(&mut got, &a, &b);
+            for i in 0..n {
+                want[i] = a[i].sub(b[i]);
+            }
+            assert_eq!(bits(&got), bits(&want), "vsub {} n={n}", S::name());
+            vmul(&mut got, &a, &b);
+            for i in 0..n {
+                want[i] = a[i].mul(b[i]);
+            }
+            assert_eq!(bits(&got), bits(&want), "vmul {} n={n}", S::name());
+
+            let k = S::from_f64(0.37);
+            let mut got2 = a.clone();
+            vscale(&mut got2, k);
+            let want2: Vec<S> = a.iter().map(|v| v.mul(k)).collect();
+            assert_eq!(bits(&got2), bits(&want2), "vscale {} n={n}", S::name());
+
+            let mut acc_got = b.clone();
+            let mut acc_want = b.clone();
+            vmadd(&mut acc_got, k, &a);
+            for i in 0..n {
+                acc_want[i] = acc_want[i].add(k.mul(a[i]));
+            }
+            assert_eq!(bits(&acc_got), bits(&acc_want), "vmadd {} n={n}", S::name());
+        }
+    }
+
+    #[test]
+    fn elementwise_primitives_match_scalar_loops() {
+        elementwise_case::<f64>();
+        elementwise_case::<f32>();
+        elementwise_case::<Bf16>();
+        elementwise_case::<F16>();
+        elementwise_case::<Tf32>();
+    }
+
+    fn vcmadd_case<S: Scalar>() {
+        for &n in &LENS {
+            let br = vals::<S>(n, 3);
+            let bi = vals::<S>(n, 4);
+            let (ar, ai) = (S::from_f64(0.8), S::from_f64(-0.45));
+            let mut gr = vals::<S>(n, 5);
+            let mut gi = vals::<S>(n, 6);
+            let mut wr = gr.clone();
+            let mut wi = gi.clone();
+            vcmadd(&mut gr, &mut gi, ar, ai, &br, &bi);
+            for k in 0..n {
+                let ac = ar.mul(br[k]);
+                let bd = ai.mul(bi[k]);
+                let ad = ar.mul(bi[k]);
+                let bc = ai.mul(br[k]);
+                wr[k] = wr[k].add(ac.sub(bd));
+                wi[k] = wi[k].add(ad.add(bc));
+            }
+            assert_eq!(bits(&gr), bits(&wr), "vcmadd re {} n={n}", S::name());
+            assert_eq!(bits(&gi), bits(&wi), "vcmadd im {} n={n}", S::name());
+        }
+    }
+
+    #[test]
+    fn vcmadd_matches_scalar_cplx_mul_order() {
+        vcmadd_case::<f64>();
+        vcmadd_case::<f32>();
+        vcmadd_case::<Bf16>();
+        vcmadd_case::<F16>();
+        vcmadd_case::<Tf32>();
+    }
+
+    fn plane_case<S: Scalar>() {
+        assert!(S::lanes_via_f32(), "{} must take the plane path", S::name());
+        for &n in &LENS {
+            let a = vals::<S>(n, 7);
+            let b = vals::<S>(n, 8);
+            // Round-trip: widen then narrow is the identity.
+            let mut plane = vec![0.0f32; n];
+            to_f32_plane(&a, &mut plane);
+            let mut back = vec![S::zero(); n];
+            from_f32_plane(&plane, &mut back);
+            assert_eq!(bits(&a), bits(&back), "plane round-trip {} n={n}", S::name());
+
+            // vmadd_plane == the scalar vmadd through the f32 images.
+            let k = S::from_f64(1.7);
+            let mut acc = vec![0.0f32; n];
+            to_f32_plane(&b, &mut acc);
+            vmadd_plane::<S>(&mut acc, k.to_f32_lane(), &plane);
+            let mut got = vec![S::zero(); n];
+            from_f32_plane(&acc, &mut got);
+            let mut want = b.clone();
+            vmadd(&mut want, k, &a);
+            assert_eq!(bits(&got), bits(&want), "vmadd_plane {} n={n}", S::name());
+
+            // vcmadd_plane == the scalar vcmadd through the f32 images.
+            let (ar, ai) = (S::from_f64(-0.6), S::from_f64(0.25));
+            let (mut pr, mut pi) = (vec![0.0f32; n], vec![0.0f32; n]);
+            let sr = vals::<S>(n, 9);
+            let si = vals::<S>(n, 10);
+            to_f32_plane(&sr, &mut pr);
+            to_f32_plane(&si, &mut pi);
+            let mut br32 = vec![0.0f32; n];
+            let mut bi32 = vec![0.0f32; n];
+            to_f32_plane(&a, &mut br32);
+            to_f32_plane(&b, &mut bi32);
+            let (a32, i32v) = (ar.to_f32_lane(), ai.to_f32_lane());
+            vcmadd_plane::<S>(&mut pr, &mut pi, a32, i32v, &br32, &bi32);
+            let (mut wr, mut wi) = (sr.clone(), si.clone());
+            vcmadd(&mut wr, &mut wi, ar, ai, &a, &b);
+            let mut got_r = vec![S::zero(); n];
+            let mut got_i = vec![S::zero(); n];
+            from_f32_plane(&pr, &mut got_r);
+            from_f32_plane(&pi, &mut got_i);
+            assert_eq!(bits(&got_r), bits(&wr), "vcmadd_plane re {} n={n}", S::name());
+            assert_eq!(bits(&got_i), bits(&wi), "vcmadd_plane im {} n={n}", S::name());
+        }
+    }
+
+    #[test]
+    fn plane_primitives_match_scalar_paths_bitwise() {
+        plane_case::<Bf16>();
+        plane_case::<F16>();
+        plane_case::<Tf32>();
+    }
+
+    #[test]
+    fn adam_update_matches_scalar_loop() {
+        let mut rng = Rng::new(11);
+        for &n in &LENS {
+            let mut p: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let mut m: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+            let mut v: Vec<f32> = (0..n).map(|_| (rng.normal() as f32).abs() * 0.1).collect();
+            let (mut pw, mut mw, mut vw) = (p.clone(), m.clone(), v.clone());
+            let (gmul, wd) = (0.5f32, 0.01f32);
+            let (b1, b2, lr_t, eps) = (0.9f32, 0.999f32, 1e-3f32, 1e-8f32);
+            adam_update_f32(&mut p, &g, &mut m, &mut v, gmul, wd, b1, b2, lr_t, eps);
+            for i in 0..n {
+                let gi = g[i] * gmul + wd * pw[i];
+                mw[i] = b1 * mw[i] + (1.0 - b1) * gi;
+                vw[i] = b2 * vw[i] + (1.0 - b2) * gi * gi;
+                pw[i] -= lr_t * mw[i] / (vw[i].sqrt() + eps);
+            }
+            let eq =
+                |a: &[f32], b: &[f32]| a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(eq(&p, &pw) && eq(&m, &mw) && eq(&v, &vw), "adam n={n}");
+        }
+    }
+
+    #[test]
+    fn complex_helpers_match_scalar_loops() {
+        let n = 21;
+        let mut rng = Rng::new(13);
+        let mk = |rng: &mut Rng| -> Vec<Cplx<f32>> {
+            (0..n)
+                .map(|_| {
+                    let (r, i) = rng.cnormal();
+                    Cplx::from_f64(r, i)
+                })
+                .collect()
+        };
+        let a = mk(&mut rng);
+        let b = mk(&mut rng);
+        let cbits = |x: &[Cplx<f32>]| -> Vec<(u32, u32)> {
+            x.iter().map(|z| (z.re.to_bits(), z.im.to_bits())).collect()
+        };
+
+        let mut got = vec![Cplx::<f32>::zero(); n];
+        cmul_into(&mut got, &a, &b);
+        let want: Vec<Cplx<f32>> = a.iter().zip(&b).map(|(x, y)| x.mul(*y)).collect();
+        assert_eq!(cbits(&got), cbits(&want), "cmul_into");
+
+        let mut got2 = a.clone();
+        cmul_assign(&mut got2, &b);
+        assert_eq!(cbits(&got2), cbits(&want), "cmul_assign");
+
+        let k = 0.125f32;
+        let mut got3 = a.clone();
+        cscale_assign(&mut got3, k);
+        let want3: Vec<Cplx<f32>> = a.iter().map(|z| z.scale(k)).collect();
+        assert_eq!(cbits(&got3), cbits(&want3), "cscale_assign");
+
+        let mut got4 = vec![Cplx::<f32>::zero(); n];
+        cscale_mul_into(&mut got4, &a, k, &b);
+        let want4: Vec<Cplx<f32>> = a.iter().zip(&b).map(|(x, y)| x.scale(k).mul(*y)).collect();
+        assert_eq!(cbits(&got4), cbits(&want4), "cscale_mul_into");
+
+        // cbutterfly vs the radix-2 stage body.
+        let tw = mk(&mut rng);
+        let mut lo = a.clone();
+        let mut hi = b.clone();
+        let (mut wlo, mut whi) = (a.clone(), b.clone());
+        cbutterfly(&mut lo, &mut hi, &tw);
+        for kk in 0..n {
+            let u = wlo[kk];
+            let v = whi[kk].mul(tw[kk]);
+            wlo[kk] = u.add(v);
+            whi[kk] = u.sub(v);
+        }
+        assert_eq!(cbits(&lo), cbits(&wlo), "cbutterfly lo");
+        assert_eq!(cbits(&hi), cbits(&whi), "cbutterfly hi");
+    }
+
+    #[test]
+    fn grow_plane_grows_and_reuses() {
+        let mut buf = Vec::new();
+        assert_eq!(grow_plane(&mut buf, 5).len(), 5);
+        grow_plane(&mut buf, 3)[0] = 1.0;
+        assert_eq!(buf.len(), 5, "never shrinks");
+        assert_eq!(buf[0], 1.0);
+    }
+}

@@ -21,6 +21,7 @@ mod bf16;
 mod complex;
 mod fp8;
 mod half;
+pub mod lanes;
 mod scalar;
 mod system;
 mod tf32;

@@ -35,6 +35,37 @@ pub trait Scalar: Copy + Clone + PartialEq + std::fmt::Debug + Send + Sync + 'st
     fn eps() -> f64;
     /// Short name for reports ("f64", "f16", …).
     fn name() -> &'static str;
+
+    // --- lane-kernel hooks ([`crate::fp::lanes`]) ---
+
+    /// True when every arithmetic op of the format is "exact-widen to
+    /// f32 → f32 op → round back" (the emulated formats). The lane
+    /// kernels then hoist the per-op conversions into f32 conversion
+    /// planes, rounding each op with [`Scalar::round_f32`] — the same
+    /// rounding sequence, amortized conversion cost. Native `f32`/`f64`
+    /// stay on the generic unrolled path.
+    fn lanes_via_f32() -> bool {
+        false
+    }
+    /// Exact widening to the f32 plane image. Meaningful for the
+    /// `lanes_via_f32` formats (for which `to_f64` itself widens via
+    /// f32, making the default exact); identity-like elsewhere.
+    fn to_f32_lane(self) -> f32 {
+        self.to_f64() as f32
+    }
+    /// Narrow an f32 plane value back into the format (the same
+    /// rounding as `from_f64` restricted to f32 inputs).
+    fn from_f32_lane(x: f32) -> Self {
+        Self::from_f64(x as f64)
+    }
+    /// The f32 image of one rounded op result. Contract (property-tested
+    /// per format): `round_f32(x)` is bit-identical to
+    /// `Self::from_f32_lane(x).to_f32_lane()` for **every** f32 bit
+    /// pattern, including NaNs and infinities. Overridden with
+    /// branch-light bit tricks where the composition would be hot.
+    fn round_f32(x: f32) -> f32 {
+        Self::from_f32_lane(x).to_f32_lane()
+    }
 }
 
 impl Scalar for f64 {
@@ -128,6 +159,18 @@ impl Scalar for F16 {
     fn name() -> &'static str {
         "f16"
     }
+    fn lanes_via_f32() -> bool {
+        true
+    }
+    fn to_f32_lane(self) -> f32 {
+        self.to_f32()
+    }
+    fn from_f32_lane(x: f32) -> Self {
+        F16::from_f32(x)
+    }
+    fn round_f32(x: f32) -> f32 {
+        F16::round_f32(x)
+    }
 }
 
 impl Scalar for Bf16 {
@@ -157,6 +200,18 @@ impl Scalar for Bf16 {
     }
     fn name() -> &'static str {
         "bf16"
+    }
+    fn lanes_via_f32() -> bool {
+        true
+    }
+    fn to_f32_lane(self) -> f32 {
+        self.to_f32()
+    }
+    fn from_f32_lane(x: f32) -> Self {
+        Bf16::from_f32(x)
+    }
+    fn round_f32(x: f32) -> f32 {
+        Bf16::round_f32(x)
     }
 }
 
@@ -188,6 +243,18 @@ impl Scalar for Tf32 {
     fn name() -> &'static str {
         "tf32"
     }
+    fn lanes_via_f32() -> bool {
+        true
+    }
+    fn to_f32_lane(self) -> f32 {
+        self.0
+    }
+    fn from_f32_lane(x: f32) -> Self {
+        Tf32::from_f32(x)
+    }
+    fn round_f32(x: f32) -> f32 {
+        Tf32::round_value(x)
+    }
 }
 
 impl Scalar for Fp8E5M2 {
@@ -218,6 +285,17 @@ impl Scalar for Fp8E5M2 {
     fn name() -> &'static str {
         "fp8e5m2"
     }
+    fn lanes_via_f32() -> bool {
+        true
+    }
+    fn to_f32_lane(self) -> f32 {
+        self.to_f32()
+    }
+    fn from_f32_lane(x: f32) -> Self {
+        Fp8E5M2::from_f32(x)
+    }
+    // round_f32 stays on the default composition: fp8 is a probe
+    // format, not a hot path.
 }
 
 #[cfg(test)]
@@ -261,5 +339,91 @@ mod tests {
         assert_eq!(<f64 as Scalar>::name(), "f64");
         assert!(F16::eps() > f32::eps());
         assert!(Fp8E5M2::eps() > Bf16::eps());
+    }
+
+    /// The lane-kernel contract: `round_f32` must be bit-identical to
+    /// `from_f32_lane ∘ to_f32_lane` for every f32 bit pattern. Checked
+    /// on every widened 16-bit pattern and its neighbours (every
+    /// bf16/f16 grid point, the exact halfway ties, both rounding
+    /// directions), the special values, and a prime-strided sweep of
+    /// the full u32 space.
+    fn round_f32_image_case<S: Scalar>() {
+        let check = |bits: u32| {
+            let x = f32::from_bits(bits);
+            let want = S::from_f32_lane(x).to_f32_lane();
+            let got = S::round_f32(x);
+            assert_eq!(got.to_bits(), want.to_bits(), "{} bits={bits:#010x}", S::name());
+        };
+        for x in [
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            -f32::NAN,
+            65504.0,
+            65519.9,
+            65520.0,
+            -65520.0,
+            2f32.powi(-14),
+            2f32.powi(-24),
+            2f32.powi(-25),
+            f32::MIN_POSITIVE,
+            f32::MAX,
+            f32::EPSILON,
+        ] {
+            check(x.to_bits());
+        }
+        for hi in 0..=0xFFFFu32 {
+            let b = hi << 16;
+            check(b);
+            check(b.wrapping_add(1));
+            check(b.wrapping_sub(1));
+            check(b | 0x8000);
+            check(b | 0x1000);
+            check(b | 0x2000);
+        }
+        let mut bits = 0u32;
+        loop {
+            check(bits);
+            let (next, wrapped) = bits.overflowing_add(40_503);
+            if wrapped {
+                break;
+            }
+            bits = next;
+        }
+    }
+
+    #[test]
+    fn round_f32_matches_composition_bf16() {
+        round_f32_image_case::<Bf16>();
+    }
+
+    #[test]
+    fn round_f32_matches_composition_f16() {
+        round_f32_image_case::<F16>();
+    }
+
+    #[test]
+    fn round_f32_matches_composition_tf32() {
+        round_f32_image_case::<Tf32>();
+    }
+
+    #[test]
+    fn lane_hooks_flags_and_roundtrip() {
+        assert!(!<f64 as Scalar>::lanes_via_f32());
+        assert!(!<f32 as Scalar>::lanes_via_f32());
+        assert!(Bf16::lanes_via_f32() && F16::lanes_via_f32());
+        assert!(Tf32::lanes_via_f32() && Fp8E5M2::lanes_via_f32());
+        // Widen-then-narrow is the identity on every representable value.
+        for i in -50..=50 {
+            let v = i as f64 * 0.37;
+            assert_eq!(Bf16::from_f32_lane(Bf16::from_f64(v).to_f32_lane()), Bf16::from_f64(v));
+            assert_eq!(F16::from_f32_lane(F16::from_f64(v).to_f32_lane()), F16::from_f64(v));
+            let t = Tf32::from_f64(v);
+            assert_eq!(Tf32::from_f32_lane(t.to_f32_lane()).0.to_bits(), t.0.to_bits());
+        }
     }
 }

@@ -26,6 +26,7 @@
 //! f64).
 
 use crate::fft::HalfSpectrum;
+use crate::fp::lanes;
 use crate::fp::{Cplx, Scalar};
 use crate::parallel::Executor;
 use crate::runtime::ParamSpec;
@@ -122,6 +123,25 @@ pub fn gelu_prime<S: Scalar>(x: S) -> S {
     S::from_f64(gelu_prime_f64(x.to_f64()))
 }
 
+/// [`gelu`] over a slice — the batched activation epilogue of the fused
+/// block (same per-element f64 evaluation, so values are bit-identical
+/// to the scalar map at every precision).
+pub fn gelu_slice<S: Scalar>(z: &[S], out: &mut [S]) {
+    assert_eq!(z.len(), out.len());
+    for (d, &v) in out.iter_mut().zip(z) {
+        *d = gelu(v);
+    }
+}
+
+/// [`gelu_prime`] over a slice — the batched GELU-backward companion of
+/// [`gelu_slice`].
+pub fn gelu_prime_slice<S: Scalar>(z: &[S], out: &mut [S]) {
+    assert_eq!(z.len(), out.len());
+    for (d, &v) in out.iter_mut().zip(z) {
+        *d = gelu_prime(v);
+    }
+}
+
 const GELU_C: f64 = 0.797_884_560_802_865_4; // sqrt(2/π)
 const GELU_A: f64 = 0.044715;
 
@@ -167,6 +187,18 @@ struct Scratch<S: Scalar> {
     /// Backward staging, (width, h·w) each.
     g_a: Vec<S>,
     g_b: Vec<S>,
+    /// f32 conversion planes for the pointwise lane kernels.
+    pw: PwPlanes,
+}
+
+/// Reusable f32 conversion planes for the pointwise lane kernels
+/// (emulated formats only; both stay empty for f64/f32).
+#[derive(Debug, Default)]
+struct PwPlanes {
+    /// Widened input/gradient plane, (channels, h·w).
+    xs: Vec<f32>,
+    /// One output row of [`Scalar::round_f32`] images, (h·w).
+    acc: Vec<f32>,
 }
 
 /// A reusable bank of forward arenas for one model shape. A serve loop
@@ -253,7 +285,12 @@ fn to_s<S: Scalar>(dst: &mut [S], src: &[f32]) {
 
 /// Pointwise (1×1) channel map: `out[o, p] = b[o] + Σ_i w[o, i]·x[i, p]`,
 /// accumulated in `S` in ascending `i` — the fixed op order the parity
-/// tests rely on.
+/// tests rely on. Runs on the [`lanes`] row primitives: each output row
+/// starts as a bias broadcast and takes one ascending-`i`
+/// [`lanes::vmadd`] per input channel. Emulated formats take the
+/// conversion-plane variant instead — the whole input is widened once
+/// and every op rounds through [`Scalar::round_f32`], replaying the
+/// scalar op sequence on exact f32 images (bit-identical results).
 fn pointwise_forward<S: Scalar>(
     w: &[S],
     bias: &[S],
@@ -262,20 +299,34 @@ fn pointwise_forward<S: Scalar>(
     co: usize,
     hw: usize,
     out: &mut [S],
+    planes: &mut PwPlanes,
 ) {
-    for o in 0..co {
-        for p in 0..hw {
-            let mut acc = bias[o];
+    if S::lanes_via_f32() {
+        let PwPlanes { xs, acc } = planes;
+        let xf = lanes::grow_plane(xs, ci * hw);
+        lanes::to_f32_plane(x, xf);
+        let acc = lanes::grow_plane(acc, hw);
+        for (o, orow) in out.chunks_exact_mut(hw).enumerate() {
+            lanes::vfill(acc, bias[o].to_f32_lane());
             for i in 0..ci {
-                acc = acc.add(w[o * ci + i].mul(x[i * hw + p]));
+                let k = w[o * ci + i].to_f32_lane();
+                lanes::vmadd_plane::<S>(acc, k, &xf[i * hw..(i + 1) * hw]);
             }
-            out[o * hw + p] = acc;
+            lanes::from_f32_plane(acc, orow);
+        }
+        return;
+    }
+    for (o, orow) in out.chunks_exact_mut(hw).enumerate() {
+        lanes::vfill(orow, bias[o]);
+        for i in 0..ci {
+            lanes::vmadd(orow, w[o * ci + i], &x[i * hw..(i + 1) * hw]);
         }
     }
 }
 
 /// Input gradient of [`pointwise_forward`]:
-/// `gx[i, p] = Σ_o w[o, i]·g[o, p]`, in `S`, ascending `o`.
+/// `gx[i, p] = Σ_o w[o, i]·g[o, p]`, in `S`, ascending `o` — same lane
+/// row structure (and plane variant) as the forward map.
 fn pointwise_backward_input<S: Scalar>(
     w: &[S],
     g: &[S],
@@ -283,14 +334,27 @@ fn pointwise_backward_input<S: Scalar>(
     co: usize,
     hw: usize,
     gx: &mut [S],
+    planes: &mut PwPlanes,
 ) {
-    for i in 0..ci {
-        for p in 0..hw {
-            let mut acc = S::zero();
+    if S::lanes_via_f32() {
+        let PwPlanes { xs, acc } = planes;
+        let gf = lanes::grow_plane(xs, co * hw);
+        lanes::to_f32_plane(g, gf);
+        let acc = lanes::grow_plane(acc, hw);
+        for (i, grow) in gx.chunks_exact_mut(hw).enumerate() {
+            lanes::vfill(acc, 0.0);
             for o in 0..co {
-                acc = acc.add(w[o * ci + i].mul(g[o * hw + p]));
+                let k = w[o * ci + i].to_f32_lane();
+                lanes::vmadd_plane::<S>(acc, k, &gf[o * hw..(o + 1) * hw]);
             }
-            gx[i * hw + p] = acc;
+            lanes::from_f32_plane(acc, grow);
+        }
+        return;
+    }
+    for (i, grow) in gx.chunks_exact_mut(hw).enumerate() {
+        lanes::vfill(grow, S::zero());
+        for o in 0..co {
+            lanes::vmadd(grow, w[o * ci + i], &g[o * hw..(o + 1) * hw]);
         }
     }
 }
@@ -410,6 +474,7 @@ impl<S: Scalar> Fno2d<S> {
             g_out: vec![S::zero(); sp.out_channels * hw],
             g_a: vec![S::zero(); sp.width * hw],
             g_b: vec![S::zero(); sp.width * hw],
+            pw: PwPlanes::default(),
         }
     }
 
@@ -426,6 +491,7 @@ impl<S: Scalar> Fno2d<S> {
             sp.width,
             hw,
             &mut ws.acts[0],
+            &mut ws.pw,
         );
         for l in 0..sp.n_layers {
             let (head, tail) = ws.acts.split_at_mut(l + 1);
@@ -433,19 +499,22 @@ impl<S: Scalar> Fno2d<S> {
             let a_out: &mut [S] = &mut tail[0];
             self.convs[l].forward_sample(a_in, &mut ws.conv_out, &mut ws.conv);
             ws.specs[l].copy_from(ws.conv.spec_in());
-            let mw = &self.mix_w[l];
-            let mb = &self.mix_b[l];
-            for o in 0..sp.width {
-                for p in 0..hw {
-                    let mut acc = mb[o];
-                    for i in 0..sp.width {
-                        acc = acc.add(mw[o * sp.width + i].mul(a_in[i * hw + p]));
-                    }
-                    let zv = acc.add(ws.conv_out[o * hw + p]);
-                    ws.zs[l][o * hw + p] = zv;
-                    a_out[o * hw + p] = gelu(zv);
-                }
-            }
+            // Channel mix into the pre-activation tape, then the spectral
+            // branch add and the GELU, slice-at-a-time on the lane
+            // primitives — op-for-op the scalar block it replaces
+            // (mix rows ascending `i`, then `mix.add(conv_out)`).
+            pointwise_forward(
+                &self.mix_w[l],
+                &self.mix_b[l],
+                a_in,
+                sp.width,
+                sp.width,
+                hw,
+                &mut ws.zs[l],
+                &mut ws.pw,
+            );
+            lanes::vadd_assign(&mut ws.zs[l], &ws.conv_out);
+            gelu_slice(&ws.zs[l], a_out);
         }
         pointwise_forward(
             &self.proj_w,
@@ -455,6 +524,7 @@ impl<S: Scalar> Fno2d<S> {
             sp.out_channels,
             hw,
             &mut ws.pred,
+            &mut ws.pw,
         );
     }
 
@@ -484,14 +554,14 @@ impl<S: Scalar> Fno2d<S> {
             sp.out_channels,
             hw,
             &mut ws.g_a,
+            &mut ws.pw,
         );
         for l in (0..ll).rev() {
-            {
-                let zs = &ws.zs[l];
-                for ((gz, ga), z) in ws.g_b.iter_mut().zip(ws.g_a.iter()).zip(zs.iter()) {
-                    *gz = ga.mul(gelu_prime(*z));
-                }
-            }
+            // GELU backward: `g_b = g_a ⊙ gelu'(z)`, with the prime
+            // staged first so the multiply keeps the `ga.mul(prime)`
+            // operand order of the scalar loop it replaces.
+            gelu_prime_slice(&ws.zs[l], &mut ws.g_b);
+            lanes::vmul_left(&mut ws.g_b, &ws.g_a);
             pointwise_grads(
                 &ws.g_b,
                 &ws.acts[l],
@@ -502,7 +572,15 @@ impl<S: Scalar> Fno2d<S> {
                 self.offsets[3 + 3 * l].start,
                 self.offsets[4 + 3 * l].start,
             );
-            pointwise_backward_input(&self.mix_w[l], &ws.g_b, sp.width, sp.width, hw, &mut ws.g_a);
+            pointwise_backward_input(
+                &self.mix_w[l],
+                &ws.g_b,
+                sp.width,
+                sp.width,
+                hw,
+                &mut ws.g_a,
+                &mut ws.pw,
+            );
             let r = self.offsets[2 + 3 * l].clone();
             self.convs[l].backward_sample(
                 &ws.g_b,
@@ -511,9 +589,7 @@ impl<S: Scalar> Fno2d<S> {
                 &mut grads[r],
                 &mut ws.conv,
             );
-            for (ga, &gx) in ws.g_a.iter_mut().zip(ws.conv_gx.iter()) {
-                *ga = ga.add(gx);
-            }
+            lanes::vadd_assign(&mut ws.g_a, &ws.conv_gx);
         }
         pointwise_grads(
             &ws.g_a,
@@ -607,9 +683,7 @@ impl<S: Scalar> Fno2d<S> {
         while start < b {
             let end = (start + block).min(b);
             let acc_slice = &mut acc[..(end - start) * stride];
-            for v in acc_slice.iter_mut() {
-                *v = 0.0;
-            }
+            lanes::vfill(acc_slice, 0.0);
             ex.for_each_chunk_with(
                 acc_slice,
                 stride,

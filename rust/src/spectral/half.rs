@@ -10,8 +10,11 @@
 //! FFT passes shrink to match: the forward transforms `k+1` columns
 //! instead of `2k`, the inverse runs `k+1` column transforms instead of
 //! `2k` row transforms of the embed-everything path). The contraction
-//! runs on split re/im structure-of-arrays slices
-//! ([`contract_modes_soa`]) so the hot loop streams flat real arrays.
+//! runs on split re/im structure-of-arrays slices through the
+//! register-tiled lane kernels
+//! ([`crate::contract::contract_modes_soa_lanes`]), bit-identical to
+//! the [`crate::contract::contract_modes_soa`] reference, so the hot
+//! loop streams flat real arrays.
 //!
 //! **Backward with the doubled-weight correction.** The adjoint of
 //! [`crate::fft::half::irfft2_kept`] applied to a *real* upstream
@@ -36,11 +39,14 @@
 //! including the within-sample row/column fan-out taken when
 //! `batch < threads` (`tests/half_spectral_parity.rs`).
 
-use crate::contract::{contract_modes, contract_modes_soa, contract_modes_soa_adjoint};
+use crate::contract::{
+    contract_modes, contract_modes_soa_adjoint_lanes, contract_modes_soa_lanes, LaneScratch,
+};
 use crate::fft::half::{col_weight_factor, half_cols, irfft2_kept_with, rfft2_kept_with};
 use crate::fft::plan::{plan_for, Plan};
 use crate::fft::trunc::{ifft2_kept, kept_indices, SpectralScratch};
 use crate::fft::{fft2, ifft, irfft2_kept, rfft2_kept, HalfSpectrum};
+use crate::fp::lanes;
 use crate::fp::{Cplx, Scalar};
 use crate::parallel::Executor;
 use crate::rng::Rng;
@@ -72,6 +78,9 @@ pub struct HalfConvScratch<S: Scalar> {
     gspec_aos: Vec<Cplx<S>>,
     /// Complex (h, w) grid the truncated inverse writes — backward only.
     cgrid: Vec<Cplx<S>>,
+    /// f32 conversion planes for the lane contraction kernels (used on
+    /// the emulated-format path only; empty for f64/f32).
+    lanes: LaneScratch,
 }
 
 impl<S: Scalar> Default for HalfConvScratch<S> {
@@ -90,6 +99,7 @@ impl<S: Scalar> Default for HalfConvScratch<S> {
             gspec_in: HalfSpectrum::default(),
             gspec_aos: Vec::new(),
             cgrid: Vec::new(),
+            lanes: LaneScratch::default(),
         }
     }
 }
@@ -339,9 +349,9 @@ impl<S: Scalar> HalfSpectralConv2d<S> {
             );
         }
         {
-            let HalfConvScratch { spec_in, tmp_mo_re, tmp_mo_im, spec_out, .. } = scratch;
+            let HalfConvScratch { spec_in, tmp_mo_re, tmp_mo_im, spec_out, lanes, .. } = scratch;
             let (so_re, so_im) = spec_out.parts_mut();
-            contract_modes_soa(
+            contract_modes_soa_lanes(
                 spec_in.re(),
                 spec_in.im(),
                 &self.w_re,
@@ -353,6 +363,7 @@ impl<S: Scalar> HalfSpectralConv2d<S> {
                 tmp_mo_im,
                 so_re,
                 so_im,
+                lanes,
             );
         }
         for o in 0..self.co {
@@ -405,9 +416,9 @@ impl<S: Scalar> HalfSpectralConv2d<S> {
             );
         }
         {
-            let HalfConvScratch { spec_in, tmp_mo_re, tmp_mo_im, spec_out, .. } = scratch;
+            let HalfConvScratch { spec_in, tmp_mo_re, tmp_mo_im, spec_out, lanes, .. } = scratch;
             let (so_re, so_im) = spec_out.parts_mut();
-            contract_modes_soa(
+            contract_modes_soa_lanes(
                 spec_in.re(),
                 spec_in.im(),
                 &self.w_re,
@@ -419,6 +430,7 @@ impl<S: Scalar> HalfSpectralConv2d<S> {
                 tmp_mo_im,
                 so_re,
                 so_im,
+                lanes,
             );
         }
         for o in 0..self.co {
@@ -491,10 +503,11 @@ impl<S: Scalar> HalfSpectralConv2d<S> {
                 im,
                 &mut scratch.fft,
             );
-            for (m, (r, i)) in re.iter_mut().zip(im.iter_mut()).enumerate() {
-                let f = self.factors[m % kc];
-                *r = r.mul(f);
-                *i = i.mul(f);
+            // Column-periodic factor scale, one stored row at a time
+            // (n_modes = kept_rows · kc exactly, same `r.mul(f)` per
+            // element as the scalar loop it replaces).
+            for chunk in re.chunks_exact_mut(kc).chain(im.chunks_exact_mut(kc)) {
+                lanes::vmul_assign(chunk, &self.factors);
             }
         }
         // Weight gradient, accumulated in f64.
@@ -518,9 +531,9 @@ impl<S: Scalar> HalfSpectralConv2d<S> {
         // with the hw cancelling the 1/hw of the first stage exactly),
         // keeping the real part.
         {
-            let HalfConvScratch { spec_out, tmp_mi_re, tmp_mi_im, gspec_in, .. } = scratch;
+            let HalfConvScratch { spec_out, tmp_mi_re, tmp_mi_im, gspec_in, lanes, .. } = scratch;
             let (gi_re, gi_im) = gspec_in.parts_mut();
-            contract_modes_soa_adjoint(
+            contract_modes_soa_adjoint_lanes(
                 spec_out.re(),
                 spec_out.im(),
                 &self.w_re,
@@ -532,6 +545,7 @@ impl<S: Scalar> HalfSpectralConv2d<S> {
                 tmp_mi_im,
                 gi_re,
                 gi_im,
+                lanes,
             );
         }
         for i in 0..self.ci {
@@ -550,9 +564,7 @@ impl<S: Scalar> HalfSpectralConv2d<S> {
                 &mut scratch.cgrid,
                 &mut scratch.fft,
             );
-            for (d, z) in gx[i * hw..(i + 1) * hw].iter_mut().zip(&scratch.cgrid) {
-                *d = z.re;
-            }
+            lanes::real_part(&mut gx[i * hw..(i + 1) * hw], &scratch.cgrid);
         }
     }
 

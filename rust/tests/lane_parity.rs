@@ -1,0 +1,223 @@
+//! Lane-kernel parity: the explicitly unrolled `fp::lanes` rewrites of
+//! the SoA hot path must be **bitwise** identical to the scalar
+//! reference kernels at every precision and thread count.
+//!
+//! Three levels, mirroring how the kernels are deployed:
+//!
+//! * kernel-vs-kernel: `contract_modes_soa{,_adjoint}_lanes` against the
+//!   `contract::exec` references over ragged (ci, co, n_modes) sweeps —
+//!   tile tails, single-lane shapes, LANE±1 boundaries — at
+//!   f64/f32/tf32/bf16/f16;
+//! * layer level: the fused half-spectrum forward (which now rides the
+//!   lane kernels, butterfly passes and conversion planes) against the
+//!   serial composed oracle `forward_composed`, at threads {1, 2, 8},
+//!   including the `2·k_max == n` kept-index boundary and odd
+//!   (Bluestein) axis lengths;
+//! * model level: `Fno2d` forward and `train_batch` (lane pointwise
+//!   mix/GELU paths, plane conversions for emulated formats) must be
+//!   thread-count invariant bit for bit.
+//!
+//! `scripts/ci.sh` runs this suite on both PALLAS_THREADS legs; the
+//! `current_executor` test below picks that setting up explicitly.
+
+use mpno::contract::{
+    contract_modes_soa, contract_modes_soa_adjoint, contract_modes_soa_adjoint_lanes,
+    contract_modes_soa_lanes, LaneScratch,
+};
+use mpno::fp::{Bf16, Scalar, Tf32, F16};
+use mpno::model::{Fno2d, FnoSpec};
+use mpno::parallel::Executor;
+use mpno::rng::Rng;
+use mpno::spectral::{random_real_field, HalfSpectralConv2d};
+use mpno::tensor::Tensor;
+
+fn rand_s<S: Scalar>(n: usize, seed: u64) -> Vec<S> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| S::from_f64(rng.normal())).collect()
+}
+
+/// Exact f64-image bit patterns — the equality the parity suite asserts.
+fn bits<S: Scalar>(v: &[S]) -> Vec<u64> {
+    v.iter().map(|x| x.to_f64().to_bits()).collect()
+}
+
+/// Ragged kernel shapes: lane tails on every axis (`co`/`ci` at LANE−1,
+/// LANE, LANE+1, 2·LANE+1), degenerate single-element cases, and
+/// FNO-ish mode counts (12 = 2·2·3, 60 = 2·5·6).
+const SHAPES: [(usize, usize, usize); 8] = [
+    (1, 1, 1),
+    (7, 3, 5),
+    (8, 8, 8),
+    (9, 17, 13),
+    (16, 8, 24),
+    (3, 7, 12),
+    (2, 2, 60),
+    (5, 11, 37),
+];
+
+fn fwd_case<S: Scalar>() {
+    let mut scratch = LaneScratch::default();
+    for (i, &(ci, co, n_modes)) in SHAPES.iter().enumerate() {
+        let seed = 100 + i as u64;
+        let x_re = rand_s::<S>(ci * n_modes, seed);
+        let x_im = rand_s::<S>(ci * n_modes, seed + 1);
+        let w_re = rand_s::<S>(n_modes * ci * co, seed + 2);
+        let w_im = rand_s::<S>(n_modes * ci * co, seed + 3);
+        let mut tmp_re = vec![S::zero(); n_modes * co];
+        let mut tmp_im = vec![S::zero(); n_modes * co];
+        let mut want_re = vec![S::zero(); co * n_modes];
+        let mut want_im = vec![S::zero(); co * n_modes];
+        contract_modes_soa(
+            &x_re, &x_im, &w_re, &w_im, ci, co, n_modes, &mut tmp_re, &mut tmp_im, &mut want_re,
+            &mut want_im,
+        );
+        let mut got_re = vec![S::zero(); co * n_modes];
+        let mut got_im = vec![S::zero(); co * n_modes];
+        contract_modes_soa_lanes(
+            &x_re, &x_im, &w_re, &w_im, ci, co, n_modes, &mut tmp_re, &mut tmp_im, &mut got_re,
+            &mut got_im, &mut scratch,
+        );
+        let tag = format!("{} fwd ci={ci} co={co} m={n_modes}", S::name());
+        assert_eq!(bits(&got_re), bits(&want_re), "{tag} re");
+        assert_eq!(bits(&got_im), bits(&want_im), "{tag} im");
+    }
+}
+
+fn adj_case<S: Scalar>() {
+    let mut scratch = LaneScratch::default();
+    for (i, &(ci, co, n_modes)) in SHAPES.iter().enumerate() {
+        let seed = 200 + i as u64;
+        let g_re = rand_s::<S>(co * n_modes, seed);
+        let g_im = rand_s::<S>(co * n_modes, seed + 1);
+        let w_re = rand_s::<S>(n_modes * ci * co, seed + 2);
+        let w_im = rand_s::<S>(n_modes * ci * co, seed + 3);
+        let mut tmp_re = vec![S::zero(); n_modes * ci];
+        let mut tmp_im = vec![S::zero(); n_modes * ci];
+        let mut want_re = vec![S::zero(); ci * n_modes];
+        let mut want_im = vec![S::zero(); ci * n_modes];
+        contract_modes_soa_adjoint(
+            &g_re, &g_im, &w_re, &w_im, ci, co, n_modes, &mut tmp_re, &mut tmp_im, &mut want_re,
+            &mut want_im,
+        );
+        let mut got_re = vec![S::zero(); ci * n_modes];
+        let mut got_im = vec![S::zero(); ci * n_modes];
+        contract_modes_soa_adjoint_lanes(
+            &g_re, &g_im, &w_re, &w_im, ci, co, n_modes, &mut tmp_re, &mut tmp_im, &mut got_re,
+            &mut got_im, &mut scratch,
+        );
+        let tag = format!("{} adj ci={ci} co={co} m={n_modes}", S::name());
+        assert_eq!(bits(&got_re), bits(&want_re), "{tag} re");
+        assert_eq!(bits(&got_im), bits(&want_im), "{tag} im");
+    }
+}
+
+#[test]
+fn lane_forward_matches_reference_bitwise_all_precisions() {
+    fwd_case::<f64>();
+    fwd_case::<f32>();
+    fwd_case::<Tf32>();
+    fwd_case::<Bf16>();
+    fwd_case::<F16>();
+}
+
+#[test]
+fn lane_adjoint_matches_reference_bitwise_all_precisions() {
+    adj_case::<f64>();
+    adj_case::<f32>();
+    adj_case::<Tf32>();
+    adj_case::<Bf16>();
+    adj_case::<F16>();
+}
+
+/// The fused half-spectrum layer (lane contraction + lane butterfly and
+/// scratch passes end to end) against the serial composed oracle, at
+/// explicit thread counts.
+fn layer_case<S: Scalar>(b: usize, ci: usize, co: usize, h: usize, w: usize, k: usize, seed: u64) {
+    let layer = HalfSpectralConv2d::<S>::random(ci, co, h, w, k, seed);
+    let input = random_real_field::<S>(b * ci * h * w, seed + 1);
+    let want = layer.forward_composed(&input, b);
+    for threads in [1usize, 2, 8] {
+        let got = layer.forward(&input, b, &Executor::new(threads));
+        assert_eq!(
+            bits(&got),
+            bits(&want),
+            "{} b={b} ci={ci} co={co} {h}x{w} k={k} threads={threads}",
+            S::name()
+        );
+    }
+}
+
+#[test]
+fn fused_layer_matches_composed_bitwise_all_precisions() {
+    layer_case::<f64>(3, 2, 3, 16, 8, 2, 301);
+    layer_case::<f32>(3, 2, 3, 16, 8, 2, 303);
+    layer_case::<Tf32>(2, 2, 2, 12, 8, 2, 305);
+    layer_case::<Bf16>(3, 2, 3, 16, 8, 2, 307);
+    layer_case::<F16>(2, 3, 2, 16, 8, 2, 309);
+}
+
+#[test]
+fn fused_layer_matches_composed_at_kept_index_boundary() {
+    // 2·k_max == h == w: the kept rows are the whole axis (identity
+    // permutation) and the stored Nyquist column is self-conjugate.
+    layer_case::<f64>(2, 2, 2, 8, 8, 4, 311);
+    layer_case::<Bf16>(2, 2, 2, 8, 8, 4, 313);
+    layer_case::<F16>(2, 2, 2, 8, 8, 4, 315);
+}
+
+#[test]
+fn fused_layer_matches_composed_on_odd_bluestein_axes() {
+    // Odd column-transform length exercises the Bluestein convolution
+    // (lane cmul/vfill passes) through the full fused pipeline.
+    layer_case::<f64>(2, 2, 2, 9, 12, 2, 317);
+    layer_case::<f32>(2, 2, 2, 15, 8, 2, 319);
+    layer_case::<Bf16>(2, 2, 2, 9, 12, 2, 321);
+}
+
+#[test]
+fn fused_layer_matches_composed_under_current_executor() {
+    // Executor::current() honors PALLAS_THREADS — this is the case the
+    // two ci.sh parity legs actually vary.
+    let (b, ci, co, h, w, k) = (3usize, 2usize, 3usize, 16usize, 8usize, 2usize);
+    let layer = HalfSpectralConv2d::<Bf16>::random(ci, co, h, w, k, 331);
+    let input = random_real_field::<Bf16>(b * ci * h * w, 332);
+    let want = layer.forward_composed(&input, b);
+    let got = layer.forward(&input, b, &Executor::current());
+    assert_eq!(bits(&got), bits(&want));
+}
+
+fn rand_tensor(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape.to_vec(), rng.normal_vec(n, 1.0))
+}
+
+/// Model-level thread invariance through the lane pointwise/GELU paths:
+/// forward output, training loss and every gradient tensor must be bit
+/// for bit the serial result at every thread count.
+fn model_case<S: Scalar>() {
+    let sp =
+        FnoSpec { in_channels: 2, out_channels: 1, width: 3, k_max: 2, n_layers: 2, h: 8, w: 8 };
+    let params = sp.init_params(41);
+    let refs: Vec<&Tensor> = params.iter().collect();
+    let mut model = Fno2d::<S>::new(sp.clone());
+    model.set_params(&refs);
+    let x = rand_tensor(&[3, sp.in_channels, sp.h, sp.w], 42);
+    let y = rand_tensor(&[3, sp.out_channels, sp.h, sp.w], 43);
+    let want_f = model.forward(&x, &Executor::serial());
+    let (want_loss, want_g) = model.train_batch(&x, &y, 1.0, &Executor::serial());
+    for threads in [2usize, 8] {
+        let ex = Executor::new(threads);
+        assert_eq!(model.forward(&x, &ex), want_f, "{} fwd threads={threads}", S::name());
+        let (loss, g) = model.train_batch(&x, &y, 1.0, &ex);
+        assert_eq!(loss.to_bits(), want_loss.to_bits(), "{} loss threads={threads}", S::name());
+        assert_eq!(g, want_g, "{} grads threads={threads}", S::name());
+    }
+}
+
+#[test]
+fn model_forward_and_train_thread_invariant_bitwise() {
+    model_case::<f32>();
+    model_case::<Bf16>();
+    model_case::<F16>();
+}

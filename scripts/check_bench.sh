@@ -11,7 +11,11 @@
 #      section from bench_native; each pair times the same request set,
 #      so mean_s is directly comparable). Batch-1 pairs ("... b1") do
 #      identical work and are exempt — they exist to show the batching
-#      overhead is flat, not to gate on noise.
+#      overhead is flat, not to gate on noise, and
+#   4. the lane (explicitly unrolled SIMD-style) SoA contraction kernels
+#      must not be slower than the scalar reference kernels at the same
+#      shape, precision AND thread count (paired "... reference" /
+#      "... lane" rows from bench_contract and bench_native).
 #
 # Sections suffixed `_smoke` or `_quick` hold 1-iteration CI smoke rows /
 # quick-shape rows (see bench::bench_json_section) and are skipped — they
@@ -55,6 +59,7 @@ for section, rows in sorted(doc.items()):
     composed = {}
     fused = {}
     unbatched = {}
+    reference = {}
     for row in rows:
         case = row.get("case", "")
         if case.endswith(" composed"):
@@ -63,6 +68,8 @@ for section, rows in sorted(doc.items()):
             fused[(case[: -len(" fused")], row.get("threads"))] = row
         elif case.endswith(" unbatched"):
             unbatched[(case[: -len(" unbatched")], row.get("threads"))] = row
+        elif case.endswith(" reference"):
+            reference[(case[: -len(" reference")], row.get("threads"))] = row
     for row in rows:
         case = row.get("case", "")
         if case.endswith(" half fused"):
@@ -124,6 +131,25 @@ for section, rows in sorted(doc.items()):
                 print(
                     f"check_bench: OK {tag}: batched {bat_s:.6f}s"
                     f" <= unbatched {unb_s:.6f}s"
+                )
+        elif case.endswith(" lane"):
+            # Gate 4: lane kernels vs scalar reference, same shape
+            # (which encodes the precision) and thread count.
+            shape = case[: -len(" lane")]
+            base = reference.get((shape, row.get("threads")))
+            if base is None:
+                continue
+            checked += 1
+            lane_s, ref_s = row["mean_s"], base["mean_s"]
+            tag = f"{section}: {shape} (threads={row.get('threads')})"
+            if lane_s > ref_s:
+                failures.append(
+                    f"{tag}: lane {lane_s:.6f}s > reference {ref_s:.6f}s"
+                )
+            else:
+                print(
+                    f"check_bench: OK {tag}: lane {lane_s:.6f}s"
+                    f" <= reference {ref_s:.6f}s"
                 )
 
 if failures:

@@ -20,6 +20,7 @@ PALLAS_THREADS=1 cargo test -q --test spectral_parity
 PALLAS_THREADS=1 cargo test -q --test half_spectral_parity
 PALLAS_THREADS=1 cargo test -q --test native_grad
 PALLAS_THREADS=1 cargo test -q --test serve_parity
+PALLAS_THREADS=1 cargo test -q --test lane_parity
 
 # Same suites pinned to eight workers: with batch sizes below the worker
 # count the engines switch to within-sample row/column fan-out, so this
@@ -31,6 +32,7 @@ PALLAS_THREADS=8 cargo test -q --test spectral_parity
 PALLAS_THREADS=8 cargo test -q --test half_spectral_parity
 PALLAS_THREADS=8 cargo test -q --test native_grad
 PALLAS_THREADS=8 cargo test -q --test serve_parity
+PALLAS_THREADS=8 cargo test -q --test lane_parity
 
 # End-to-end native training smoke: two full epochs through the fused
 # spectral engine (forward + hand-derived backward + Adam + loss scaler)
@@ -84,6 +86,8 @@ MPNO_BENCH_SMOKE=1 cargo run --release -- bench-par --quick --json
 # Regression gate on the recorded (non-smoke) bench rows: the fused
 # path must never be slower than the composed baseline, the Hermitian
 # half-spectrum path must never be slower than the full-spectrum fused
-# path at the same shape and thread count, and batched serving must
-# never be slower than serving the same requests one at a time.
+# path at the same shape and thread count, batched serving must never
+# be slower than serving the same requests one at a time, and the lane
+# SoA contraction kernels must never be slower than their scalar
+# reference at the same shape, precision and thread count.
 ./scripts/check_bench.sh
