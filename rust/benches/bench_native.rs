@@ -7,7 +7,9 @@
 //! under the `bench_native` section (`_smoke` suffixed under
 //! MPNO_BENCH_SMOKE=1, so CI runs never clobber recorded numbers).
 //! A second `serve` section carries batched-vs-unbatched serving rows
-//! (f32/bf16/f16 × batch {1, 4, 16}) for the serve batching gate.
+//! (f32/bf16/f16 × batch {1, 4, 16}) for the serve batching gate, plus
+//! loopback-HTTP vs in-process transport pairs (f32/bf16 × batch
+//! {1, 16}) for the transport-overhead gate.
 //! Run: `cargo bench --bench bench_native`.
 
 use mpno::bench::{
@@ -152,6 +154,66 @@ fn bench_serve(
     }
 }
 
+/// Transport rows: the same requests served over loopback HTTP vs
+/// directly in-process, at f32/bf16 × batch {1, 16}. Row tags end in
+/// " direct" / " http" at matching shape+threads so
+/// `scripts/check_bench.sh` bounds the transport overhead ratio.
+fn bench_http_transport(
+    res: usize,
+    width: usize,
+    k_max: usize,
+    budget_s: f64,
+    par: &Executor,
+    rows: &mut Vec<Json>,
+) {
+    use mpno::serve::api::Encoding;
+    use mpno::serve::http::{Client, HttpConfig, HttpServer};
+    use mpno::serve::{ServeConfig, ServeEngine, WireRequest};
+    let spec =
+        FnoSpec { in_channels: 1, out_channels: 1, width, k_max, n_layers: 2, h: res, w: res };
+    let params = spec.init_params(33);
+    for prec in ["f32", "bf16"] {
+        let cfg =
+            ServeConfig { precision: prec.to_string(), max_batch: 16, ..ServeConfig::default() };
+        let mut direct = ServeEngine::new("bench", spec.clone(), params.clone(), &cfg).unwrap();
+        let engine = ServeEngine::new("bench", spec.clone(), params.clone(), &cfg).unwrap();
+        let http_cfg = HttpConfig { addr: "127.0.0.1:0".to_string(), ..HttpConfig::default() };
+        let server = HttpServer::bind(engine, &cfg, http_cfg, *par).unwrap();
+        let addr = server.local_addr();
+        let handle = std::thread::spawn(move || server.run());
+        let mut cl = Client::connect(&format!("http://{addr}")).unwrap();
+        for batch in [1usize, 16] {
+            let reqs: Vec<WireRequest> = (0..batch)
+                .map(|i| WireRequest::new(i as u64, rand_tensor(&[1, res, res], 60 + i as u64)))
+                .collect();
+            // Warm the model variant on both sides of the pair.
+            direct.infer_one(&reqs[0].clone().into_serve_request(), par).unwrap();
+            cl.infer(&reqs[0], Encoding::B64).unwrap();
+            let shape =
+                format!("serve transport {prec} {res}x{res} w{width} k{k_max} b{batch}");
+            let d = bench_auto(&format!("{shape} direct"), budget_s, || {
+                for r in &reqs {
+                    let reply = direct.infer_one(&r.clone().into_serve_request(), par).unwrap();
+                    std::hint::black_box(reply.output.data().len());
+                }
+            });
+            println!("{d}");
+            let h = bench_auto(&format!("{shape} http"), budget_s, || {
+                for r in &reqs {
+                    let reply = cl.infer(r, Encoding::B64).unwrap();
+                    std::hint::black_box(reply.output.data().len());
+                }
+            });
+            println!("{h}");
+            println!("  -> http vs direct (b{batch}): {:.2}x the cost", speedup(&h, &d));
+            rows.push(d.to_json_tagged(&format!("{shape} direct"), par.threads()));
+            rows.push(h.to_json_tagged(&format!("{shape} http"), par.threads()));
+        }
+        cl.shutdown_server().unwrap();
+        let _ = handle.join().expect("http bench server thread");
+    }
+}
+
 fn main() {
     let quick = smoke_mode();
     let (batch, res, width, k_max, n_layers) =
@@ -192,6 +254,8 @@ fn main() {
     println!("-- serve path: batched vs one-at-a-time ({} threads) --", par.threads());
     let mut serve_rows: Vec<Json> = Vec::new();
     bench_serve(res, width, k_max, 0.3, &par, &mut serve_rows);
+    println!("-- serve transport: loopback HTTP vs in-process ({} threads) --", par.threads());
+    bench_http_transport(res, width, k_max, 0.3, &par, &mut serve_rows);
     let serve_section = bench_json_section("serve", false);
     match update_bench_json(&path, &serve_section, serve_rows) {
         Ok(()) => println!("  [saved {} ({serve_section})]", path.display()),

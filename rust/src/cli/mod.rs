@@ -6,6 +6,9 @@
 //! mpno train --artifact NAME [--epochs N] [--lr X] [--schedule paper]
 //! mpno train --native [--precision P] [--schedule paper] [...]
 //! mpno serve --checkpoint PATH [--precision P] [--max-batch N] [--bench]
+//!            [--listen ADDR]               HTTP transport (serve::http)
+//! mpno infer --url URL (--input X.mpno | --probe) [--precision P]
+//!            [--grid HxW] [--out Y.mpno]   HTTP client for `serve --listen`
 //! mpno exp <id|all> [--quick] [--json]  regenerate a paper table/figure
 //! mpno bench-par [--quick] [--json] serial vs parallel kernel throughput
 //!                                   (--json -> BENCH_spectral.json)
@@ -37,8 +40,17 @@ pub struct Args {
 /// --expect-improve darcy` used to eat the positional). Value-taking
 /// flags (`--lr-decay 0.9`, `--seed 3`, ...) keep the `--key value`
 /// form; both kinds also accept the explicit `--key=value` spelling.
-const BOOLEAN_FLAGS: [&str; 6] =
-    ["native", "quick", "json", "expect-improve", "loss-scaling", "bench"];
+const BOOLEAN_FLAGS: [&str; 9] = [
+    "native",
+    "quick",
+    "json",
+    "expect-improve",
+    "loss-scaling",
+    "bench",
+    "probe",
+    "stats",
+    "shutdown",
+];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Args {
@@ -120,6 +132,7 @@ pub fn run_argv(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "infer" => cmd_infer(&args),
         "exp" => cmd_exp(&args),
         "bench-par" => cmd_bench_par(&args),
         "dump-fp-vectors" => cmd_dump_fp_vectors(),
@@ -156,8 +169,18 @@ USAGE:
              one request per stdin line:
                INPUT.mpno [out=PATH] [precision=TOK] [grid=HxW]
              (grid= serves zero-shot at another resolution);
+             --listen ADDR instead serves HTTP (POST /infer, GET /stats,
+             GET /healthz, POST /shutdown; port 0 = ephemeral, with
+             [--port-file PATH] [--http-threads N] [--max-inflight N]
+             [--accept-backlog N] [--read-timeout-ms X] [--encoding b64|hex]);
              --bench instead self-checks batched-vs-serial parity on
              generated samples and reports throughput
+  mpno infer --url http://HOST:PORT (--input X.mpno | --probe)
+             [--precision TOK] [--grid HxW] [--n N] [--out Y.mpno]
+             [--stats] [--shutdown] [--encoding b64|hex]
+             HTTP client for `mpno serve --listen`: sends N inference
+             requests (--probe generates a seeded input from /stats)
+             and checks replies are finite and repeat bit-identically
   mpno exp <id|all> [--quick] [--json]   ids: {}
   mpno bench-par [--quick] [--json]      serial vs parallel kernel
                                   throughput incl. the fused spectral
@@ -467,11 +490,151 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.max_batch,
         crate::parallel::num_threads(),
     );
-    if args.has("bench") {
+    if let Some(addr) = args.flag("listen") {
+        serve_http(engine, &cfg, addr, args)
+    } else if args.has("bench") {
         serve_bench(engine, &cfg, args)
     } else {
         serve_stdin(engine, &cfg)
     }
+}
+
+/// `mpno serve --listen ADDR`: the HTTP transport. Binds, optionally
+/// records the resolved port (`--port-file`, for ephemeral-port CI),
+/// and serves until a client POSTs `/shutdown`.
+fn serve_http(
+    engine: crate::serve::ServeEngine,
+    cfg: &crate::serve::ServeConfig,
+    addr: &str,
+    args: &Args,
+) -> Result<()> {
+    use crate::serve::http::{HttpConfig, HttpServer};
+    let mut hc = HttpConfig { addr: addr.to_string(), ..HttpConfig::default() };
+    hc.handler_threads = args.get_usize("http-threads", hc.handler_threads);
+    hc.accept_backlog = args.get_usize("accept-backlog", hc.accept_backlog);
+    hc.max_inflight = args.get_usize("max-inflight", hc.max_inflight);
+    hc.read_timeout =
+        std::time::Duration::from_millis(args.get_u64("read-timeout-ms", 10_000));
+    hc.write_timeout =
+        std::time::Duration::from_millis(args.get_u64("write-timeout-ms", 10_000));
+    hc.max_body = args.get_usize("max-body-mb", 64) << 20;
+    if let Some(tok) = args.flag("encoding") {
+        hc.encoding = crate::serve::api::Encoding::from_token(tok)?;
+    }
+    let ex = crate::parallel::Executor::current();
+    let server = HttpServer::bind(engine, cfg, hc, ex)?;
+    let bound = server.local_addr();
+    if let Some(pf) = args.flag("port-file") {
+        std::fs::write(pf, format!("{}\n", bound.port()))
+            .with_context(|| format!("writing --port-file {pf:?}"))?;
+    }
+    println!(
+        "listening on http://{bound} (POST /infer, GET /stats, GET /healthz, POST /shutdown)"
+    );
+    let st = server.run().stats();
+    println!(
+        "served {} requests in {} batches (max {}), {} resampled",
+        st.requests, st.batches, st.max_batch_seen, st.resampled
+    );
+    Ok(())
+}
+
+/// `mpno infer`: the built-in HTTP client. `--probe` asks `/stats` for
+/// the model spec and generates a seeded input at the training grid, so
+/// CI can smoke the loopback path without shipping input files around.
+fn cmd_infer(args: &Args) -> Result<()> {
+    use crate::serve::api::{self, Encoding, WireRequest};
+    use crate::serve::http::Client;
+    use crate::serve::WireReply;
+    use crate::tensor::Tensor;
+    let url = args.flag("url").context("--url required (mpno infer speaks HTTP)")?;
+    let mut client = Client::connect(url)?;
+    if args.has("stats") {
+        println!("{}", client.stats()?.render());
+    }
+    let enc = match args.flag("encoding") {
+        Some(tok) => Encoding::from_token(tok)?,
+        None => Encoding::B64,
+    };
+    let input: Option<Tensor> = if let Some(path) = args.flag("input") {
+        Some(api::parse_line(path, 0)?.wire.input)
+    } else if args.has("probe") {
+        let st = client.stats()?;
+        let spec = st.get("spec").context("/stats reply lacks \"spec\"")?;
+        let (cin, h, w) = (
+            spec.usize_field("in_channels")?,
+            spec.usize_field("h")?,
+            spec.usize_field("w")?,
+        );
+        let mut rng = crate::rng::Rng::new(args.get_u64("seed", 7));
+        let data: Vec<f32> = (0..cin * h * w).map(|_| rng.normal() as f32).collect();
+        Some(Tensor::from_vec(vec![cin, h, w], data))
+    } else {
+        None
+    };
+    let Some(input) = input else {
+        ensure!(
+            args.has("stats") || args.has("shutdown"),
+            "nothing to do: pass --input PATH or --probe (or --stats / --shutdown)"
+        );
+        if args.has("shutdown") {
+            client.shutdown_server()?;
+            println!("server draining");
+        }
+        return Ok(());
+    };
+    let n = args.get_usize("n", 1).max(1);
+    let mut req = WireRequest::new(0, input);
+    if let Some(p) = args.flag("precision") {
+        req.precision = Some(p.to_string());
+    }
+    if let Some(g) = args.flag("grid") {
+        req.grid = Some(api::parse_grid_token(g)?);
+    }
+    let t0 = std::time::Instant::now();
+    let mut first: Option<WireReply> = None;
+    for i in 0..n {
+        req.id = i as u64;
+        let reply = client.infer(&req, enc)?;
+        ensure!(reply.id == i as u64, "reply id {} for request {i}", reply.id);
+        ensure!(
+            reply.output.data().iter().all(|v| v.is_finite()),
+            "non-finite value in reply {i}"
+        );
+        match &first {
+            None => first = Some(reply),
+            Some(f0) => {
+                let same = f0
+                    .output
+                    .data()
+                    .iter()
+                    .zip(reply.output.data())
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                ensure!(same, "reply {i} is not bit-identical to reply 0 for the same input");
+            }
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let f0 = first.expect("n >= 1");
+    println!(
+        "{n} replies: output {:?} {} grid {}x{} ({:.1} req/s; serve {:.2} ms, total {:.2} ms)",
+        f0.output.shape(),
+        f0.model_key.precision,
+        f0.model_key.h,
+        f0.model_key.w,
+        n as f64 / dt,
+        f0.timings.serve_ms,
+        f0.timings.total_ms,
+    );
+    if let Some(p) = args.flag("out") {
+        crate::ser::save_tensors(&PathBuf::from(p), &[("y", &f0.output)])?;
+        println!("wrote {p}");
+    }
+    if args.has("shutdown") {
+        client.shutdown_server()?;
+        println!("server draining");
+    }
+    Ok(())
 }
 
 /// `mpno serve --bench`: one-shot self-check + throughput probe. Serves
@@ -483,7 +646,7 @@ fn serve_bench(
     cfg: &crate::serve::ServeConfig,
     args: &Args,
 ) -> Result<()> {
-    use crate::serve::ServeRequest;
+    use crate::serve::{ServeRequest, WireRequest};
     use crate::tensor::Tensor;
     let kind = engine
         .dataset()
@@ -501,15 +664,18 @@ fn serve_bench(
     );
     let slab = sp.in_channels * sp.h * sp.w;
     let xd = data.inputs.data();
+    // Requests go through the typed wire layer, like every other
+    // front-end (stdin and HTTP decode into the same WireRequest).
     let reqs: Vec<ServeRequest> = (0..data.len().min(n))
         .map(|i| {
-            ServeRequest::new(
+            WireRequest::new(
                 i as u64,
                 Tensor::from_vec(
                     vec![sp.in_channels, sp.h, sp.w],
                     xd[i * slab..(i + 1) * slab].to_vec(),
                 ),
             )
+            .into_serve_request()
         })
         .collect();
     let ex = crate::parallel::Executor::current();
@@ -576,15 +742,16 @@ fn serve_bench(
 type PendingReply = (
     u64,
     Option<PathBuf>,
-    std::sync::mpsc::Receiver<Result<crate::serve::ServeReply, String>>,
+    std::sync::mpsc::Receiver<Result<crate::serve::ServeReply, crate::serve::ServeError>>,
 );
 
 /// Piped/interactive mode: one request per stdin line —
-/// `INPUT.mpno [out=PATH] [precision=TOK] [grid=HxW]` — submitted to the
-/// adaptive batcher; replies are written/printed as they complete, in
-/// submission order.
+/// `INPUT.mpno [out=PATH] [precision=TOK] [grid=HxW]` — parsed by the
+/// shared wire layer ([`crate::serve::api::parse_line`]) and submitted
+/// to the adaptive batcher; replies are written/printed as they
+/// complete, in submission order.
 fn serve_stdin(engine: crate::serve::ServeEngine, cfg: &crate::serve::ServeConfig) -> Result<()> {
-    use crate::serve::Server;
+    use crate::serve::{api, Server};
     use std::io::BufRead;
     let server = Server::start(engine, cfg.max_batch, cfg.max_wait);
     let mut queue: std::collections::VecDeque<PendingReply> = Default::default();
@@ -596,12 +763,15 @@ fn serve_stdin(engine: crate::serve::ServeEngine, cfg: &crate::serve::ServeConfi
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        match parse_serve_line(line, next_id) {
-            Ok((req, out)) => {
-                queue.push_back((req.id, out, server.submit(req)));
-                next_id += 1;
-            }
-            Err(e) => eprintln!("request error: {e:#}"),
+        match api::parse_line(line, next_id) {
+            Ok(lr) => match server.submit(lr.wire.into_serve_request()) {
+                Ok(rx) => {
+                    queue.push_back((next_id, lr.out, rx));
+                    next_id += 1;
+                }
+                Err(e) => eprintln!("request error: {e}"),
+            },
+            Err(e) => eprintln!("request error: {e}"),
         }
         drain_replies(&mut queue, false)?;
     }
@@ -614,47 +784,12 @@ fn serve_stdin(engine: crate::serve::ServeEngine, cfg: &crate::serve::ServeConfi
     Ok(())
 }
 
-fn parse_serve_line(line: &str, id: u64) -> Result<(crate::serve::ServeRequest, Option<PathBuf>)> {
-    let mut parts = line.split_whitespace();
-    let input_path = parts.next().context("empty request line")?;
-    let recs = crate::ser::load_tensors(&PathBuf::from(input_path))?;
-    let (_, t) = recs.into_iter().next().context("input file holds no tensors")?;
-    let input = match t.ndim() {
-        // A bare (h, w) field is a single-channel sample.
-        2 => {
-            let (h, w) = (t.shape()[0], t.shape()[1]);
-            t.reshape(&[1, h, w])
-        }
-        3 => t,
-        _ => bail!("input must be (h, w) or (cin, h, w), got {:?}", t.shape()),
-    };
-    let mut req = crate::serve::ServeRequest::new(id, input);
-    let mut out = None;
-    for p in parts {
-        if let Some(v) = p.strip_prefix("out=") {
-            out = Some(PathBuf::from(v));
-        } else if let Some(v) = p.strip_prefix("precision=") {
-            req.precision = Some(v.to_string());
-        } else if let Some(v) = p.strip_prefix("grid=") {
-            let (h, w) =
-                v.split_once('x').with_context(|| format!("grid must be HxW, got {v:?}"))?;
-            req.out_grid = Some((
-                h.parse().ok().with_context(|| format!("bad grid height {h:?}"))?,
-                w.parse().ok().with_context(|| format!("bad grid width {w:?}"))?,
-            ));
-        } else {
-            bail!("unknown request option {p:?}");
-        }
-    }
-    Ok((req, out))
-}
-
 /// Pop completed replies off the front of the queue; with `block` wait
 /// for every remaining one (EOF drain).
 fn drain_replies(queue: &mut std::collections::VecDeque<PendingReply>, block: bool) -> Result<()> {
     while let Some((id, out, rx)) = queue.pop_front() {
         let res = if block {
-            rx.recv().unwrap_or_else(|_| Err("serve worker exited".to_string()))
+            rx.recv().unwrap_or(Err(crate::serve::ServeError::ShuttingDown))
         } else {
             match rx.try_recv() {
                 Ok(r) => r,
@@ -663,7 +798,7 @@ fn drain_replies(queue: &mut std::collections::VecDeque<PendingReply>, block: bo
                     return Ok(());
                 }
                 Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                    Err("serve worker exited".to_string())
+                    Err(crate::serve::ServeError::ShuttingDown)
                 }
             }
         };

@@ -1,12 +1,21 @@
 //! Minimal JSON parser + writer (serde is not resolvable offline):
-//! enough for the AOT manifest and the machine-readable bench reports
-//! (`BENCH_spectral.json`) — objects, arrays, strings (with escapes),
-//! numbers, bools, null. Recursive descent over bytes; no document size
-//! limits beyond those callers' needs. [`Json::render`] round-trips
-//! through [`Json::parse`].
+//! enough for the AOT manifest, the machine-readable bench reports
+//! (`BENCH_spectral.json`), and the serving wire bodies — objects,
+//! arrays, strings (with escapes incl. `\u` surrogate pairs), numbers,
+//! bools, null. Recursive descent over bytes, hardened for
+//! network-facing use: nesting is bounded ([`MAX_DEPTH`], so a hostile
+//! `[[[[...` body cannot overflow the stack) and numbers that overflow
+//! f64 are rejected instead of becoming `inf`. [`Json::render`]
+//! round-trips through [`Json::parse`].
 
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
+
+/// Deepest container nesting [`Json::parse`] accepts. Recursive descent
+/// burns a stack frame per level; bounding it keeps hostile wire bodies
+/// from overflowing the thread stack. Honest documents (manifests,
+/// bench rows, serve requests) nest a handful of levels.
+pub const MAX_DEPTH: usize = 128;
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -21,7 +30,7 @@ pub enum Json {
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -177,6 +186,7 @@ impl From<Vec<Json>> for Json {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -201,8 +211,15 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json> {
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(c @ (b'{' | b'[')) => {
+                self.depth += 1;
+                if self.depth > MAX_DEPTH {
+                    bail!("nesting deeper than {MAX_DEPTH} levels at byte {}", self.i);
+                }
+                let v = if c == b'{' { self.object() } else { self.array() };
+                self.depth -= 1;
+                v
+            }
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
@@ -296,13 +313,28 @@ impl<'a> Parser<'a> {
                         Some(b'\\') => s.push('\\'),
                         Some(b'/') => s.push('/'),
                         Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                bail!("bad unicode escape");
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])?;
-                            let code = u32::from_str_radix(hex, 16)?;
-                            s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
-                            self.i += 4;
+                            let hi = self.hex_escape()?;
+                            let c = if (0xD800..0xDC00).contains(&hi) {
+                                // High surrogate: a UTF-16 pair escapes a
+                                // non-BMP char as \uD8xx\uDCxx.
+                                if self.b.get(self.i + 1) != Some(&b'\\')
+                                    || self.b.get(self.i + 2) != Some(&b'u')
+                                {
+                                    bail!("unpaired high surrogate at byte {}", self.i);
+                                }
+                                self.i += 2;
+                                let lo = self.hex_escape()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    bail!("bad low surrogate at byte {}", self.i);
+                                }
+                                let code = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                                char::from_u32(code).unwrap_or('\u{FFFD}')
+                            } else if (0xDC00..0xE000).contains(&hi) {
+                                bail!("stray low surrogate at byte {}", self.i);
+                            } else {
+                                char::from_u32(hi).unwrap_or('\u{FFFD}')
+                            };
+                            s.push(c);
                         }
                         other => bail!("bad escape {other:?}"),
                     }
@@ -321,6 +353,24 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Read the 4 hex digits of a `\u` escape; enters with `self.i` on
+    /// the `u`, leaves it on the last digit (the caller's `i += 1` then
+    /// steps past the whole escape).
+    fn hex_escape(&mut self) -> Result<u32> {
+        if self.i + 4 >= self.b.len() {
+            bail!("bad unicode escape");
+        }
+        let hex = &self.b[self.i + 1..self.i + 5];
+        // from_str_radix would accept a leading '+'; \u escapes are
+        // exactly four hex digits.
+        if !hex.iter().all(|c| c.is_ascii_hexdigit()) {
+            bail!("bad unicode escape at byte {}", self.i);
+        }
+        let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+        self.i += 4;
+        Ok(code)
+    }
+
     fn number(&mut self) -> Result<Json> {
         let start = self.i;
         if self.peek() == Some(b'-') {
@@ -334,7 +384,13 @@ impl<'a> Parser<'a> {
             }
         }
         let txt = std::str::from_utf8(&self.b[start..self.i])?;
-        Ok(Json::Num(txt.parse()?))
+        let v: f64 = txt.parse()?;
+        // JSON has no inf/nan; a literal that overflows f64 is a bad
+        // document, not infinity (wire hardening: `1e999` is rejected).
+        if !v.is_finite() {
+            bail!("number {txt:?} overflows f64 at byte {start}");
+        }
+        Ok(Json::Num(v))
     }
 }
 
@@ -407,6 +463,44 @@ mod tests {
             let rendered = v.render();
             assert_eq!(Json::parse(&rendered).unwrap(), v, "{doc} -> {rendered}");
         }
+    }
+
+    #[test]
+    fn nesting_is_bounded() {
+        let deep = |n: usize| format!("{}0{}", "[".repeat(n), "]".repeat(n));
+        assert!(Json::parse(&deep(50)).is_ok(), "honest nesting parses");
+        let err = Json::parse(&deep(MAX_DEPTH + 10)).unwrap_err();
+        assert!(format!("{err}").contains("nesting"), "{err}");
+        // Unclosed deep nesting must also fail bounded, not overflow.
+        assert!(Json::parse(&"[".repeat(100_000)).is_err());
+    }
+
+    #[test]
+    fn surrogate_pairs_decode() {
+        // U+1F600 in escaped UTF-16.
+        let j = Json::parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(j.as_str(), Some("\u{1F600}"));
+        // Round trip: the renderer emits the char raw, the parser reads
+        // raw UTF-8 back.
+        assert_eq!(Json::parse(&j.render()).unwrap(), j);
+        for bad in [
+            r#""\ud83d""#,       // unpaired high surrogate
+            r#""\ud83dxy""#,     // high surrogate followed by raw chars
+            r#""\ud83d\u0041""#, // high surrogate paired with a non-low
+            r#""\ude00""#,       // stray low surrogate
+            r#""\u+12f""#,       // from_str_radix would take the '+'
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn overflowing_numbers_are_rejected() {
+        for bad in ["1e999", "-1e999", "[1, 2e308]"] {
+            assert!(Json::parse(bad).is_err(), "{bad}");
+        }
+        // The largest finite doubles still parse.
+        assert!(Json::parse("1.7976931348623157e308").is_ok());
     }
 
     #[test]

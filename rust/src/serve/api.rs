@@ -1,0 +1,666 @@
+//! The typed serving wire layer: one request/reply/error surface shared
+//! by every front-end. The stdin line protocol, the HTTP transport
+//! ([`super::http`]) and in-process callers all decode into
+//! [`WireRequest`] and encode from [`WireReply`], so a request means the
+//! same thing — and fails with the same [`ServeError`] classification —
+//! no matter how it arrived.
+//!
+//! Tensor payloads travel as the raw little-endian f32 byte stream of
+//! the `.mpno` record layout ([`crate::ser`]), wrapped in base64 (the
+//! default) or hex. Both encodings are byte-lossless, so the house
+//! parity contract extends across the wire: a decoded reply is
+//! bit-identical to the tensor the engine produced, NaN payloads and
+//! negative zeros included — no float→decimal→float round trip.
+
+use super::{ModelKey, ServeError, ServeReply, ServeRequest};
+use crate::jsonlite::Json;
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Hard cap on decoded tensor elements per wire payload: bounds memory
+/// against hostile shape fields independently of the transport's body
+/// size limit.
+pub const MAX_WIRE_ELEMS: usize = 1 << 26;
+
+/// One decoded inference request, transport-independent.
+///
+/// Wire schema (JSON object):
+/// `{"id": N, "input": TENSOR, "precision": "f32", "grid": [H, W]}` —
+/// `precision` and `grid` optional; `grid` also accepts the line
+/// protocol's `"HxW"` string form. `TENSOR` is
+/// `{"shape": [..], "encoding": "b64"|"hex", "data": ".."}` with
+/// `encoding` defaulting to `b64`.
+#[derive(Debug, Clone)]
+pub struct WireRequest {
+    pub id: u64,
+    pub input: Tensor,
+    pub precision: Option<String>,
+    pub grid: Option<(usize, usize)>,
+}
+
+impl WireRequest {
+    pub fn new(id: u64, input: Tensor) -> WireRequest {
+        WireRequest { id, input, precision: None, grid: None }
+    }
+
+    /// The engine-side request this wire request denotes.
+    pub fn into_serve_request(self) -> ServeRequest {
+        ServeRequest {
+            id: self.id,
+            input: self.input,
+            precision: self.precision,
+            out_grid: self.grid,
+        }
+    }
+
+    pub fn to_json(&self, enc: Encoding) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("id".to_string(), Json::Num(self.id as f64));
+        m.insert("input".to_string(), encode_tensor(&self.input, enc));
+        if let Some(p) = &self.precision {
+            m.insert("precision".to_string(), Json::Str(p.clone()));
+        }
+        if let Some((h, w)) = self.grid {
+            m.insert("grid".to_string(), Json::Arr(vec![h.into(), w.into()]));
+        }
+        Json::Obj(m)
+    }
+
+    pub fn encode(&self, enc: Encoding) -> String {
+        self.to_json(enc).render()
+    }
+
+    /// Decode a wire request body. Every failure is a
+    /// [`ServeError::BadRequest`] — the caller did not send a valid
+    /// request, whatever the transport.
+    pub fn decode(body: &str) -> Result<WireRequest, ServeError> {
+        let j = Json::parse(body)
+            .map_err(|e| ServeError::bad_request(format!("malformed request JSON: {e:#}")))?;
+        WireRequest::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<WireRequest, ServeError> {
+        if !matches!(j, Json::Obj(_)) {
+            return Err(ServeError::bad_request("request must be a JSON object"));
+        }
+        let id = match j.get("id") {
+            None => 0,
+            Some(Json::Num(n)) if *n >= 0.0 && n.fract() == 0.0 => *n as u64,
+            Some(other) => {
+                return Err(ServeError::bad_request(format!(
+                    "\"id\" must be a non-negative integer, got {}",
+                    other.render()
+                )))
+            }
+        };
+        let input = decode_tensor(
+            j.get("input").ok_or_else(|| ServeError::bad_request("missing \"input\" tensor"))?,
+        )?;
+        let precision = match j.get("precision") {
+            None | Some(Json::Null) => None,
+            Some(Json::Str(s)) => Some(s.clone()),
+            Some(_) => return Err(ServeError::bad_request("\"precision\" must be a string")),
+        };
+        let grid = match j.get("grid") {
+            None | Some(Json::Null) => None,
+            Some(g) => Some(decode_grid(g)?),
+        };
+        Ok(WireRequest { id, input, precision, grid })
+    }
+}
+
+/// Timings a reply carries back: how long the request spent in the
+/// serving path (submit → reply, i.e. batching wait + compute) and the
+/// producer's total handling time including decode/encode. Milliseconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WireTimings {
+    pub serve_ms: f64,
+    pub total_ms: f64,
+}
+
+/// One decoded inference reply, transport-independent.
+///
+/// Wire schema: `{"id": N, "output": TENSOR, "model_key":
+/// {"precision": "f32", "grid": [H, W]}, "batch_size": N, "timings":
+/// {"serve_ms": X, "total_ms": Y}}`.
+#[derive(Debug, Clone)]
+pub struct WireReply {
+    pub id: u64,
+    pub output: Tensor,
+    pub model_key: ModelKey,
+    pub batch_size: usize,
+    pub timings: WireTimings,
+}
+
+impl WireReply {
+    /// Wrap an engine reply for the wire.
+    pub fn from_serve_reply(r: ServeReply, timings: WireTimings) -> WireReply {
+        WireReply {
+            id: r.id,
+            output: r.output,
+            model_key: ModelKey { precision: r.precision, h: r.grid.0, w: r.grid.1 },
+            batch_size: r.batch_size,
+            timings,
+        }
+    }
+
+    pub fn to_json(&self, enc: Encoding) -> Json {
+        let mut key = BTreeMap::new();
+        key.insert("precision".to_string(), Json::Str(self.model_key.precision.clone()));
+        key.insert(
+            "grid".to_string(),
+            Json::Arr(vec![self.model_key.h.into(), self.model_key.w.into()]),
+        );
+        let mut t = BTreeMap::new();
+        t.insert("serve_ms".to_string(), Json::Num(self.timings.serve_ms));
+        t.insert("total_ms".to_string(), Json::Num(self.timings.total_ms));
+        let mut m = BTreeMap::new();
+        m.insert("id".to_string(), Json::Num(self.id as f64));
+        m.insert("output".to_string(), encode_tensor(&self.output, enc));
+        m.insert("model_key".to_string(), Json::Obj(key));
+        m.insert("batch_size".to_string(), Json::Num(self.batch_size as f64));
+        m.insert("timings".to_string(), Json::Obj(t));
+        Json::Obj(m)
+    }
+
+    pub fn encode(&self, enc: Encoding) -> String {
+        self.to_json(enc).render()
+    }
+
+    /// Decode a reply body. A body carrying a wire error object decodes
+    /// into that error; anything else malformed is a `Model` error (the
+    /// server produced it, not the caller).
+    pub fn decode(body: &str) -> Result<WireReply, ServeError> {
+        let j = Json::parse(body)
+            .map_err(|e| ServeError::model(format!("malformed reply JSON: {e:#}")))?;
+        if let Some(e) = decode_error(&j) {
+            return Err(e);
+        }
+        let bad = |what: &str| ServeError::model(format!("reply missing {what}"));
+        let id = j.get("id").and_then(Json::as_f64).ok_or_else(|| bad("\"id\""))? as u64;
+        let output = decode_tensor(j.get("output").ok_or_else(|| bad("\"output\""))?)
+            .map_err(|e| ServeError::model(format!("reply tensor: {e}")))?;
+        let key = j.get("model_key").ok_or_else(|| bad("\"model_key\""))?;
+        let precision =
+            key.get("precision").and_then(Json::as_str).ok_or_else(|| bad("precision"))?;
+        let (h, w) = decode_grid(key.get("grid").ok_or_else(|| bad("grid"))?)
+            .map_err(|e| ServeError::model(format!("reply model_key: {e}")))?;
+        let batch_size =
+            j.get("batch_size").and_then(Json::as_usize).ok_or_else(|| bad("\"batch_size\""))?;
+        let timings = match j.get("timings") {
+            Some(t) => WireTimings {
+                serve_ms: t.get("serve_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                total_ms: t.get("total_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            },
+            None => WireTimings::default(),
+        };
+        Ok(WireReply {
+            id,
+            output,
+            model_key: ModelKey { precision: precision.to_string(), h, w },
+            batch_size,
+            timings,
+        })
+    }
+}
+
+/// Encode a [`ServeError`] as the wire error object:
+/// `{"error": {"code": "...", "message": "..."}}`.
+pub fn encode_error(e: &ServeError) -> String {
+    let mut inner = BTreeMap::new();
+    inner.insert("code".to_string(), Json::Str(e.code().to_string()));
+    inner.insert("message".to_string(), Json::Str(e.to_string()));
+    let mut m = BTreeMap::new();
+    m.insert("error".to_string(), Json::Obj(inner));
+    Json::Obj(m).render()
+}
+
+/// Recognize a wire error object; `None` if `j` is not one.
+pub fn decode_error(j: &Json) -> Option<ServeError> {
+    let e = j.get("error")?;
+    let code = e.get("code").and_then(Json::as_str).unwrap_or("model_error");
+    let msg = e.get("message").and_then(Json::as_str).unwrap_or("unknown server error");
+    Some(ServeError::from_code(code, msg))
+}
+
+/// How a tensor's f32 byte stream travels inside a JSON string.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Encoding {
+    /// Standard base64 with padding — 4 chars per 3 bytes (default).
+    B64,
+    /// Lowercase hex — 8 chars per f32; trivially greppable, 1.5x the
+    /// size of base64.
+    Hex,
+}
+
+impl Encoding {
+    pub fn token(self) -> &'static str {
+        match self {
+            Encoding::B64 => "b64",
+            Encoding::Hex => "hex",
+        }
+    }
+
+    pub fn from_token(s: &str) -> Result<Encoding, ServeError> {
+        match s {
+            "b64" => Ok(Encoding::B64),
+            "hex" => Ok(Encoding::Hex),
+            other => {
+                Err(ServeError::bad_request(format!("unknown tensor encoding {other:?}")))
+            }
+        }
+    }
+}
+
+/// Serialize a tensor as its wire object. The payload mirrors the
+/// `.mpno` record: the f32 data slab, little-endian, row-major.
+pub fn encode_tensor(t: &Tensor, enc: Encoding) -> Json {
+    let mut bytes = Vec::with_capacity(t.data().len() * 4);
+    for v in t.data() {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    let data = match enc {
+        Encoding::B64 => b64_encode(&bytes),
+        Encoding::Hex => hex_encode(&bytes),
+    };
+    let shape: Vec<Json> = t.shape().iter().map(|&d| d.into()).collect();
+    let mut m = BTreeMap::new();
+    m.insert("shape".to_string(), Json::Arr(shape));
+    m.insert("encoding".to_string(), Json::Str(enc.token().to_string()));
+    m.insert("data".to_string(), Json::Str(data));
+    Json::Obj(m)
+}
+
+/// Decode a wire tensor object, validating shape/payload agreement.
+pub fn decode_tensor(j: &Json) -> Result<Tensor, ServeError> {
+    let shape_j = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ServeError::bad_request("tensor missing \"shape\" array"))?;
+    let mut shape = Vec::with_capacity(shape_j.len());
+    let mut elems = 1usize;
+    for d in shape_j {
+        let d = match d {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => *n as usize,
+            other => {
+                return Err(ServeError::bad_request(format!(
+                    "tensor shape dims must be non-negative integers, got {}",
+                    other.render()
+                )))
+            }
+        };
+        elems = elems
+            .checked_mul(d)
+            .filter(|&n| n <= MAX_WIRE_ELEMS)
+            .ok_or_else(|| {
+                ServeError::bad_request(format!(
+                    "tensor too large: shape {shape_j:?} exceeds {MAX_WIRE_ELEMS} elements"
+                ))
+            })?;
+        shape.push(d);
+    }
+    let enc = match j.get("encoding") {
+        None | Some(Json::Null) => Encoding::B64,
+        Some(Json::Str(s)) => Encoding::from_token(s)?,
+        Some(_) => return Err(ServeError::bad_request("tensor \"encoding\" must be a string")),
+    };
+    let data = j
+        .get("data")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ServeError::bad_request("tensor missing \"data\" string"))?;
+    let bytes = match enc {
+        Encoding::B64 => b64_decode(data)?,
+        Encoding::Hex => hex_decode(data)?,
+    };
+    if bytes.len() != elems * 4 {
+        return Err(ServeError::bad_request(format!(
+            "tensor payload is {} bytes but shape {:?} needs {}",
+            bytes.len(),
+            shape,
+            elems * 4
+        )));
+    }
+    let data: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Tensor::from_vec(shape, data))
+}
+
+/// Parse a grid spec: `[h, w]` or the line protocol's `"HxW"`.
+pub fn decode_grid(j: &Json) -> Result<(usize, usize), ServeError> {
+    match j {
+        Json::Arr(a) if a.len() == 2 => {
+            let h = a[0].as_usize();
+            let w = a[1].as_usize();
+            match (h, w) {
+                (Some(h), Some(w)) => Ok((h, w)),
+                _ => Err(ServeError::bad_request("grid entries must be integers")),
+            }
+        }
+        Json::Str(s) => parse_grid_token(s),
+        _ => Err(ServeError::bad_request("\"grid\" must be [h, w] or \"HxW\"")),
+    }
+}
+
+/// Parse the `HxW` grid token used by the line protocol and CLI flags.
+pub fn parse_grid_token(v: &str) -> Result<(usize, usize), ServeError> {
+    let (h, w) = v
+        .split_once('x')
+        .ok_or_else(|| ServeError::bad_request(format!("grid must be HxW, got {v:?}")))?;
+    let h = h
+        .parse()
+        .map_err(|_| ServeError::bad_request(format!("bad grid height {h:?}")))?;
+    let w = w
+        .parse()
+        .map_err(|_| ServeError::bad_request(format!("bad grid width {w:?}")))?;
+    Ok((h, w))
+}
+
+/// A parsed stdin line: the shared wire request plus the line protocol's
+/// transport-local `out=PATH` option.
+#[derive(Debug)]
+pub struct LineRequest {
+    pub wire: WireRequest,
+    pub out: Option<PathBuf>,
+}
+
+/// Parse one line of the stdin protocol —
+/// `INPUT.mpno [out=PATH] [precision=TOK] [grid=HxW]` — into the same
+/// [`WireRequest`] the HTTP transport decodes, loading the input tensor
+/// from the named `.mpno` file. Behaviour is pinned by back-compat
+/// tests: a bare `(h, w)` tensor becomes a single-channel `(1, h, w)`
+/// sample, and unknown options are rejected.
+pub fn parse_line(line: &str, id: u64) -> Result<LineRequest, ServeError> {
+    let mut parts = line.split_whitespace();
+    let input_path =
+        parts.next().ok_or_else(|| ServeError::bad_request("empty request line"))?;
+    let recs = crate::ser::load_tensors(&PathBuf::from(input_path))
+        .map_err(|e| ServeError::bad_request(format!("{e:#}")))?;
+    let (_, t) = recs
+        .into_iter()
+        .next()
+        .ok_or_else(|| ServeError::bad_request("input file holds no tensors"))?;
+    let input = match t.ndim() {
+        // A bare (h, w) field is a single-channel sample.
+        2 => {
+            let (h, w) = (t.shape()[0], t.shape()[1]);
+            t.reshape(&[1, h, w])
+        }
+        3 => t,
+        _ => {
+            return Err(ServeError::bad_request(format!(
+                "input must be (h, w) or (cin, h, w), got {:?}",
+                t.shape()
+            )))
+        }
+    };
+    let mut req = WireRequest::new(id, input);
+    let mut out = None;
+    for p in parts {
+        if let Some(v) = p.strip_prefix("out=") {
+            out = Some(PathBuf::from(v));
+        } else if let Some(v) = p.strip_prefix("precision=") {
+            req.precision = Some(v.to_string());
+        } else if let Some(v) = p.strip_prefix("grid=") {
+            req.grid = Some(parse_grid_token(v)?);
+        } else {
+            return Err(ServeError::bad_request(format!("unknown request option {p:?}")));
+        }
+    }
+    Ok(LineRequest { wire: req, out })
+}
+
+const B64_ALPHABET: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Standard base64 (RFC 4648, with padding).
+pub fn b64_encode(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len().div_ceil(3) * 4);
+    for chunk in bytes.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = chunk.get(1).copied().unwrap_or(0) as u32;
+        let b2 = chunk.get(2).copied().unwrap_or(0) as u32;
+        let n = (b0 << 16) | (b1 << 8) | b2;
+        out.push(B64_ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(B64_ALPHABET[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { B64_ALPHABET[(n >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { B64_ALPHABET[n as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+/// Strict base64 decode: rejects non-alphabet bytes, whitespace, bad
+/// padding and truncated input (wire data is machine-generated; laxness
+/// only hides bugs).
+pub fn b64_decode(s: &str) -> Result<Vec<u8>, ServeError> {
+    let b = s.as_bytes();
+    if b.len() % 4 != 0 {
+        return Err(ServeError::bad_request(format!(
+            "base64 length {} is not a multiple of 4",
+            b.len()
+        )));
+    }
+    let mut rev = [255u8; 256];
+    for (i, &c) in B64_ALPHABET.iter().enumerate() {
+        rev[c as usize] = i as u8;
+    }
+    let mut out = Vec::with_capacity(b.len() / 4 * 3);
+    for (ci, chunk) in b.chunks_exact(4).enumerate() {
+        let last = ci + 1 == b.len() / 4;
+        let pad = if last { chunk.iter().rev().take_while(|&&c| c == b'=').count() } else { 0 };
+        if pad > 2 {
+            return Err(ServeError::bad_request("bad base64 padding"));
+        }
+        let mut n = 0u32;
+        for (i, &c) in chunk.iter().enumerate() {
+            let v = if i >= 4 - pad { 0 } else { rev[c as usize] };
+            if v == 255 {
+                return Err(ServeError::bad_request(format!(
+                    "bad base64 byte {:?} at position {}",
+                    c as char,
+                    ci * 4 + i
+                )));
+            }
+            n = (n << 6) | v as u32;
+        }
+        out.push((n >> 16) as u8);
+        if pad < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(n as u8);
+        }
+    }
+    Ok(out)
+}
+
+/// Lowercase hex encode.
+pub fn hex_encode(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        out.push_str(&format!("{b:02x}"));
+    }
+    out
+}
+
+/// Hex decode (either case).
+pub fn hex_decode(s: &str) -> Result<Vec<u8>, ServeError> {
+    let b = s.as_bytes();
+    if b.len() % 2 != 0 {
+        return Err(ServeError::bad_request("hex payload has odd length"));
+    }
+    let val = |c: u8| -> Result<u8, ServeError> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(ServeError::bad_request(format!("bad hex byte {:?}", c as char))),
+        }
+    };
+    b.chunks_exact(2).map(|p| Ok(val(p[0])? << 4 | val(p[1])?)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn b64_round_trips_all_lengths() {
+        let data: Vec<u8> = (0..=255u8).collect();
+        for len in [0, 1, 2, 3, 4, 17, 255, 256] {
+            let enc = b64_encode(&data[..len]);
+            assert_eq!(enc.len() % 4, 0);
+            assert_eq!(b64_decode(&enc).unwrap(), &data[..len], "len={len}");
+        }
+        // Known vectors (RFC 4648).
+        assert_eq!(b64_encode(b"foob"), "Zm9vYg==");
+        assert_eq!(b64_encode(b"fooba"), "Zm9vYmE=");
+        assert_eq!(b64_encode(b"foobar"), "Zm9vYmFy");
+    }
+
+    #[test]
+    fn b64_rejects_garbage() {
+        for bad in ["abc", "a bc", "ab==cd==", "====", "Zm9v!mFy"] {
+            assert!(b64_decode(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn hex_round_trips_and_rejects() {
+        let data = [0u8, 1, 0x7f, 0x80, 0xfe, 0xff];
+        let enc = hex_encode(&data);
+        assert_eq!(enc, "00017f80feff");
+        assert_eq!(hex_decode(&enc).unwrap(), data);
+        assert_eq!(hex_decode("FF00").unwrap(), [255, 0]);
+        assert!(hex_decode("0").is_err());
+        assert!(hex_decode("0g").is_err());
+    }
+
+    #[test]
+    fn tensor_payload_is_bit_exact() {
+        // NaN payload bits and -0.0 must survive the wire: the payload is
+        // bytes, not JSON numbers.
+        let vals = vec![0.0f32, -0.0, 1.5, f32::NAN, f32::INFINITY, f32::MIN_POSITIVE, -3.25];
+        let t = Tensor::from_vec(vec![7], vals.clone());
+        for enc in [Encoding::B64, Encoding::Hex] {
+            let j = encode_tensor(&t, enc);
+            let back = decode_tensor(&j).unwrap();
+            assert_eq!(back.shape(), t.shape());
+            for (a, b) in back.data().iter().zip(&vals) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{enc:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_decode_rejects_mismatch_and_oversize() {
+        let t = Tensor::from_vec(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut j = encode_tensor(&t, Encoding::B64);
+        if let Json::Obj(m) = &mut j {
+            m.insert("shape".to_string(), Json::Arr(vec![3.into(), 2.into()]));
+        }
+        assert!(decode_tensor(&j).is_err(), "shape/payload mismatch");
+        let huge = Json::parse(
+            r#"{"shape": [16777216, 16777216], "data": ""}"#,
+        )
+        .unwrap();
+        let err = decode_tensor(&huge).unwrap_err();
+        assert_eq!(err.code(), "bad_request");
+        assert!(err.to_string().contains("too large"), "{err}");
+    }
+
+    #[test]
+    fn request_round_trips() {
+        let t = Tensor::from_vec(vec![1, 2, 2], vec![1.0, -2.0, 3.5, 0.25]);
+        let mut req = WireRequest::new(42, t.clone());
+        req.precision = Some("bf16".to_string());
+        req.grid = Some((8, 16));
+        for enc in [Encoding::B64, Encoding::Hex] {
+            let body = req.encode(enc);
+            let back = WireRequest::decode(&body).unwrap();
+            assert_eq!(back.id, 42);
+            assert_eq!(back.input, t);
+            assert_eq!(back.precision.as_deref(), Some("bf16"));
+            assert_eq!(back.grid, Some((8, 16)));
+        }
+        // Minimal request: only the input, grid as "HxW" string.
+        let body = format!(
+            r#"{{"input": {}, "grid": "4x6"}}"#,
+            encode_tensor(&t, Encoding::B64).render()
+        );
+        let back = WireRequest::decode(&body).unwrap();
+        assert_eq!(back.id, 0);
+        assert_eq!(back.grid, Some((4, 6)));
+        assert_eq!(back.precision, None);
+    }
+
+    #[test]
+    fn request_decode_classifies_bad_input() {
+        for bad in [
+            "not json at all",
+            "[1, 2, 3]",
+            r#"{"input": {"shape": [2], "data": "zz"}}"#,
+            r#"{"id": -3, "input": {"shape": [0], "data": ""}}"#,
+            r#"{"input": {"shape": [1], "data": "AAAAAA=="}, "grid": "8by8"}"#,
+        ] {
+            let err = WireRequest::decode(bad).unwrap_err();
+            assert_eq!(err.code(), "bad_request", "{bad}");
+        }
+    }
+
+    #[test]
+    fn reply_round_trips_and_decodes_errors() {
+        let out = Tensor::from_vec(vec![1, 2, 2], vec![0.5, f32::NAN, -0.0, 9.0]);
+        let reply = WireReply {
+            id: 7,
+            output: out.clone(),
+            model_key: ModelKey { precision: "f16".to_string(), h: 2, w: 2 },
+            batch_size: 3,
+            timings: WireTimings { serve_ms: 1.25, total_ms: 2.5 },
+        };
+        let body = reply.encode(Encoding::B64);
+        let back = WireReply::decode(&body).unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.batch_size, 3);
+        assert_eq!(back.model_key, reply.model_key);
+        assert_eq!(back.timings, reply.timings);
+        let bits: Vec<u32> = back.output.data().iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = out.data().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, want, "reply tensor survives the wire bit-for-bit");
+
+        let err_body = encode_error(&ServeError::Overloaded);
+        let err = WireReply::decode(&err_body).unwrap_err();
+        assert_eq!(err, ServeError::Overloaded);
+        let err_body = encode_error(&ServeError::bad_request("request 3: wrong grid"));
+        let err = WireReply::decode(&err_body).unwrap_err();
+        assert_eq!(err, ServeError::BadRequest("request 3: wrong grid".to_string()));
+    }
+
+    #[test]
+    fn line_protocol_parses_into_wire_request() {
+        let dir = std::env::temp_dir().join("mpno_api_line_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("in.mpno");
+        let t = Tensor::from_vec(vec![4, 4], (0..16).map(|i| i as f32).collect());
+        crate::ser::save_tensors(&path, &[("x", &t)]).unwrap();
+        let line = format!("{} out=/tmp/y.mpno precision=bf16 grid=8x8", path.display());
+        let lr = parse_line(&line, 5).unwrap();
+        assert_eq!(lr.wire.id, 5);
+        // Back-compat: bare (h, w) becomes a single-channel sample.
+        assert_eq!(lr.wire.input.shape(), &[1, 4, 4]);
+        assert_eq!(lr.wire.precision.as_deref(), Some("bf16"));
+        assert_eq!(lr.wire.grid, Some((8, 8)));
+        assert_eq!(lr.out, Some(PathBuf::from("/tmp/y.mpno")));
+
+        // Back-compat: unknown options and bad grids are rejected.
+        let lp = path.display();
+        assert!(parse_line(&format!("{lp} shape=4x4"), 0).is_err());
+        assert!(parse_line(&format!("{lp} grid=4by4"), 0).is_err());
+        // Missing file is the caller's error, with the loader's message.
+        let err = parse_line("/no/such/file.mpno", 0).unwrap_err();
+        assert_eq!(err.code(), "bad_request");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -6,72 +6,141 @@
 //! bit-identical to serving each request alone (the parity contract in
 //! `tests/serve_parity.rs`), so batch boundaries — which depend on
 //! arrival timing — can never change a reply.
+//!
+//! The handle is shareable (`&self` submission, internal locking), so
+//! transports can fan requests in from many connection-handler threads.
+//! Shutdown is drain-and-answer: once [`Server::begin_shutdown`] runs,
+//! new submissions are deterministically rejected with
+//! [`ServeError::ShuttingDown`], while every request already queued is
+//! still batched, served and answered before the worker exits — a
+//! submission never ends with a silently dropped reply channel.
 
-use super::{ServeEngine, ServeReply, ServeRequest};
+use super::{ServeEngine, ServeError, ServeReply, ServeRequest, ServeStats};
 use crate::parallel::Executor;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// A queued request plus the channel its reply goes back on. Errors
-/// cross the thread boundary pre-rendered (the error type holds its
-/// chain as strings anyway).
+/// A queued request plus the channel its reply goes back on.
 struct Envelope {
     req: ServeRequest,
-    reply: mpsc::Sender<Result<ServeReply, String>>,
+    reply: mpsc::Sender<Result<ServeReply, ServeError>>,
 }
 
 /// Handle to a running batching server. Dropping it (or calling
-/// [`Server::shutdown`]) closes the queue; the worker drains what's left
-/// and exits.
+/// [`Server::shutdown`]) closes the queue; the worker answers what's
+/// queued and exits.
 pub struct Server {
-    tx: Option<mpsc::Sender<Envelope>>,
-    worker: Option<JoinHandle<ServeEngine>>,
+    /// `None` once shutdown begins. Guarded by a mutex so a submit and a
+    /// shutdown serialize: a request either lands in the queue before
+    /// the sender drops (and will be answered) or sees `ShuttingDown`.
+    tx: Mutex<Option<mpsc::Sender<Envelope>>>,
+    worker: Mutex<Option<JoinHandle<ServeEngine>>>,
+    draining: AtomicBool,
+    /// Engine telemetry snapshot, refreshed by the worker after every
+    /// dispatched batch so transports can report stats live (the engine
+    /// itself lives inside the worker until shutdown).
+    stats: Arc<Mutex<ServeStats>>,
 }
 
 impl Server {
-    /// Spawn the batching worker. It sizes its [`Executor`] from the
+    /// Spawn the batching worker, sizing its [`Executor`] from the
     /// environment (`PALLAS_THREADS`), like every other entry point.
     pub fn start(engine: ServeEngine, max_batch: usize, max_wait: Duration) -> Server {
+        Server::start_with(engine, max_batch, max_wait, Executor::current())
+    }
+
+    /// Spawn the batching worker on an explicit executor (tests pin
+    /// thread counts without touching process-global state).
+    pub fn start_with(
+        engine: ServeEngine,
+        max_batch: usize,
+        max_wait: Duration,
+        ex: Executor,
+    ) -> Server {
         assert!(max_batch >= 1, "a batch holds at least one request");
         let (tx, rx) = mpsc::channel();
-        let worker = std::thread::spawn(move || run_loop(engine, rx, max_batch, max_wait));
-        Server { tx: Some(tx), worker: Some(worker) }
+        let stats = Arc::new(Mutex::new(engine.stats()));
+        let worker = {
+            let stats = Arc::clone(&stats);
+            std::thread::spawn(move || run_loop(engine, rx, max_batch, max_wait, ex, &stats))
+        };
+        Server {
+            tx: Mutex::new(Some(tx)),
+            worker: Mutex::new(Some(worker)),
+            draining: AtomicBool::new(false),
+            stats,
+        }
+    }
+
+    /// Latest engine telemetry (refreshed after every dispatched batch).
+    /// Live — callable while the worker is still serving.
+    pub fn stats(&self) -> ServeStats {
+        self.stats.lock().expect("server stats lock").clone()
     }
 
     /// Enqueue a request; the returned channel yields its reply once a
-    /// batch carries it through the engine.
-    pub fn submit(&self, req: ServeRequest) -> mpsc::Receiver<Result<ServeReply, String>> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .expect("server still running")
-            .send(Envelope { req, reply: reply_tx })
-            .expect("batching worker alive while the handle exists");
-        reply_rx
+    /// batch carries it through the engine. After shutdown has begun the
+    /// request is rejected with [`ServeError::ShuttingDown`] instead —
+    /// an accepted request is always answered.
+    pub fn submit(
+        &self,
+        req: ServeRequest,
+    ) -> Result<mpsc::Receiver<Result<ServeReply, ServeError>>, ServeError> {
+        if self.draining.load(Ordering::Acquire) {
+            return Err(ServeError::ShuttingDown);
+        }
+        let guard = self.tx.lock().expect("server queue lock");
+        match guard.as_ref() {
+            None => Err(ServeError::ShuttingDown),
+            Some(tx) => {
+                let (reply_tx, reply_rx) = mpsc::channel();
+                // A send can only fail if the worker died; classify that
+                // as shutdown rather than panicking in the caller.
+                match tx.send(Envelope { req, reply: reply_tx }) {
+                    Ok(()) => Ok(reply_rx),
+                    Err(_) => Err(ServeError::ShuttingDown),
+                }
+            }
+        }
     }
 
     /// Submit and block for the reply — the one-shot convenience.
-    pub fn call(&self, req: ServeRequest) -> Result<ServeReply, String> {
-        self.submit(req).recv().unwrap_or_else(|_| Err("serve worker exited".to_string()))
+    pub fn call(&self, req: ServeRequest) -> Result<ServeReply, ServeError> {
+        self.submit(req)?.recv().unwrap_or(Err(ServeError::ShuttingDown))
     }
 
-    /// Close the queue, wait for in-flight batches, and hand the engine
-    /// (with its caches and telemetry) back.
-    pub fn shutdown(mut self) -> ServeEngine {
-        drop(self.tx.take());
-        self.worker
-            .take()
-            .expect("shutdown runs once")
-            .join()
-            .expect("serve worker panicked")
+    /// Stop admitting requests and close the queue. Requests already
+    /// queued are still served and answered; subsequent [`Server::submit`]
+    /// calls return [`ServeError::ShuttingDown`]. Idempotent.
+    pub fn begin_shutdown(&self) {
+        self.draining.store(true, Ordering::Release);
+        drop(self.tx.lock().expect("server queue lock").take());
+    }
+
+    /// Begin shutdown (if not already begun), wait for the worker to
+    /// drain and answer the queue, and hand the engine (with its caches
+    /// and telemetry) back. `None` if another caller already joined.
+    pub fn join_engine(&self) -> Option<ServeEngine> {
+        self.begin_shutdown();
+        let handle = self.worker.lock().expect("server worker lock").take();
+        handle.map(|w| w.join().expect("serve worker panicked"))
+    }
+
+    /// Drain the queue and hand the engine back — the owning-caller
+    /// convenience over [`Server::join_engine`].
+    pub fn shutdown(self) -> ServeEngine {
+        self.join_engine().expect("shutdown runs once")
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
+        // Drain-and-answer even on an implicit drop; ignore a worker
+        // panic here (propagating from drop would abort).
+        self.begin_shutdown();
+        if let Some(w) = self.worker.lock().expect("server worker lock").take() {
             let _ = w.join();
         }
     }
@@ -82,10 +151,14 @@ fn run_loop(
     rx: mpsc::Receiver<Envelope>,
     max_batch: usize,
     max_wait: Duration,
+    ex: Executor,
+    stats: &Mutex<ServeStats>,
 ) -> ServeEngine {
-    let ex = Executor::current();
     // Block for the batch's first request; once one is in hand, keep
-    // topping up until the batch is full or its deadline passes.
+    // topping up until the batch is full or its deadline passes. During
+    // shutdown the queue sender is gone: recv returns the buffered
+    // envelopes immediately, then errors — so the drain dispatches
+    // every queued request without waiting out any deadline.
     while let Ok(first) = rx.recv() {
         let mut pending = vec![first];
         let deadline = Instant::now() + max_wait;
@@ -105,8 +178,9 @@ fn run_loop(
             pending.into_iter().map(|e| (e.req, e.reply)).unzip();
         for (res, tx) in engine.serve_batch(&reqs, &ex).into_iter().zip(repliers) {
             // A caller that dropped its receiver forfeits the reply.
-            let _ = tx.send(res.map_err(|e| format!("{e:#}")));
+            let _ = tx.send(res);
         }
+        *stats.lock().expect("server stats lock") = engine.stats();
     }
     engine
 }

@@ -1,0 +1,128 @@
+//! Structured serving errors. One enum crosses every layer — engine
+//! validation, the batching queue, and the HTTP transport — so each
+//! failure is classified once, where it happens, and every front-end
+//! (stdin, HTTP, in-process callers) maps it mechanically instead of
+//! pattern-matching strings. The `Display` impls render the exact
+//! messages the old `String`-typed plumbing produced, so logs and tests
+//! written against those messages don't churn.
+
+use std::fmt;
+
+/// Why a request (or a whole serve call) failed. Variants map 1:1 onto
+/// HTTP status codes ([`ServeError::http_status`]) and stable wire codes
+/// ([`ServeError::code`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request itself is invalid (bad shape, unknown precision, a
+    /// grid too coarse for the model's modes, malformed wire payload).
+    BadRequest(String),
+    /// The server is saturated: admitting the request would grow the
+    /// queue beyond the configured in-flight budget. Retry later.
+    Overloaded,
+    /// The server is draining and no longer admits new requests.
+    ShuttingDown,
+    /// The request was valid but the engine failed to serve it (model
+    /// variant build failure or another internal error).
+    Model(String),
+}
+
+impl ServeError {
+    /// Convenience constructor mirroring `anyhow!` call sites.
+    pub fn bad_request(msg: impl fmt::Display) -> ServeError {
+        ServeError::BadRequest(msg.to_string())
+    }
+
+    pub fn model(msg: impl fmt::Display) -> ServeError {
+        ServeError::Model(msg.to_string())
+    }
+
+    /// Stable machine-readable code carried in wire error replies.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::BadRequest(_) => "bad_request",
+            ServeError::Overloaded => "overloaded",
+            ServeError::ShuttingDown => "shutting_down",
+            ServeError::Model(_) => "model_error",
+        }
+    }
+
+    /// The HTTP status this error maps onto (the transport may still
+    /// pick a more specific 4xx for framing-level failures it detects
+    /// itself, e.g. 413 for an oversize body).
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ServeError::BadRequest(_) => 400,
+            ServeError::Overloaded => 429,
+            ServeError::ShuttingDown => 503,
+            ServeError::Model(_) => 500,
+        }
+    }
+
+    /// Rebuild from a wire code + message (the client half of
+    /// [`ServeError::code`]).
+    pub fn from_code(code: &str, msg: &str) -> ServeError {
+        match code {
+            "overloaded" => ServeError::Overloaded,
+            "shutting_down" => ServeError::ShuttingDown,
+            "model_error" => ServeError::Model(msg.to_string()),
+            _ => ServeError::BadRequest(msg.to_string()),
+        }
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            // Engine messages pass through verbatim (they were the old
+            // stringly errors).
+            ServeError::BadRequest(m) | ServeError::Model(m) => f.write_str(m),
+            ServeError::Overloaded => f.write_str("server overloaded (in-flight budget full)"),
+            // The message the old plumbing produced when the worker was
+            // gone; kept verbatim for log/test continuity.
+            ServeError::ShuttingDown => f.write_str("serve worker exited"),
+        }
+    }
+}
+
+// Lets `?` convert a ServeError into the vendored anyhow shim's Error
+// (which has a blanket `From<E: std::error::Error>`), so load-time
+// `Result<T>` call sites compose with serving calls.
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_and_code_mapping_is_one_to_one() {
+        let cases = [
+            (ServeError::bad_request("x"), 400, "bad_request"),
+            (ServeError::Overloaded, 429, "overloaded"),
+            (ServeError::ShuttingDown, 503, "shutting_down"),
+            (ServeError::model("y"), 500, "model_error"),
+        ];
+        for (e, status, code) in cases {
+            assert_eq!(e.http_status(), status, "{e:?}");
+            assert_eq!(e.code(), code, "{e:?}");
+            // Round-trip through the wire encoding preserves the class.
+            let back = ServeError::from_code(e.code(), &e.to_string());
+            assert_eq!(back.code(), e.code());
+        }
+    }
+
+    #[test]
+    fn display_matches_legacy_messages() {
+        assert_eq!(ServeError::bad_request("request 3: bad").to_string(), "request 3: bad");
+        assert_eq!(ServeError::ShuttingDown.to_string(), "serve worker exited");
+    }
+
+    #[test]
+    fn converts_into_anyhow_shim() {
+        fn takes_anyhow() -> anyhow::Result<()> {
+            Err(ServeError::Overloaded)?;
+            Ok(())
+        }
+        let err = takes_anyhow().unwrap_err();
+        assert!(format!("{err}").contains("overloaded"));
+    }
+}

@@ -1,0 +1,764 @@
+//! Dependency-free HTTP/1.1 transport in front of the batching server —
+//! the network half of ROADMAP item 2. Built directly on
+//! [`std::net::TcpListener`]: an accept loop fans connections over a
+//! bounded pool of handler threads (a `sync_channel` is the bound;
+//! connections beyond it are shed with `429` instead of queueing
+//! unboundedly), each connection speaks keep-alive HTTP with read/write
+//! timeouts, and an atomic in-flight budget caps how many `/infer`
+//! requests may sit in the batching queue at once.
+//!
+//! Endpoints:
+//! - `POST /infer` — body is a [`WireRequest`]; replies with a
+//!   [`WireReply`] (both `Content-Length`-framed jsonlite, tensor
+//!   payloads base64/hex over the `.mpno` byte layout, so replies are
+//!   bit-identical to in-process serving — the parity contract extends
+//!   across the wire).
+//! - `GET /stats` — engine telemetry (LRU hits/misses/evictions,
+//!   batch-size histogram), the model spec, and transport counters.
+//! - `GET /healthz` — liveness probe.
+//! - `POST /shutdown` — graceful drain: stop admitting, answer
+//!   everything already queued, then exit [`HttpServer::run`].
+//!
+//! Failures map through [`ServeError::http_status`] (400/429/503/500);
+//! the transport adds its own framing statuses: 404 unknown path, 405
+//! wrong method, 408 peer stalled mid-request, 413 declared body over
+//! the cap. A handler stuck on a slow peer times out rather than
+//! wedging the accept loop.
+
+use super::api::{self, Encoding, WireReply, WireRequest, WireTimings};
+use super::{ServeConfig, ServeEngine, ServeError, Server};
+use crate::jsonlite::Json;
+use crate::model::FnoSpec;
+use crate::parallel::Executor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A header or request line longer than this is rejected (the wire
+/// bodies are framed by `Content-Length`, so lines stay tiny).
+const MAX_LINE: usize = 8192;
+const MAX_HEADERS: usize = 64;
+
+/// Transport knobs (CLI flags map 1:1 onto these; [`ServeConfig`] keeps
+/// owning the batching knobs).
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Bind address; port 0 picks an ephemeral port (see
+    /// [`HttpServer::local_addr`]).
+    pub addr: String,
+    /// Handler threads — the concurrency of the accept pool.
+    pub handler_threads: usize,
+    /// Accepted connections may queue this deep waiting for a handler;
+    /// beyond that the listener sheds with `429`.
+    pub accept_backlog: usize,
+    /// `/infer` requests admitted into the batching queue at once; the
+    /// excess is shed with `429` instead of queueing unboundedly.
+    pub max_inflight: usize,
+    pub read_timeout: Duration,
+    pub write_timeout: Duration,
+    /// Largest accepted request body (bytes); bigger declared bodies get
+    /// `413` without being read.
+    pub max_body: usize,
+    /// Tensor payload encoding for replies.
+    pub encoding: Encoding,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1:7437".to_string(),
+            handler_threads: 4,
+            accept_backlog: 16,
+            max_inflight: 64,
+            read_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(10),
+            max_body: 64 << 20,
+            encoding: Encoding::B64,
+        }
+    }
+}
+
+/// State shared by the accept loop and every handler thread.
+struct Shared {
+    server: Server,
+    cfg: HttpConfig,
+    addr: SocketAddr,
+    artifact: String,
+    default_precision: String,
+    /// Architecture at the training grid, frozen at bind time so
+    /// `/stats` can report it while the engine serves.
+    spec: FnoSpec,
+    inflight: AtomicUsize,
+    http_requests: AtomicU64,
+    /// Requests refused for load (connection backlog or in-flight
+    /// budget) — every one of these was answered with `429`.
+    shed: AtomicU64,
+    draining: AtomicBool,
+}
+
+impl Shared {
+    /// Stop admitting work and wake the accept loop; idempotent.
+    fn begin_drain(&self) {
+        if self.draining.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        self.server.begin_shutdown();
+        // The acceptor blocks in accept(); a throwaway self-connection
+        // unblocks it so it can observe the flag.
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// A bound listener plus the running batching server behind it.
+/// [`HttpServer::run`] consumes it and serves until `POST /shutdown`.
+pub struct HttpServer {
+    listener: TcpListener,
+    state: Arc<Shared>,
+}
+
+impl HttpServer {
+    /// Bind the listener and start the batching worker behind it. The
+    /// explicit [`Executor`] pins the compute thread count (tests and
+    /// CLI both pass one; it does not touch process-global state).
+    pub fn bind(
+        engine: ServeEngine,
+        serve: &ServeConfig,
+        cfg: HttpConfig,
+        ex: Executor,
+    ) -> Result<HttpServer> {
+        if cfg.handler_threads < 1 {
+            bail!("--http-threads must be at least 1");
+        }
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {:?}", cfg.addr))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let artifact = engine.artifact().to_string();
+        let default_precision = engine.default_precision().to_string();
+        let spec = engine.spec().clone();
+        let server = Server::start_with(engine, serve.max_batch, serve.max_wait, ex);
+        let state = Arc::new(Shared {
+            server,
+            cfg,
+            addr,
+            artifact,
+            default_precision,
+            spec,
+            inflight: AtomicUsize::new(0),
+            http_requests: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            draining: AtomicBool::new(false),
+        });
+        Ok(HttpServer { listener, state })
+    }
+
+    /// The address actually bound (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    /// Serve until a `POST /shutdown` drains the server, then hand the
+    /// engine (with its caches and telemetry) back.
+    pub fn run(self) -> ServeEngine {
+        let HttpServer { listener, state } = self;
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(state.cfg.accept_backlog);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut handlers = Vec::with_capacity(state.cfg.handler_threads);
+        for i in 0..state.cfg.handler_threads {
+            let st = Arc::clone(&state);
+            let rx = Arc::clone(&conn_rx);
+            let h = std::thread::Builder::new()
+                .name(format!("mpno-http-{i}"))
+                .spawn(move || handler_loop(&st, &rx))
+                .expect("spawn http handler thread");
+            handlers.push(h);
+        }
+        for conn in listener.incoming() {
+            if state.draining.load(Ordering::Acquire) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                // A failed accept (peer reset mid-handshake) is not an
+                // exit condition for the listener.
+                Err(_) => continue,
+            };
+            match conn_tx.try_send(stream) {
+                Ok(()) => {}
+                Err(mpsc::TrySendError::Full(stream)) => {
+                    state.shed.fetch_add(1, Ordering::Relaxed);
+                    shed_connection(stream, &state.cfg);
+                }
+                Err(mpsc::TrySendError::Disconnected(_)) => break,
+            }
+        }
+        // Stop accepting before the drain finishes, then let every
+        // handler run out its current connection.
+        drop(listener);
+        drop(conn_tx);
+        for h in handlers {
+            let _ = h.join();
+        }
+        state.server.join_engine().expect("http server joins the engine once")
+    }
+}
+
+/// Pop connections off the shared queue until the acceptor hangs up.
+fn handler_loop(state: &Shared, rx: &Mutex<mpsc::Receiver<TcpStream>>) {
+    loop {
+        let conn = rx.lock().expect("http conn queue lock").recv();
+        match conn {
+            Ok(stream) => {
+                let _ = handle_connection(state, stream);
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Serve one keep-alive connection to completion.
+fn handle_connection(state: &Shared, stream: TcpStream) -> std::io::Result<()> {
+    // Replies are single latency-sensitive writes; don't let Nagle
+    // batch them against the next request.
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(state.cfg.read_timeout))?;
+    stream.set_write_timeout(Some(state.cfg.write_timeout))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    loop {
+        if state.draining.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        let req = match read_request(&mut reader, state.cfg.max_body) {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(()), // clean close or idle keep-alive expiry
+            Err(e) => {
+                if let Some((status, body)) = e.response() {
+                    let _ = write_response(&mut writer, status, &body, false);
+                    // An oversize body was declared but never read; a
+                    // bounded drain before closing keeps the kernel
+                    // from resetting the socket (discarding our `413`)
+                    // over the unread bytes.
+                    if let ReadError::TooLarge(n) = e {
+                        let cap = n.min(1 << 20) as u64;
+                        let _ = std::io::copy(
+                            &mut Read::by_ref(&mut reader).take(cap),
+                            &mut std::io::sink(),
+                        );
+                    }
+                }
+                return Ok(());
+            }
+        };
+        state.http_requests.fetch_add(1, Ordering::Relaxed);
+        let keep = req.keep_alive;
+        let resp = dispatch(state, &req);
+        let keep = keep && !resp.close;
+        write_response(&mut writer, resp.status, &resp.body, keep)?;
+        if !keep {
+            return Ok(());
+        }
+    }
+}
+
+struct Response {
+    status: u16,
+    body: String,
+    close: bool,
+}
+
+impl Response {
+    fn json(status: u16, body: String) -> Response {
+        Response { status, body, close: false }
+    }
+
+    fn error(e: &ServeError) -> Response {
+        Response::json(e.http_status(), api::encode_error(e))
+    }
+}
+
+fn dispatch(state: &Shared, req: &HttpRequest) -> Response {
+    let path = req.target.split('?').next().unwrap_or("");
+    match (req.method.as_str(), path) {
+        ("POST", "/infer") => handle_infer(state, &req.body),
+        ("GET", "/stats") => Response::json(200, stats_json(state)),
+        ("GET", "/healthz") => {
+            let s = if state.draining.load(Ordering::Acquire) { "draining" } else { "ok" };
+            Response::json(200, format!("{{\"status\":{s:?}}}"))
+        }
+        ("POST", "/shutdown") => {
+            state.begin_drain();
+            Response { status: 200, body: "{\"status\":\"draining\"}".to_string(), close: true }
+        }
+        (m, "/infer" | "/stats" | "/healthz" | "/shutdown") => Response::json(
+            405,
+            api::encode_error(&ServeError::bad_request(format!(
+                "method {m} not allowed on {path}"
+            ))),
+        ),
+        _ => Response::json(
+            404,
+            api::encode_error(&ServeError::bad_request(format!("no such endpoint {path:?}"))),
+        ),
+    }
+}
+
+fn handle_infer(state: &Shared, body: &[u8]) -> Response {
+    let t0 = Instant::now();
+    if state.draining.load(Ordering::Acquire) {
+        return Response::error(&ServeError::ShuttingDown);
+    }
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return Response::error(&ServeError::bad_request("request body is not UTF-8")),
+    };
+    let wire = match WireRequest::decode(text) {
+        Ok(w) => w,
+        Err(e) => return Response::error(&e),
+    };
+    // Admission control: the budget bounds how many requests may sit in
+    // the batching queue; the excess is shed, not queued.
+    let Some(_permit) = Permit::acquire(&state.inflight, state.cfg.max_inflight) else {
+        state.shed.fetch_add(1, Ordering::Relaxed);
+        return Response::error(&ServeError::Overloaded);
+    };
+    let t_submit = Instant::now();
+    let reply_rx = match state.server.submit(wire.into_serve_request()) {
+        Ok(rx) => rx,
+        Err(e) => return Response::error(&e),
+    };
+    let res = reply_rx.recv().unwrap_or(Err(ServeError::ShuttingDown));
+    let serve_ms = t_submit.elapsed().as_secs_f64() * 1e3;
+    match res {
+        Ok(reply) => {
+            let timings =
+                WireTimings { serve_ms, total_ms: t0.elapsed().as_secs_f64() * 1e3 };
+            let body = WireReply::from_serve_reply(reply, timings).encode(state.cfg.encoding);
+            Response::json(200, body)
+        }
+        Err(e) => Response::error(&e),
+    }
+}
+
+fn stats_json(state: &Shared) -> String {
+    let s = state.server.stats();
+    let num = |n: u64| Json::Num(n as f64);
+    let b = &state.spec;
+    let mut spec = BTreeMap::new();
+    spec.insert("in_channels".to_string(), b.in_channels.into());
+    spec.insert("out_channels".to_string(), b.out_channels.into());
+    spec.insert("width".to_string(), b.width.into());
+    spec.insert("k_max".to_string(), b.k_max.into());
+    spec.insert("n_layers".to_string(), b.n_layers.into());
+    spec.insert("h".to_string(), b.h.into());
+    spec.insert("w".to_string(), b.w.into());
+    let mut cache = BTreeMap::new();
+    cache.insert("hits".to_string(), num(s.cache_hits));
+    cache.insert("misses".to_string(), num(s.cache_misses));
+    cache.insert("evictions".to_string(), num(s.cache_evictions));
+    let mut http = BTreeMap::new();
+    http.insert("requests".to_string(), num(state.http_requests.load(Ordering::Relaxed)));
+    http.insert("shed".to_string(), num(state.shed.load(Ordering::Relaxed)));
+    http.insert("inflight".to_string(), state.inflight.load(Ordering::Relaxed).into());
+    http.insert("max_inflight".to_string(), state.cfg.max_inflight.into());
+    http.insert("draining".to_string(), Json::Bool(state.draining.load(Ordering::Acquire)));
+    let mut m = BTreeMap::new();
+    m.insert("artifact".to_string(), Json::Str(state.artifact.clone()));
+    m.insert("default_precision".to_string(), Json::Str(state.default_precision.clone()));
+    m.insert("spec".to_string(), Json::Obj(spec));
+    m.insert("requests".to_string(), num(s.requests));
+    m.insert("batches".to_string(), num(s.batches));
+    m.insert("max_batch_seen".to_string(), s.max_batch_seen.into());
+    m.insert(
+        "batch_hist".to_string(),
+        Json::Arr(s.batch_hist.iter().map(|&c| num(c)).collect()),
+    );
+    m.insert("resampled".to_string(), num(s.resampled));
+    m.insert("cache".to_string(), Json::Obj(cache));
+    m.insert("http".to_string(), Json::Obj(http));
+    Json::Obj(m).render()
+}
+
+/// RAII slot in the in-flight budget; `None` means the budget is full
+/// and the request must be shed.
+struct Permit<'a>(&'a AtomicUsize);
+
+impl<'a> Permit<'a> {
+    fn acquire(n: &'a AtomicUsize, max: usize) -> Option<Permit<'a>> {
+        n.fetch_update(Ordering::AcqRel, Ordering::Acquire, |c| (c < max).then_some(c + 1))
+            .ok()
+            .map(|_| Permit(n))
+    }
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Answer a connection the pool has no room for: `429`, then close.
+fn shed_connection(mut stream: TcpStream, cfg: &HttpConfig) {
+    stream.set_write_timeout(Some(cfg.write_timeout)).ok();
+    let _ = write_response(&mut stream, 429, &api::encode_error(&ServeError::Overloaded), false);
+}
+
+fn write_response(w: &mut TcpStream, status: u16, body: &str, keep: bool) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\
+         Connection: {}\r\n\r\n",
+        status,
+        reason(status),
+        body.len(),
+        if keep { "keep-alive" } else { "close" },
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Status",
+    }
+}
+
+struct HttpRequest {
+    method: String,
+    target: String,
+    keep_alive: bool,
+    body: Vec<u8>,
+}
+
+/// Why a request could not even be read off the wire (distinct from a
+/// [`ServeError`]: these are framing failures the transport owns).
+#[derive(Debug)]
+enum ReadError {
+    /// Peer hung up (or hard I/O error): nothing to answer.
+    Closed,
+    /// Peer stalled mid-request past the read timeout.
+    Timeout,
+    /// Unparseable framing.
+    Bad(String),
+    /// Declared body beyond the configured cap.
+    TooLarge(usize),
+}
+
+impl ReadError {
+    /// The `(status, body)` owed to the peer, if any.
+    fn response(&self) -> Option<(u16, String)> {
+        let (status, msg) = match self {
+            ReadError::Closed => return None,
+            ReadError::Timeout => (408, "timed out reading request".to_string()),
+            ReadError::Bad(m) => (400, m.clone()),
+            ReadError::TooLarge(n) => {
+                (413, format!("request body of {n} bytes exceeds the server's limit"))
+            }
+        };
+        Some((status, api::encode_error(&ServeError::bad_request(msg))))
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Read one `\n`-terminated line, bounded by [`MAX_LINE`].
+fn read_line<R: BufRead>(r: &mut R, buf: &mut Vec<u8>) -> std::io::Result<usize> {
+    buf.clear();
+    r.by_ref().take(MAX_LINE as u64 + 1).read_until(b'\n', buf)
+}
+
+/// Read one framed request. `Ok(None)` is a clean close (EOF or idle
+/// keep-alive expiry before any byte of a next request).
+fn read_request<R: BufRead>(
+    r: &mut R,
+    max_body: usize,
+) -> Result<Option<HttpRequest>, ReadError> {
+    let mut line = Vec::new();
+    match read_line(r, &mut line) {
+        Ok(0) => return Ok(None),
+        Ok(_) if line.len() > MAX_LINE => {
+            return Err(ReadError::Bad("request line too long".to_string()))
+        }
+        Ok(_) if !line.ends_with(b"\n") => return Err(ReadError::Closed),
+        Ok(_) => {}
+        Err(e) if is_timeout(&e) && line.is_empty() => return Ok(None),
+        Err(e) if is_timeout(&e) => return Err(ReadError::Timeout),
+        Err(_) => return Err(ReadError::Closed),
+    }
+    let text = String::from_utf8_lossy(&line);
+    let mut parts = text.split_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v)) if v.starts_with("HTTP/1.") => {
+            (m.to_string(), t.to_string(), v.to_string())
+        }
+        _ => {
+            return Err(ReadError::Bad(format!(
+                "malformed request line {:?}",
+                text.trim_end()
+            )))
+        }
+    };
+    let mut keep_alive = version == "HTTP/1.1";
+    let mut content_length = 0usize;
+    for n in 0.. {
+        if n >= MAX_HEADERS {
+            return Err(ReadError::Bad("too many headers".to_string()));
+        }
+        match read_line(r, &mut line) {
+            Ok(0) => return Err(ReadError::Closed),
+            Ok(_) if line.len() > MAX_LINE => {
+                return Err(ReadError::Bad("header line too long".to_string()))
+            }
+            Ok(_) if !line.ends_with(b"\n") => return Err(ReadError::Closed),
+            Ok(_) => {}
+            Err(e) if is_timeout(&e) => return Err(ReadError::Timeout),
+            Err(_) => return Err(ReadError::Closed),
+        }
+        let text = String::from_utf8_lossy(&line);
+        let text = text.trim_end_matches(['\r', '\n']);
+        if text.is_empty() {
+            break;
+        }
+        let Some((name, value)) = text.split_once(':') else {
+            return Err(ReadError::Bad(format!("malformed header {text:?}")));
+        };
+        let value = value.trim();
+        match name.trim().to_ascii_lowercase().as_str() {
+            "content-length" => {
+                content_length = value
+                    .parse()
+                    .map_err(|_| ReadError::Bad(format!("bad Content-Length {value:?}")))?;
+                if content_length > max_body {
+                    return Err(ReadError::TooLarge(content_length));
+                }
+            }
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.contains("close") {
+                    keep_alive = false;
+                } else if v.contains("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            "transfer-encoding" => {
+                return Err(ReadError::Bad(
+                    "transfer-encoding is not supported; send Content-Length-framed bodies"
+                        .to_string(),
+                ))
+            }
+            _ => {}
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        match r.read_exact(&mut body) {
+            Ok(()) => {}
+            Err(e) if is_timeout(&e) => return Err(ReadError::Timeout),
+            Err(_) => return Err(ReadError::Closed),
+        }
+    }
+    Ok(Some(HttpRequest { method, target, keep_alive, body }))
+}
+
+/// Split a `http://host:port[/path]` url (scheme optional) into
+/// `(host:port, path)`.
+pub fn split_url(url: &str) -> Result<(String, String)> {
+    let rest = if let Some(r) = url.strip_prefix("http://") {
+        r
+    } else if url.starts_with("https://") {
+        bail!("https is not supported; use http://");
+    } else {
+        url
+    };
+    let (host, path) = match rest.find('/') {
+        Some(i) => (&rest[..i], &rest[i..]),
+        None => (rest, "/"),
+    };
+    if host.is_empty() {
+        bail!("empty host in url {url:?}");
+    }
+    Ok((host.to_string(), path.to_string()))
+}
+
+/// Minimal blocking keep-alive client — what `mpno infer --url`, the
+/// benches and the transport tests speak. One instance = one reused
+/// connection.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    host: String,
+}
+
+impl Client {
+    pub fn connect(url: &str) -> Result<Client> {
+        let (host, _) = split_url(url)?;
+        let stream =
+            TcpStream::connect(&host).with_context(|| format!("connecting to {host}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { reader: BufReader::new(stream), host })
+    }
+
+    /// One request/response exchange on the kept-alive connection.
+    pub fn request(&mut self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            self.host,
+            body.len(),
+        );
+        let w = self.reader.get_mut();
+        w.write_all(head.as_bytes())?;
+        w.write_all(body.as_bytes())?;
+        w.flush()?;
+        read_client_response(&mut self.reader)
+    }
+
+    /// `POST /infer` with the wire request; a non-200 reply decodes into
+    /// its [`ServeError`].
+    pub fn infer(&mut self, req: &WireRequest, enc: Encoding) -> Result<WireReply, ServeError> {
+        let body = req.encode(enc);
+        let (status, text) = self
+            .request("POST", "/infer", &body)
+            .map_err(|e| ServeError::model(format!("transport: {e:#}")))?;
+        match WireReply::decode(&text) {
+            Ok(r) if status == 200 => Ok(r),
+            Ok(_) => Err(ServeError::model(format!("HTTP {status} carried a success body"))),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// `GET /stats`, parsed.
+    pub fn stats(&mut self) -> Result<Json> {
+        let (status, body) = self.request("GET", "/stats", "")?;
+        if status != 200 {
+            bail!("GET /stats returned HTTP {status}: {body}");
+        }
+        Json::parse(&body)
+    }
+
+    /// `POST /shutdown`: ask the server to drain and exit.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        let (status, body) = self.request("POST", "/shutdown", "")?;
+        if status != 200 {
+            bail!("POST /shutdown returned HTTP {status}: {body}");
+        }
+        Ok(())
+    }
+}
+
+fn read_client_response(r: &mut BufReader<TcpStream>) -> Result<(u16, String)> {
+    let mut line = Vec::new();
+    if read_line(r, &mut line)? == 0 {
+        bail!("server closed the connection");
+    }
+    let text = String::from_utf8_lossy(&line);
+    let mut parts = text.split_whitespace();
+    let (proto, status) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if !proto.starts_with("HTTP/1.") {
+        bail!("not an HTTP response: {:?}", text.trim_end());
+    }
+    let status: u16 =
+        status.parse().with_context(|| format!("bad HTTP status {status:?}"))?;
+    let mut content_length = None;
+    loop {
+        if read_line(r, &mut line)? == 0 {
+            bail!("connection closed mid-headers");
+        }
+        let text = String::from_utf8_lossy(&line);
+        let text = text.trim_end_matches(['\r', '\n']);
+        if text.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = text.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = Some(value.trim().parse::<usize>()?);
+            }
+        }
+    }
+    let n = content_length.context("response missing Content-Length")?;
+    let mut body = vec![0u8; n];
+    r.read_exact(&mut body)?;
+    Ok((status, String::from_utf8(body)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn req(bytes: &[u8]) -> Result<Option<HttpRequest>, ReadError> {
+        read_request(&mut Cursor::new(bytes), 1024)
+    }
+
+    #[test]
+    fn parses_framed_requests() {
+        let r = req(b"POST /infer HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcd")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.target, "/infer");
+        assert!(r.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert_eq!(r.body, b"abcd");
+        let r = req(b"GET /healthz HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive, "HTTP/1.0 defaults to close");
+        let r = req(b"GET /stats HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive);
+        assert!(req(b"").unwrap().is_none(), "EOF between requests is a clean close");
+    }
+
+    #[test]
+    fn rejects_bad_framing() {
+        assert!(matches!(req(b"nonsense\r\n\r\n"), Err(ReadError::Bad(_))));
+        assert!(matches!(
+            req(b"POST /infer HTTP/1.1\r\nContent-Length: 9999\r\n\r\n"),
+            Err(ReadError::TooLarge(9999)),
+        ));
+        assert!(matches!(
+            req(b"POST /infer HTTP/1.1\r\nContent-Length: nope\r\n\r\n"),
+            Err(ReadError::Bad(_)),
+        ));
+        assert!(matches!(
+            req(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            Err(ReadError::Bad(_)),
+        ));
+        // A peer that hangs up mid-headers never becomes a request.
+        assert!(matches!(req(b"POST /infer HTTP/1.1\r\nContent-"), Err(ReadError::Closed)));
+    }
+
+    #[test]
+    fn splits_urls() {
+        let (h, p) = split_url("http://127.0.0.1:80").unwrap();
+        assert_eq!((h.as_str(), p.as_str()), ("127.0.0.1:80", "/"));
+        let (h, p) = split_url("localhost:7437/infer").unwrap();
+        assert_eq!((h.as_str(), p.as_str()), ("localhost:7437", "/infer"));
+        assert!(split_url("https://x").is_err());
+        assert!(split_url("http:///x").is_err());
+    }
+
+    #[test]
+    fn inflight_permit_bounds_admission() {
+        let n = AtomicUsize::new(0);
+        let a = Permit::acquire(&n, 2).unwrap();
+        let b = Permit::acquire(&n, 2).unwrap();
+        assert!(Permit::acquire(&n, 2).is_none(), "budget of 2 is full");
+        drop(a);
+        let c = Permit::acquire(&n, 2).unwrap();
+        drop(b);
+        drop(c);
+        assert_eq!(n.load(Ordering::Acquire), 0, "permits release on drop");
+        assert!(Permit::acquire(&n, 0).is_none(), "zero budget sheds everything");
+    }
+}

@@ -24,11 +24,23 @@
 //! [`batch::Server`] adds the queueing layer: adaptive batching that
 //! coalesces concurrent requests up to `max_batch` or a `max_wait`
 //! deadline, whichever comes first.
+//!
+//! Above the engine sits one typed serving surface: [`ServeError`]
+//! classifies every failure (and maps 1:1 onto HTTP statuses), the
+//! [`api`] wire layer gives stdin, HTTP and in-process callers a single
+//! request/reply encode/decode path, and [`http`] is the dependency-free
+//! HTTP/1.1 transport in front of the batching server.
 
+pub mod api;
 pub mod batch;
+pub mod error;
+pub mod http;
 pub mod lru;
 
+pub use api::{WireReply, WireRequest};
 pub use batch::Server;
+pub use error::ServeError;
+pub use http::{HttpConfig, HttpServer};
 pub use lru::{CacheStats, LruCache};
 
 use crate::coordinator::Checkpoint;
@@ -39,7 +51,7 @@ use crate::parallel::Executor;
 use crate::runtime::NATIVE_PRECISIONS;
 use crate::tensor::resample::resample2d;
 use crate::tensor::Tensor;
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 use std::time::Duration;
 
 /// Serve-time knobs (CLI flags map 1:1 onto these).
@@ -172,11 +184,14 @@ impl AnyFno {
 }
 
 /// Serve-loop telemetry.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct ServeStats {
     pub requests: u64,
     pub batches: u64,
     pub max_batch_seen: usize,
+    /// Dispatched-batch size histogram: `batch_hist[s]` counts forwards
+    /// that carried exactly `s` requests (index 0 is always 0).
+    pub batch_hist: Vec<u64>,
     /// Requests whose input was spectrally resampled onto another grid.
     pub resampled: u64,
     pub cache_hits: u64,
@@ -199,6 +214,7 @@ pub struct ServeEngine {
     requests: u64,
     batches: u64,
     max_batch_seen: usize,
+    batch_hist: Vec<u64>,
     resampled: u64,
 }
 
@@ -249,6 +265,7 @@ impl ServeEngine {
             requests: 0,
             batches: 0,
             max_batch_seen: 0,
+            batch_hist: Vec::new(),
             resampled: 0,
         })
     }
@@ -310,35 +327,31 @@ impl ServeEngine {
     }
 
     /// Which variant serves `req` — and the request-level validation.
-    fn request_key(&self, req: &ServeRequest) -> Result<ModelKey> {
+    /// Every failure here is the caller's ([`ServeError::BadRequest`]).
+    fn request_key(&self, req: &ServeRequest) -> Result<ModelKey, ServeError> {
         let shape = req.input.shape();
         if shape.len() != 3 || shape[0] != self.base.in_channels {
-            bail!(
+            return Err(ServeError::bad_request(format!(
                 "request {}: input must be ({}, h, w), got {:?}",
-                req.id,
-                self.base.in_channels,
-                shape
-            );
+                req.id, self.base.in_channels, shape
+            )));
         }
         let (gh, gw) = req.out_grid.unwrap_or((shape[1], shape[2]));
         if 2 * self.base.k_max > gh.min(gw) {
-            bail!(
+            return Err(ServeError::bad_request(format!(
                 "request {}: grid {}x{} too coarse for k_max {} (need 2*k_max <= both sides)",
-                req.id,
-                gh,
-                gw,
-                self.base.k_max
-            );
+                req.id, gh, gw, self.base.k_max
+            )));
         }
         let precision =
             req.precision.as_deref().unwrap_or(&self.default_precision).to_string();
         if !NATIVE_PRECISIONS.contains(&precision.as_str()) {
-            bail!(
+            return Err(ServeError::bad_request(format!(
                 "request {}: unknown precision {:?} (expected one of {})",
                 req.id,
                 precision,
                 NATIVE_PRECISIONS.join("|")
-            );
+            )));
         }
         Ok(ModelKey { precision, h: gh, w: gw })
     }
@@ -351,9 +364,10 @@ impl ServeEngine {
         &mut self,
         reqs: &[ServeRequest],
         ex: &Executor,
-    ) -> Vec<Result<ServeReply>> {
+    ) -> Vec<Result<ServeReply, ServeError>> {
         self.requests += reqs.len() as u64;
-        let mut out: Vec<Option<Result<ServeReply>>> = (0..reqs.len()).map(|_| None).collect();
+        let mut out: Vec<Option<Result<ServeReply, ServeError>>> =
+            (0..reqs.len()).map(|_| None).collect();
         // Group in first-seen key order, preserving request order inside
         // each group.
         let mut groups: Vec<(ModelKey, Vec<usize>)> = Vec::new();
@@ -374,10 +388,8 @@ impl ServeEngine {
                     }
                 }
                 Err(e) => {
-                    // The shim error type isn't Clone; re-render per slot.
-                    let msg = format!("{e:#}");
                     for i in idx {
-                        out[i] = Some(Err(anyhow!("{msg}")));
+                        out[i] = Some(Err(e.clone()));
                     }
                 }
             }
@@ -387,7 +399,11 @@ impl ServeEngine {
 
     /// Serve one request alone — the unbatched baseline (and the oracle
     /// batched serving must match bit-for-bit).
-    pub fn infer_one(&mut self, req: &ServeRequest, ex: &Executor) -> Result<ServeReply> {
+    pub fn infer_one(
+        &mut self,
+        req: &ServeRequest,
+        ex: &Executor,
+    ) -> Result<ServeReply, ServeError> {
         self.serve_batch(std::slice::from_ref(req), ex)
             .pop()
             .expect("one request, one reply")
@@ -399,7 +415,7 @@ impl ServeEngine {
         reqs: &[ServeRequest],
         idx: &[usize],
         ex: &Executor,
-    ) -> Result<Vec<ServeReply>> {
+    ) -> Result<Vec<ServeReply>, ServeError> {
         let (cin, cout) = (self.base.in_channels, self.base.out_channels);
         let (gh, gw) = (key.h, key.w);
         let slab = cin * gh * gw;
@@ -429,10 +445,17 @@ impl ServeEngine {
         let params = &self.params;
         let model = self
             .models
-            .get_or_try_insert_with(key, || AnyFno::build(&key.precision, &spec, params))?;
+            .get_or_try_insert_with(key, || AnyFno::build(&key.precision, &spec, params))
+            // A build failure is the server's problem, not the request's:
+            // the key was already validated.
+            .map_err(|e| ServeError::model(format!("{e:#}")))?;
         let y = model.forward(&x, ex);
         self.batches += 1;
         self.max_batch_seen = self.max_batch_seen.max(idx.len());
+        if self.batch_hist.len() <= idx.len() {
+            self.batch_hist.resize(idx.len() + 1, 0);
+        }
+        self.batch_hist[idx.len()] += 1;
         let out_slab = cout * gh * gw;
         let yd = y.data();
         Ok(idx
@@ -457,6 +480,7 @@ impl ServeEngine {
             requests: self.requests,
             batches: self.batches,
             max_batch_seen: self.max_batch_seen,
+            batch_hist: self.batch_hist.clone(),
             resampled: self.resampled,
             cache_hits: c.hits,
             cache_misses: c.misses,
@@ -601,9 +625,18 @@ mod tests {
             &Executor::serial(),
         );
         assert!(replies[0].is_err() && replies[1].is_err() && replies[2].is_err());
+        for r in &replies[..3] {
+            assert_eq!(
+                r.as_ref().unwrap_err().code(),
+                "bad_request",
+                "request validation failures are the caller's error"
+            );
+        }
         let ok = replies[3].as_ref().unwrap();
         assert_eq!(ok.id, 4);
         assert_eq!(ok.batch_size, 1, "only the valid request ran");
-        assert_eq!(eng.stats().requests, 4);
+        let st = eng.stats();
+        assert_eq!(st.requests, 4);
+        assert_eq!(st.batch_hist, vec![0, 1], "one dispatched forward of one request");
     }
 }

@@ -1,0 +1,230 @@
+//! End-to-end contract for the HTTP transport (`serve::http`).
+//!
+//! The house rule extends over the wire: an HTTP reply is bit-identical
+//! to what the in-process [`ServeEngine::infer_one`] oracle produces
+//! for the same request — at every precision, thread count and
+//! per-request override, because tensor payloads travel as raw f32
+//! bytes (base64 or hex), never through a float→decimal round trip.
+//!
+//! The error-path tests pin the status mapping (400/404/405/408/413/
+//! 429) and, just as importantly, that each failure leaves the accept
+//! loop healthy: after every abuse the same listener still serves a
+//! good request.
+
+use mpno::model::FnoSpec;
+use mpno::parallel::Executor;
+use mpno::rng::Rng;
+use mpno::serve::api::Encoding;
+use mpno::serve::http::{Client, HttpConfig, HttpServer};
+use mpno::serve::{ServeConfig, ServeEngine, ServeError, WireRequest};
+use mpno::tensor::Tensor;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+fn tiny_spec() -> FnoSpec {
+    FnoSpec { in_channels: 2, out_channels: 1, width: 3, k_max: 2, n_layers: 2, h: 8, w: 8 }
+}
+
+fn seeded_input(spec: &FnoSpec, seed: u64) -> Tensor {
+    let slab = spec.in_channels * spec.h * spec.w;
+    let mut rng = Rng::new(seed);
+    Tensor::from_vec(vec![spec.in_channels, spec.h, spec.w], rng.normal_vec(slab, 1.0))
+}
+
+fn ephemeral(cfg: HttpConfig) -> HttpConfig {
+    HttpConfig { addr: "127.0.0.1:0".to_string(), ..cfg }
+}
+
+/// Bind on an ephemeral port and serve on a background thread.
+fn start(
+    serve: &ServeConfig,
+    http: HttpConfig,
+    threads: usize,
+) -> (JoinHandle<ServeEngine>, SocketAddr) {
+    let spec = tiny_spec();
+    let params = spec.init_params(3);
+    let engine = ServeEngine::new("test", spec, params, serve).unwrap();
+    let server = HttpServer::bind(engine, serve, ephemeral(http), Executor::new(threads))
+        .expect("bind ephemeral port");
+    let addr = server.local_addr();
+    (std::thread::spawn(move || server.run()), addr)
+}
+
+fn url(addr: SocketAddr) -> String {
+    format!("http://{addr}")
+}
+
+#[test]
+fn http_replies_bit_match_the_in_process_oracle() {
+    let spec = tiny_spec();
+    let params = spec.init_params(3);
+    let serve_cfg = ServeConfig::default(); // f32 default precision
+    for threads in [1usize, 8] {
+        let (handle, addr) = start(&serve_cfg, HttpConfig::default(), threads);
+        // One concurrent client per precision; each sends a plain
+        // request, a precision-override request, and a super-resolution
+        // request, alternating payload encodings.
+        let workers: Vec<_> = ["f32", "bf16", "f16"]
+            .iter()
+            .enumerate()
+            .map(|(c, prec)| {
+                let url = url(addr);
+                let spec = spec.clone();
+                let prec = prec.to_string();
+                std::thread::spawn(move || {
+                    let mut cl = Client::connect(&url).expect("client connects");
+                    let enc = if c % 2 == 0 { Encoding::B64 } else { Encoding::Hex };
+                    let mut served = Vec::new();
+                    for k in 0..3u64 {
+                        let id = 10 * c as u64 + k;
+                        let mut req =
+                            WireRequest::new(id, seeded_input(&spec, 31 * c as u64 + k));
+                        if k >= 1 {
+                            req.precision = Some(prec.clone());
+                        }
+                        if k == 2 {
+                            req.grid = Some((16, 16)); // super-resolution
+                        }
+                        let reply = cl.infer(&req, enc).expect("valid request serves");
+                        assert_eq!(reply.id, id, "replies echo their request id");
+                        served.push((req, reply));
+                    }
+                    served
+                })
+            })
+            .collect();
+        let served: Vec<_> =
+            workers.into_iter().flat_map(|w| w.join().expect("client thread")).collect();
+        Client::connect(&url(addr)).unwrap().shutdown_server().unwrap();
+        let engine_stats = handle.join().expect("server thread").stats();
+        assert_eq!(engine_stats.requests, 9, "3 clients x 3 requests reached the engine");
+
+        // Replay every wire request against a fresh in-process engine on
+        // an executor with the same thread count: outputs must be
+        // bit-identical, NaN/-0.0 included.
+        let mut oracle =
+            ServeEngine::new("test", spec.clone(), params.clone(), &serve_cfg).unwrap();
+        let ex = Executor::new(threads);
+        for (req, reply) in served {
+            let want = oracle.infer_one(&req.clone().into_serve_request(), &ex).unwrap();
+            let got: Vec<u32> = reply.output.data().iter().map(|v| v.to_bits()).collect();
+            let exp: Vec<u32> = want.output.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(
+                got, exp,
+                "threads={threads} id={} key={:?}: HTTP reply differs from oracle",
+                reply.id, reply.model_key
+            );
+            assert_eq!((reply.model_key.h, reply.model_key.w), want.grid);
+            assert_eq!(reply.model_key.precision, want.precision);
+        }
+    }
+}
+
+#[test]
+fn transport_maps_errors_without_wedging_the_listener() {
+    let spec = tiny_spec();
+    let serve_cfg = ServeConfig::default();
+    // Small body cap and short read timeout so 413 and 408 are cheap to
+    // provoke; everything else at defaults.
+    let http = HttpConfig {
+        max_body: 4096,
+        read_timeout: Duration::from_millis(200),
+        ..HttpConfig::default()
+    };
+    let (handle, addr) = start(&serve_cfg, http, 1);
+    let mut cl = Client::connect(&url(addr)).unwrap();
+
+    // Malformed JSON → 400 with a structured error body; the keep-alive
+    // connection stays usable afterwards.
+    let (status, body) = cl.request("POST", "/infer", "{this is not json").unwrap();
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("bad_request"), "{body}");
+    let good = WireRequest::new(1, seeded_input(&spec, 7));
+    cl.infer(&good, Encoding::B64).expect("connection survives a 400");
+
+    // Wrong grid → the engine's BadRequest, mapped to 400 on the wire.
+    let mut coarse = WireRequest::new(2, seeded_input(&spec, 8));
+    coarse.grid = Some((3, 3));
+    let err = cl.infer(&coarse, Encoding::B64).unwrap_err();
+    assert_eq!(err.code(), "bad_request");
+    assert!(err.to_string().contains("too coarse"), "{err}");
+
+    // Unknown endpoint and wrong method map to 404 / 405.
+    assert_eq!(cl.request("GET", "/nope", "").unwrap().0, 404);
+    assert_eq!(cl.request("GET", "/infer", "").unwrap().0, 405);
+
+    // Declared-oversize body → 413 before the server reads it.
+    let huge = "x".repeat(8192);
+    let mut fat = Client::connect(&url(addr)).unwrap();
+    let (status, body) = fat.request("POST", "/infer", &huge).unwrap();
+    assert_eq!(status, 413, "{body}");
+
+    // Slow client: a stalled partial request times out into 408.
+    let mut slow = TcpStream::connect(addr).unwrap();
+    slow.write_all(b"POST /inf").unwrap();
+    let mut raw = String::new();
+    slow.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 408"), "stalled request should 408, got {raw:?}");
+
+    // After all that abuse the listener still serves.
+    let mut fresh = Client::connect(&url(addr)).unwrap();
+    let reply = fresh.infer(&good, Encoding::Hex).expect("listener still healthy");
+    assert_eq!(reply.id, 1);
+    let st = fresh.stats().expect("stats still render");
+    assert_eq!(st.str_field("default_precision").unwrap(), "f32");
+    assert_eq!(st.get("spec").unwrap().usize_field("h").unwrap(), 8);
+    fresh.shutdown_server().unwrap();
+    handle.join().expect("server thread");
+}
+
+#[test]
+fn infer_sheds_with_429_beyond_the_inflight_budget() {
+    let serve_cfg = ServeConfig::default();
+    // A zero in-flight budget sheds every /infer deterministically —
+    // the degenerate case of "load beyond the budget".
+    let http = HttpConfig { max_inflight: 0, ..HttpConfig::default() };
+    let (handle, addr) = start(&serve_cfg, http, 1);
+    let mut cl = Client::connect(&url(addr)).unwrap();
+    assert_eq!(cl.request("GET", "/healthz", "").unwrap().0, 200, "health is not admission");
+
+    let req = WireRequest::new(0, seeded_input(&tiny_spec(), 1));
+    let err = cl.infer(&req, Encoding::B64).unwrap_err();
+    assert_eq!(err, ServeError::Overloaded);
+    let (status, body) = cl.request("POST", "/infer", &req.encode(Encoding::B64)).unwrap();
+    assert_eq!(status, 429, "{body}");
+    assert!(body.contains("overloaded"), "{body}");
+
+    let st = cl.stats().unwrap();
+    let http_stats = st.get("http").unwrap();
+    assert!(http_stats.usize_field("shed").unwrap() >= 2, "both sheds counted");
+    assert_eq!(http_stats.usize_field("inflight").unwrap(), 0, "permits released");
+
+    cl.shutdown_server().unwrap();
+    let stats = handle.join().expect("server thread").stats();
+    assert_eq!(stats.requests, 0, "shed requests never reach the engine");
+}
+
+#[test]
+fn shutdown_drains_and_rejects_late_requests() {
+    let spec = tiny_spec();
+    let serve_cfg = ServeConfig::default();
+    let (handle, addr) = start(&serve_cfg, HttpConfig::default(), 1);
+    let mut cl = Client::connect(&url(addr)).unwrap();
+    let req = WireRequest::new(5, seeded_input(&spec, 9));
+    cl.infer(&req, Encoding::B64).expect("serves before shutdown");
+    cl.shutdown_server().unwrap();
+    // A request racing in after the drain began is rejected cleanly
+    // (503 on a fresh connection) or refused at connect — never hung.
+    if let Ok(mut late) = Client::connect(&url(addr)) {
+        if let Err(e) = late.infer(&req, Encoding::B64) {
+            assert!(
+                matches!(e, ServeError::ShuttingDown | ServeError::Model(_)),
+                "late request got {e:?}"
+            );
+        }
+    }
+    let stats = handle.join().expect("server thread").stats();
+    assert!(stats.requests >= 1);
+}

@@ -18,7 +18,7 @@ use mpno::model::{Fno2d, FnoSpec};
 use mpno::parallel::Executor;
 use mpno::rng::Rng;
 use mpno::runtime::NativeEngine;
-use mpno::serve::{ServeConfig, ServeEngine, ServeRequest, Server};
+use mpno::serve::{ServeConfig, ServeEngine, ServeError, ServeRequest, Server};
 use mpno::tensor::resample::resample2d;
 use mpno::tensor::Tensor;
 
@@ -248,7 +248,8 @@ fn batching_server_replies_match_direct_serving() {
         4,
         std::time::Duration::from_millis(20),
     );
-    let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone())).collect();
+    let rxs: Vec<_> =
+        reqs.iter().map(|r| server.submit(r.clone()).expect("server accepting")).collect();
     for (rx, want) in rxs.into_iter().zip(&oracle) {
         let reply = rx.recv().expect("worker alive").expect("request valid");
         assert_eq!(&reply.output, want, "batch boundaries must never change a reply");
@@ -257,4 +258,84 @@ fn batching_server_replies_match_direct_serving() {
     let st = server.shutdown().stats();
     assert_eq!(st.requests, 10);
     assert!(st.batches >= 3, "10 requests at max_batch 4 need at least 3 batches");
+}
+
+#[test]
+fn shutdown_drains_queued_requests_and_rejects_new_ones() {
+    let spec = tiny_spec(8, 8);
+    let params = spec.init_params(9);
+    let reqs = requests(8, &spec, 11);
+    let mut direct = engine_for(&spec, &params, "f32", 4);
+    let ex = Executor::serial();
+    let oracle: Vec<Tensor> =
+        reqs.iter().map(|r| direct.infer_one(r, &ex).unwrap().output).collect();
+    // A max_wait far longer than the test: the worker is still topping
+    // up its batch when shutdown begins, so only the drain can answer.
+    let server = Server::start_with(
+        engine_for(&spec, &params, "f32", 4),
+        4,
+        std::time::Duration::from_secs(30),
+        Executor::serial(),
+    );
+    let rxs: Vec<_> =
+        reqs.iter().map(|r| server.submit(r.clone()).expect("server accepting")).collect();
+    server.begin_shutdown();
+    // Every accepted request is still answered — bit-identically.
+    for (rx, want) in rxs.into_iter().zip(&oracle) {
+        let reply = rx.recv().expect("drained, not dropped").expect("request valid");
+        assert_eq!(&reply.output, want, "the drain must not change results");
+    }
+    // New submissions are deterministically rejected, not half-queued.
+    assert_eq!(server.submit(reqs[0].clone()).unwrap_err(), ServeError::ShuttingDown);
+    let st = server.shutdown().stats();
+    assert_eq!(st.requests, 8, "all queued requests reached the engine");
+}
+
+#[test]
+fn submit_vs_shutdown_race_never_drops_a_reply() {
+    let spec = tiny_spec(8, 8);
+    let params = spec.init_params(3);
+    let req = requests(1, &spec, 5).remove(0);
+    // Race 4 submitter threads against shutdown at varying offsets. The
+    // invariant under every interleaving: submit either returns
+    // ShuttingDown, or the accepted request gets a real reply.
+    for trial in 0..8u64 {
+        let server = std::sync::Arc::new(Server::start_with(
+            engine_for(&spec, &params, "f32", 2),
+            4,
+            std::time::Duration::from_micros(200),
+            Executor::serial(),
+        ));
+        let submitters: Vec<_> = (0..4)
+            .map(|_| {
+                let s = std::sync::Arc::clone(&server);
+                let r = req.clone();
+                std::thread::spawn(move || {
+                    let mut accepted = 0u64;
+                    for _ in 0..6 {
+                        match s.submit(r.clone()) {
+                            Ok(rx) => {
+                                let reply = rx.recv().expect("accepted => answered");
+                                assert!(reply.is_ok(), "valid request must serve");
+                                accepted += 1;
+                            }
+                            Err(e) => assert_eq!(e, ServeError::ShuttingDown),
+                        }
+                    }
+                    accepted
+                })
+            })
+            .collect();
+        let closer = {
+            let s = std::sync::Arc::clone(&server);
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_micros(120 * trial));
+                s.begin_shutdown();
+            })
+        };
+        let accepted: u64 = submitters.into_iter().map(|t| t.join().unwrap()).sum();
+        closer.join().unwrap();
+        let st = server.join_engine().expect("first join gets the engine").stats();
+        assert_eq!(st.requests, accepted, "trial {trial}: accepted == served");
+    }
 }

@@ -15,7 +15,14 @@
 #   4. the lane (explicitly unrolled SIMD-style) SoA contraction kernels
 #      must not be slower than the scalar reference kernels at the same
 #      shape, precision AND thread count (paired "... reference" /
-#      "... lane" rows from bench_contract and bench_native).
+#      "... lane" rows from bench_contract and bench_native), and
+#   5. serving over the loopback HTTP transport must cost at most
+#      MPNO_MAX_HTTP_OVERHEAD x the in-process cost of the same requests
+#      at the same shape AND thread count (paired "... direct" /
+#      "... http" rows from bench_native). The bound is deliberately
+#      lenient (default 50x) — it exists to catch a transport that went
+#      accidentally quadratic or started re-handshaking per request, not
+#      to gate syscall noise on tiny tensors.
 #
 # Sections suffixed `_smoke` or `_quick` hold 1-iteration CI smoke rows /
 # quick-shape rows (see bench::bench_json_section) and are skipped — they
@@ -36,9 +43,11 @@ fi
 
 python3 - "$BENCH_JSON" <<'EOF'
 import json
+import os
 import sys
 
 path = sys.argv[1]
+max_http_overhead = float(os.environ.get("MPNO_MAX_HTTP_OVERHEAD", "50"))
 with open(path) as f:
     doc = json.load(f)
 
@@ -60,6 +69,7 @@ for section, rows in sorted(doc.items()):
     fused = {}
     unbatched = {}
     reference = {}
+    direct = {}
     for row in rows:
         case = row.get("case", "")
         if case.endswith(" composed"):
@@ -70,6 +80,8 @@ for section, rows in sorted(doc.items()):
             unbatched[(case[: -len(" unbatched")], row.get("threads"))] = row
         elif case.endswith(" reference"):
             reference[(case[: -len(" reference")], row.get("threads"))] = row
+        elif case.endswith(" direct"):
+            direct[(case[: -len(" direct")], row.get("threads"))] = row
     for row in rows:
         case = row.get("case", "")
         if case.endswith(" half fused"):
@@ -131,6 +143,27 @@ for section, rows in sorted(doc.items()):
                 print(
                     f"check_bench: OK {tag}: batched {bat_s:.6f}s"
                     f" <= unbatched {unb_s:.6f}s"
+                )
+        elif case.endswith(" http"):
+            # Gate 5: loopback HTTP vs in-process serving of the same
+            # requests, same shape and thread count, bounded by a
+            # lenient multiplicative overhead budget.
+            shape = case[: -len(" http")]
+            base = direct.get((shape, row.get("threads")))
+            if base is None:
+                continue
+            checked += 1
+            http_s, dir_s = row["mean_s"], base["mean_s"]
+            tag = f"{section}: {shape} (threads={row.get('threads')})"
+            if http_s > dir_s * max_http_overhead:
+                failures.append(
+                    f"{tag}: http {http_s:.6f}s > {max_http_overhead:g}x"
+                    f" direct {dir_s:.6f}s"
+                )
+            else:
+                print(
+                    f"check_bench: OK {tag}: http {http_s:.6f}s"
+                    f" <= {max_http_overhead:g}x direct {dir_s:.6f}s"
                 )
         elif case.endswith(" lane"):
             # Gate 4: lane kernels vs scalar reference, same shape

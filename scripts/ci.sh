@@ -21,6 +21,7 @@ PALLAS_THREADS=1 cargo test -q --test half_spectral_parity
 PALLAS_THREADS=1 cargo test -q --test native_grad
 PALLAS_THREADS=1 cargo test -q --test serve_parity
 PALLAS_THREADS=1 cargo test -q --test lane_parity
+PALLAS_THREADS=1 cargo test -q --test http_transport
 
 # Same suites pinned to eight workers: with batch sizes below the worker
 # count the engines switch to within-sample row/column fan-out, so this
@@ -33,6 +34,7 @@ PALLAS_THREADS=8 cargo test -q --test half_spectral_parity
 PALLAS_THREADS=8 cargo test -q --test native_grad
 PALLAS_THREADS=8 cargo test -q --test serve_parity
 PALLAS_THREADS=8 cargo test -q --test lane_parity
+PALLAS_THREADS=8 cargo test -q --test http_transport
 
 # End-to-end native training smoke: two full epochs through the fused
 # spectral engine (forward + hand-derived backward + Adam + loss scaler)
@@ -66,6 +68,41 @@ cargo run --release -- serve --checkpoint "$SERVE_CK" --bench --n 8 \
   --max-batch 4
 PALLAS_THREADS=1 cargo run --release -- serve --checkpoint "$SERVE_CK" \
   --bench --n 8 --max-batch 4 --precision bf16
+
+# Network serving smoke: the same checkpoint behind `mpno serve
+# --listen` on an ephemeral loopback port (--port-file publishes the
+# bound port), probed end to end by the built-in `mpno infer` client —
+# which asserts finite outputs and bit-identical replies for repeated
+# identical requests — then drained via POST /shutdown. Both executor
+# legs, so the transport runs over serial and oversubscribed dispatch.
+echo "== HTTP serving smoke (mpno serve --listen / mpno infer loopback) =="
+MPNO_BIN=./target/release/mpno
+for T in 1 8; do
+  PORT_FILE="$(mktemp -t mpno_http_port.XXXXXX)"
+  PALLAS_THREADS=$T "$MPNO_BIN" serve --checkpoint "$SERVE_CK" \
+    --listen 127.0.0.1:0 --port-file "$PORT_FILE" --max-batch 4 &
+  SERVE_PID=$!
+  trap 'kill "$SERVE_PID" 2>/dev/null || true' EXIT
+  PORT=""
+  for _ in $(seq 1 100); do
+    PORT="$(cat "$PORT_FILE" 2>/dev/null || true)"
+    [ -n "$PORT" ] && break
+    sleep 0.1
+  done
+  if [ -z "$PORT" ]; then
+    echo "serve --listen never published its port" >&2
+    exit 1
+  fi
+  PALLAS_THREADS=$T "$MPNO_BIN" infer --url "http://127.0.0.1:$PORT" \
+    --probe --n 4
+  PALLAS_THREADS=$T "$MPNO_BIN" infer --url "http://127.0.0.1:$PORT" \
+    --probe --n 2 --precision bf16 --encoding hex
+  PALLAS_THREADS=$T "$MPNO_BIN" infer --url "http://127.0.0.1:$PORT" \
+    --stats --shutdown
+  wait "$SERVE_PID"
+  trap - EXIT
+  rm -f "$PORT_FILE"
+done
 rm -f "$SERVE_CK"
 
 # Bench smoke: MPNO_BENCH_SMOKE=1 collapses bench_auto to 1 warmup +
@@ -87,7 +124,9 @@ MPNO_BENCH_SMOKE=1 cargo run --release -- bench-par --quick --json
 # path must never be slower than the composed baseline, the Hermitian
 # half-spectrum path must never be slower than the full-spectrum fused
 # path at the same shape and thread count, batched serving must never
-# be slower than serving the same requests one at a time, and the lane
+# be slower than serving the same requests one at a time, the lane
 # SoA contraction kernels must never be slower than their scalar
-# reference at the same shape, precision and thread count.
+# reference at the same shape, precision and thread count, and the
+# loopback HTTP transport must stay within a (lenient, overridable)
+# overhead budget of in-process serving.
 ./scripts/check_bench.sh
