@@ -114,6 +114,23 @@ impl GradScaler {
         }
     }
 
+    /// Snapshot the dynamic search state — `(scale, good_steps, step)` —
+    /// for lossless checkpointing. Unlike [`GradScaler::set_scale`]
+    /// (which restarts the growth window), restoring this triple via
+    /// [`GradScaler::restore_dyn_state`] makes the scaler's future
+    /// decisions bit-identical to an uninterrupted run. History telemetry
+    /// is deliberately excluded: it never feeds back into scaling.
+    pub fn dyn_state(&self) -> (f64, u64, u64) {
+        (self.scale, self.good_steps, self.step)
+    }
+
+    /// Install a [`GradScaler::dyn_state`] snapshot verbatim.
+    pub fn restore_dyn_state(&mut self, scale: f64, good_steps: u64, step: u64) {
+        self.scale = scale;
+        self.good_steps = good_steps;
+        self.step = step;
+    }
+
     /// Current history recording stride: 1 until the run outgrows
     /// [`MAX_SCALER_HISTORY`], doubling at each downsample after that.
     pub fn history_stride(&self) -> u64 {

@@ -5,6 +5,9 @@
 //! mpno gen-data --dataset darcy --res 32 --n 48 [--seed S]
 //! mpno train --artifact NAME [--epochs N] [--lr X] [--schedule paper]
 //! mpno train --native [--precision P] [--schedule paper] [...]
+//! mpno train --native --coordinator ADDR --workers N [...]
+//!                                    data-parallel training (dist::)
+//! mpno dist-worker --connect ADDR    one rank of a distributed world
 //! mpno serve --checkpoint PATH [--precision P] [--max-batch N] [--bench]
 //!            [--listen ADDR]               HTTP transport (serve::http)
 //! mpno infer --url URL (--input X.mpno | --probe) [--precision P]
@@ -130,6 +133,7 @@ pub fn run_argv(argv: &[String]) -> Result<()> {
         "info" => cmd_info(),
         "gen-data" => cmd_gen_data(&args),
         "train" => cmd_train(&args),
+        "dist-worker" => cmd_dist_worker(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
         "infer" => cmd_infer(&args),
@@ -160,7 +164,19 @@ USAGE:
              [--epochs N] [--lr X] [--lr-decay D] [--expect-improve]
              CPU training on the fused spectral engine (no artifacts);
              --schedule paper swaps bf16 -> tf32 -> f32 compute while
-             fp32 master weights carry across phases
+             fp32 master weights carry across phases;
+             --coordinator ADDR [--workers N] [--ckpt-dir DIR]
+             [--heartbeat-ms X] [--port-file PATH] [--checkpoint FILE]
+             instead trains data-parallel: binds ADDR (port 0 =
+             ephemeral), spawns N worker processes, and produces
+             bit-identical results to the single-process run at every
+             world size (see docs/ARCHITECTURE.md); --ckpt-dir enables
+             mid-run crash recovery, --checkpoint writes the final
+             rank-0 checkpoint (servable by eval/serve)
+  mpno dist-worker --connect ADDR
+             one worker of a distributed world (normally spawned by
+             `mpno train --native --coordinator`; run by hand to place
+             workers yourself — config arrives over the wire)
   mpno eval --checkpoint PATH [--artifact FWD_NAME]
              evaluate a saved model, incl. zero-shot at other resolutions
   mpno serve --checkpoint PATH [--precision f64|f32|tf32|bf16|f16]
@@ -302,6 +318,9 @@ fn print_report(report: &TrainReport) {
 /// the precision schedule mapped onto `Scalar` swaps instead of AOT
 /// artifact swaps. No manifest or PJRT build required.
 fn cmd_train_native(args: &Args) -> Result<()> {
+    if args.has("coordinator") {
+        return cmd_train_dist(args);
+    }
     let ds_tok = args.flag("dataset").unwrap_or("darcy");
     let kind =
         DatasetKind::from_token(ds_tok).with_context(|| format!("unknown dataset {ds_tok}"))?;
@@ -409,6 +428,182 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         println!("loss improved: {first:.5} -> {last:.5}");
     }
     Ok(())
+}
+
+/// `mpno train --native --coordinator ADDR --workers N`: multi-process
+/// data-parallel training. Binds the coordinator socket, spawns N
+/// `dist-worker` child processes of this same binary, and runs the
+/// membership/all-reduce loop inline. Bit-identical to the same
+/// `mpno train --native` invocation without `--coordinator`, at every
+/// world size — that is the [`crate::dist`] contract, and what the CI
+/// smoke checks by `cmp`-ing the written checkpoints.
+fn cmd_train_dist(args: &Args) -> Result<()> {
+    use crate::dist::{coordinator::run_coordinator, DistConfig};
+    let ds_tok = args.flag("dataset").unwrap_or("darcy");
+    let kind =
+        DatasetKind::from_token(ds_tok).with_context(|| format!("unknown dataset {ds_tok}"))?;
+    if matches!(kind, DatasetKind::ShapeNetCar | DatasetKind::AhmedBody) {
+        bail!("--native trains grid datasets (ns|darcy|swe), not geometry sets");
+    }
+    let res = args.get_usize("res", 16);
+    let batch = args.get_usize("batch-size", 4);
+    let n = args.get_usize("n", 24);
+    let width = args.get_usize("width", 8);
+    let modes = args.get_usize("modes", 4);
+    let layers = args.get_usize("layers", 2);
+    if width == 0 || layers == 0 || modes == 0 {
+        bail!("--width, --modes and --layers must all be positive");
+    }
+    let grid_w = if kind == DatasetKind::SphericalSwe { 2 * res } else { res };
+    if 2 * modes > res.min(grid_w) {
+        bail!("--modes {modes} too large for --res {res}: need 2*modes <= grid side");
+    }
+    let n_test = (n / 3).max(batch);
+    if n_test >= n || n - n_test < batch {
+        bail!(
+            "--n {n} too small for batch size {batch}: {} test samples would leave \
+             {} training samples (need at least one full batch of each)",
+            n_test,
+            n.saturating_sub(n_test)
+        );
+    }
+    let prec = args.flag("precision").unwrap_or("f32");
+    if !NATIVE_PRECISIONS.contains(&prec) {
+        bail!("unknown --precision {prec:?} (expected one of {})", NATIVE_PRECISIONS.join("|"));
+    }
+    // Synthesized artifact names come from a throwaway engine (the
+    // manifest is pure metadata; workers build their own engines).
+    let fno = FnoSpec {
+        in_channels: kind.in_channels(),
+        out_channels: kind.out_channels(),
+        width,
+        k_max: modes,
+        n_layers: layers,
+        h: res,
+        w: grid_w,
+    };
+    let names = NativeEngine::new(kind.token(), fno, batch);
+    let paper_schedule = args.flag("schedule") == Some("paper");
+    let phases = if paper_schedule {
+        if args.has("precision") {
+            bail!(
+                "--precision conflicts with --schedule paper, whose phases are fixed \
+                 (bf16 -> tf32 -> f32); drop one of the two flags"
+            );
+        }
+        vec![
+            (0.0, names.artifact("bf16", "grads")),
+            (0.25, names.artifact("tf32", "grads")),
+            (0.75, names.artifact("f32", "grads")),
+        ]
+    } else {
+        vec![(0.0, names.artifact(prec, "grads"))]
+    };
+    let loss_scaling =
+        paper_schedule || args.has("loss-scaling") || matches!(prec, "bf16" | "f16");
+    let cfg = DistConfig {
+        dataset: kind.token().to_string(),
+        resolution: res,
+        n_samples: n,
+        n_test,
+        data_seed: args.get_u64("data-seed", 7),
+        batch,
+        width,
+        modes,
+        layers,
+        epochs: args.get_usize("epochs", 10),
+        lr: args.get_f64("lr", 2e-3),
+        lr_decay: args.get_f64("lr-decay", 1.0),
+        seed: args.get_u64("seed", 0),
+        loss_scaling,
+        init_loss_scale: 65536.0,
+        grad_clip: args.get_f64("grad-clip", 0.0),
+        phases,
+        ckpt_dir: args.flag("ckpt-dir").map(|s| s.to_string()),
+        heartbeat_ms: args.get_u64("heartbeat-ms", 500),
+    };
+    cfg.validate()?;
+    let workers = args.get_usize("workers", 1);
+    if workers == 0 {
+        bail!("--workers must be at least 1");
+    }
+
+    let bind = args.flag("coordinator").unwrap_or("127.0.0.1:0");
+    let listener = std::net::TcpListener::bind(bind)
+        .with_context(|| format!("bind coordinator socket {bind}"))?;
+    let addr = listener.local_addr()?;
+    if let Some(pf) = args.flag("port-file") {
+        std::fs::write(pf, format!("{}\n", addr.port()))
+            .with_context(|| format!("writing --port-file {pf:?}"))?;
+    }
+    println!(
+        "coordinator on {addr}: world {workers}, {} epochs, {} train / {} test samples",
+        cfg.epochs,
+        cfg.n_samples - cfg.n_test,
+        cfg.n_test
+    );
+
+    let exe = std::env::current_exe().context("locate own binary for worker spawn")?;
+    let mut children = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("dist-worker").arg("--connect").arg(addr.to_string());
+        if let Some(t) = args.flag("threads") {
+            cmd.arg("--threads").arg(t);
+        }
+        children.push(cmd.spawn().context("spawn dist-worker")?);
+    }
+    // If any worker dies with an error, fail the whole run instead of
+    // letting the coordinator wait on a world that can never refill.
+    let monitor = std::thread::spawn(move || {
+        let mut ok = true;
+        for mut c in children {
+            match c.wait() {
+                Ok(st) if st.success() => {}
+                Ok(st) => {
+                    eprintln!("dist-worker exited with {st}");
+                    ok = false;
+                }
+                Err(e) => {
+                    eprintln!("dist-worker wait failed: {e}");
+                    ok = false;
+                }
+            }
+        }
+        ok
+    });
+
+    let report = run_coordinator(listener, &cfg, workers, None)?;
+    for e in &report.epochs {
+        println!(
+            "epoch {:>3} [{}] train {:.5}  test L2 {:.5}  H1 {:.5}  {:.2}s ({:.1} samp/s)",
+            e.epoch, e.artifact, e.train_loss, e.test_l2, e.test_h1, e.seconds, e.samples_per_sec
+        );
+    }
+    if report.diverged {
+        println!("!! diverged");
+    }
+    println!("all {workers} replicas agree: params digest {:#018x}", report.digest);
+    if let Some(p) = args.flag("checkpoint") {
+        // The raw rank-0 blob, byte-identical at every world size (and
+        // loadable by `mpno eval` / `mpno serve`).
+        std::fs::write(p, &report.blob).with_context(|| format!("write checkpoint {p:?}"))?;
+        println!("wrote {p}");
+    }
+    if !monitor.join().unwrap_or(false) {
+        bail!("a dist-worker process failed");
+    }
+    Ok(())
+}
+
+/// `mpno dist-worker --connect ADDR`: one worker process of a
+/// distributed world. Normally spawned by `mpno train --native
+/// --coordinator`, but can be launched by hand (e.g. on another machine)
+/// against any reachable coordinator — all run configuration arrives
+/// over the wire in the `Welcome` frame.
+fn cmd_dist_worker(args: &Args) -> Result<()> {
+    let addr = args.flag("connect").context("--connect ADDR required")?;
+    crate::dist::worker::run_worker(addr)
 }
 
 /// Evaluate a checkpoint with a fwd artifact (defaults to the checkpoint's

@@ -19,6 +19,13 @@ pub struct Checkpoint {
     /// checkpoints written before this field existed).
     pub loss_scale: Option<f64>,
     pub params: Vec<(String, Tensor)>,
+    /// Auxiliary `__`-prefixed records this loader does not interpret —
+    /// e.g. the distributed runtime's optimizer/rng state
+    /// ([`crate::dist::ckpt::TrainState`]). Kept out of `params` so
+    /// [`Checkpoint::params_for`] (and with it `mpno eval` / serving)
+    /// still sees exactly the model weights, and written back verbatim on
+    /// save so round-tripping a file through this struct is lossless.
+    pub extras: Vec<(String, Tensor)>,
 }
 
 impl Checkpoint {
@@ -34,6 +41,7 @@ impl Checkpoint {
                 .zip(params)
                 .map(|(spec, t)| (spec.name.clone(), t.clone()))
                 .collect(),
+            extras: vec![],
         }
     }
 
@@ -54,38 +62,59 @@ impl Checkpoint {
     /// two f32 *bit carriers* (see [`bits_to_words`]). [`Checkpoint::load`]
     /// prefers the 64-bit records when present.
     pub fn save(&self, path: &Path) -> Result<()> {
-        let meta = Tensor::from_vec(vec![1], vec![self.epoch as f32]);
-        let epoch64 = Tensor::from_vec(vec![2], bits_to_words(self.epoch as u64));
+        let meta = self.meta_records();
+        crate::ser::save_tensors(path, &self.encode(&meta))
+    }
+
+    /// Serialize to an in-memory byte blob — byte-identical to what
+    /// [`Checkpoint::save`] writes to disk. This is the form checkpoints
+    /// take through the distributed wire protocol and the pluggable
+    /// storage backends.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let meta = self.meta_records();
+        crate::ser::tensors_to_bytes(&self.encode(&meta))
+    }
+
+    fn meta_records(&self) -> Vec<(String, Tensor)> {
         let name_bytes: Vec<f32> = self.artifact.bytes().map(|b| b as f32).collect();
-        let name_t = Tensor::from_vec(vec![name_bytes.len()], name_bytes);
-        let scale_t = self
-            .loss_scale
-            .map(|s| Tensor::from_vec(vec![1], vec![s as f32]));
-        let scale64_t = self
-            .loss_scale
-            .map(|s| Tensor::from_vec(vec![2], bits_to_words(s.to_bits())));
-        let mut recs: Vec<(&str, &Tensor)> =
-            vec![("__epoch", &meta), ("__epoch64", &epoch64), ("__artifact", &name_t)];
-        if let Some(t) = &scale_t {
-            recs.push(("__loss_scale", t));
+        let mut meta = vec![
+            ("__epoch".to_string(), Tensor::from_vec(vec![1], vec![self.epoch as f32])),
+            ("__epoch64".to_string(), Tensor::from_vec(vec![2], bits_to_words(self.epoch as u64))),
+            ("__artifact".to_string(), Tensor::from_vec(vec![name_bytes.len()], name_bytes)),
+        ];
+        if let Some(s) = self.loss_scale {
+            meta.push(("__loss_scale".to_string(), Tensor::from_vec(vec![1], vec![s as f32])));
+            meta.push((
+                "__loss_scale64".to_string(),
+                Tensor::from_vec(vec![2], bits_to_words(s.to_bits())),
+            ));
         }
-        if let Some(t) = &scale64_t {
-            recs.push(("__loss_scale64", t));
-        }
-        for (n, t) in &self.params {
-            recs.push((n.as_str(), t));
-        }
-        crate::ser::save_tensors(path, &recs)
+        meta
+    }
+
+    fn encode<'a>(&'a self, meta: &'a [(String, Tensor)]) -> Vec<(&'a str, &'a Tensor)> {
+        let own = meta.iter().chain(&self.extras).chain(&self.params);
+        own.map(|(n, t)| (n.as_str(), t)).collect()
     }
 
     pub fn load(path: &Path) -> Result<Checkpoint> {
-        let recs = crate::ser::load_tensors(path)?;
+        Self::from_records(crate::ser::load_tensors(path)?)
+    }
+
+    /// Parse from a [`Checkpoint::to_bytes`] blob (or any byte-identical
+    /// file image).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        Self::from_records(crate::ser::tensors_from_bytes(bytes)?)
+    }
+
+    fn from_records(recs: Vec<(String, Tensor)>) -> Result<Checkpoint> {
         let mut epoch = None;
         let mut epoch64 = None;
         let mut artifact = None;
         let mut loss_scale = None;
         let mut loss_scale64 = None;
         let mut params = vec![];
+        let mut extras = vec![];
         for (name, t) in recs {
             match name.as_str() {
                 "__epoch" => epoch = Some(t.data()[0] as usize),
@@ -96,6 +125,9 @@ impl Checkpoint {
                 }
                 "__loss_scale" => loss_scale = Some(t.data()[0] as f64),
                 "__loss_scale64" => loss_scale64 = words_to_bits(&t).map(f64::from_bits),
+                // Unknown reserved records (e.g. a newer writer's state)
+                // stay out of params so weight extraction keeps working.
+                _ if name.starts_with("__") => extras.push((name, t)),
                 _ => params.push((name, t)),
             }
         }
@@ -106,7 +138,13 @@ impl Checkpoint {
             epoch: epoch64.or(epoch).context("missing __epoch record")?,
             loss_scale: loss_scale64.or(loss_scale),
             params,
+            extras,
         })
+    }
+
+    /// Look up an extras record by name.
+    pub fn extra(&self, name: &str) -> Option<&Tensor> {
+        self.extras.iter().find(|(n, _)| n == name).map(|(_, t)| t)
     }
 
     /// Extract params in the order an artifact expects, validating both
@@ -148,13 +186,15 @@ impl Checkpoint {
 /// Pack a 64-bit pattern into two f32 *bit carriers* (high word first).
 /// The [`crate::ser`] format round-trips f32 bit patterns exactly
 /// (`to_le_bytes`/`from_le_bytes`, no arithmetic), so the words survive
-/// save/load verbatim even when they happen to encode a NaN.
-fn bits_to_words(bits: u64) -> Vec<f32> {
+/// save/load verbatim even when they happen to encode a NaN. Public so
+/// the distributed checkpoint state ([`crate::dist::ckpt`]) can store its
+/// own 64-bit counters the same way.
+pub fn bits_to_words(bits: u64) -> Vec<f32> {
     vec![f32::from_bits((bits >> 32) as u32), f32::from_bits(bits as u32)]
 }
 
 /// Inverse of [`bits_to_words`]; `None` if the record isn't two words.
-fn words_to_bits(t: &Tensor) -> Option<u64> {
+pub fn words_to_bits(t: &Tensor) -> Option<u64> {
     let d = t.data();
     if d.len() != 2 {
         return None;
@@ -257,6 +297,33 @@ mod tests {
         assert_eq!(back.loss_scale, Some(4096.0));
         assert_eq!(back.params.len(), 1, "__loss_scale must not become a param");
         assert_eq!(back.params_for(&entry).unwrap(), params);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn extras_roundtrip_without_polluting_params() {
+        // Reserved (`__`-prefixed) records a loader does not interpret —
+        // the distributed runtime's optimizer/rng state — must survive a
+        // save/load cycle verbatim AND stay out of params, so the same
+        // file still restores into `mpno eval`/serving via params_for.
+        let entry = fake_entry(&[("w", vec![4])]);
+        let params = vec![Tensor::full(&[4], 0.5)];
+        let mut ck = Checkpoint::from_params(&entry, 3, &params);
+        ck.extras.push(("__x_rng".into(), Tensor::from_vec(vec![2], bits_to_words(0xDEAD_BEEF))));
+        ck.extras.push(("__x_adam_t".into(), Tensor::from_vec(vec![2], bits_to_words(42))));
+        let blob = ck.to_bytes().unwrap();
+        let back = Checkpoint::from_bytes(&blob).unwrap();
+        assert_eq!(back.params.len(), 1, "extras must not leak into params");
+        assert_eq!(back.extras.len(), 2);
+        assert_eq!(words_to_bits(back.extra("__x_rng").unwrap()), Some(0xDEAD_BEEF));
+        assert_eq!(words_to_bits(back.extra("__x_adam_t").unwrap()), Some(42));
+        assert_eq!(back.params_for(&entry).unwrap(), params);
+        // Byte form and file form are interchangeable.
+        let dir = std::env::temp_dir().join("mpno_ckpt_extras_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.mpno");
+        ck.save(&path).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), blob);
         std::fs::remove_file(&path).ok();
     }
 

@@ -8,10 +8,14 @@
 //! artifact and the final 25% on the full-precision artifact, carrying
 //! the fp32 master weights across the executable swaps — possible because
 //! every precision variant of a model shares the same parameter list.
+//!
+//! [`train_grid`] is deliberately single-process: it is the bitwise
+//! *oracle* the multi-process data-parallel runtime ([`crate::dist`])
+//! must reproduce at every world size (`tests/dist_parity.rs`).
 
 mod checkpoint;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{bits_to_words, words_to_bits, Checkpoint};
 
 use crate::amp::GradScaler;
 use crate::data::{BatchIter, GridDataset};

@@ -1,0 +1,421 @@
+//! Distributed checkpointing: full-trajectory training state on a
+//! pluggable storage backend.
+//!
+//! [`crate::coordinator::Checkpoint`] stores weights (+ a little
+//! metadata); resuming from one restarts the optimizer, so the resumed
+//! trajectory diverges from the uninterrupted one. The distributed
+//! runtime needs better: after a worker dies mid-run, the rejoined world
+//! must continue **bit-identically**, because the parity oracle is the
+//! serial run that never crashed. [`TrainState`] therefore captures
+//! everything the training loop threads through time — params, Adam
+//! moments and step count, post-decay learning rate, the dynamic loss
+//! scaler's search state, the batch-shuffle RNG and the divergence
+//! watchdog — and rides inside a standard checkpoint file as reserved
+//! `__x_*` records. The file stays loadable by `mpno eval`/serving
+//! (weights only); the distributed loader gets the whole trajectory.
+//!
+//! Storage is behind [`StorageBackend`] so the checkpoint store can move
+//! off the local filesystem (object store, etc.) without touching the
+//! training loop. [`LocalDirBackend`] is the first implementation:
+//! atomic tmp+rename puts into a shared directory.
+
+use crate::coordinator::{bits_to_words, words_to_bits, Checkpoint};
+use crate::runtime::ArtifactEntry;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+/// Version stamp inside `__x_state`; bump on layout changes.
+pub const STATE_VERSION: u64 = 1;
+/// How many newest checkpoints [`CheckpointManager::save`] retains.
+pub const KEEP: usize = 2;
+
+/// Minimal blob store the checkpoint manager runs on. Implementations
+/// must make `put` atomic: a concurrent `get` sees the old blob or the
+/// new one, never a torn write — workers read while the writer rank
+/// writes.
+pub trait StorageBackend: Send + Sync {
+    fn put(&self, name: &str, bytes: &[u8]) -> Result<()>;
+    fn get(&self, name: &str) -> Result<Option<Vec<u8>>>;
+    fn list(&self) -> Result<Vec<String>>;
+    fn delete(&self, name: &str) -> Result<()>;
+}
+
+/// [`StorageBackend`] over one local directory (shared via the
+/// filesystem between the workers of a single-host world). Atomicity
+/// comes from writing a pid-tagged temp file and `rename`ing it into
+/// place — rename is atomic on POSIX filesystems.
+pub struct LocalDirBackend {
+    dir: PathBuf,
+}
+
+impl LocalDirBackend {
+    pub fn new(dir: impl Into<PathBuf>) -> LocalDirBackend {
+        LocalDirBackend { dir: dir.into() }
+    }
+}
+
+impl StorageBackend for LocalDirBackend {
+    fn put(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("create checkpoint dir {:?}", self.dir))?;
+        let tmp = self.dir.join(format!(".tmp-{}-{name}", std::process::id()));
+        std::fs::write(&tmp, bytes).with_context(|| format!("write {tmp:?}"))?;
+        let dst = self.dir.join(name);
+        std::fs::rename(&tmp, &dst).with_context(|| format!("rename into {dst:?}"))
+    }
+
+    fn get(&self, name: &str) -> Result<Option<Vec<u8>>> {
+        match std::fs::read(self.dir.join(name)) {
+            Ok(b) => Ok(Some(b)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e).with_context(|| format!("read checkpoint {name:?}")),
+        }
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        let rd = match std::fs::read_dir(&self.dir) {
+            Ok(rd) => rd,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(vec![]),
+            Err(e) => return Err(e).with_context(|| format!("list {:?}", self.dir)),
+        };
+        let mut names = vec![];
+        for entry in rd {
+            let name = entry?.file_name().to_string_lossy().into_owned();
+            if !name.starts_with('.') {
+                names.push(name);
+            }
+        }
+        Ok(names)
+    }
+
+    fn delete(&self, name: &str) -> Result<()> {
+        match std::fs::remove_file(self.dir.join(name)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e).with_context(|| format!("delete checkpoint {name:?}")),
+        }
+    }
+}
+
+/// The complete replicated training state after finishing `epoch` —
+/// everything needed to continue the run bit-identically. Because every
+/// rank's replica is identical by construction, any worker's save is
+/// *the* state, and any (re)joining worker can resume from whichever
+/// rank wrote last.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainState {
+    /// Last completed epoch; resume starts at `epoch + 1`.
+    pub epoch: usize,
+    pub params: Vec<Tensor>,
+    pub adam_m: Vec<Vec<f32>>,
+    pub adam_v: Vec<Vec<f32>>,
+    pub adam_t: u64,
+    /// Learning rate *after* this epoch's decay (the loop decays at the
+    /// bottom, so this is the rate epoch `epoch + 1` starts with).
+    pub lr: f64,
+    /// Loss scaler `(scale, good_steps, step)` —
+    /// [`crate::amp::GradScaler::dyn_state`].
+    pub scaler: (f64, u64, u64),
+    /// Batch-shuffle RNG internals ([`crate::rng::Rng::state`]), already
+    /// advanced past this epoch's permutation draws.
+    pub rng: [u64; 4],
+    /// Divergence watchdog `(bad_streak, step)`.
+    pub watchdog: (usize, usize),
+}
+
+fn u64s_to_words(vals: &[u64]) -> Vec<f32> {
+    vals.iter().flat_map(|&v| bits_to_words(v)).collect()
+}
+
+fn words_to_u64s(t: &Tensor, n: usize) -> Option<Vec<u64>> {
+    let d = t.data();
+    if d.len() != 2 * n {
+        return None;
+    }
+    Some(
+        d.chunks(2)
+            .map(|p| ((p[0].to_bits() as u64) << 32) | p[1].to_bits() as u64)
+            .collect(),
+    )
+}
+
+fn word_pair(name: &str, bits: u64) -> (String, Tensor) {
+    (name.to_string(), Tensor::from_vec(vec![2], bits_to_words(bits)))
+}
+
+impl TrainState {
+    /// Encode into a standard checkpoint: weights as ordinary params
+    /// (still servable), trajectory state as reserved `__x_*` extras.
+    pub fn to_checkpoint(&self, entry: &ArtifactEntry) -> Checkpoint {
+        let mut ck = Checkpoint::from_params(entry, self.epoch, &self.params)
+            .with_loss_scale(self.scaler.0);
+        ck.extras.push(word_pair("__x_state", STATE_VERSION));
+        ck.extras.push(word_pair("__x_lr", self.lr.to_bits()));
+        ck.extras.push(word_pair("__x_adam_t", self.adam_t));
+        ck.extras.push(word_pair("__x_scaler_scale", self.scaler.0.to_bits()));
+        ck.extras.push(word_pair("__x_scaler_good", self.scaler.1));
+        ck.extras.push(word_pair("__x_scaler_step", self.scaler.2));
+        ck.extras.push((
+            "__x_rng".to_string(),
+            Tensor::from_vec(vec![8], u64s_to_words(&self.rng)),
+        ));
+        ck.extras.push((
+            "__x_wd".to_string(),
+            Tensor::from_vec(
+                vec![4],
+                u64s_to_words(&[self.watchdog.0 as u64, self.watchdog.1 as u64]),
+            ),
+        ));
+        for (i, m) in self.adam_m.iter().enumerate() {
+            ck.extras
+                .push((format!("__x_adam_m{i}"), Tensor::from_vec(vec![m.len()], m.clone())));
+        }
+        for (i, v) in self.adam_v.iter().enumerate() {
+            ck.extras
+                .push((format!("__x_adam_v{i}"), Tensor::from_vec(vec![v.len()], v.clone())));
+        }
+        ck
+    }
+
+    /// Decode from a checkpoint carrying `__x_*` state. Errors on a
+    /// weights-only (legacy) checkpoint — those restore params fine via
+    /// [`Checkpoint::params_for`] but cannot continue a distributed
+    /// trajectory bit-exactly.
+    pub fn from_checkpoint(ck: &Checkpoint, entry: &ArtifactEntry) -> Result<TrainState> {
+        let ver = ck
+            .extra("__x_state")
+            .and_then(words_to_bits)
+            .context("checkpoint has no distributed trainer state (__x_state)")?;
+        if ver != STATE_VERSION {
+            bail!("unsupported trainer state version {ver}");
+        }
+        let bits = |name: &str| -> Result<u64> {
+            ck.extra(name)
+                .and_then(words_to_bits)
+                .with_context(|| format!("checkpoint missing {name}"))
+        };
+        let params = ck.params_for(entry)?;
+        let mut adam_m = vec![];
+        let mut adam_v = vec![];
+        for i in 0..params.len() {
+            let m = ck
+                .extra(&format!("__x_adam_m{i}"))
+                .with_context(|| format!("checkpoint missing __x_adam_m{i}"))?;
+            let v = ck
+                .extra(&format!("__x_adam_v{i}"))
+                .with_context(|| format!("checkpoint missing __x_adam_v{i}"))?;
+            adam_m.push(m.data().to_vec());
+            adam_v.push(v.data().to_vec());
+        }
+        let rng_t = ck.extra("__x_rng").context("checkpoint missing __x_rng")?;
+        let rng_v = words_to_u64s(rng_t, 4).context("__x_rng has wrong length")?;
+        let wd_t = ck.extra("__x_wd").context("checkpoint missing __x_wd")?;
+        let wd_v = words_to_u64s(wd_t, 2).context("__x_wd has wrong length")?;
+        Ok(TrainState {
+            epoch: ck.epoch,
+            params,
+            adam_m,
+            adam_v,
+            adam_t: bits("__x_adam_t")?,
+            lr: f64::from_bits(bits("__x_lr")?),
+            scaler: (
+                f64::from_bits(bits("__x_scaler_scale")?),
+                bits("__x_scaler_good")?,
+                bits("__x_scaler_step")?,
+            ),
+            rng: [rng_v[0], rng_v[1], rng_v[2], rng_v[3]],
+            watchdog: (wd_v[0] as usize, wd_v[1] as usize),
+        })
+    }
+}
+
+/// Epoch-named checkpoints on a [`StorageBackend`], with retention.
+/// Names are `ep{epoch:08}.mpno`, so lexicographic order is epoch order.
+pub struct CheckpointManager {
+    backend: Box<dyn StorageBackend>,
+}
+
+impl CheckpointManager {
+    pub fn new(backend: Box<dyn StorageBackend>) -> CheckpointManager {
+        CheckpointManager { backend }
+    }
+
+    /// Manager over a local shared directory.
+    pub fn local(dir: impl Into<PathBuf>) -> CheckpointManager {
+        CheckpointManager::new(Box::new(LocalDirBackend::new(dir)))
+    }
+
+    fn name_for(epoch: usize) -> String {
+        format!("ep{epoch:08}.mpno")
+    }
+
+    fn epoch_of(name: &str) -> Option<usize> {
+        name.strip_prefix("ep")?.strip_suffix(".mpno")?.parse().ok()
+    }
+
+    /// Persist the state after `state.epoch`, then prune everything but
+    /// the newest [`KEEP`] checkpoints. Pruning failures are ignored —
+    /// another worker may have pruned the same file first.
+    pub fn save(&self, state: &TrainState, entry: &ArtifactEntry) -> Result<()> {
+        let blob = state.to_checkpoint(entry).to_bytes()?;
+        self.backend.put(&Self::name_for(state.epoch), &blob)?;
+        let mut epochs: Vec<usize> =
+            self.backend.list()?.iter().filter_map(|n| Self::epoch_of(n)).collect();
+        epochs.sort_unstable();
+        for &old in epochs.iter().rev().skip(KEEP) {
+            self.backend.delete(&Self::name_for(old)).ok();
+        }
+        Ok(())
+    }
+
+    /// Newest stored checkpoint, undecoded. `Ok(None)` when the store is
+    /// empty (fresh start).
+    pub fn latest_raw(&self) -> Result<Option<Checkpoint>> {
+        let newest = self
+            .backend
+            .list()?
+            .iter()
+            .filter_map(|n| Self::epoch_of(n))
+            .max();
+        let Some(epoch) = newest else { return Ok(None) };
+        let blob = self
+            .backend
+            .get(&Self::name_for(epoch))?
+            .with_context(|| format!("checkpoint for epoch {epoch} vanished"))?;
+        Ok(Some(Checkpoint::from_bytes(&blob)?))
+    }
+
+    /// Newest full trainer state, decoded against `entry`. `Ok(None)`
+    /// when the store is empty; an error if the newest checkpoint exists
+    /// but is weights-only (a legacy file cannot seed a bit-exact
+    /// distributed resume).
+    pub fn latest(&self, entry: &ArtifactEntry) -> Result<Option<TrainState>> {
+        match self.latest_raw()? {
+            None => Ok(None),
+            Some(ck) => Ok(Some(TrainState::from_checkpoint(&ck, entry)?)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ParamSpec;
+
+    fn fake_entry() -> ArtifactEntry {
+        ArtifactEntry {
+            name: "fake_f32_grads".into(),
+            file: "x".into(),
+            model: "fno".into(),
+            dataset: "darcy".into(),
+            graph: "grads".into(),
+            precision: crate::fp::Precision::F32,
+            stabilizer: "tanh".into(),
+            loss: "h1".into(),
+            batch: 2,
+            params: vec![
+                ParamSpec { name: "w".into(), shape: vec![2, 3], std: 0.1 },
+                ParamSpec { name: "b".into(), shape: vec![3], std: 0.1 },
+            ],
+            extra_inputs: vec![],
+            config: Default::default(),
+        }
+    }
+
+    fn fake_state(epoch: usize) -> TrainState {
+        TrainState {
+            epoch,
+            params: vec![
+                Tensor::from_fn(&[2, 3], |i| 0.5 + (i[0] * 3 + i[1]) as f32),
+                Tensor::from_fn(&[3], |i| -(i[0] as f32) * 0.25),
+            ],
+            adam_m: vec![vec![0.1; 6], vec![-0.2; 3]],
+            adam_v: vec![vec![0.01; 6], vec![0.02; 3]],
+            adam_t: 17,
+            lr: 8.1e-4, // not f32-representable: exercises the bit carrier
+            scaler: (1234.5678, 3, 21),
+            rng: [u64::MAX, 1, 0x0123_4567_89AB_CDEF, 42],
+            watchdog: (2, 19),
+        }
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("mpno_dist_ckpt_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn local_dir_roundtrip_is_bit_exact() {
+        let dir = temp_dir("rt");
+        let entry = fake_entry();
+        let mgr = CheckpointManager::local(&dir);
+        assert!(mgr.latest(&entry).unwrap().is_none(), "empty store reads as None");
+        let st = fake_state(5);
+        mgr.save(&st, &entry).unwrap();
+        let back = mgr.latest(&entry).unwrap().unwrap();
+        assert_eq!(back, st);
+        // f64 fields survive with exact bits, not a decimal round-trip.
+        assert_eq!(back.lr.to_bits(), st.lr.to_bits());
+        assert_eq!(back.scaler.0.to_bits(), st.scaler.0.to_bits());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_from_any_worker_sees_the_same_state() {
+        // Rank A writes; rank B (a different manager over the same dir,
+        // as a rejoining process would build) must decode the identical
+        // state — that is all "resume from any worker" requires, since
+        // replicas are bit-identical.
+        let dir = temp_dir("anyworker");
+        let entry = fake_entry();
+        let writer = CheckpointManager::local(&dir);
+        let reader = CheckpointManager::local(&dir);
+        let st = fake_state(3);
+        writer.save(&st, &entry).unwrap();
+        assert_eq!(reader.latest(&entry).unwrap().unwrap(), st);
+        // A later epoch from the *other* manager wins the latest() race.
+        let st4 = TrainState { epoch: 4, adam_t: 18, ..st };
+        reader.save(&st4, &entry).unwrap();
+        assert_eq!(writer.latest(&entry).unwrap().unwrap(), st4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retention_keeps_newest_two() {
+        let dir = temp_dir("keep");
+        let entry = fake_entry();
+        let mgr = CheckpointManager::local(&dir);
+        for e in 0..5 {
+            mgr.save(&fake_state(e), &entry).unwrap();
+        }
+        let mut names = LocalDirBackend::new(&dir).list().unwrap();
+        names.sort();
+        assert_eq!(names, vec!["ep00000003.mpno", "ep00000004.mpno"]);
+        assert_eq!(mgr.latest(&entry).unwrap().unwrap().epoch, 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_weights_only_checkpoint_loads_params_but_not_state() {
+        // A pre-distributed checkpoint (no __x_* records) written into
+        // the store: weights extraction must keep working through the
+        // manager; full-state decode must fail loudly, not silently
+        // fabricate optimizer state.
+        let dir = temp_dir("legacy");
+        let entry = fake_entry();
+        let params =
+            vec![Tensor::from_fn(&[2, 3], |i| i[1] as f32), Tensor::from_fn(&[3], |_| 1.5)];
+        let legacy = Checkpoint::from_params(&entry, 2, &params);
+        LocalDirBackend::new(&dir)
+            .put("ep00000002.mpno", &legacy.to_bytes().unwrap())
+            .unwrap();
+        let mgr = CheckpointManager::local(&dir);
+        let raw = mgr.latest_raw().unwrap().unwrap();
+        assert_eq!(raw.epoch, 2);
+        assert_eq!(raw.params_for(&entry).unwrap(), params);
+        assert!(mgr.latest(&entry).is_err(), "legacy file must not decode as TrainState");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

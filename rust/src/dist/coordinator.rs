@@ -1,0 +1,448 @@
+//! The distributed coordinator: membership, heartbeats, and the ordered
+//! all-reduce hub.
+//!
+//! The coordinator never touches a model. It owns three things:
+//!
+//! - **Membership**: ranks `0..world` assigned on `Join`, reclaimed on
+//!   eviction. A member silent for `10x` the heartbeat period is
+//!   presumed dead.
+//! - **The round**: once the world is full, a `Begin` stamped with a
+//!   fresh *generation* starts (or resumes) training. Any eviction
+//!   broadcasts `Rollback`, invalidating the generation; in-flight
+//!   frames from the dead round are discarded by their stale stamp, and
+//!   a new `Begin` goes out when a replacement fills the world again.
+//! - **The step reduce**: each rank contributes the f64 chunks for the
+//!   batch positions it owns ([`super::wire::StepShare`]); once every
+//!   rank has reported, the chunks are summed **in global batch-position
+//!   order from zero accumulators** — the exact addition sequence the
+//!   single-process `train_batch` performs — and the reduced chunk is
+//!   broadcast back. This ordering discipline is the entire reason a
+//!   world-size-W run is bit-identical to the serial oracle.
+//!
+//! At the end of a run every rank reports a params digest; the
+//! coordinator verifies they are all equal (replica divergence is a bug,
+//! not a tolerance) and returns rank 0's final checkpoint image.
+
+use super::wire::{self, Msg, StepShare};
+use super::DistConfig;
+use crate::coordinator::{Checkpoint, EpochStats};
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Observability hooks for tests and progress display. Best-effort: a
+/// dropped receiver never blocks the run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CoordEvent {
+    WorkerJoined { rank: usize },
+    RoundBegin { generation: u64 },
+    EpochDone { epoch: usize },
+    Evicted { rank: usize },
+}
+
+/// What a completed distributed run produced.
+#[derive(Debug)]
+pub struct DistReport {
+    /// Rank 0's per-epoch stats in epoch order. After a mid-run
+    /// rollback, re-trained epochs overwrite their first attempt, so
+    /// this reads like the uninterrupted run's history.
+    pub epochs: Vec<EpochStats>,
+    /// The params fingerprint every rank agreed on.
+    pub digest: u64,
+    pub diverged: bool,
+    /// Rank 0's final checkpoint image — exactly the bytes
+    /// [`Checkpoint::save`] would write, servable by `mpno eval`.
+    pub blob: Vec<u8>,
+}
+
+impl DistReport {
+    pub fn checkpoint(&self) -> Result<Checkpoint> {
+        Checkpoint::from_bytes(&self.blob)
+    }
+}
+
+enum Ev {
+    /// New TCP connection (writer half).
+    Conn(u64, Arc<Mutex<TcpStream>>),
+    Msg(u64, Msg),
+    /// Reader thread saw EOF/error.
+    Gone(u64),
+}
+
+struct Member {
+    rank: usize,
+    writer: Arc<Mutex<TcpStream>>,
+    last_seen: Instant,
+}
+
+/// Run the coordinator until the world completes training (or fails).
+/// The listener is taken by value so callers bind (possibly to an
+/// ephemeral port) and learn the address before the loop starts.
+pub fn run_coordinator(
+    listener: TcpListener,
+    cfg: &DistConfig,
+    world: usize,
+    events: Option<Sender<CoordEvent>>,
+) -> Result<DistReport> {
+    if world == 0 {
+        bail!("world size must be at least 1");
+    }
+    cfg.validate()?;
+    let (tx, rx) = channel::<Ev>();
+    spawn_acceptor(listener, tx);
+    let emit = |e: CoordEvent| {
+        if let Some(s) = &events {
+            s.send(e).ok();
+        }
+    };
+
+    let mut pending: HashMap<u64, Arc<Mutex<TcpStream>>> = HashMap::new();
+    let mut members: HashMap<u64, Member> = HashMap::new();
+    let mut free: BTreeSet<usize> = (0..world).collect();
+    let mut generation: u64 = 0;
+    let mut started = false;
+    // (epoch, step) -> rank -> share, for the current generation only.
+    let mut gather: HashMap<(u64, u64), HashMap<usize, StepShare>> = HashMap::new();
+    let mut stats: BTreeMap<usize, EpochStats> = BTreeMap::new();
+    let mut finals: BTreeMap<usize, (u64, bool, Option<Vec<u8>>)> = BTreeMap::new();
+    let timeout = Duration::from_millis(10 * cfg.heartbeat_ms);
+
+    loop {
+        let ev = match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(ev) => Some(ev),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => bail!("coordinator event channel died"),
+        };
+        match ev {
+            Some(Ev::Conn(id, writer)) => {
+                pending.insert(id, writer);
+            }
+            Some(Ev::Gone(id)) => {
+                pending.remove(&id);
+                if members.contains_key(&id) {
+                    evict(
+                        id,
+                        &mut members,
+                        &mut free,
+                        &mut started,
+                        generation,
+                        &mut gather,
+                        &mut finals,
+                        &emit,
+                    );
+                }
+            }
+            Some(Ev::Msg(id, msg)) => {
+                if let Some(m) = members.get_mut(&id) {
+                    m.last_seen = Instant::now();
+                }
+                match msg {
+                    Msg::Join { proto } => {
+                        let Some(writer) = pending.remove(&id) else { continue };
+                        if proto != wire::PROTO_VERSION {
+                            let m = format!(
+                                "protocol mismatch: worker {proto}, coordinator {}",
+                                wire::PROTO_VERSION
+                            );
+                            wire::send_msg(&writer, &Msg::Fatal { msg: m }).ok();
+                            continue;
+                        }
+                        let Some(&rank) = free.iter().next() else {
+                            let m = format!("world of {world} is already full");
+                            wire::send_msg(&writer, &Msg::Fatal { msg: m }).ok();
+                            continue;
+                        };
+                        free.remove(&rank);
+                        let welcome = Msg::Welcome {
+                            rank: rank as u32,
+                            world: world as u32,
+                            config: cfg.clone(),
+                        };
+                        if wire::send_msg(&writer, &welcome).is_err() {
+                            // Died between connect and welcome: rank back
+                            // into the pool, never a member.
+                            free.insert(rank);
+                            continue;
+                        }
+                        members.insert(id, Member { rank, writer, last_seen: Instant::now() });
+                        emit(CoordEvent::WorkerJoined { rank });
+                        if members.len() == world {
+                            generation += 1;
+                            gather.clear();
+                            finals.clear();
+                            started = true;
+                            broadcast(&members, &Msg::Begin { generation });
+                            emit(CoordEvent::RoundBegin { generation });
+                        }
+                    }
+                    Msg::Heartbeat => {}
+                    Msg::Share(s) => {
+                        if !started || s.generation != generation {
+                            continue; // stale round debris
+                        }
+                        let Some(rank) = members.get(&id).map(|m| m.rank) else { continue };
+                        let key = (s.epoch, s.step);
+                        let slot = gather.entry(key).or_default();
+                        slot.insert(rank, s);
+                        if slot.len() == world {
+                            let shares = gather.remove(&key).unwrap();
+                            let chunk = reduce_step(&shares, cfg.batch)?;
+                            broadcast(
+                                &members,
+                                &Msg::StepSum {
+                                    generation,
+                                    epoch: key.0,
+                                    step: key.1,
+                                    chunk,
+                                },
+                            );
+                        }
+                    }
+                    Msg::EpochReport { generation: g, stats: st } => {
+                        if started && g == generation {
+                            let epoch = st.epoch;
+                            stats.insert(epoch, st);
+                            emit(CoordEvent::EpochDone { epoch });
+                        }
+                    }
+                    Msg::Final { generation: g, digest, diverged, blob } => {
+                        if !started || g != generation {
+                            continue;
+                        }
+                        let Some(rank) = members.get(&id).map(|m| m.rank) else { continue };
+                        finals.insert(rank, (digest, diverged, blob));
+                        if finals.len() == world {
+                            let (digest0, diverged0) = {
+                                let f = finals.get(&0).context("rank 0 sent no Final")?;
+                                (f.0, f.1)
+                            };
+                            for (rank, (d, _, _)) in &finals {
+                                if *d != digest0 {
+                                    bail!(
+                                        "replica divergence: rank {rank} digest {d:#x} \
+                                         != rank 0 digest {digest0:#x}"
+                                    );
+                                }
+                            }
+                            let blob = finals
+                                .remove(&0)
+                                .and_then(|(_, _, b)| b)
+                                .context("rank 0 sent no final checkpoint blob")?;
+                            broadcast(&members, &Msg::Done);
+                            return Ok(DistReport {
+                                epochs: stats.into_values().collect(),
+                                digest: digest0,
+                                diverged: diverged0,
+                                blob,
+                            });
+                        }
+                    }
+                    Msg::Fatal { msg } => {
+                        let rank = members.get(&id).map(|m| m.rank);
+                        bail!("worker {rank:?} failed: {msg}");
+                    }
+                    m => bail!("unexpected {m:?} from a worker"),
+                }
+            }
+            None => {}
+        }
+        // Heartbeat sweep (also runs after each event, which is what
+        // catches a silent-but-connected worker).
+        let dead: Vec<u64> = members
+            .iter()
+            .filter(|(_, m)| m.last_seen.elapsed() > timeout)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in dead {
+            evict(
+                id,
+                &mut members,
+                &mut free,
+                &mut started,
+                generation,
+                &mut gather,
+                &mut finals,
+                &emit,
+            );
+        }
+    }
+}
+
+/// Remove a member, reclaim its rank, and roll the round back. The
+/// surviving workers reload the latest checkpoint and wait; training
+/// resumes when a replacement joins and the world refills.
+#[allow(clippy::too_many_arguments)]
+fn evict(
+    id: u64,
+    members: &mut HashMap<u64, Member>,
+    free: &mut BTreeSet<usize>,
+    started: &mut bool,
+    generation: u64,
+    gather: &mut HashMap<(u64, u64), HashMap<usize, StepShare>>,
+    finals: &mut BTreeMap<usize, (u64, bool, Option<Vec<u8>>)>,
+    emit: &impl Fn(CoordEvent),
+) {
+    let Some(m) = members.remove(&id) else { return };
+    free.insert(m.rank);
+    emit(CoordEvent::Evicted { rank: m.rank });
+    if *started {
+        *started = false;
+        gather.clear();
+        finals.clear();
+        broadcast(members, &Msg::Rollback { generation });
+    }
+}
+
+/// Best-effort send to every member; a failed send will surface as that
+/// member's reader thread reporting `Gone`.
+fn broadcast(members: &HashMap<u64, Member>, msg: &Msg) {
+    for m in members.values() {
+        wire::send_msg(&m.writer, msg).ok();
+    }
+}
+
+fn spawn_acceptor(listener: TcpListener, tx: Sender<Ev>) {
+    std::thread::spawn(move || {
+        let mut next_id: u64 = 0;
+        for conn in listener.incoming() {
+            let Ok(stream) = conn else { continue };
+            stream.set_nodelay(true).ok();
+            let id = next_id;
+            next_id += 1;
+            let Ok(mut rd) = stream.try_clone() else { continue };
+            let writer = Arc::new(Mutex::new(stream));
+            if tx.send(Ev::Conn(id, writer)).is_err() {
+                return; // coordinator loop ended
+            }
+            let tx2 = tx.clone();
+            std::thread::spawn(move || {
+                loop {
+                    match wire::read_msg(&mut rd) {
+                        Ok(msg) => {
+                            if tx2.send(Ev::Msg(id, msg)).is_err() {
+                                return;
+                            }
+                        }
+                        Err(_) => {
+                            tx2.send(Ev::Gone(id)).ok();
+                            return;
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Sum every rank's per-sample chunks in global batch-position order —
+/// position 0 first, starting from zero accumulators, exactly the
+/// reduction `train_batch` performs over its own samples. Validates that
+/// the shares partition `0..batch` with a consistent stride.
+fn reduce_step(shares: &HashMap<usize, StepShare>, batch: usize) -> Result<Vec<f64>> {
+    let mut owner: Vec<Option<(usize, usize)>> = vec![None; batch];
+    let mut stride: Option<usize> = None;
+    for (&rank, s) in shares {
+        if s.positions.is_empty() {
+            if !s.chunks.is_empty() {
+                bail!("rank {rank} sent chunks with no positions");
+            }
+            continue;
+        }
+        if s.chunks.len() % s.positions.len() != 0 {
+            bail!(
+                "rank {rank}: {} chunk values do not divide into {} samples",
+                s.chunks.len(),
+                s.positions.len()
+            );
+        }
+        let st = s.chunks.len() / s.positions.len();
+        match stride {
+            None => stride = Some(st),
+            Some(x) if x == st => {}
+            Some(x) => bail!("rank {rank}: stride {st} != {x}"),
+        }
+        for (slot, &p) in s.positions.iter().enumerate() {
+            let p = p as usize;
+            if p >= batch {
+                bail!("rank {rank}: batch position {p} out of range 0..{batch}");
+            }
+            if owner[p].is_some() {
+                bail!("batch position {p} claimed by two ranks");
+            }
+            owner[p] = Some((rank, slot));
+        }
+    }
+    let stride = stride.context("no rank contributed any samples")?;
+    let mut sum = vec![0.0f64; stride];
+    for (p, o) in owner.iter().enumerate() {
+        let (rank, slot) = (*o).with_context(|| format!("batch position {p} unclaimed"))?;
+        let chunk = &shares[&rank].chunks[slot * stride..(slot + 1) * stride];
+        for (a, c) in sum.iter_mut().zip(chunk) {
+            *a += *c;
+        }
+    }
+    Ok(sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn share(rank_positions: &[(u64, &[u32], &[f64])]) -> HashMap<usize, StepShare> {
+        rank_positions
+            .iter()
+            .enumerate()
+            .map(|(rank, (gen, pos, chunks))| {
+                (
+                    rank,
+                    StepShare {
+                        generation: *gen,
+                        epoch: 0,
+                        step: 0,
+                        positions: pos.to_vec(),
+                        chunks: chunks.to_vec(),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn reduce_sums_in_position_order() {
+        // Two ranks, batch 4, stride 2. Rank 0 owns positions 0,2; rank 1
+        // owns 1,3. Values chosen so order matters in f64: summing tiny
+        // and huge magnitudes in different orders gives different bits.
+        let big = 1e16;
+        let s = share(&[
+            (1, &[0, 2][..], &[big, 1.0, 3.0, 1.0][..]),
+            (1, &[1, 3][..], &[1.0, 1.0, -big, 1.0][..]),
+        ]);
+        let sum = reduce_step(&s, 4).unwrap();
+        // Position order: big + 1.0 + 3.0 + (-big)  (NOT big + 3.0 + 1.0 - big)
+        let expect0 = ((big + 1.0) + 3.0) + -big;
+        assert_eq!(sum[0].to_bits(), expect0.to_bits());
+        assert_eq!(sum[1], 4.0);
+    }
+
+    #[test]
+    fn reduce_accepts_empty_shares_and_rejects_bad_partitions() {
+        // An empty share (a rank with no samples this step) is fine.
+        let s = share(&[(1, &[0, 1][..], &[1.0, 2.0][..]), (1, &[][..], &[][..])]);
+        assert_eq!(reduce_step(&s, 2).unwrap(), vec![3.0]);
+        // Unclaimed position.
+        let s = share(&[(1, &[0][..], &[1.0][..])]);
+        assert!(reduce_step(&s, 2).is_err());
+        // Double-claimed position.
+        let s = share(&[(1, &[0][..], &[1.0][..]), (1, &[0][..], &[2.0][..])]);
+        assert!(reduce_step(&s, 1).is_err());
+        // Out-of-range position.
+        let s = share(&[(1, &[5][..], &[1.0][..])]);
+        assert!(reduce_step(&s, 2).is_err());
+        // Mismatched strides.
+        let s = share(&[(1, &[0][..], &[1.0, 2.0][..]), (1, &[1][..], &[1.0][..])]);
+        assert!(reduce_step(&s, 2).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! Multi-process data-parallel training: a coordinator process
+//! (membership, heartbeats, barrier/epoch state) plus N worker processes
+//! that each own a deterministic shard of the dataset and run
+//! [`crate::model::Fno2d`] forward/backward through
+//! [`crate::runtime::NativeEngine`].
+//!
+//! The house invariant extends across processes: a world-size-W run is
+//! **bit-identical** to the single-process [`crate::coordinator::train_grid`]
+//! oracle. Three ingredients make that possible:
+//!
+//! 1. **Deterministic sharding.** Every dataset sample draws from a PRNG
+//!    stream keyed by its *global* index
+//!    ([`crate::data::generate_rows`]), so worker `r` of world `W` can
+//!    materialize exactly the rows `i` with `i % W == r` — bitwise the
+//!    rows a single process would have generated — without ever seeing
+//!    the full set. Batch order itself comes from a replicated
+//!    [`crate::rng::Rng`] every worker advances identically.
+//! 2. **Ordered f64 all-reduce.** Workers ship *per-sample* f64
+//!    loss/gradient chunks ([`crate::model::Fno2d::grad_chunks`]), never
+//!    pre-reduced partial sums; the coordinator reduces them in global
+//!    batch position order starting from zero accumulators — the exact
+//!    addition sequence `train_batch` performs internally, so f64
+//!    non-associativity never shows. The reduced chunk is broadcast and
+//!    every worker applies an identical optimizer update to its replica.
+//! 3. **Full-state checkpoints.** [`ckpt::TrainState`] captures params,
+//!    Adam moments, loss-scaler search state, the batch RNG and the
+//!    divergence watchdog, so a worker killed mid-run rejoins from the
+//!    last complete checkpoint onto a bit-exact continuation of the
+//!    uninterrupted trajectory (unlike `train_grid`'s legacy
+//!    params-only resume, which restarts optimizer state).
+//!
+//! Wire protocol: length-framed binary messages over
+//! `std::net::TcpStream` ([`wire`]), in the spirit of
+//! [`crate::serve::api`] but for training traffic — f64 payloads travel
+//! as raw bit patterns, byte-lossless. See `docs/WIRE.md`.
+//!
+//! Entry points: `mpno train --native --coordinator ADDR --workers N`
+//! (spawns the whole world from one binary) and the hidden
+//! `mpno dist-worker --connect ADDR` worker process;
+//! [`coordinator::run_coordinator`] / [`worker::run_worker`] are the
+//! library surface the CLI and `tests/dist_parity.rs` drive.
+
+pub mod ckpt;
+pub mod coordinator;
+pub mod wire;
+pub mod worker;
+
+use crate::data::DatasetKind;
+use crate::model::FnoSpec;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Everything a worker needs to reconstruct the training run: dataset
+/// generation spec, model architecture, optimizer/schedule settings and
+/// runtime knobs. Shipped verbatim inside `Welcome`, so the coordinator
+/// is the single source of configuration and workers cannot drift.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DistConfig {
+    /// Dataset token (`darcy`, `ns`, `swe`).
+    pub dataset: String,
+    pub resolution: usize,
+    pub n_samples: usize,
+    pub n_test: usize,
+    /// Seed for dataset generation (per-sample streams key off this).
+    pub data_seed: u64,
+    pub batch: usize,
+    pub width: usize,
+    pub modes: usize,
+    pub layers: usize,
+    pub epochs: usize,
+    pub lr: f64,
+    pub lr_decay: f64,
+    /// Training seed (weight init and batch shuffling).
+    pub seed: u64,
+    pub loss_scaling: bool,
+    pub init_loss_scale: f64,
+    pub grad_clip: f64,
+    /// Precision schedule phases as (start_fraction, artifact name).
+    pub phases: Vec<(f64, String)>,
+    /// Shared checkpoint directory (all workers read, the rotating
+    /// writer rank writes). `None` disables checkpointing — and with it
+    /// kill/rejoin recovery beyond a from-scratch restart.
+    pub ckpt_dir: Option<String>,
+    /// Worker heartbeat period; the coordinator evicts a member silent
+    /// for `10x` this long.
+    pub heartbeat_ms: u64,
+}
+
+impl DistConfig {
+    pub fn kind(&self) -> Result<DatasetKind> {
+        DatasetKind::from_token(&self.dataset)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset token {:?}", self.dataset))
+    }
+
+    /// The model architecture this config trains — the same recipe
+    /// `mpno train --native` uses (SWE grids are `res x 2res`).
+    pub fn fno_spec(&self) -> Result<FnoSpec> {
+        let kind = self.kind()?;
+        let w = match kind {
+            DatasetKind::SphericalSwe => 2 * self.resolution,
+            _ => self.resolution,
+        };
+        Ok(FnoSpec {
+            in_channels: kind.in_channels(),
+            out_channels: kind.out_channels(),
+            width: self.width,
+            k_max: self.modes,
+            n_layers: self.layers,
+            h: self.resolution,
+            w,
+        })
+    }
+
+    /// Dataset generation spec (the full set; workers slice their shard
+    /// out of it with [`crate::data::generate_rows`]).
+    pub fn gen_spec(&self) -> Result<crate::data::GenSpec> {
+        Ok(crate::data::GenSpec {
+            kind: self.kind()?,
+            n_samples: self.n_samples,
+            resolution: self.resolution,
+            seed: self.data_seed,
+        })
+    }
+
+    /// The serial-oracle training config: running
+    /// [`crate::coordinator::train_grid`] with this on the full dataset
+    /// is the bitwise reference every world size must reproduce.
+    pub fn train_config(&self) -> crate::coordinator::TrainConfig {
+        let mut cfg = crate::coordinator::TrainConfig::new(&self.phases[0].1);
+        cfg.schedule = crate::coordinator::PrecisionSchedule::new(self.phases.clone());
+        cfg.epochs = self.epochs;
+        cfg.lr = self.lr;
+        cfg.lr_decay = self.lr_decay;
+        cfg.seed = self.seed;
+        cfg.loss_scaling = self.loss_scaling;
+        cfg.init_loss_scale = self.init_loss_scale;
+        cfg.grad_clip = self.grad_clip;
+        cfg.accumulate = 1;
+        cfg
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.phases.is_empty() {
+            bail!("distributed config needs at least one schedule phase");
+        }
+        if self.n_test == 0 || self.n_test >= self.n_samples {
+            bail!("need 0 < n_test < n_samples, got {}/{}", self.n_test, self.n_samples);
+        }
+        if self.batch == 0 || self.batch > self.n_samples - self.n_test {
+            bail!("batch {} does not fit the train split", self.batch);
+        }
+        if self.heartbeat_ms == 0 {
+            bail!("heartbeat_ms must be positive");
+        }
+        self.kind()?;
+        Ok(())
+    }
+}
+
+/// FNV-1a 64 over the f32 little-endian bytes of every param tensor in
+/// order — the cross-rank parity fingerprint every worker reports in its
+/// `Final` frame. Replicas that diverged by even one ULP anywhere
+/// disagree here, and the coordinator fails the run loudly instead of
+/// returning silently wrong weights.
+pub fn params_digest(params: &[Tensor]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for t in params {
+        for &v in t.data() {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_config() -> DistConfig {
+        DistConfig {
+            dataset: "darcy".into(),
+            resolution: 8,
+            n_samples: 10,
+            n_test: 2,
+            data_seed: 7,
+            batch: 2,
+            width: 4,
+            modes: 2,
+            layers: 1,
+            epochs: 2,
+            lr: 2e-3,
+            lr_decay: 0.9,
+            seed: 1,
+            loss_scaling: false,
+            init_loss_scale: 65536.0,
+            grad_clip: 0.0,
+            phases: vec![(0.0, "fno_darcy_r8_native-f32_grads".into())],
+            ckpt_dir: None,
+            heartbeat_ms: 50,
+        }
+    }
+
+    #[test]
+    fn config_validates_and_builds_specs() {
+        let cfg = tiny_config();
+        cfg.validate().unwrap();
+        let spec = cfg.fno_spec().unwrap();
+        assert_eq!((spec.h, spec.w), (8, 8));
+        assert_eq!(spec.in_channels, 1);
+        let tc = cfg.train_config();
+        assert_eq!(tc.accumulate, 1);
+        assert_eq!(tc.epochs, 2);
+        let mut bad = cfg.clone();
+        bad.n_test = 10;
+        assert!(bad.validate().is_err());
+        let mut bad2 = cfg;
+        bad2.dataset = "nope".into();
+        assert!(bad2.validate().is_err());
+    }
+
+    #[test]
+    fn digest_is_order_and_bit_sensitive() {
+        let a = Tensor::from_vec(vec![2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(vec![2], vec![2.0, 1.0]);
+        assert_ne!(params_digest(&[a.clone()]), params_digest(&[b.clone()]));
+        assert_eq!(params_digest(&[a.clone()]), params_digest(&[a.clone()]));
+        // -0.0 and 0.0 compare equal but differ in bits: the digest sees it.
+        let z = Tensor::from_vec(vec![1], vec![0.0]);
+        let nz = Tensor::from_vec(vec![1], vec![-0.0]);
+        assert_ne!(params_digest(&[z]), params_digest(&[nz]));
+        assert_ne!(params_digest(&[a.clone(), b.clone()]), params_digest(&[b, a]));
+    }
+}

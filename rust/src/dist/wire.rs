@@ -1,0 +1,563 @@
+//! Length-framed binary wire protocol for distributed training — the
+//! training-plane sibling of [`crate::serve::api`] (which speaks JSON
+//! over HTTP for the serving plane; both are documented in
+//! `docs/WIRE.md`).
+//!
+//! Every message is one frame: a 4-byte magic (`MPDT`), a 1-byte message
+//! kind, a little-endian u32 payload length, then the payload. All
+//! integers are little-endian; f64 values travel as their raw
+//! `to_bits()` pattern, so gradient chunks cross the wire byte-lossless
+//! — a requirement, since the whole runtime's promise is bit-identity
+//! with the single-process oracle.
+//!
+//! Messages carry the coordinator's **membership generation** where
+//! staleness matters: after an eviction/rollback the generation bumps,
+//! and both sides silently discard frames stamped with an old one, so a
+//! slow worker's in-flight share from before the rollback can never
+//! corrupt the new round's reduction.
+
+use super::DistConfig;
+use crate::coordinator::EpochStats;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+
+/// Frame magic for the distributed-training protocol.
+pub const MAGIC: &[u8; 4] = b"MPDT";
+/// Protocol version a `Join` announces; the coordinator rejects others.
+pub const PROTO_VERSION: u32 = 1;
+/// Hard cap on a frame payload (64 MiB) — corrupt length guard.
+pub const MAX_FRAME: usize = 1 << 26;
+
+/// One worker's contribution to a training step: the global batch
+/// positions it owns and, concatenated in that order, one
+/// `1 + n_params` f64 chunk per position (see
+/// [`crate::model::Fno2d::grad_chunks`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepShare {
+    pub generation: u64,
+    pub epoch: u64,
+    pub step: u64,
+    pub positions: Vec<u32>,
+    pub chunks: Vec<f64>,
+}
+
+/// Every message either side can send. Direction is fixed per variant
+/// (workers send `Join`/`Heartbeat`/`StepShare`/`EpochReport`/`Final`;
+/// the coordinator sends the rest); `Fatal` flows both ways.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Worker -> coordinator on connect.
+    Join { proto: u32 },
+    /// Coordinator -> worker: rank assignment + full run config.
+    Welcome { rank: u32, world: u32, config: DistConfig },
+    /// Coordinator -> all workers: the world is complete at this
+    /// membership generation — (re)start training from the latest
+    /// checkpoint (or from scratch).
+    Begin { generation: u64 },
+    /// Worker -> coordinator liveness tick.
+    Heartbeat,
+    /// Worker -> coordinator: per-sample chunks for one step.
+    Share(StepShare),
+    /// Coordinator -> all workers: the position-ordered reduction of
+    /// every share for this step.
+    StepSum { generation: u64, epoch: u64, step: u64, chunk: Vec<f64> },
+    /// Rank 0 -> coordinator: the epoch's replicated stats.
+    EpochReport { generation: u64, stats: EpochStats },
+    /// Coordinator -> all workers: a member died; abandon the current
+    /// round, reload the latest checkpoint and await a fresh `Begin`.
+    Rollback { generation: u64 },
+    /// Worker -> coordinator at end of training: replica fingerprint
+    /// ([`super::params_digest`]); rank 0 attaches the final checkpoint
+    /// image ([`crate::coordinator::Checkpoint::to_bytes`]).
+    Final { generation: u64, digest: u64, diverged: bool, blob: Option<Vec<u8>> },
+    /// Coordinator -> all workers: run complete, exit cleanly.
+    Done,
+    /// Unrecoverable error; the peer should give up.
+    Fatal { msg: String },
+}
+
+const K_JOIN: u8 = 1;
+const K_WELCOME: u8 = 2;
+const K_BEGIN: u8 = 3;
+const K_HEARTBEAT: u8 = 4;
+const K_SHARE: u8 = 5;
+const K_STEPSUM: u8 = 6;
+const K_EPOCH: u8 = 7;
+const K_ROLLBACK: u8 = 8;
+const K_FINAL: u8 = 9;
+const K_DONE: u8 = 10;
+const K_FATAL: u8 = 11;
+
+impl Msg {
+    fn kind(&self) -> u8 {
+        match self {
+            Msg::Join { .. } => K_JOIN,
+            Msg::Welcome { .. } => K_WELCOME,
+            Msg::Begin { .. } => K_BEGIN,
+            Msg::Heartbeat => K_HEARTBEAT,
+            Msg::Share(_) => K_SHARE,
+            Msg::StepSum { .. } => K_STEPSUM,
+            Msg::EpochReport { .. } => K_EPOCH,
+            Msg::Rollback { .. } => K_ROLLBACK,
+            Msg::Final { .. } => K_FINAL,
+            Msg::Done => K_DONE,
+            Msg::Fatal { .. } => K_FATAL,
+        }
+    }
+
+    /// Serialize to one complete frame (header + payload).
+    pub fn encode_frame(&self) -> Vec<u8> {
+        let mut p = Enc::new();
+        match self {
+            Msg::Join { proto } => p.u32(*proto),
+            Msg::Welcome { rank, world, config } => {
+                p.u32(*rank);
+                p.u32(*world);
+                encode_config(&mut p, config);
+            }
+            Msg::Begin { generation } => p.u64(*generation),
+            Msg::Heartbeat => {}
+            Msg::Share(s) => {
+                p.u64(s.generation);
+                p.u64(s.epoch);
+                p.u64(s.step);
+                p.u32(s.positions.len() as u32);
+                for &pos in &s.positions {
+                    p.u32(pos);
+                }
+                p.f64s(&s.chunks);
+            }
+            Msg::StepSum { generation, epoch, step, chunk } => {
+                p.u64(*generation);
+                p.u64(*epoch);
+                p.u64(*step);
+                p.f64s(chunk);
+            }
+            Msg::EpochReport { generation, stats } => {
+                p.u64(*generation);
+                p.u64(stats.epoch as u64);
+                p.str(&stats.artifact);
+                p.f64(stats.train_loss);
+                p.f64(stats.test_l2);
+                p.f64(stats.test_h1);
+                p.f64(stats.seconds);
+                p.f64(stats.samples_per_sec);
+                p.u64(stats.skipped_steps as u64);
+            }
+            Msg::Rollback { generation } => p.u64(*generation),
+            Msg::Final { generation, digest, diverged, blob } => {
+                p.u64(*generation);
+                p.u64(*digest);
+                p.u8(*diverged as u8);
+                match blob {
+                    Some(b) => {
+                        p.u8(1);
+                        p.bytes(b);
+                    }
+                    None => p.u8(0),
+                }
+            }
+            Msg::Done => {}
+            Msg::Fatal { msg } => p.str(msg),
+        }
+        let payload = p.buf;
+        let mut frame = Vec::with_capacity(9 + payload.len());
+        frame.extend_from_slice(MAGIC);
+        frame.push(self.kind());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        frame
+    }
+
+    fn decode(kind: u8, payload: &[u8]) -> Result<Msg> {
+        let mut d = Dec::new(payload);
+        let msg = match kind {
+            K_JOIN => Msg::Join { proto: d.u32()? },
+            K_WELCOME => {
+                let rank = d.u32()?;
+                let world = d.u32()?;
+                let config = decode_config(&mut d)?;
+                Msg::Welcome { rank, world, config }
+            }
+            K_BEGIN => Msg::Begin { generation: d.u64()? },
+            K_HEARTBEAT => Msg::Heartbeat,
+            K_SHARE => {
+                let generation = d.u64()?;
+                let epoch = d.u64()?;
+                let step = d.u64()?;
+                let npos = d.u32()? as usize;
+                let mut positions = Vec::with_capacity(npos.min(MAX_FRAME / 4));
+                for _ in 0..npos {
+                    positions.push(d.u32()?);
+                }
+                let chunks = d.f64s()?;
+                Msg::Share(StepShare { generation, epoch, step, positions, chunks })
+            }
+            K_STEPSUM => Msg::StepSum {
+                generation: d.u64()?,
+                epoch: d.u64()?,
+                step: d.u64()?,
+                chunk: d.f64s()?,
+            },
+            K_EPOCH => {
+                let generation = d.u64()?;
+                let epoch = d.u64()? as usize;
+                let artifact = d.str()?;
+                Msg::EpochReport {
+                    generation,
+                    stats: EpochStats {
+                        epoch,
+                        artifact,
+                        train_loss: d.f64()?,
+                        test_l2: d.f64()?,
+                        test_h1: d.f64()?,
+                        seconds: d.f64()?,
+                        samples_per_sec: d.f64()?,
+                        skipped_steps: d.u64()? as usize,
+                    },
+                }
+            }
+            K_ROLLBACK => Msg::Rollback { generation: d.u64()? },
+            K_FINAL => {
+                let generation = d.u64()?;
+                let digest = d.u64()?;
+                let diverged = d.u8()? != 0;
+                let blob = if d.u8()? != 0 { Some(d.bytes()?) } else { None };
+                Msg::Final { generation, digest, diverged, blob }
+            }
+            K_DONE => Msg::Done,
+            K_FATAL => Msg::Fatal { msg: d.str()? },
+            k => bail!("unknown message kind {k}"),
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+/// Read exactly one message (blocking until a full frame arrives).
+pub fn read_msg(r: &mut impl Read) -> Result<Msg> {
+    let mut head = [0u8; 9];
+    r.read_exact(&mut head).context("read frame header")?;
+    if &head[..4] != MAGIC {
+        bail!("bad frame magic {:?}", &head[..4]);
+    }
+    let kind = head[4];
+    let len = u32::from_le_bytes([head[5], head[6], head[7], head[8]]) as usize;
+    if len > MAX_FRAME {
+        bail!("frame payload {len} exceeds cap {MAX_FRAME}");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("read frame payload")?;
+    Msg::decode(kind, &payload)
+}
+
+/// Write one message to a shared stream. The whole frame is built in
+/// memory and written under the lock in one `write_all`, so frames from
+/// the training loop and the heartbeat thread never interleave.
+pub fn send_msg(w: &Arc<Mutex<TcpStream>>, msg: &Msg) -> Result<()> {
+    let frame = msg.encode_frame();
+    let mut s = w.lock().map_err(|_| anyhow::anyhow!("wire writer poisoned"))?;
+    s.write_all(&frame).context("write frame")?;
+    Ok(())
+}
+
+fn encode_config(p: &mut Enc, c: &DistConfig) {
+    p.str(&c.dataset);
+    p.u64(c.resolution as u64);
+    p.u64(c.n_samples as u64);
+    p.u64(c.n_test as u64);
+    p.u64(c.data_seed);
+    p.u64(c.batch as u64);
+    p.u64(c.width as u64);
+    p.u64(c.modes as u64);
+    p.u64(c.layers as u64);
+    p.u64(c.epochs as u64);
+    p.f64(c.lr);
+    p.f64(c.lr_decay);
+    p.u64(c.seed);
+    p.u8(c.loss_scaling as u8);
+    p.f64(c.init_loss_scale);
+    p.f64(c.grad_clip);
+    p.u32(c.phases.len() as u32);
+    for (frac, name) in &c.phases {
+        p.f64(*frac);
+        p.str(name);
+    }
+    match &c.ckpt_dir {
+        Some(d) => {
+            p.u8(1);
+            p.str(d);
+        }
+        None => p.u8(0),
+    }
+    p.u64(c.heartbeat_ms);
+}
+
+fn decode_config(d: &mut Dec) -> Result<DistConfig> {
+    let dataset = d.str()?;
+    let resolution = d.u64()? as usize;
+    let n_samples = d.u64()? as usize;
+    let n_test = d.u64()? as usize;
+    let data_seed = d.u64()?;
+    let batch = d.u64()? as usize;
+    let width = d.u64()? as usize;
+    let modes = d.u64()? as usize;
+    let layers = d.u64()? as usize;
+    let epochs = d.u64()? as usize;
+    let lr = d.f64()?;
+    let lr_decay = d.f64()?;
+    let seed = d.u64()?;
+    let loss_scaling = d.u8()? != 0;
+    let init_loss_scale = d.f64()?;
+    let grad_clip = d.f64()?;
+    let n_phases = d.u32()? as usize;
+    let mut phases = Vec::with_capacity(n_phases.min(64));
+    for _ in 0..n_phases {
+        let frac = d.f64()?;
+        let name = d.str()?;
+        phases.push((frac, name));
+    }
+    let ckpt_dir = if d.u8()? != 0 { Some(d.str()?) } else { None };
+    let heartbeat_ms = d.u64()?;
+    Ok(DistConfig {
+        dataset,
+        resolution,
+        n_samples,
+        n_test,
+        data_seed,
+        batch,
+        width,
+        modes,
+        layers,
+        epochs,
+        lr,
+        lr_decay,
+        seed,
+        loss_scaling,
+        init_loss_scale,
+        grad_clip,
+        phases,
+        ckpt_dir,
+        heartbeat_ms,
+    })
+}
+
+/// Little-endian payload writer.
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// f64 as its raw bit pattern — byte-lossless, NaN-safe.
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn f64s(&mut self, vs: &[f64]) {
+        self.u64(vs.len() as u64);
+        for &v in vs {
+            self.f64(v);
+        }
+    }
+
+    fn bytes(&mut self, b: &[u8]) {
+        self.u32(b.len() as u32);
+        self.buf.extend_from_slice(b);
+    }
+
+    fn str(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+    }
+}
+
+/// Little-endian payload reader with bounds checking.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated payload: need {n} bytes at {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u64()? as usize;
+        if n > MAX_FRAME / 8 {
+            bail!("corrupt f64 vector length {n}");
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn str(&mut self) -> Result<String> {
+        String::from_utf8(self.bytes()?).context("payload string not utf8")
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("trailing bytes in payload: {} of {}", self.pos, self.buf.len());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Msg) {
+        let frame = msg.encode_frame();
+        let mut cur: &[u8] = &frame;
+        let back = read_msg(&mut cur).unwrap();
+        assert_eq!(back, msg);
+        assert!(cur.is_empty(), "frame fully consumed");
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        roundtrip(Msg::Join { proto: PROTO_VERSION });
+        roundtrip(Msg::Welcome {
+            rank: 3,
+            world: 4,
+            config: crate::dist::tests::tiny_config(),
+        });
+        roundtrip(Msg::Begin { generation: 9 });
+        roundtrip(Msg::Heartbeat);
+        roundtrip(Msg::Share(StepShare {
+            generation: 2,
+            epoch: 1,
+            step: 5,
+            positions: vec![0, 2],
+            chunks: vec![1.5, -0.25, f64::MIN_POSITIVE, 1e300],
+        }));
+        roundtrip(Msg::StepSum { generation: 2, epoch: 1, step: 5, chunk: vec![0.1, 0.2] });
+        roundtrip(Msg::EpochReport {
+            generation: 1,
+            stats: EpochStats {
+                epoch: 3,
+                artifact: "fno_darcy_r8_native-f32_grads".into(),
+                train_loss: 0.125,
+                test_l2: 0.5,
+                test_h1: 0.75,
+                seconds: 1.5,
+                samples_per_sec: 64.0,
+                skipped_steps: 2,
+            },
+        });
+        roundtrip(Msg::Rollback { generation: 3 });
+        roundtrip(Msg::Final {
+            generation: 3,
+            digest: 0xDEAD_BEEF_CAFE_F00D,
+            diverged: false,
+            blob: Some(vec![1, 2, 3, 255]),
+        });
+        roundtrip(Msg::Final { generation: 3, digest: 7, diverged: true, blob: None });
+        roundtrip(Msg::Done);
+        roundtrip(Msg::Fatal { msg: "boom".into() });
+    }
+
+    #[test]
+    fn f64_payloads_are_byte_lossless() {
+        // Bit patterns that decimal round-trips would mangle: NaN with a
+        // payload, signed zero, subnormals, and an ULP-separated pair.
+        let vals = vec![
+            f64::from_bits(0x7FF8_0000_0000_1234), // NaN with payload
+            -0.0,
+            f64::MIN_POSITIVE / 2.0, // subnormal
+            1.0,
+            f64::from_bits(1.0f64.to_bits() + 1), // 1.0 + 1 ULP
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+        ];
+        let msg = Msg::StepSum { generation: 0, epoch: 0, step: 0, chunk: vals.clone() };
+        let frame = msg.encode_frame();
+        let mut cur: &[u8] = &frame;
+        match read_msg(&mut cur).unwrap() {
+            Msg::StepSum { chunk, .. } => {
+                assert_eq!(chunk.len(), vals.len());
+                for (a, b) in chunk.iter().zip(&vals) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            m => panic!("wrong message {m:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        // Bad magic.
+        let mut frame = Msg::Done.encode_frame();
+        frame[0] = b'X';
+        assert!(read_msg(&mut frame.as_slice()).is_err());
+        // Oversized length header.
+        let mut big = Msg::Done.encode_frame();
+        big[5..9].copy_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        assert!(read_msg(&mut big.as_slice()).is_err());
+        // Truncated payload.
+        let frame = Msg::Begin { generation: 1 }.encode_frame();
+        assert!(read_msg(&mut frame[..frame.len() - 1].as_ref()).is_err());
+        // Trailing garbage inside the payload.
+        let mut join = Msg::Join { proto: 1 }.encode_frame();
+        join[5..9].copy_from_slice(&8u32.to_le_bytes());
+        join.extend_from_slice(&[0, 0, 0, 0]);
+        assert!(read_msg(&mut join.as_slice()).is_err());
+        // Unknown kind.
+        let mut unk = Msg::Done.encode_frame();
+        unk[4] = 200;
+        assert!(read_msg(&mut unk.as_slice()).is_err());
+    }
+}

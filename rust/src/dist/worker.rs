@@ -1,0 +1,418 @@
+//! The distributed worker: one rank's replicated training loop.
+//!
+//! Every worker holds a full replica of the mutable training state —
+//! params, Adam moments, loss scaler, batch RNG, divergence watchdog —
+//! and advances it with *identical* updates, because the only
+//! rank-dependent quantity (this shard's per-sample gradient chunks) is
+//! exchanged through the coordinator's ordered all-reduce before it
+//! touches anything. Replicas therefore stay bit-identical, which is
+//! what makes `Final` digest comparison meaningful and
+//! resume-from-any-worker trivial.
+//!
+//! The loop is deliberately a line-for-line mirror of
+//! [`crate::coordinator::train_grid`]: same RNG seeding, same loss
+//! finiteness guards, same scaler/watchdog call order, same
+//! end-of-epoch eval/decay sequence. Any drift between the two is a
+//! parity bug, and `tests/dist_parity.rs` pins the equivalence.
+
+use super::ckpt::{CheckpointManager, TrainState};
+use super::wire::{self, Msg, StepShare};
+use super::{params_digest, DistConfig};
+use crate::amp::GradScaler;
+use crate::coordinator::{self, EpochStats, TrainConfig};
+use crate::data::{generate_rows, BatchIter, GridDataset};
+use crate::optim::{Adam, GradAccumulator};
+use crate::rng::Rng;
+use crate::runtime::{ArtifactEntry, ExecLike, NativeEngine};
+use crate::stability::DivergenceDetector;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Connect to the coordinator, join the world, and train until `Done`.
+/// Runs as the `mpno dist-worker` process — or as a plain thread in
+/// tests, since everything speaks loopback TCP either way.
+pub fn run_worker(addr: &str) -> Result<()> {
+    let stream = connect_with_retry(addr)?;
+    stream.set_nodelay(true).ok();
+    let mut rd = stream.try_clone().context("clone worker stream")?;
+    let wr = Arc::new(Mutex::new(stream));
+    wire::send_msg(&wr, &Msg::Join { proto: wire::PROTO_VERSION })?;
+    let (rank, world, cfg) = match wire::read_msg(&mut rd)? {
+        Msg::Welcome { rank, world, config } => (rank as usize, world as usize, config),
+        Msg::Fatal { msg } => bail!("coordinator refused join: {msg}"),
+        m => bail!("expected Welcome, got {m:?}"),
+    };
+    cfg.validate()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb = spawn_heartbeat(wr.clone(), cfg.heartbeat_ms, stop.clone());
+    let res = worker_loop(&mut rd, &wr, rank, world, &cfg);
+    stop.store(true, Ordering::Relaxed);
+    hb.join().ok();
+    res
+}
+
+fn connect_with_retry(addr: &str) -> Result<TcpStream> {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(_) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("connect to coordinator at {addr}"))
+            }
+        }
+    }
+}
+
+fn spawn_heartbeat(
+    wr: Arc<Mutex<TcpStream>>,
+    period_ms: u64,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        while !stop.load(Ordering::Relaxed) {
+            if wire::send_msg(&wr, &Msg::Heartbeat).is_err() {
+                break; // coordinator went away; main thread will notice too
+            }
+            std::thread::sleep(Duration::from_millis(period_ms));
+        }
+    })
+}
+
+/// What a training round ended as.
+enum Round {
+    /// `Final` sent; wait for `Done`.
+    Finished,
+    /// A `Rollback` interrupted the round; await a fresh `Begin`.
+    Rolled,
+}
+
+/// Rank-independent context a worker sets up once per process.
+struct Ctx {
+    rank: usize,
+    world: usize,
+    cfg: DistConfig,
+    tcfg: TrainConfig,
+    entry: ArtifactEntry,
+    /// This rank's train rows (global indices `rank, rank+W, ...`);
+    /// `None` when the shard is empty (world larger than the train set).
+    train_shard: Option<GridDataset>,
+    test: GridDataset,
+    manager: Option<CheckpointManager>,
+    /// Global `batch · out_channels · h · w` — the MSE denominator, the
+    /// same on every rank regardless of shard size.
+    n_total: f64,
+    n_train: usize,
+}
+
+fn worker_loop(
+    rd: &mut TcpStream,
+    wr: &Arc<Mutex<TcpStream>>,
+    rank: usize,
+    world: usize,
+    cfg: &DistConfig,
+) -> Result<()> {
+    let mut engine = NativeEngine::new(&cfg.dataset, cfg.fno_spec()?, cfg.batch);
+    let first = engine.load(&cfg.phases[0].1)?;
+    let entry = first.entry().clone();
+    drop(first);
+    if entry.graph != "grads" {
+        bail!("{}: distributed training needs a grads artifact", entry.name);
+    }
+    let y_shape = entry
+        .extra_inputs
+        .iter()
+        .find(|(n, _)| n == "y")
+        .map(|(_, s)| s.clone())
+        .context("grads artifact missing y input")?;
+    let n_total = y_shape.iter().product::<usize>() as f64;
+
+    let gen = cfg.gen_spec()?;
+    let n_train = cfg.n_samples - cfg.n_test;
+    let shard_idx: Vec<usize> = (rank..n_train).step_by(world).collect();
+    let train_shard =
+        if shard_idx.is_empty() { None } else { Some(generate_rows(&gen, &shard_idx)?) };
+    let test_idx: Vec<usize> = (n_train..cfg.n_samples).collect();
+    let test = generate_rows(&gen, &test_idx)?;
+
+    let ctx = Ctx {
+        rank,
+        world,
+        cfg: cfg.clone(),
+        tcfg: cfg.train_config(),
+        entry,
+        train_shard,
+        test,
+        manager: cfg.ckpt_dir.as_ref().map(CheckpointManager::local),
+        n_total,
+        n_train,
+    };
+
+    let mut next_begin: Option<u64> = None;
+    'rounds: loop {
+        let generation = match next_begin.take() {
+            Some(g) => g,
+            None => loop {
+                match wire::read_msg(rd)? {
+                    Msg::Begin { generation } => break generation,
+                    // Stale round debris and rollbacks are no-ops here:
+                    // we are already waiting for the next Begin.
+                    Msg::Rollback { .. } | Msg::StepSum { .. } => continue,
+                    Msg::Done => return Ok(()),
+                    Msg::Fatal { msg } => bail!("coordinator: {msg}"),
+                    m => bail!("unexpected {m:?} while waiting for Begin"),
+                }
+            },
+        };
+        match run_round(&ctx, &mut engine, rd, wr, generation)? {
+            Round::Rolled => continue 'rounds,
+            Round::Finished => loop {
+                match wire::read_msg(rd)? {
+                    Msg::Done => return Ok(()),
+                    Msg::Rollback { .. } => continue 'rounds,
+                    Msg::Begin { generation } => {
+                        next_begin = Some(generation);
+                        continue 'rounds;
+                    }
+                    Msg::StepSum { .. } => continue,
+                    Msg::Fatal { msg } => bail!("coordinator: {msg}"),
+                    m => bail!("unexpected {m:?} while waiting for Done"),
+                }
+            },
+        }
+    }
+}
+
+/// One full training attempt at a fixed membership generation: resume
+/// from the newest checkpoint (or epoch 0), run the remaining epochs,
+/// send `Final`. Returns early with [`Round::Rolled`] if the
+/// coordinator rolls the round back mid-flight.
+fn run_round(
+    ctx: &Ctx,
+    engine: &mut NativeEngine,
+    rd: &mut TcpStream,
+    wr: &Arc<Mutex<TcpStream>>,
+    generation: u64,
+) -> Result<Round> {
+    let cfg = &ctx.cfg;
+    let resumed = match &ctx.manager {
+        Some(m) => m.latest(&ctx.entry)?,
+        None => None,
+    };
+    let mut scaler = if cfg.loss_scaling {
+        GradScaler::new(cfg.init_loss_scale)
+    } else {
+        GradScaler::disabled()
+    };
+    let mut watchdog = DivergenceDetector::new(8);
+    let (mut params, mut adam, mut rng, start_epoch) = match resumed {
+        Some(st) => {
+            let params = st.params;
+            let mut adam = Adam::new(st.lr, &params).with_clip(cfg.grad_clip);
+            adam.restore_moments(st.adam_m, st.adam_v, st.adam_t);
+            scaler.restore_dyn_state(st.scaler.0, st.scaler.1, st.scaler.2);
+            watchdog.restore_state(st.watchdog.0, st.watchdog.1);
+            (params, adam, Rng::from_state(st.rng), st.epoch + 1)
+        }
+        None => {
+            let params = engine.init_params(&ctx.entry, cfg.seed);
+            let adam = Adam::new(cfg.lr, &params).with_clip(cfg.grad_clip);
+            (params, adam, Rng::new(cfg.seed ^ 0xBA7C4), 0)
+        }
+    };
+    let mut accum = GradAccumulator::new(1);
+    let mut last_epoch = start_epoch.saturating_sub(1);
+
+    'training: for epoch in start_epoch..cfg.epochs {
+        let progress = epoch as f64 / cfg.epochs.max(1) as f64;
+        let art_name = ctx.tcfg.schedule.active(progress).to_string();
+        let exe = engine.load(&art_name)?;
+        let t0 = Instant::now();
+        let mut loss_sum = 0.0;
+        let mut steps = 0usize;
+        let mut skipped = 0usize;
+        let mut samples = 0usize;
+        let mut step_no = 0u64;
+        for idx in BatchIter::new(ctx.n_train, cfg.batch, &mut rng) {
+            // Ownership: batch position p belongs to rank idx[p] % W.
+            let mut positions = Vec::new();
+            let mut local = Vec::new();
+            for (p, &g) in idx.iter().enumerate() {
+                if g % ctx.world == ctx.rank {
+                    positions.push(p as u32);
+                    local.push((g - ctx.rank) / ctx.world);
+                }
+            }
+            let chunks = match (&ctx.train_shard, positions.is_empty()) {
+                (Some(shard), false) => {
+                    let (x, y) = shard.gather(&local);
+                    let pr: Vec<&Tensor> = params.iter().collect();
+                    exe.grad_chunks(&pr, &x, &y, scaler.loss_scale(), ctx.n_total)?
+                }
+                // No samples this step: contribute an empty share so the
+                // barrier still sees every rank.
+                _ => vec![],
+            };
+            wire::send_msg(
+                wr,
+                &Msg::Share(StepShare {
+                    generation,
+                    epoch: epoch as u64,
+                    step: step_no,
+                    positions,
+                    chunks,
+                }),
+            )?;
+            let sum = match wait_step_sum(rd, generation, epoch as u64, step_no)? {
+                Some(s) => s,
+                None => return Ok(Round::Rolled),
+            };
+            // The reduced chunk is [raw squared-error sum, grad sums...].
+            // Replicate train_batch's epilogue exactly: f64 mean, then the
+            // executable's f32 loss packing, then per-param f32 rounding.
+            let loss = ((sum[0] / ctx.n_total) as f32) as f64;
+            loss_sum += if loss.is_finite() { loss } else { 0.0 };
+            steps += 1;
+            samples += idx.len();
+            let grads = grads_from_sum(&ctx.entry, &sum[1..]);
+            let step_ok = if let Some(acc) = accum.push(&grads) {
+                adam.step(&mut params, &acc, scaler.inv_scale())
+            } else {
+                true
+            };
+            if !step_ok {
+                skipped += 1;
+            }
+            scaler.update(step_ok && loss.is_finite());
+            if watchdog.observe(loss) && ctx.tcfg.stop_on_divergence {
+                if ctx.rank == 0 {
+                    let stats = EpochStats {
+                        epoch,
+                        artifact: art_name.clone(),
+                        train_loss: f64::NAN,
+                        test_l2: f64::NAN,
+                        test_h1: f64::NAN,
+                        seconds: t0.elapsed().as_secs_f64(),
+                        samples_per_sec: 0.0,
+                        skipped_steps: skipped,
+                    };
+                    wire::send_msg(wr, &Msg::EpochReport { generation, stats })?;
+                }
+                last_epoch = epoch;
+                break 'training;
+            }
+            step_no += 1;
+        }
+        let seconds = t0.elapsed().as_secs_f64();
+        let (test_l2, test_h1) =
+            coordinator::evaluate(engine, &params, &ctx.test, &ctx.tcfg, exe.entry())?;
+        if ctx.rank == 0 {
+            // Loss/metric fields are replicated; the timing fields are
+            // rank 0's local measurements.
+            let stats = EpochStats {
+                epoch,
+                artifact: art_name,
+                train_loss: loss_sum / steps.max(1) as f64,
+                test_l2,
+                test_h1,
+                seconds,
+                samples_per_sec: samples as f64 / seconds,
+                skipped_steps: skipped,
+            };
+            wire::send_msg(wr, &Msg::EpochReport { generation, stats })?;
+        }
+        if cfg.lr_decay != 1.0 {
+            let lr = adam.lr * cfg.lr_decay;
+            adam.set_lr(lr);
+        }
+        last_epoch = epoch;
+        if let Some(mgr) = &ctx.manager {
+            // Rotate the writer rank so "resume from any worker" is
+            // exercised by construction, not just in theory.
+            if epoch % ctx.world == ctx.rank {
+                let st = snapshot(epoch, &params, &adam, &scaler, &rng, &watchdog);
+                mgr.save(&st, &ctx.entry)?;
+            }
+        }
+    }
+
+    let digest = params_digest(&params);
+    let blob = if ctx.rank == 0 {
+        let st = snapshot(last_epoch, &params, &adam, &scaler, &rng, &watchdog);
+        Some(st.to_checkpoint(&ctx.entry).to_bytes()?)
+    } else {
+        None
+    };
+    wire::send_msg(
+        wr,
+        &Msg::Final { generation, digest, diverged: watchdog.diverged(), blob },
+    )?;
+    Ok(Round::Finished)
+}
+
+fn snapshot(
+    epoch: usize,
+    params: &[Tensor],
+    adam: &Adam,
+    scaler: &GradScaler,
+    rng: &Rng,
+    watchdog: &DivergenceDetector,
+) -> TrainState {
+    let (m, v, t) = adam.moments();
+    TrainState {
+        epoch,
+        params: params.to_vec(),
+        adam_m: m,
+        adam_v: v,
+        adam_t: t,
+        lr: adam.lr,
+        scaler: scaler.dyn_state(),
+        rng: rng.state(),
+        watchdog: watchdog.state(),
+    }
+}
+
+/// Block until the coordinator's reduction for exactly this
+/// (generation, epoch, step) arrives; `None` on rollback.
+fn wait_step_sum(
+    rd: &mut TcpStream,
+    generation: u64,
+    epoch: u64,
+    step: u64,
+) -> Result<Option<Vec<f64>>> {
+    loop {
+        match wire::read_msg(rd)? {
+            Msg::StepSum { generation: g, epoch: e, step: s, chunk }
+                if g == generation && e == epoch && s == step =>
+            {
+                return Ok(Some(chunk))
+            }
+            // A sum from a dead generation: discard and keep waiting.
+            Msg::StepSum { .. } => continue,
+            Msg::Rollback { .. } => return Ok(None),
+            Msg::Fatal { msg } => bail!("coordinator: {msg}"),
+            m => bail!("unexpected {m:?} while waiting for step sum"),
+        }
+    }
+}
+
+/// Split the reduced f64 gradient sums back into per-param f32 tensors —
+/// the same `v as f32` rounding `train_batch` applies to its own sums.
+fn grads_from_sum(entry: &ArtifactEntry, g: &[f64]) -> Vec<Tensor> {
+    let mut out = Vec::with_capacity(entry.params.len());
+    let mut off = 0usize;
+    for spec in &entry.params {
+        let n: usize = spec.shape.iter().product();
+        let data: Vec<f32> = g[off..off + n].iter().map(|&v| v as f32).collect();
+        out.push(Tensor::from_vec(spec.shape.clone(), data));
+        off += n;
+    }
+    debug_assert_eq!(off, g.len(), "reduced chunk length mismatch");
+    out
+}

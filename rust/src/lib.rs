@@ -25,14 +25,22 @@
 //!    ([`amp`]), numerical stabilizers ([`stability`]), the analytic GPU
 //!    memory model ([`memmodel`]), operator-learning metrics ([`metrics`]),
 //!    datasets ([`data`]), the training coordinator with precision
-//!    scheduling ([`coordinator`]) and the batched inference serving
-//!    runtime over trained checkpoints ([`serve`]).
+//!    scheduling ([`coordinator`]), the multi-process data-parallel
+//!    training runtime with bit-exact world-size parity ([`dist`]) and
+//!    the batched inference serving runtime over trained checkpoints
+//!    ([`serve`]).
 //! 3. **Harness** — CLI ([`cli`]) and the per-paper-table/figure experiment
 //!    drivers ([`experiments`]).
 //!
 //! Python (JAX + Pallas) exists only on the compile path: `make artifacts`
 //! AOT-lowers every model/precision variant to HLO text which [`runtime`]
 //! loads via PJRT. Python never runs at training/serving time.
+//!
+//! The prose map of all of this — the subsystem stack, the two house
+//! invariants (bit-exact parity oracles; thread/process-count
+//! determinism) and which test pins each layer — lives in
+//! `docs/ARCHITECTURE.md`; both wire protocols (serving HTTP JSON and
+//! the distributed training frames) are specified in `docs/WIRE.md`.
 
 pub mod amp;
 pub mod bench;
@@ -40,6 +48,7 @@ pub mod cli;
 pub mod contract;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod exec;
 pub mod experiments;
 pub mod fft;

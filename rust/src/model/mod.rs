@@ -690,16 +690,14 @@ impl<S: Scalar> Fno2d<S> {
                 || self.scratch(),
                 |k, chunk, ws| {
                     let s = start + k;
-                    self.forward_sample_into(&xd[s * in_slab..(s + 1) * in_slab], ws);
-                    let ys = &yd[s * out_slab..(s + 1) * out_slab];
-                    let mut loss = 0.0f64;
-                    for (e, (&t, gseed)) in ys.iter().zip(ws.g_out.iter_mut()).enumerate() {
-                        let d = ws.pred[e].to_f64() - t as f64;
-                        loss += d * d;
-                        *gseed = S::from_f64(2.0 * d * scale / n_total);
-                    }
-                    chunk[0] = loss;
-                    self.backward_sample_into(ws, &mut chunk[1..]);
+                    self.sample_chunk_into(
+                        &xd[s * in_slab..(s + 1) * in_slab],
+                        &yd[s * out_slab..(s + 1) * out_slab],
+                        scale,
+                        n_total,
+                        ws,
+                        chunk,
+                    );
                 },
             );
             // Deterministic reduction in sample order.
@@ -723,6 +721,84 @@ impl<S: Scalar> Fno2d<S> {
             })
             .collect();
         (loss, grads)
+    }
+
+    /// Forward + backward for one sample: `chunk` receives
+    /// `[loss_sum, d/dparam...]` (the gradient entries are *accumulated
+    /// into*, so callers zero the slice first). Output gradients are
+    /// seeded for an MSE mean over `n_total` elements scaled by `scale`.
+    /// Shared by [`Fno2d::train_batch`] and [`Fno2d::grad_chunks`] so a
+    /// sample's chunk bits never depend on which entry point computed it.
+    fn sample_chunk_into(
+        &self,
+        xs: &[f32],
+        ys: &[f32],
+        scale: f64,
+        n_total: f64,
+        ws: &mut Scratch<S>,
+        chunk: &mut [f64],
+    ) {
+        self.forward_sample_into(xs, ws);
+        let mut loss = 0.0f64;
+        for (e, (&t, gseed)) in ys.iter().zip(ws.g_out.iter_mut()).enumerate() {
+            let d = ws.pred[e].to_f64() - t as f64;
+            loss += d * d;
+            *gseed = S::from_f64(2.0 * d * scale / n_total);
+        }
+        chunk[0] = loss;
+        self.backward_sample_into(ws, &mut chunk[1..]);
+    }
+
+    /// Per-sample loss/gradient chunks for a (possibly partial) batch:
+    /// returns `b` rows of `1 + n_params` f64s, row `s` holding
+    /// `[loss_sum_s, d/dparam...]` — exactly the intermediate chunks
+    /// [`Fno2d::train_batch`] reduces internally. `n_total` is the
+    /// *global* element count the MSE mean is taken over; for a
+    /// distributed step that is the full batch's
+    /// `batch · out_channels · h · w` even when `x` holds only one
+    /// worker's shard rows. Summing rows from any sharding of a batch in
+    /// global sample order (starting from zero accumulators) reproduces
+    /// `train_batch`'s loss and gradient sums bit-for-bit, which is what
+    /// makes multi-process data parallelism exact rather than
+    /// approximately equal.
+    pub fn grad_chunks(
+        &self,
+        x: &Tensor,
+        y: &Tensor,
+        loss_scale: f32,
+        n_total: f64,
+        ex: &Executor,
+    ) -> Vec<f64> {
+        let sp = &self.spec;
+        let hw = sp.h * sp.w;
+        let b = x.shape()[0];
+        assert!(b >= 1, "empty batch");
+        assert_eq!(x.shape(), [b, sp.in_channels, sp.h, sp.w].as_slice(), "input shape");
+        assert_eq!(y.shape(), [b, sp.out_channels, sp.h, sp.w].as_slice(), "target shape");
+        let in_slab = sp.in_channels * hw;
+        let out_slab = sp.out_channels * hw;
+        let n_params = self.offsets.last().map(|r| r.end).unwrap_or(0);
+        let stride = 1 + n_params;
+        let scale = loss_scale as f64;
+        let xd = x.data();
+        let yd = y.data();
+        let mut acc = vec![0.0f64; b * stride];
+        ex.for_each_chunk_with(
+            &mut acc,
+            stride,
+            || self.scratch(),
+            |s, chunk, ws| {
+                self.sample_chunk_into(
+                    &xd[s * in_slab..(s + 1) * in_slab],
+                    &yd[s * out_slab..(s + 1) * out_slab],
+                    scale,
+                    n_total,
+                    ws,
+                    chunk,
+                );
+            },
+        );
+        acc
     }
 }
 
@@ -843,5 +919,68 @@ mod tests {
         assert!((loss2 - loss).abs() < 1e-9 * loss.abs(), "loss is reported unscaled");
         let (g1, g2) = (grads[0].abs_max() as f64, grads2[0].abs_max() as f64);
         assert!((g2 / g1 - 256.0).abs() / 256.0 < 1e-3, "{g1} {g2}");
+    }
+
+    /// Reducing `grad_chunks` rows in global sample order must reproduce
+    /// `train_batch` bit-for-bit — the contract the distributed runtime
+    /// stands on — even when the rows were computed shard-by-shard.
+    #[test]
+    fn grad_chunks_reduce_to_train_batch_bitwise() {
+        let sp = tiny_spec();
+        let params = sp.init_params(7);
+        let refs: Vec<&Tensor> = params.iter().collect();
+        let mut model = Fno2d::<f32>::new(sp.clone());
+        model.set_params(&refs);
+        let b = 4usize;
+        let x = rand_tensor(&[b, sp.in_channels, sp.h, sp.w], 8, 1.0);
+        let y = rand_tensor(&[b, sp.out_channels, sp.h, sp.w], 9, 1.0);
+        let ex = Executor::serial();
+        let (want_loss, want_grads) = model.train_batch(&x, &y, 2.0, &ex);
+        let out_slab = sp.out_channels * sp.h * sp.w;
+        let n_total = (b * out_slab) as f64;
+        let stride = 1 + sp.n_params();
+        // Shard the batch round-robin over two "workers", compute each
+        // shard's chunks independently, then reduce in global order.
+        let mut rows: Vec<Option<Vec<f64>>> = vec![None; b];
+        for rank in 0..2usize {
+            let idx: Vec<usize> = (rank..b).step_by(2).collect();
+            let gather = |t: &Tensor, slab: usize| {
+                let d = t.data();
+                let mut out = Vec::with_capacity(idx.len() * slab);
+                for &i in &idx {
+                    out.extend_from_slice(&d[i * slab..(i + 1) * slab]);
+                }
+                out
+            };
+            let xs = Tensor::from_vec(
+                vec![idx.len(), sp.in_channels, sp.h, sp.w],
+                gather(&x, sp.in_channels * sp.h * sp.w),
+            );
+            let ys =
+                Tensor::from_vec(vec![idx.len(), sp.out_channels, sp.h, sp.w], gather(&y, out_slab));
+            let chunks = model.grad_chunks(&xs, &ys, 2.0, n_total, &ex);
+            assert_eq!(chunks.len(), idx.len() * stride);
+            for (k, &g) in idx.iter().enumerate() {
+                rows[g] = Some(chunks[k * stride..(k + 1) * stride].to_vec());
+            }
+        }
+        let mut loss = 0.0f64;
+        let mut g = vec![0.0f64; sp.n_params()];
+        for row in rows {
+            let row = row.expect("every global position covered");
+            loss += row[0];
+            for (gj, &cj) in g.iter_mut().zip(&row[1..]) {
+                *gj += cj;
+            }
+        }
+        loss /= n_total;
+        assert_eq!(loss.to_bits(), want_loss.to_bits(), "loss bits");
+        let mut off = 0usize;
+        for want in &want_grads {
+            let n = want.data().len();
+            let got: Vec<f32> = g[off..off + n].iter().map(|&v| v as f32).collect();
+            assert_eq!(got.as_slice(), want.data(), "grad bits");
+            off += n;
+        }
     }
 }

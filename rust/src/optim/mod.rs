@@ -116,6 +116,29 @@ impl Adam {
     pub fn steps_taken(&self) -> u64 {
         self.t
     }
+
+    /// Snapshot the first/second moment estimates and step counter for
+    /// lossless checkpointing. The returned slices alias internal storage
+    /// only for the duration of the call (they are cloned), so a restored
+    /// optimizer replays the exact trajectory an uninterrupted one would.
+    pub fn moments(&self) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, u64) {
+        (self.m.clone(), self.v.clone(), self.t)
+    }
+
+    /// Install moment estimates and step counter from a
+    /// [`Adam::moments`]-shaped snapshot. Shapes must match the params the
+    /// optimizer was built with.
+    pub fn restore_moments(&mut self, m: Vec<Vec<f32>>, v: Vec<Vec<f32>>, t: u64) {
+        assert_eq!(m.len(), self.m.len(), "moment group count");
+        assert_eq!(v.len(), self.v.len(), "moment group count");
+        for ((nm, om), (nv, ov)) in m.iter().zip(&self.m).zip(v.iter().zip(&self.v)) {
+            assert_eq!(nm.len(), om.len(), "moment group length");
+            assert_eq!(nv.len(), ov.len(), "moment group length");
+        }
+        self.m = m;
+        self.v = v;
+        self.t = t;
+    }
 }
 
 /// Delayed updates (App. B.5): accumulate `every` microbatches before one

@@ -23,6 +23,19 @@ impl Rng {
         Rng { s: [next(), next(), next(), next()] }
     }
 
+    /// Snapshot the raw xoshiro256++ state, for lossless checkpointing:
+    /// `Rng::from_state(rng.state())` continues the exact stream.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild an [`Rng`] from a [`Rng::state`] snapshot. The words are
+    /// installed verbatim (no SplitMix64 expansion), so the restored
+    /// generator emits the same sequence the snapshotted one would have.
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     /// Derive an independent stream for a named sub-task (dataset split,
     /// weight init, batch shuffling, ...).
     pub fn split(&mut self, tag: u64) -> Rng {

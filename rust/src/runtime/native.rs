@@ -95,6 +95,17 @@ impl ModelAny {
     fn train_batch(&self, x: &Tensor, y: &Tensor, scale: f32, ex: &Executor) -> (f64, Vec<Tensor>) {
         each_model!(self, m => m.train_batch(x, y, scale, ex))
     }
+
+    fn grad_chunks(
+        &self,
+        x: &Tensor,
+        y: &Tensor,
+        scale: f32,
+        n_total: f64,
+        ex: &Executor,
+    ) -> Vec<f64> {
+        each_model!(self, m => m.grad_chunks(x, y, scale, n_total, ex))
+    }
 }
 
 impl NativeExecutable {
@@ -128,6 +139,40 @@ impl NativeExecutable {
             "fwd" => Ok(vec![model.forward(inputs[np], &ex)]),
             g => bail!("{}: unsupported native graph {g:?}", self.entry.name),
         }
+    }
+
+    /// Per-sample f64 loss/gradient chunks for a shard of a training
+    /// batch — [`crate::model::Fno2d::grad_chunks`] routed through the
+    /// executable's precision variant and cached master weights. `params`
+    /// are the master weights in manifest order; `x`/`y` hold only this
+    /// caller's shard rows while `n_total` is the *global*
+    /// `batch · out_channels · h · w` the MSE mean divides by. Only valid
+    /// on `grads` artifacts. This is the distributed runtime's building
+    /// block: chunks from any sharding, reduced in global sample order,
+    /// reproduce the single-process `train_batch` bits.
+    pub fn grad_chunks(
+        &self,
+        params: &[&Tensor],
+        x: &Tensor,
+        y: &Tensor,
+        scale: f32,
+        n_total: f64,
+    ) -> Result<Vec<f64>> {
+        if self.entry.graph != "grads" {
+            bail!("{}: grad_chunks needs a grads graph", self.entry.name);
+        }
+        if params.len() != self.entry.params.len() {
+            bail!(
+                "{}: expected {} params, got {}",
+                self.entry.name,
+                self.entry.params.len(),
+                params.len()
+            );
+        }
+        self.refresh_params(params);
+        let model = self.model.borrow();
+        let ex = Executor::current();
+        Ok(model.grad_chunks(x, y, scale, n_total, &ex))
     }
 
     /// Install master weights into the model unless they are bitwise

@@ -2,6 +2,12 @@
 //! available offline). Format: magic "MPNO", version u32, then a sequence
 //! of named tensor records: name-len u32, name bytes, ndim u32, dims u64…,
 //! f32 payload little-endian.
+//!
+//! The same record stream works over any `Write`/`Read` pair
+//! ([`write_tensors_to`]/[`read_tensors_from`]), which is how checkpoints
+//! travel as in-memory byte blobs through the distributed wire protocol
+//! and the pluggable checkpoint storage backends — the on-disk files and
+//! the in-memory blobs are byte-identical.
 
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
@@ -16,6 +22,12 @@ pub fn save_tensors(path: &Path, tensors: &[(&str, &Tensor)]) -> Result<()> {
     let mut f = std::io::BufWriter::new(
         std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
     );
+    write_tensors_to(&mut f, tensors)
+}
+
+/// Write the tensor record stream to any sink — same bytes as
+/// [`save_tensors`] produces on disk.
+pub fn write_tensors_to(f: &mut impl Write, tensors: &[(&str, &Tensor)]) -> Result<()> {
     f.write_all(MAGIC)?;
     f.write_all(&VERSION.to_le_bytes())?;
     f.write_all(&(tensors.len() as u32).to_le_bytes())?;
@@ -34,31 +46,45 @@ pub fn save_tensors(path: &Path, tensors: &[(&str, &Tensor)]) -> Result<()> {
     Ok(())
 }
 
+/// Serialize a tensor set to an in-memory byte blob (the wire/backend
+/// form of [`save_tensors`]).
+pub fn tensors_to_bytes(tensors: &[(&str, &Tensor)]) -> Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    write_tensors_to(&mut buf, tensors)?;
+    Ok(buf)
+}
+
 /// Read all named tensors from a file.
 pub fn load_tensors(path: &Path) -> Result<Vec<(String, Tensor)>> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
     );
+    read_tensors_from(&mut f).with_context(|| format!("read {path:?}"))
+}
+
+/// Parse a tensor record stream from any source — the inverse of
+/// [`write_tensors_to`].
+pub fn read_tensors_from(f: &mut impl Read) -> Result<Vec<(String, Tensor)>> {
     let mut magic = [0u8; 4];
     f.read_exact(&mut magic)?;
     if &magic != MAGIC {
-        bail!("{path:?}: not an MPNO tensor file");
+        bail!("not an MPNO tensor stream");
     }
-    let ver = read_u32(&mut f)?;
+    let ver = read_u32(f)?;
     if ver != VERSION {
-        bail!("{path:?}: unsupported version {ver}");
+        bail!("unsupported version {ver}");
     }
-    let count = read_u32(&mut f)? as usize;
-    let mut out = Vec::with_capacity(count);
+    let count = read_u32(f)? as usize;
+    let mut out = Vec::with_capacity(count.min(4096));
     for _ in 0..count {
-        let name_len = read_u32(&mut f)? as usize;
+        let name_len = read_u32(f)? as usize;
         if name_len > 4096 {
             bail!("corrupt name length {name_len}");
         }
         let mut nb = vec![0u8; name_len];
         f.read_exact(&mut nb)?;
         let name = String::from_utf8(nb).context("tensor name not utf8")?;
-        let ndim = read_u32(&mut f)? as usize;
+        let ndim = read_u32(f)? as usize;
         if ndim > 16 {
             bail!("corrupt ndim {ndim}");
         }
@@ -81,6 +107,13 @@ pub fn load_tensors(path: &Path) -> Result<Vec<(String, Tensor)>> {
         out.push((name, Tensor::from_vec(shape, data)));
     }
     Ok(out)
+}
+
+/// Parse a tensor set from an in-memory byte blob (the inverse of
+/// [`tensors_to_bytes`]).
+pub fn tensors_from_bytes(bytes: &[u8]) -> Result<Vec<(String, Tensor)>> {
+    let mut cur = bytes;
+    read_tensors_from(&mut cur)
 }
 
 fn read_u32(f: &mut impl Read) -> Result<u32> {
@@ -127,6 +160,25 @@ mod tests {
         let path = dir.join("empty.mpno");
         save_tensors(&path, &[]).unwrap();
         assert!(load_tensors(&path).unwrap().is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn byte_blob_matches_file_bytes() {
+        // The in-memory form must be byte-identical to the on-disk form:
+        // checkpoint blobs shipped over the wire and files written by the
+        // storage backend are interchangeable.
+        let dir = std::env::temp_dir().join("mpno_ser_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.mpno");
+        let a = Tensor::from_fn(&[3, 2], |i| (i[0] as f32) - 0.25 * (i[1] as f32));
+        save_tensors(&path, &[("a", &a)]).unwrap();
+        let file_bytes = std::fs::read(&path).unwrap();
+        let blob = tensors_to_bytes(&[("a", &a)]).unwrap();
+        assert_eq!(blob, file_bytes);
+        let parsed = tensors_from_bytes(&blob).unwrap();
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].1, a);
         std::fs::remove_file(&path).ok();
     }
 }

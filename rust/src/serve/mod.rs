@@ -29,7 +29,10 @@
 //! classifies every failure (and maps 1:1 onto HTTP statuses), the
 //! [`api`] wire layer gives stdin, HTTP and in-process callers a single
 //! request/reply encode/decode path, and [`http`] is the dependency-free
-//! HTTP/1.1 transport in front of the batching server.
+//! HTTP/1.1 transport in front of the batching server. The wire schema
+//! and the error code/status table are specified in `docs/WIRE.md`; the
+//! README's serving section has the ops runbook (`/stats` fields,
+//! shedding and drain semantics).
 
 pub mod api;
 pub mod batch;

@@ -141,6 +141,19 @@ impl DivergenceDetector {
     pub fn diverged(&self) -> bool {
         self.diverged_at.is_some()
     }
+
+    /// Snapshot `(bad_streak, step)` for lossless checkpointing; a
+    /// watchdog restored via [`DivergenceDetector::restore_state`] fires
+    /// on exactly the step an uninterrupted one would.
+    pub fn state(&self) -> (usize, usize) {
+        (self.bad_streak, self.step)
+    }
+
+    /// Install a [`DivergenceDetector::state`] snapshot verbatim.
+    pub fn restore_state(&mut self, bad_streak: usize, step: usize) {
+        self.bad_streak = bad_streak;
+        self.step = step;
+    }
 }
 
 #[cfg(test)]

@@ -1,7 +1,7 @@
 //! Section 3 / Appendix A of the paper, executable.
 //!
-//! * [`Disc`]retization error (Eq. 1): |∫_D v·φ_ω − Σ_j v(ξ_j)φ_ω(ξ_j)|Q_j||
-//! * [`Prec`]ision error (Eq. 2): the same Riemann sum with and without the
+//! * Discretization error (Eq. 1): |∫_D v·φ_ω − Σ_j v(ξ_j)φ_ω(ξ_j)|Q_j||
+//! * Precision error (Eq. 2): the same Riemann sum with and without the
 //!   `(a₀, ε, T)`-precision quantizer `q` applied to both factors.
 //! * The four bounds: Thm 3.1 (Fourier-basis discretization, lower
 //!   `c₁√d·M·n^{−2/d}` and upper `c₂√d(|ω|+L)M·n^{−1/d}`), Thm 3.2

@@ -1,0 +1,240 @@
+//! Distributed data-parallel parity (ISSUE 10): a world of N workers
+//! coordinated over loopback TCP must produce **bit-identical** results
+//! to the single-process `coordinator::train_grid` oracle — per-epoch
+//! train losses, eval metrics, final parameters and the cross-rank
+//! digest — for every world size and precision. A separate leg kills a
+//! worker process mid-run and checks that rejoin-from-checkpoint lands
+//! back on the uninterrupted trajectory, bit for bit.
+
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::channel;
+use std::thread;
+use std::time::Duration;
+
+use mpno::coordinator::{train_grid, Checkpoint};
+use mpno::data::generate;
+use mpno::dist::coordinator::{run_coordinator, CoordEvent, DistReport};
+use mpno::dist::worker::run_worker;
+use mpno::dist::{params_digest, DistConfig};
+use mpno::runtime::{ArtifactEntry, ExecLike, NativeEngine};
+use mpno::tensor::Tensor;
+
+fn tiny_config(precision: &str) -> DistConfig {
+    DistConfig {
+        dataset: "darcy".into(),
+        resolution: 8,
+        n_samples: 10,
+        n_test: 2,
+        data_seed: 7,
+        batch: 2,
+        width: 4,
+        modes: 2,
+        layers: 1,
+        epochs: 3,
+        lr: 2e-3,
+        lr_decay: 0.9,
+        seed: 1,
+        loss_scaling: precision != "f32",
+        init_loss_scale: 65536.0,
+        grad_clip: 0.0,
+        phases: vec![(0.0, format!("fno_darcy_r8_native-{precision}_grads"))],
+        ckpt_dir: None,
+        heartbeat_ms: 50,
+    }
+}
+
+/// The single-process reference run plus the artifact entry needed to
+/// decode distributed checkpoints back into tensors.
+fn serial_oracle(cfg: &DistConfig) -> (mpno::coordinator::TrainReport, ArtifactEntry) {
+    let data = generate(&cfg.gen_spec().unwrap()).unwrap();
+    let (train, test) = data.split(cfg.n_test);
+    let mut engine = NativeEngine::new(&cfg.dataset, cfg.fno_spec().unwrap(), cfg.batch);
+    let entry = engine.load(&cfg.phases[0].1).unwrap().entry().clone();
+    let report = train_grid(&mut engine, &train, &test, &cfg.train_config()).unwrap();
+    (report, entry)
+}
+
+/// Run a full world in-process: coordinator thread + `world` worker
+/// threads against an ephemeral loopback port.
+fn run_world(cfg: &DistConfig, world: usize) -> DistReport {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let coord_cfg = cfg.clone();
+    let coord =
+        thread::spawn(move || run_coordinator(listener, &coord_cfg, world, None));
+    let workers: Vec<_> = (0..world)
+        .map(|_| {
+            let a = addr.clone();
+            thread::spawn(move || run_worker(&a))
+        })
+        .collect();
+    for w in workers {
+        w.join().expect("worker thread panicked").expect("worker failed");
+    }
+    coord.join().expect("coordinator thread panicked").expect("coordinator failed")
+}
+
+fn final_params(report: &DistReport, entry: &ArtifactEntry) -> Vec<Tensor> {
+    report.checkpoint().unwrap().params_for(entry).unwrap()
+}
+
+fn assert_params_bitwise(a: &[Tensor], b: &[Tensor], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: param count mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.shape(), y.shape(), "{what}: param {i} shape mismatch");
+        for (j, (u, v)) in x.data().iter().zip(y.data()).enumerate() {
+            assert_eq!(
+                u.to_bits(),
+                v.to_bits(),
+                "{what}: param {i}[{j}] differs: {u} vs {v}"
+            );
+        }
+    }
+}
+
+fn assert_world_matches_oracle(precision: &str, worlds: &[usize]) {
+    let cfg = tiny_config(precision);
+    let (oracle, entry) = serial_oracle(&cfg);
+    assert!(!oracle.diverged, "{precision} oracle diverged");
+    let oracle_digest = params_digest(&oracle.params);
+    for &world in worlds {
+        let report = run_world(&cfg, world);
+        assert!(!report.diverged, "{precision} world {world} diverged");
+        assert_eq!(
+            report.digest, oracle_digest,
+            "{precision} world {world}: digest mismatch vs serial oracle"
+        );
+        assert_params_bitwise(
+            &final_params(&report, &entry),
+            &oracle.params,
+            &format!("{precision} world {world} final params"),
+        );
+        assert_eq!(report.epochs.len(), oracle.epochs.len());
+        for (d, s) in report.epochs.iter().zip(&oracle.epochs) {
+            assert_eq!(d.epoch, s.epoch);
+            assert_eq!(d.artifact, s.artifact, "epoch {} artifact", s.epoch);
+            assert_eq!(
+                d.train_loss.to_bits(),
+                s.train_loss.to_bits(),
+                "epoch {} train loss: {} vs {}",
+                s.epoch,
+                d.train_loss,
+                s.train_loss
+            );
+            assert_eq!(d.test_l2.to_bits(), s.test_l2.to_bits(), "epoch {} l2", s.epoch);
+            assert_eq!(d.test_h1.to_bits(), s.test_h1.to_bits(), "epoch {} h1", s.epoch);
+            assert_eq!(d.skipped_steps, s.skipped_steps, "epoch {} skips", s.epoch);
+        }
+    }
+}
+
+#[test]
+fn worlds_1_2_4_match_serial_oracle_f32() {
+    assert_world_matches_oracle("f32", &[1, 2, 4]);
+}
+
+#[test]
+fn worlds_1_2_4_match_serial_oracle_bf16() {
+    assert_world_matches_oracle("bf16", &[1, 2, 4]);
+}
+
+/// The rank-0 final blob is a complete `TrainState` checkpoint: loading
+/// it through the plain `Checkpoint` reader must give servable params
+/// regardless of which world size produced it.
+#[test]
+fn final_blob_is_a_servable_checkpoint() {
+    let cfg = tiny_config("f32");
+    let (_, entry) = serial_oracle(&cfg);
+    let report = run_world(&cfg, 2);
+    let ck = Checkpoint::from_bytes(&report.blob).unwrap();
+    assert_eq!(ck.epoch, cfg.epochs - 1);
+    let params = ck.params_for(&entry).unwrap();
+    assert_eq!(params_digest(&params), report.digest);
+}
+
+fn spawn_worker_proc(addr: &str) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_mpno"))
+        .args(["dist-worker", "--connect", addr])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn dist-worker")
+}
+
+/// Kill one worker process mid-run; the coordinator evicts it, rolls the
+/// world back, and a replacement rejoins from the last full-state
+/// checkpoint. The final params must still be bit-identical to the
+/// *uninterrupted* serial run — the checkpoint captures optimizer
+/// moments, loss-scaler state, the batch RNG and the watchdog, so the
+/// restart is invisible in the trajectory.
+#[test]
+fn worker_kill_then_rejoin_matches_uninterrupted_oracle() {
+    let dir = std::env::temp_dir().join(format!("mpno-dist-kill-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut cfg = tiny_config("f32");
+    cfg.epochs = 4;
+    cfg.ckpt_dir = Some(dir.to_str().unwrap().to_string());
+
+    // Oracle never checkpoints; ckpt_dir must not affect the math.
+    let mut oracle_cfg = cfg.clone();
+    oracle_cfg.ckpt_dir = None;
+    let (oracle, entry) = serial_oracle(&oracle_cfg);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let (tx, rx) = channel();
+    let coord_cfg = cfg.clone();
+    let coord =
+        thread::spawn(move || run_coordinator(listener, &coord_cfg, 2, Some(tx)));
+
+    let mut children = vec![spawn_worker_proc(&addr), spawn_worker_proc(&addr)];
+
+    // Kill one worker once at least the epoch-0 checkpoint has landed
+    // (rotating writer: rank 0 saves epoch 0). Whatever the last
+    // complete checkpoint is at kill time, resuming from it replays a
+    // bit-exact continuation, so the exact kill moment is immaterial.
+    let mut killed = false;
+    let mut replaced = false;
+    while let Ok(ev) = rx.recv_timeout(Duration::from_secs(120)) {
+        match ev {
+            CoordEvent::EpochDone { epoch } if epoch >= 1 && !killed => {
+                let mut victim = children.pop().unwrap();
+                victim.kill().ok();
+                victim.wait().ok();
+                killed = true;
+            }
+            CoordEvent::Evicted { .. } => {
+                assert!(killed, "eviction before any kill");
+                assert!(!replaced, "only one eviction expected");
+                children.push(spawn_worker_proc(&addr));
+                replaced = true;
+            }
+            _ => {}
+        }
+    }
+    assert!(killed && replaced, "kill/rejoin sequence did not complete");
+
+    let report = coord
+        .join()
+        .expect("coordinator thread panicked")
+        .expect("coordinator failed after rejoin");
+    for mut c in children {
+        let status = c.wait().expect("wait worker");
+        assert!(status.success(), "surviving worker exited with {status}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    assert!(!report.diverged);
+    assert_eq!(report.digest, params_digest(&oracle.params));
+    assert_params_bitwise(
+        &final_params(&report, &entry),
+        &oracle.params,
+        "kill/rejoin final params",
+    );
+    // Every epoch of the uninterrupted history is present and bit-equal.
+    assert_eq!(report.epochs.len(), oracle.epochs.len());
+    for (d, s) in report.epochs.iter().zip(&oracle.epochs) {
+        assert_eq!(d.train_loss.to_bits(), s.train_loss.to_bits(), "epoch {}", s.epoch);
+    }
+}

@@ -22,6 +22,7 @@ PALLAS_THREADS=1 cargo test -q --test native_grad
 PALLAS_THREADS=1 cargo test -q --test serve_parity
 PALLAS_THREADS=1 cargo test -q --test lane_parity
 PALLAS_THREADS=1 cargo test -q --test http_transport
+PALLAS_THREADS=1 cargo test -q --test dist_parity
 
 # Same suites pinned to eight workers: with batch sizes below the worker
 # count the engines switch to within-sample row/column fan-out, so this
@@ -35,6 +36,7 @@ PALLAS_THREADS=8 cargo test -q --test native_grad
 PALLAS_THREADS=8 cargo test -q --test serve_parity
 PALLAS_THREADS=8 cargo test -q --test lane_parity
 PALLAS_THREADS=8 cargo test -q --test http_transport
+PALLAS_THREADS=8 cargo test -q --test dist_parity
 
 # End-to-end native training smoke: two full epochs through the fused
 # spectral engine (forward + hand-derived backward + Adam + loss scaler)
@@ -104,6 +106,30 @@ for T in 1 8; do
   rm -f "$PORT_FILE"
 done
 rm -f "$SERVE_CK"
+
+# Distributed training smoke: the same tiny Darcy run through the
+# multi-process data-parallel runtime at world sizes 1 and 2 — each run
+# is a coordinator plus spawned dist-worker processes over loopback TCP
+# (--coordinator 127.0.0.1:0 binds an ephemeral port). The final
+# checkpoint blob must be byte-identical across world sizes: that is
+# the dist runtime's house invariant (docs/ARCHITECTURE.md), checked
+# here end to end from the CLI with plain cmp. Both executor legs, so
+# sharded training runs over serial and oversubscribed dispatch.
+echo "== distributed training smoke (world 2 == world 1, bitwise) =="
+for T in 1 8; do
+  DIST_W1="$(mktemp -t mpno_dist_w1.XXXXXX)"
+  DIST_W2="$(mktemp -t mpno_dist_w2.XXXXXX)"
+  PALLAS_THREADS=$T "$MPNO_BIN" train --native --dataset darcy --res 16 \
+    --n 12 --batch-size 2 --width 6 --modes 3 --layers 2 --epochs 2 \
+    --lr 5e-3 --seed 1 --coordinator 127.0.0.1:0 --workers 1 \
+    --checkpoint "$DIST_W1"
+  PALLAS_THREADS=$T "$MPNO_BIN" train --native --dataset darcy --res 16 \
+    --n 12 --batch-size 2 --width 6 --modes 3 --layers 2 --epochs 2 \
+    --lr 5e-3 --seed 1 --coordinator 127.0.0.1:0 --workers 2 \
+    --checkpoint "$DIST_W2"
+  cmp "$DIST_W1" "$DIST_W2"
+  rm -f "$DIST_W1" "$DIST_W2"
+done
 
 # Bench smoke: MPNO_BENCH_SMOKE=1 collapses bench_auto to 1 warmup +
 # 1 iteration per case (see rust/src/bench/mod.rs), so every bench and
